@@ -1,0 +1,59 @@
+//! Deploy a network from an ONNX-like JSON graph file — the path a
+//! downstream user takes with their own model.
+//!
+//! With no argument, the example exports DINOv2-S to a temp file first
+//! and then deploys from that file, demonstrating the full round trip:
+//!
+//!     cargo run --release --example import_graph [graph.json]
+
+use attn_tinyml::deeploy::{codegen, onnx, passes, schedule, tiler};
+use attn_tinyml::energy;
+use attn_tinyml::models;
+use attn_tinyml::sim::{ClusterConfig, Engine};
+use attn_tinyml::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let path = match std::env::args().nth(1) {
+        Some(p) => p,
+        None => {
+            let g = models::build_graph_layers(&models::DINOV2S, 1);
+            let p = std::env::temp_dir().join("dinov2s_1layer.json");
+            std::fs::write(&p, onnx::export(&g).to_string_pretty())?;
+            println!("(no input given; exported {} first)", p.display());
+            p.to_string_lossy().into_owned()
+        }
+    };
+
+    // import
+    let text = std::fs::read_to_string(&path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut g = onnx::import(&j).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("imported {}: {} tensors, {} nodes", g.name, g.tensors.len(), g.nodes.len());
+
+    // deployment flow
+    let fused = passes::fuse_mha(&mut g);
+    passes::check_ita_constraints(&g).map_err(|e| anyhow::anyhow!("{e}"))?;
+    passes::map_operators(&mut g, true);
+    println!("fused {fused} attention heads onto ITA");
+
+    let order = schedule::topo_schedule(&g);
+    let plans = tiler::plan_graph(&g);
+    println!("tiling plans for {} ITA operators", plans.len());
+    for (name, p) in plans.iter().take(3) {
+        println!("  {name}: tile {}x{}x{}, {} steps, {} B L1", p.tm, p.tk, p.tn, p.steps, p.l1_bytes);
+    }
+
+    let steps = codegen::generate(&g, &order, &plans);
+    let cluster = ClusterConfig::default();
+    let stats = Engine::new(cluster.clone()).run(&steps);
+    let rep = energy::evaluate(&stats, cluster.freq_hz);
+    println!(
+        "simulated: {} cycles = {:.3} ms, {:.1} GOp/s, {:.0} GOp/J, ITA util {:.1}%",
+        stats.cycles,
+        rep.seconds * 1e3,
+        rep.gops,
+        rep.gopj,
+        stats.ita_utilization() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Trace ITA's streaming softmax through its three stages (paper Fig. 2):
+//! Denominator Accumulation -> Denominator Inversion -> Element
+//! Normalization, on a small row so every intermediate is visible.
+//!
+//!     cargo run --release --example ita_inspect
+
+use attn_tinyml::ita::softmax::{da_step, di, en, RowStats, DA_CHUNK, EXP2_LUT};
+use attn_tinyml::util::prng::XorShift64;
+
+fn main() {
+    println!("EXP2 LUT (256 * 2^(-f/32)): {:?}\n", &EXP2_LUT[..8]);
+
+    let mut rng = XorShift64::new(7);
+    let row: Vec<i32> = (0..64).map(|_| rng.next_range(-128, 128)).collect();
+    println!("input row (int8 logits), {} elements, DA chunk = {DA_CHUNK}:", row.len());
+
+    // --- stage 1: DA — streaming over 16-element chunks ----------------
+    let mut stats = RowStats::default();
+    for (i, chunk) in row.chunks(DA_CHUNK).enumerate() {
+        let prev_max = stats.max;
+        stats = da_step(stats, chunk);
+        let renorm = if stats.max > prev_max && prev_max > -(1 << 20) {
+            format!("(renormalized: max {prev_max} -> {})", stats.max)
+        } else {
+            String::new()
+        };
+        println!(
+            "  DA chunk {i}: local max {:>4}, running max {:>4}, den {:>6} {}",
+            chunk.iter().max().unwrap(),
+            stats.max,
+            stats.den,
+            renorm
+        );
+    }
+
+    // --- stage 2: DI ----------------------------------------------------
+    let inv = di(stats.den);
+    println!("\n  DI: inv = floor(2^24 / {}) = {}", stats.den, inv);
+
+    // --- stage 3: EN — normalize on the fly while A x V streams --------
+    let a: Vec<i32> = row.iter().map(|&x| en(x, stats.max, inv)).collect();
+    println!("\n  EN: A (quantized probabilities, scale 1/128):");
+    println!("  {:?}", &a[..16]);
+    let sum: i32 = a.iter().sum();
+    println!("  row mass = {sum}/128 (truncation loses at most ~1 LSB/elem)");
+    let arg = a.iter().enumerate().max_by_key(|(_, &v)| v).unwrap();
+    println!("  argmax A = position {} (logit {})", arg.0, row[arg.0]);
+
+    // cross-check against the float base-2 softmax
+    let xf: Vec<f64> = row.iter().map(|&x| x as f64 / 32.0).collect();
+    let m = xf.iter().cloned().fold(f64::MIN, f64::max);
+    let e: Vec<f64> = xf.iter().map(|&x| (x - m).exp2()).collect();
+    let s: f64 = e.iter().sum();
+    let max_err = a
+        .iter()
+        .zip(&e)
+        .map(|(&ai, &ei)| (ai as f64 / 128.0 - ei / s).abs())
+        .fold(0.0, f64::max);
+    println!("  max |A/128 - float softmax| = {max_err:.4}");
+}

@@ -1,0 +1,83 @@
+//! §Perf iteration log for the functional-model matmul (the golden-path
+//! hot loop). Three variants, one change each, per the optimization
+//! process; the measured ordering (A > B > C on the 1-core host) is why
+//! `ita::engine::matmul_i32` keeps the zero-skip k-outer form.
+//!
+//!     cargo run --release --example perf_mm_variants
+
+use std::time::Instant;
+use attn_tinyml::ita::engine::Mat;
+use attn_tinyml::util::prng::XorShift64;
+
+// variant A: current (zero-skip, k-outer)
+fn mm_a(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.at(i, k);
+            if av == 0 { continue; }
+            let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+            for (cv, &bv) in crow.iter_mut().zip(brow) { *cv += av * bv; }
+        }
+    }
+    c
+}
+// variant B: k-blocked by 4, no zero-skip
+fn mm_b(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    let kc = a.cols;
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = &a.data[i*kc..(i+1)*kc];
+        let crow = &mut c.data[i*n..(i+1)*n];
+        let mut k = 0;
+        while k + 4 <= kc {
+            let (a0,a1,a2,a3) = (arow[k],arow[k+1],arow[k+2],arow[k+3]);
+            let b0 = &b.data[k*n..(k+1)*n];
+            let b1 = &b.data[(k+1)*n..(k+2)*n];
+            let b2 = &b.data[(k+2)*n..(k+3)*n];
+            let b3 = &b.data[(k+3)*n..(k+4)*n];
+            for j in 0..n {
+                crow[j] += a0*b0[j] + a1*b1[j] + a2*b2[j] + a3*b3[j];
+            }
+            k += 4;
+        }
+        while k < kc {
+            let av = arow[k];
+            let brow = &b.data[k*n..(k+1)*n];
+            for j in 0..n { crow[j] += av*brow[j]; }
+            k += 1;
+        }
+    }
+    c
+}
+
+// variant C: current without zero-skip
+fn mm_c(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.at(i, k);
+            let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+            for (cv, &bv) in crow.iter_mut().zip(brow) { *cv += av * bv; }
+        }
+    }
+    c
+}
+fn main() {
+    let mut rng = XorShift64::new(1);
+    let a = Mat::new(512, 1536, rng.tensor_i8(512*1536));
+    let b = Mat::new(1536, 384, rng.tensor_i8(1536*384));
+    let macs = 512.0*1536.0*384.0;
+    for (name, f) in [("A current", mm_a as fn(&Mat,&Mat)->Mat), ("B unroll4", mm_b), ("C noskip", mm_c)] {
+        let _ = f(&a,&b);
+        let t0 = Instant::now();
+        for _ in 0..5 { std::hint::black_box(f(&a,&b)); }
+        let dt = t0.elapsed().as_secs_f64()/5.0;
+        println!("{name}: {:.2} GMAC/s", macs/dt/1e9);
+    }
+    assert_eq!(mm_a(&a,&b).data, mm_b(&a,&b).data);
+    println!("variants agree");
+}

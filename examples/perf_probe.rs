@@ -1,0 +1,37 @@
+//! Performance probe (EXPERIMENTS.md §Perf): wall-time of the three L3
+//! hot paths — the cycle simulator, the deployment flow, and the
+//! functional-model matmul that dominates the golden tests.
+//!
+//!     cargo run --release --example perf_probe
+
+use std::time::Instant;
+use attn_tinyml::*;
+fn main() {
+    // L3 simulator throughput: simulated cycles per host second
+    let dep = deeploy::deploy(&models::MOBILEBERT, deeploy::Target::MultiCoreIta);
+    let engine = sim::Engine::new(sim::ClusterConfig::default());
+    let t0 = Instant::now();
+    let mut cyc = 0u64;
+    for _ in 0..20 { cyc = engine.run(&dep.steps).cycles; }
+    let dt = t0.elapsed().as_secs_f64() / 20.0;
+    println!("sim: {} steps, {:.2}M simulated cycles in {:.3} ms host = {:.1}G cy/s",
+        dep.steps.len(), cyc as f64/1e6, dt*1e3, cyc as f64/dt/1e9);
+
+    // deployment flow wall time (whisper full = biggest graph)
+    let t0 = Instant::now();
+    let d = deeploy::deploy(&models::WHISPER_TINY_ENC, deeploy::Target::MultiCoreIta);
+    println!("deploy whisper full: {} nodes -> {} steps in {:.1} ms",
+        d.graph.nodes.len(), d.steps.len(), t0.elapsed().as_secs_f64()*1e3);
+
+    // functional-model matmul throughput (golden-path hot loop)
+    use ita::engine::{matmul_i32, Mat};
+    use util::prng::XorShift64;
+    let mut rng = XorShift64::new(1);
+    let a = Mat::new(512, 1536, rng.tensor_i8(512*1536));
+    let b = Mat::new(1536, 384, rng.tensor_i8(1536*384));
+    let t0 = Instant::now();
+    for _ in 0..5 { std::hint::black_box(matmul_i32(&a, &b)); }
+    let dt = t0.elapsed().as_secs_f64() / 5.0;
+    let macs = 512.0*1536.0*384.0;
+    println!("matmul_i32: {:.0}M MACs in {:.1} ms = {:.2} GMAC/s", macs/1e6, dt*1e3, macs/dt/1e9);
+}

@@ -1,0 +1,42 @@
+//! Quickstart: deploy MobileBERT on the heterogeneous cluster template
+//! and reproduce the headline numbers in under a second.
+//!
+//!     cargo run --release --example quickstart
+
+use attn_tinyml::coordinator;
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::models::MOBILEBERT;
+use attn_tinyml::sim::ClusterConfig;
+
+fn main() {
+    // 1. The architecture template (paper Fig. 1): 8+1 Snitch cores +
+    //    ITA behind an HWPE subsystem on a 32-bank shared TCDM.
+    let cluster = ClusterConfig::default();
+    println!("architecture template");
+    println!("  cores           : {} worker + 1 DMA Snitch", cluster.n_cores);
+    println!("  L1 TCDM         : {} KiB in {} banks ({} B/cy)",
+             cluster.l1_bytes() / 1024, cluster.tcdm_banks, cluster.tcdm_bw());
+    println!("  HWPE ports      : {} ({} B/cy to ITA)", cluster.hwpe_ports, cluster.hwpe_bw());
+    println!("  wide / narrow AXI: {} / {} bit",
+             cluster.wide_axi_bytes * 8, cluster.narrow_axi_bytes * 8);
+    println!("  ITA             : {}x{} MACs, {} op/cy peak, {:.1} GOp/s @ 425 MHz",
+             cluster.ita.n_units, cluster.ita.m_vec, cluster.ita.ops_per_cycle(),
+             cluster.ita_peak_ops() / 1e9);
+    println!("  area            : {:.3} mm^2 (HWPE {:.1}%)",
+             cluster.area_mm2(), cluster.hwpe_area_fraction() * 100.0);
+
+    // 2. Deploy MobileBERT both ways and compare (paper Table I).
+    println!("\nMobileBERT ({} GOp/inference)", MOBILEBERT.gop_per_inference);
+    for target in [Target::MultiCore, Target::MultiCoreIta] {
+        let r = coordinator::run_model_layers(&MOBILEBERT, target, 1);
+        println!(
+            "  {:<18} {:>8.2} GOp/s {:>8.1} GOp/J {:>8.2} Inf/s {:>8.2} mJ/Inf",
+            r.target_name(),
+            r.gops,
+            r.gopj,
+            r.inf_per_s,
+            r.mj_per_inf
+        );
+    }
+    println!("\n(paper: 0.74 -> 154 GOp/s, 28.9 -> 2960 GOp/J, 0.16 -> 32.5 Inf/s)");
+}

@@ -1,0 +1,176 @@
+"""AOT compilation: lower the L2 model + L1 kernels to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the rust runtime loads the
+resulting ``artifacts/*.hlo.txt`` via PJRT and never touches Python again.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts
+---------
+  gemm.hlo.txt            int8 GEMM + requant (128x128x128), identity act
+  gemm_relu.hlo.txt       same geometry, fused ReLU
+  gemm_gelu.hlo.txt       same geometry, fused i-GeLU
+  attn_head.hlo.txt       single-head attention S=128, P=64 (QK+ITAMax+AV)
+  encoder_<model>.hlo.txt one full encoder layer per evaluation network
+  manifest.json           shapes, argument order, requant constants — the
+                          contract the rust runtime + tests program against
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ita_attention, ita_gemm
+
+GEMM_DIM = 128
+ATTN_S, ATTN_P = 128, 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    CRITICAL: print with print_large_constants=True. The default printer
+    elides payloads of large dense constants as ``constant({...})`` and the
+    xla_extension 0.5.1 text parser silently substitutes garbage for them
+    (observed: an s32[32] LUT turned into iota) instead of erroring.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8 metadata carries source_end_line/... attributes the 0.5.1
+    # text parser rejects — strip it.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_gemm(act):
+    mult, shift = M.rq_for(GEMM_DIM)
+
+    def fn(x, w, b):
+        return (ita_gemm.gemm_rq(x, w, b, mult, shift, act=act, gelu_s=M.GELU_S),)
+
+    lowered = jax.jit(fn).lower(
+        i32((GEMM_DIM, GEMM_DIM)), i32((GEMM_DIM, GEMM_DIM)), i32((GEMM_DIM,))
+    )
+    entry = {
+        "inputs": [
+            {"name": "x", "shape": [GEMM_DIM, GEMM_DIM]},
+            {"name": "w", "shape": [GEMM_DIM, GEMM_DIM]},
+            {"name": "bias", "shape": [GEMM_DIM]},
+        ],
+        "outputs": [{"name": "y", "shape": [GEMM_DIM, GEMM_DIM]}],
+        "rq": {"mult": mult, "shift": shift},
+        "act": act,
+        "gelu_s": M.GELU_S,
+    }
+    return lowered, entry
+
+
+def build_attn_head():
+    qkm, qks = M.rq_for(ATTN_P, target_std=40.0)
+    avm, avs = M.rq_for(128, target_std=30.0)
+
+    def fn(q, k, v):
+        return (
+            ita_attention.attention_head(q, k, v, qkm, qks, avm, avs),
+        )
+
+    spec = i32((ATTN_S, ATTN_P))
+    lowered = jax.jit(fn).lower(spec, spec, spec)
+    entry = {
+        "inputs": [
+            {"name": "q", "shape": [ATTN_S, ATTN_P]},
+            {"name": "k", "shape": [ATTN_S, ATTN_P]},
+            {"name": "v", "shape": [ATTN_S, ATTN_P]},
+        ],
+        "outputs": [{"name": "o", "shape": [ATTN_S, ATTN_P]}],
+        "rq": {
+            "qk_mult": qkm, "qk_shift": qks,
+            "av_mult": avm, "av_shift": avs,
+        },
+    }
+    return lowered, entry
+
+
+def build_encoder(cfg: M.ModelConfig):
+    shapes = M.layer_weight_shapes(cfg)
+
+    def fn(x, *weights):
+        return (M.encoder_layer(x, *weights, cfg),)
+
+    specs = [i32((cfg.seq, cfg.emb))] + [i32(s) for _, s in shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    entry = {
+        "inputs": (
+            [{"name": "x", "shape": [cfg.seq, cfg.emb]}]
+            + [{"name": n, "shape": list(s)} for n, s in shapes]
+        ),
+        "outputs": [{"name": "x_out", "shape": [cfg.seq, cfg.emb]}],
+        "rq": M.rq_params(cfg),
+        "config": {
+            "name": cfg.name, "seq": cfg.seq, "seq_logical": cfg.seq_logical,
+            "emb": cfg.emb, "proj": cfg.proj, "heads": cfg.heads,
+            "layers": cfg.layers, "dff": cfg.dff, "ffn_stack": cfg.ffn_stack,
+            "act": cfg.act, "gop_per_inference": cfg.gop_per_inference,
+        },
+    }
+    return lowered, entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--skip-encoders", action="store_true",
+        help="only the micro kernels (fast dev loop)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": {}}
+
+    jobs = [
+        ("gemm", lambda: build_gemm("identity")),
+        ("gemm_relu", lambda: build_gemm("relu")),
+        ("gemm_gelu", lambda: build_gemm("gelu")),
+        ("attn_head", build_attn_head),
+    ]
+    if not args.skip_encoders:
+        for cfg in M.CONFIGS.values():
+            jobs.append(
+                (f"encoder_{cfg.name}", lambda cfg=cfg: build_encoder(cfg))
+            )
+
+    for name, builder in jobs:
+        lowered, entry = builder()
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entry["file"] = fname
+        manifest["artifacts"][name] = entry
+        print(f"  wrote {fname} ({len(text) / 1024:.0f} KiB)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

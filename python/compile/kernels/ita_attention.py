@@ -1,0 +1,172 @@
+"""Pallas kernels for ITA's attention hot path (Layer 1).
+
+Two kernels mirror ITA's two-phase dataflow (Fig. 2 of the paper):
+
+  qk_itamax   — Q x K^T tiles + the streaming DA stage: as each quantized
+                QK tile is produced, the running row max and renormalized
+                denominator are updated in carry buffers. This is the
+                hardware's "Softmax without additional latency": the DA
+                stage rides on the QK producer.
+  av_en       — DI + EN + A x V: the denominator is inverted once, the
+                stored QK logits are normalized on the fly (never
+                materializing A in memory ahead of time) and multiplied
+                with V tiles into a partial-sum accumulator, requantized
+                at the last tile.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): ITA's 16x64
+dot-product array becomes (64, 64) MXU-shaped tiles; the streamers'
+HBM<->VMEM schedule is expressed with BlockSpec index maps; the DA chunk
+order (16 elements) is preserved inside each tile so the result is
+bit-exact against the `ref.py` / `quant.py` streaming spec.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); on a real TPU the same code lowers to Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant
+from .quant import (
+    ITA_DA_CHUNK,
+    ITA_INV_BITS,
+    ITA_EN_SHIFT,
+    ITA_A_MAX,
+    ITAMAX_M0,
+    exp2_num,
+    renorm_den,
+    requant,
+)
+
+DEFAULT_TILE = 64  # ITA processes 64-wide tiles (M = 64 vector length)
+
+
+def _qk_itamax_kernel(
+    q_ref, k_ref, lut_ref, qk_ref, m_ref, den_ref, *, mult, shift, t_kv
+):
+    """Grid step i: produce quantized QK tile i and fold it into (m, den)."""
+    i = pl.program_id(0)
+    lut = lut_ref[...]
+
+    acc = jnp.dot(q_ref[...], k_ref[...].T, preferred_element_type=jnp.int32)
+    qk = requant(acc, mult, shift)
+    qk_ref[...] = qk
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], -ITAMAX_M0)
+        den_ref[...] = jnp.zeros_like(den_ref[...])
+
+    # DA stage: scan the tile in the hardware's 16-element chunk order.
+    m = m_ref[...]  # (S, 1)
+    den = den_ref[...]  # (S, 1)
+    for c in range(t_kv // ITA_DA_CHUNK):
+        chunk = qk[:, c * ITA_DA_CHUNK : (c + 1) * ITA_DA_CHUNK]
+        lm = jnp.max(chunk, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, lm)
+        delta = m_new - m
+        den = renorm_den(den, delta, lut=lut)
+        den = den + jnp.sum(exp2_num(m_new - chunk, lut=lut), axis=-1, keepdims=True)
+        m = m_new
+    m_ref[...] = m
+    den_ref[...] = den
+
+
+def qk_itamax(q, k, mult, shift, t_kv=DEFAULT_TILE):
+    """Phase 1: QK = requant(Q @ K^T) with streaming ITAMax statistics.
+
+    q: (S, P), k: (S_kv, P) int8-range int32. Returns (qk, m, den):
+    qk (S, S_kv) int8-range, m/den (S, 1) int32 running max/denominator.
+    """
+    s, p = q.shape
+    s_kv = k.shape[0]
+    assert s_kv % t_kv == 0 and t_kv % ITA_DA_CHUNK == 0
+    n_kv = s_kv // t_kv
+    kernel = functools.partial(_qk_itamax_kernel, mult=mult, shift=shift, t_kv=t_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_kv,),
+        in_specs=[
+            pl.BlockSpec((s, p), lambda i: (0, 0)),  # Q resident across tiles
+            pl.BlockSpec((t_kv, p), lambda i: (i, 0)),  # K streamed tile by tile
+            pl.BlockSpec((32,), lambda i: (0,)),  # EXP2 LUT
+        ],
+        out_specs=[
+            pl.BlockSpec((s, t_kv), lambda i: (0, i)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),  # carry: running max
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),  # carry: denominator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, s_kv), jnp.int32),
+            jax.ShapeDtypeStruct((s, 1), jnp.int32),
+            jax.ShapeDtypeStruct((s, 1), jnp.int32),
+        ],
+        interpret=True,
+    )(
+        q.astype(jnp.int32),
+        k.astype(jnp.int32),
+        jnp.asarray(quant.EXP2_LUT, dtype=jnp.int32),
+    )
+
+
+def _av_en_kernel(
+    qk_ref, m_ref, den_ref, v_ref, lut_ref, acc_ref, o_ref, *, mult, shift, n_kv
+):
+    """Grid step i: EN-normalize QK tile i on the fly and accumulate A @ V."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    inv = (1 << ITA_INV_BITS) // den_ref[...]  # DI stage (cheap, rematerialized)
+    num = exp2_num(m_ref[...] - qk_ref[...], lut=lut_ref[...])
+    a = jnp.minimum((num * inv) >> ITA_EN_SHIFT, ITA_A_MAX)
+    acc_ref[...] += jnp.dot(a, v_ref[...], preferred_element_type=jnp.int32)
+
+    @pl.when(i == n_kv - 1)
+    def _final():
+        o_ref[...] = requant(acc_ref[...], mult, shift)
+
+
+def av_en(qk, m, den, v, mult, shift, t_kv=DEFAULT_TILE):
+    """Phase 2: O = requant(EN(QK) @ V) with on-the-fly normalization.
+
+    qk: (S, S_kv) quantized logits from phase 1, m/den: (S, 1) statistics,
+    v: (S_kv, P). Returns (S, P) int8-range output.
+    """
+    s, s_kv = qk.shape
+    p = v.shape[1]
+    assert s_kv % t_kv == 0
+    n_kv = s_kv // t_kv
+    kernel = functools.partial(_av_en_kernel, mult=mult, shift=shift, n_kv=n_kv)
+    _, o = pl.pallas_call(
+        kernel,
+        grid=(n_kv,),
+        in_specs=[
+            pl.BlockSpec((s, t_kv), lambda i: (0, i)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+            pl.BlockSpec((t_kv, p), lambda i: (i, 0)),
+            pl.BlockSpec((32,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s, p), lambda i: (0, 0)),  # partial-sum buffer
+            pl.BlockSpec((s, p), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, p), jnp.int32),
+            jax.ShapeDtypeStruct((s, p), jnp.int32),
+        ],
+        interpret=True,
+    )(qk, m, den, v.astype(jnp.int32), jnp.asarray(quant.EXP2_LUT, dtype=jnp.int32))
+    return o
+
+
+def attention_head(q, k, v, qk_mult, qk_shift, av_mult, av_shift, t_kv=DEFAULT_TILE):
+    """Single-head quantized attention, both phases. Matches ref.attention_head."""
+    qk, m, den = qk_itamax(q, k, qk_mult, qk_shift, t_kv=t_kv)
+    return av_en(qk, m, den, v, av_mult, av_shift, t_kv=t_kv)

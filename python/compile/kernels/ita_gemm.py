@@ -1,0 +1,71 @@
+"""Pallas kernel for ITA's GEMM mode (Layer 1).
+
+ITA doubles as a plain int8 GEMM accelerator with a fused activation unit
+(Identity / ReLU / i-GeLU) — this kernel is that mode. Tiled 3D grid with
+the reduction dimension innermost; the partial-sum buffer (the paper's
+extension to ITA) lives in an accumulator output that is requantized and
+activated on the last reduction step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import igelu, irelu, requant
+
+DEFAULT_TILE = 64
+
+
+def _gemm_kernel(x_ref, w_ref, b_ref, acc_ref, o_ref, *, mult, shift, act, gelu_s, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _final():
+        y = requant(acc_ref[...] + b_ref[...], mult, shift)
+        if act == "gelu":
+            y = igelu(y, gelu_s)
+        elif act == "relu":
+            y = irelu(y)
+        o_ref[...] = y
+
+
+def gemm_rq(x, w, bias, mult, shift, act="identity", gelu_s=0.1, tile=DEFAULT_TILE):
+    """int8 GEMM + bias + requant + activation. Matches ref.gemm_rq.
+
+    x: (M, K), w: (K, N), bias: (N,) int32. M, K, N multiples of ``tile``
+    (the deployment flow pads to ITA's geometry before offloading).
+    """
+    m, kdim = x.shape
+    n = w.shape[1]
+    assert m % tile == 0 and kdim % tile == 0 and n % tile == 0, (m, kdim, n)
+    n_k = kdim // tile
+    kernel = functools.partial(
+        _gemm_kernel, mult=mult, shift=shift, act=act, gelu_s=gelu_s, n_k=n_k
+    )
+    _, o = pl.pallas_call(
+        kernel,
+        grid=(m // tile, n // tile, n_k),
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, tile), lambda i, j, k: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),  # partial sums
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+        ],
+        interpret=True,
+    )(x.astype(jnp.int32), w.astype(jnp.int32), bias.astype(jnp.int32).reshape(1, n))
+    return o

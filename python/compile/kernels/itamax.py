@@ -1,0 +1,65 @@
+"""Standalone Pallas ITAMax kernel (Layer 1).
+
+Row-wise streaming integer softmax as its own kernel — used when the
+deployment flow needs softmax *outside* a fused attention (e.g. a final
+classification head), and as the minimal demonstrator of the DA/DI/EN
+pipeline. Grid over row blocks; within the kernel the DA stage scans the
+hardware's 16-element chunk order, so results are bit-exact with
+`quant.itamax` and the rust `ita::softmax` model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant
+from .quant import (
+    ITA_DA_CHUNK,
+    ITA_INV_BITS,
+    ITA_EN_SHIFT,
+    ITA_A_MAX,
+    ITAMAX_M0,
+    exp2_num,
+    renorm_den,
+)
+
+
+def _itamax_kernel(x_ref, lut_ref, a_ref, *, cols):
+    x = x_ref[...]
+    lut = lut_ref[...]
+    m = jnp.full((x.shape[0], 1), -ITAMAX_M0, dtype=jnp.int32)
+    den = jnp.zeros((x.shape[0], 1), dtype=jnp.int32)
+    # DA: 16-element chunks, streaming renormalization
+    for c in range(cols // ITA_DA_CHUNK):
+        chunk = x[:, c * ITA_DA_CHUNK : (c + 1) * ITA_DA_CHUNK]
+        lm = jnp.max(chunk, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, lm)
+        den = renorm_den(den, m_new - m, lut=lut)
+        den = den + jnp.sum(exp2_num(m_new - chunk, lut=lut), axis=-1, keepdims=True)
+        m = m_new
+    # DI + EN
+    inv = (1 << ITA_INV_BITS) // den
+    num = exp2_num(m - x, lut=lut)
+    a_ref[...] = jnp.minimum((num * inv) >> ITA_EN_SHIFT, ITA_A_MAX)
+
+
+def itamax(x, block_rows=64):
+    """Row-wise ITAMax over a (R, C) int8-range matrix; C % 16 == 0."""
+    rows, cols = x.shape
+    assert cols % ITA_DA_CHUNK == 0, f"cols={cols}"
+    br = min(block_rows, rows)
+    assert rows % br == 0, (rows, br)
+    kernel = functools.partial(_itamax_kernel, cols=cols)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((32,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), jnp.asarray(quant.EXP2_LUT, dtype=jnp.int32))

@@ -1,0 +1,281 @@
+"""Shared integer-arithmetic primitives of the ITA datapath.
+
+This module is the *specification* of ITA's integer semantics. Three
+implementations must agree bit-exactly:
+
+  1. these jnp functions (used by the L2 model and the pure-jnp oracle),
+  2. the Pallas kernels in this package (streaming formulation),
+  3. the rust functional model in ``rust/src/ita/`` (checked end-to-end by
+     running the AOT artifacts through PJRT from rust and comparing).
+
+All tensors at ITA boundaries are int8 carried in int32 containers (the
+HLO interface uses i32 for portability across the PJRT literal API; values
+are kept in int8 range by construction).
+
+ITAMax numeric spec
+-------------------
+ITA computes a base-2 softmax (the log2(e) factor is absorbed into the
+requantization scale of the Q×K^T output, as in Softermax):
+
+  softmax2(x)_i = 2^((x_i - max(x)) / 2^F) / sum_j 2^((x_j - max(x)) / 2^F)
+
+with F = ITA_F = 5 fractional bits. For an int difference d = max - x_i >= 0:
+
+  shift = min(d >> F, 31)          # integer part of the exponent
+  frac  = d & (2^F - 1)            # fractional part
+  num_i = EXP2_LUT[frac] >> shift  # in [0, 256], EXP2_LUT[f] = round(256 * 2^(-f/32))
+
+The denominator is the exact integer sum of the numerators; the
+Denominator-Inversion stage computes inv = floor(2^24 / den) and the
+Element-Normalization stage emits
+
+  A_i = min((num_i * inv) >> 17, 127)   # A in [0, 127], scale 1/2^7
+
+so a row of A sums to ~128 (quantized probabilities).
+
+Streaming renormalization: when the running max grows by delta, the
+accumulated denominator is rescaled by 2^(-delta / 2^F):
+
+  acc <- (acc * EXP2_LUT[delta & 31]) >> (8 + (delta >> 5))
+
+which is one multiply and one shift — the cheap renormalization the paper's
+DA stage performs in hardware.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+# --- ITAMax constants -------------------------------------------------------
+
+ITA_F = 5  # fractional bits of the base-2 exponent
+EXP2_LUT_LIST = [int(round(256 * 2 ** (-i / 32))) for i in range(32)]
+EXP2_LUT = np.asarray(EXP2_LUT_LIST, dtype=np.int32)
+ITA_INV_BITS = 24  # Denominator-Inversion precision
+ITA_EN_SHIFT = 17  # Element-Normalization output shift -> A scale = 1/128
+ITA_A_MAX = 127
+
+# ITA geometry (Section IV-B of the paper)
+ITA_N_UNITS = 16  # dot-product units
+ITA_M = 64  # vector length per dot-product unit
+ITA_ACC_BITS = 26  # accumulator width
+
+# i-GeLU polynomial constants (I-BERT, Kim et al. 2021)
+IGELU_A = -0.2888
+IGELU_B = -1.769
+
+
+def clip_i8(x):
+    """Clip an int32 tensor into int8 value range."""
+    return jnp.clip(x, -128, 127)
+
+
+def requant(acc, mult, shift, zero=0):
+    """ITA/Deeploy requantization: (acc * mult + round) >> shift, clipped.
+
+    ``acc`` int32, ``mult``/``shift``/``zero`` python ints. Rounding adds
+    half an LSB before the arithmetic right shift, matching the PULP RQS
+    hardware and the rust model (`ita::quant::requant`).
+    """
+    acc = acc.astype(jnp.int32) * jnp.int32(mult)
+    rnd = jnp.int32(1 << (shift - 1)) if shift > 0 else jnp.int32(0)
+    shifted = (acc + rnd) >> shift
+    return clip_i8(shifted + jnp.int32(zero))
+
+
+def lut_lookup(lut, idx):
+    """LUT lookup as a one-hot contraction (gather-free).
+
+    The AOT interchange path (jax 0.8 MLIR -> HLO text -> xla_extension
+    0.5.1) mis-executes HLO gather (it returns the *indices*), so every LUT
+    access is expressed as compare+multiply+reduce instead. Bit-exact with
+    a real gather, lowers to vectorizable ops everywhere, and on a real TPU
+    the one-hot form is MXU-friendly.
+
+    lut: (32,) int32, idx: any-shape int32 in [0, 32).
+    """
+    iota = lax.broadcasted_iota(jnp.int32, idx.shape + (32,), len(idx.shape))
+    onehot = (idx[..., None] == iota).astype(jnp.int32)
+    return jnp.sum(onehot * lut, axis=-1)
+
+
+def exp2_num(diff, lut=None):
+    """Numerator of the base-2 softmax for non-negative diff = max - x.
+
+    ``lut`` lets Pallas kernels pass the EXP2 table through a Ref (captured
+    constants are not allowed inside pallas_call bodies).
+    """
+    diff = diff.astype(jnp.int32)
+    shift = jnp.minimum(diff >> ITA_F, 31)
+    frac = diff & ((1 << ITA_F) - 1)
+    if lut is None:
+        lut = jnp.asarray(EXP2_LUT, dtype=jnp.int32)
+    return lut_lookup(lut, frac) >> shift
+
+
+def renorm_den(acc, delta, lut=None):
+    """Streaming DA renormalization of the partial denominator.
+
+    acc * 2^(-delta/32) using one LUT multiply and a shift. The shift is
+    clamped to 31 (values there are zero anyway for int8-range rows) so the
+    behaviour is defined and identical in jnp / Pallas / rust.
+    """
+    if lut is None:
+        lut = jnp.asarray(EXP2_LUT, dtype=jnp.int32)
+    shift = jnp.minimum(8 + (delta >> ITA_F), 31)
+    return (acc * lut_lookup(lut, delta & 31)) >> shift
+
+
+# DA stage processes this many elements per step (the N=16 dot-product
+# units emit 16 row elements per cycle). The streaming denominator is NOT
+# bit-identical to a batch max/sum — the spec is this exact chunk order,
+# and all three implementations follow it.
+ITA_DA_CHUNK = 16
+ITAMAX_M0 = 1 << 20  # initial running max = -ITAMAX_M0
+
+
+def itamax_stats(x):
+    """DA stage over the last axis: streaming (max, den) per row.
+
+    x: (..., S) int8-range values, S % ITA_DA_CHUNK == 0. Scans chunks of
+    16 elements carrying the running max and the renormalized denominator,
+    exactly as the hardware's DA stage does. Returns (m, den) with
+    keepdims, int32.
+    """
+    x = x.astype(jnp.int32)
+    s = x.shape[-1]
+    assert s % ITA_DA_CHUNK == 0, f"S={s} not a multiple of {ITA_DA_CHUNK}"
+    lead = x.shape[:-1]
+    xr = x.reshape(-1, s // ITA_DA_CHUNK, ITA_DA_CHUNK)
+    xs = jnp.swapaxes(xr, 0, 1)  # (chunks, rows, 16)
+
+    def step(carry, chunk):
+        m, den = carry
+        lm = jnp.max(chunk, axis=-1)
+        m_new = jnp.maximum(m, lm)
+        delta = m_new - m
+        den = renorm_den(den, delta)
+        den = den + jnp.sum(exp2_num(m_new[:, None] - chunk), axis=-1)
+        return (m_new, den), None
+
+    rows = xs.shape[1]
+    m0 = jnp.full((rows,), -ITAMAX_M0, dtype=jnp.int32)
+    d0 = jnp.zeros((rows,), dtype=jnp.int32)
+    (m, den), _ = lax.scan(step, (m0, d0), xs)
+    return m.reshape(*lead, 1), den.reshape(*lead, 1)
+
+
+def itamax_inv(den):
+    """DI stage: inv = floor(2^24 / den)."""
+    return (1 << ITA_INV_BITS) // den
+
+
+def itamax_en(x, m, inv):
+    """EN stage: normalize on the fly, emitting A in [0, 127]."""
+    num = exp2_num(m - x.astype(jnp.int32))
+    a = (num * inv) >> ITA_EN_SHIFT
+    return jnp.minimum(a, ITA_A_MAX)
+
+
+def itamax(x):
+    """Full ITAMax over the last axis: DA -> DI -> EN."""
+    m, den = itamax_stats(x)
+    return itamax_en(x, m, itamax_inv(den))
+
+
+# --- i-GeLU (I-BERT) --------------------------------------------------------
+
+
+def igelu_consts(s_in):
+    """Precompute the integer constants of i-GeLU for input scale ``s_in``.
+
+    Returns (b_int, c_int, sig_mult, sig_shift) used identically by the jnp
+    reference, the Pallas kernel, and rust ``ita::gelu``. ``sig_mult/shift``
+    fold the output scale s_out = s_in * a * s_erf^2 / 2 into a requant to
+    int8 at scale s_in (so GeLU is a drop-in on the int8 tensor).
+    """
+    s_erf = s_in / np.sqrt(2.0)
+    b_int = int(np.floor(IGELU_B / s_erf))
+    c_int = int(np.floor(1.0 / (IGELU_A * s_erf * s_erf)))
+    s_out = s_in * (IGELU_A * s_erf * s_erf) / 2.0
+    # requant factor from s_out to s_in: s_out / s_in = a*s_erf^2/2
+    ratio = s_out / s_in
+    sig_shift = 20
+    sig_mult = int(round(ratio * (1 << sig_shift)))
+    # int32-overflow guard: |q| <= 128, |q_erf + q_one| <= 2|c_int|
+    assert 128 * 2 * abs(c_int) * abs(sig_mult) < 2**31, (
+        f"igelu constants overflow i32 for s_in={s_in}"
+    )
+    return b_int, c_int, sig_mult, sig_shift
+
+
+def igelu(q, s_in):
+    """Integer GeLU on int8-range values ``q`` (int32 container).
+
+    i-GeLU from I-BERT: erf approximated by a clipped parabola, everything
+    in integer arithmetic. Output is int8 range at the same scale as the
+    input (requantized internally).
+    """
+    b_int, c_int, sig_mult, sig_shift = igelu_consts(s_in)
+    q = q.astype(jnp.int32)
+    sgn = jnp.sign(q)
+    q_abs = jnp.abs(q)
+    q_clip = jnp.minimum(q_abs, jnp.int32(-b_int))
+    t = q_clip + jnp.int32(b_int)  # <= 0
+    q_erf = sgn * (t * t + jnp.int32(c_int))
+    q_one = jnp.int32(c_int)  # erf(+inf) in the same scale: 1/(a*s_erf^2)
+    acc = q * (q_erf + q_one)
+    # requant: acc * s_out -> int8 at scale s_in. All int32: for s_in >=
+    # 0.05, |acc * sig_mult| < 2^31 (checked in igelu_consts) — the rust
+    # model uses the same i32 arithmetic.
+    out = (acc * jnp.int32(sig_mult)) >> sig_shift
+    return clip_i8(out)
+
+
+def irelu(q):
+    """Integer ReLU."""
+    return jnp.maximum(q.astype(jnp.int32), 0)
+
+
+# --- integer sqrt + LayerNorm (I-BERT style, runs on cluster cores) ---------
+
+ISQRT_ITERS = 16
+
+
+def isqrt(n):
+    """Integer Newton sqrt, fixed 16 iterations — bit-exact vs rust.
+
+    n: int32 >= 0. Returns floor-ish sqrt (exact floor after convergence
+    for n < 2^31; the fixed iteration count keeps jnp/rust in lockstep).
+    """
+    n = n.astype(jnp.int32)
+
+    def body(_, x):
+        x_safe = jnp.maximum(x, 1)
+        return (x_safe + n // x_safe) >> 1
+
+    x0 = jnp.full_like(n, 1 << 15)
+    x = lax.fori_loop(0, ISQRT_ITERS, body, x0)
+    # one floor-correction step: Newton can overshoot by 1
+    x = jnp.where(x * x > n, x - 1, x)
+    return jnp.maximum(x, 1)
+
+
+def ilayernorm(x, gamma, beta, mult, shift):
+    """Integer LayerNorm over the last axis.
+
+    x int8-range (int32 container), gamma/beta int8-range per-channel.
+    y = requant(((x - mu) << 7) / sigma * gamma) + beta, clipped to int8.
+    This is the auxiliary operator executed on the cluster cores in the
+    paper (ITA does not support LayerNorm).
+    """
+    x = x.astype(jnp.int32)
+    e = x.shape[-1]
+    mu = jnp.sum(x, axis=-1, keepdims=True) // e
+    d = x - mu
+    var = jnp.sum(d * d, axis=-1, keepdims=True) // e
+    sigma = isqrt(var)
+    n = (d * 128) // sigma
+    acc = n * gamma.astype(jnp.int32)
+    y = requant(acc, mult, shift)
+    return clip_i8(y + beta.astype(jnp.int32))

@@ -1,0 +1,108 @@
+"""Pure-jnp oracle for the ITA datapath.
+
+Non-streaming, whole-tensor formulations of everything the Pallas kernels
+compute in streaming/tiled form. This is the correctness anchor:
+
+  pallas kernel  ==  ref (bit-exact)       [test_kernels.py]
+  ref            ~=  float softmax/gelu    [test_approx.py, loose tolerance]
+  rust ita model ==  ref                   [via PJRT artifacts, rust tests]
+"""
+
+import jax.numpy as jnp
+
+from . import quant
+from .quant import clip_i8, igelu, irelu, itamax, requant
+
+
+def gemm_rq(x, w, bias, mult, shift, act="identity", gelu_s=0.1):
+    """int8 GEMM with 26-bit-style accumulation, bias add, requant, act.
+
+    x: (M, K) int8-range, w: (K, N) int8-range, bias: (N,) int32
+    (24-bit in hardware). Returns (M, N) int8-range int32.
+
+    The accumulator in ITA is D=26 bits; for the supported dims
+    (K <= 512: 512 * 127 * 127 < 2^24) int32 never overflows it.
+    """
+    acc = jnp.matmul(
+        x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    acc = acc + bias.astype(jnp.int32)
+    y = requant(acc, mult, shift)
+    if act == "gelu":
+        y = igelu(y, gelu_s)
+    elif act == "relu":
+        y = irelu(y)
+    elif act != "identity":
+        raise ValueError(f"unknown activation {act}")
+    return y
+
+
+def attention_head(q, k, v, qk_mult, qk_shift, av_mult, av_shift):
+    """Single-head quantized attention, the ITA hot path.
+
+    q, k, v: (S, P) int8-range. Computes
+      QK = requant(Q @ K^T)        # int8 logits
+      A  = ITAMax(QK)              # streaming softmax in hardware
+      O  = requant(A @ V)          # int8 output
+    Returns (O, QK, A) so tests can check each stage.
+    """
+    qk_acc = jnp.matmul(
+        q.astype(jnp.int32), k.astype(jnp.int32).T, preferred_element_type=jnp.int32
+    )
+    qk = requant(qk_acc, qk_mult, qk_shift)
+    a = itamax(qk)
+    av_acc = jnp.matmul(a, v.astype(jnp.int32), preferred_element_type=jnp.int32)
+    o = requant(av_acc, av_mult, av_shift)
+    return o, qk, a
+
+
+def mha(x, wq, wk, wv, wo, bq, bk, bv, bo, rq):
+    """Multi-head attention, head-by-head as ITA executes it.
+
+    x: (S, E); wq/wk/wv: (H, E, P); wo: (H, P, E); biases per head except
+    bo: (E,) added once. rq: dict of requant params. The partial output
+    projections are accumulated in int32 by the cluster cores (the paper's
+    head-accumulation layer) and requantized once at the end.
+    """
+    h = wq.shape[0]
+    s, e = x.shape
+    acc = jnp.zeros((s, e), dtype=jnp.int32)
+    for i in range(h):
+        q = gemm_rq(x, wq[i], bq[i], rq["q_mult"], rq["q_shift"])
+        k = gemm_rq(x, wk[i], bk[i], rq["k_mult"], rq["k_shift"])
+        v = gemm_rq(x, wv[i], bv[i], rq["v_mult"], rq["v_shift"])
+        o, _, _ = attention_head(
+            q, k, v, rq["qk_mult"], rq["qk_shift"], rq["av_mult"], rq["av_shift"]
+        )
+        # partial output projection for this head, left in int32
+        acc = acc + jnp.matmul(
+            o, wo[i].astype(jnp.int32), preferred_element_type=jnp.int32
+        )
+    acc = acc + bo.astype(jnp.int32)
+    return requant(acc, rq["o_mult"], rq["o_shift"])
+
+
+# --- float references for approximation-quality tests -----------------------
+
+
+def float_softmax_base2(x):
+    """Float base-2 softmax — what ITAMax approximates (scale 1/128)."""
+    xf = x.astype(jnp.float32) / (1 << quant.ITA_F)
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    e = jnp.exp2(xf - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def float_gelu(x):
+    """Exact float GeLU for i-GeLU quality checks."""
+    from jax.scipy.stats import norm
+
+    xf = x.astype(jnp.float32)
+    return xf * norm.cdf(xf)
+
+
+def float_layernorm(x):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (xf - mu) / jnp.sqrt(var + 1e-5)

@@ -1,0 +1,250 @@
+"""Layer 2: the quantized Transformer encoder in JAX, calling the Pallas
+kernels (Layer 1). Build-time only — lowered once to HLO text by aot.py and
+executed from rust via PJRT; Python is never on the request path.
+
+The model follows the paper's evaluation networks (footnotes 4-6):
+
+  MobileBERT         S=128, E=128, P=64, H=4,  N=24, d_ff=512  (4 stacked FFNs)
+  DINOv2-Small       S=241, E=384, P=64, H=6,  N=12, d_ff=1536 (padded to S=256)
+  Whisper-Tiny enc.  S=512, E=384, P=64, H=6,  N=4,  d_ff=1536
+
+All arithmetic is 8-bit integer (int32 containers) with ITA's exact
+semantics: GEMMs/attention use the Pallas kernels; LayerNorm and residual
+adds use the integer "cluster core" ops from kernels.quant (these run on
+the Snitch cores in the paper — ITA does not support them).
+
+Weight layout per encoder layer (synthetic int8 weights; the paper's
+metrics are activity/latency/energy, never task accuracy):
+  wq, wk, wv : (H, E, P)    bq, bk, bv : (H, P)
+  wo         : (H, P, E)    bo         : (E,)
+  w1         : (F, E, d_ff) b1         : (F, d_ff)     F = ffn_stack
+  w2         : (F, d_ff, E) b2         : (F, E)
+  ln1_g/b    : (E,)         ln2_g/b    : (F, E)
+"""
+
+import dataclasses
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ita_attention, ita_gemm
+from .kernels.quant import clip_i8, ilayernorm, requant
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of one evaluation network (paper footnotes 4-6)."""
+
+    name: str
+    seq: int  # padded sequence length at ITA boundaries
+    seq_logical: int  # the paper's sequence length (GOp accounting)
+    emb: int
+    proj: int
+    heads: int
+    layers: int
+    dff: int
+    ffn_stack: int = 1  # MobileBERT stacks 4 FFNs per block
+    act: str = "gelu"
+    gop_per_inference: float = 0.0  # paper-reported GOp (footnotes)
+
+
+MOBILEBERT = ModelConfig(
+    "mobilebert", 128, 128, 128, 64, 4, 24, 512, ffn_stack=4, act="relu",
+    gop_per_inference=4.74,
+)
+DINOV2S = ModelConfig(
+    "dinov2s", 256, 241, 384, 64, 6, 12, 1536, gop_per_inference=11.7
+)
+WHISPER_TINY_ENC = ModelConfig(
+    "whisper_tiny_enc", 512, 512, 384, 64, 6, 4, 1536, gop_per_inference=9.74
+)
+
+CONFIGS = {c.name: c for c in (MOBILEBERT, DINOV2S, WHISPER_TINY_ENC)}
+
+
+def rq_for(k_dim, target_std=30.0):
+    """Requantization (mult, shift) for a GEMM with reduction dim k_dim.
+
+    Chosen so int8 activations with std ~74 (uniform) map back to std
+    ~target_std after the GEMM — keeps every layer in live int8 range.
+    Deterministic; mirrored by rust models::rq_for.
+    """
+    acc_std = math.sqrt(k_dim) * 74.0 * 74.0
+    ratio = target_std / acc_std
+    shift = 14
+    mult = max(1, round(ratio * (1 << shift)))
+    return mult, shift
+
+
+def rq_params(cfg: ModelConfig):
+    """All requant params of one encoder layer, keyed as ref.mha expects."""
+    qm, qs = rq_for(cfg.emb)
+    qkm, qks = rq_for(cfg.proj, target_std=40.0)  # logits: slightly hotter
+    avm, avs = rq_for(128, target_std=30.0)  # A rows sum to ~128 (scale 1/128)
+    om, os_ = rq_for(cfg.proj * cfg.heads)
+    f1m, f1s = rq_for(cfg.emb)
+    f2m, f2s = rq_for(cfg.dff)
+    lnm, lns = 16, 12  # layernorm output gain
+    return {
+        "q_mult": qm, "q_shift": qs,
+        "k_mult": qm, "k_shift": qs,
+        "v_mult": qm, "v_shift": qs,
+        "qk_mult": qkm, "qk_shift": qks,
+        "av_mult": avm, "av_shift": avs,
+        "o_mult": om, "o_shift": os_,
+        "ffn1_mult": f1m, "ffn1_shift": f1s,
+        "ffn2_mult": f2m, "ffn2_shift": f2s,
+        "ln_mult": lnm, "ln_shift": lns,
+    }
+
+
+GELU_S = 0.1  # activation scale fed to i-GeLU (fixed, see quant.igelu)
+
+
+def mha(x, wq, wk, wv, wo, bq, bk, bv, bo, rq, cfg: ModelConfig):
+    """Multi-head attention, head-by-head as ITA executes it (Pallas L1).
+
+    Partial per-head output projections are accumulated in int32 (the
+    cluster's head-accumulation layer) and requantized once.
+    """
+    s, e = x.shape
+    acc = jnp.zeros((s, e), dtype=jnp.int32)
+    for h in range(cfg.heads):
+        q = ita_gemm.gemm_rq(x, wq[h], bq[h], rq["q_mult"], rq["q_shift"])
+        k = ita_gemm.gemm_rq(x, wk[h], bk[h], rq["k_mult"], rq["k_shift"])
+        v = ita_gemm.gemm_rq(x, wv[h], bv[h], rq["v_mult"], rq["v_shift"])
+        o = ita_attention.attention_head(
+            q, k, v, rq["qk_mult"], rq["qk_shift"], rq["av_mult"], rq["av_shift"]
+        )
+        acc = acc + jnp.matmul(
+            o, wo[h].astype(jnp.int32), preferred_element_type=jnp.int32
+        )
+    acc = acc + bo.astype(jnp.int32)
+    return requant(acc, rq["o_mult"], rq["o_shift"])
+
+
+def encoder_layer(
+    x, wq, wk, wv, wo, bq, bk, bv, bo, w1, b1, w2, b2,
+    ln1_g, ln1_b, ln2_g, ln2_b, cfg: ModelConfig,
+):
+    """One pre-LN encoder block in ITA integer semantics.
+
+    x: (S, E) int8-range int32. Residual adds saturate to int8 (the
+    cluster's requant-add). Returns (S, E) int8-range.
+    """
+    rq = rq_params(cfg)
+
+    h = ilayernorm(x, ln1_g, ln1_b, rq["ln_mult"], rq["ln_shift"])
+    attn = mha(h, wq, wk, wv, wo, bq, bk, bv, bo, rq, cfg)
+    x = clip_i8(x + attn)
+
+    for f in range(cfg.ffn_stack):
+        h = ilayernorm(x, ln2_g[f], ln2_b[f], rq["ln_mult"], rq["ln_shift"])
+        u = ita_gemm.gemm_rq(
+            h, w1[f], b1[f], rq["ffn1_mult"], rq["ffn1_shift"],
+            act=cfg.act, gelu_s=GELU_S,
+        )
+        d = ita_gemm.gemm_rq(u, w2[f], b2[f], rq["ffn2_mult"], rq["ffn2_shift"])
+        x = clip_i8(x + d)
+    return x
+
+
+def layer_weight_shapes(cfg: ModelConfig):
+    """Argument order + shapes of encoder_layer weights (AOT manifest)."""
+    e, p, h, f, dff = cfg.emb, cfg.proj, cfg.heads, cfg.ffn_stack, cfg.dff
+    return [
+        ("wq", (h, e, p)), ("wk", (h, e, p)), ("wv", (h, e, p)),
+        ("wo", (h, p, e)),
+        ("bq", (h, p)), ("bk", (h, p)), ("bv", (h, p)), ("bo", (e,)),
+        ("w1", (f, e, dff)), ("b1", (f, dff)),
+        ("w2", (f, dff, e)), ("b2", (f, e)),
+        ("ln1_g", (e,)), ("ln1_b", (e,)),
+        ("ln2_g", (f, e)), ("ln2_b", (f, e)),
+    ]
+
+
+# --- deterministic synthetic weights (mirrored by rust models::synth) -------
+
+_SPLITMIX_GAMMA = 0x9E3779B97F4A7C15
+_MASK64 = (1 << 64) - 1
+
+
+def splitmix64(x):
+    """splitmix64 finalizer — pure function of the index (vectorizable)."""
+    x = np.asarray(x, dtype=np.uint64)
+    x = (x + np.uint64(_SPLITMIX_GAMMA)) & np.uint64(_MASK64)
+    x ^= x >> np.uint64(30)
+    x = (x * np.uint64(0xBF58476D1CE4E5B9)) & np.uint64(_MASK64)
+    x ^= x >> np.uint64(27)
+    x = (x * np.uint64(0x94D049BB133111EB)) & np.uint64(_MASK64)
+    x ^= x >> np.uint64(31)
+    return x
+
+
+def fnv1a(s):
+    """FNV-1a 64-bit hash of a string — tensor-name keying."""
+    h = 0xCBF29CE484222325
+    for ch in s.encode():
+        h = ((h ^ ch) * 0x100000001B3) & _MASK64
+    return h
+
+
+def synth_tensor(name, shape, kind, seed=0):
+    """Deterministic synthetic tensor: value_i = f(seed, name, i).
+
+    kind: 'w' int8 weights, 'b' small biases, 'g' gamma [32,96), 'beta'
+    [-16,16). Bit-identical to rust models::synth_tensor.
+    """
+    n = int(np.prod(shape))
+    key = (fnv1a(name) ^ (np.uint64(seed) * np.uint64(_SPLITMIX_GAMMA))) & np.uint64(
+        _MASK64
+    )
+    with np.errstate(over="ignore"):
+        r = splitmix64(np.arange(n, dtype=np.uint64) + key)
+    if kind == "w":
+        vals = (r & np.uint64(0xFF)).astype(np.int64) - 128
+    elif kind == "b":
+        vals = (r & np.uint64(0xFFF)).astype(np.int64) - 2048
+    elif kind == "g":
+        vals = (r & np.uint64(0x3F)).astype(np.int64) + 32
+    elif kind == "beta":
+        vals = (r & np.uint64(0x1F)).astype(np.int64) - 16
+    else:
+        raise ValueError(kind)
+    return vals.astype(np.int32).reshape(shape)
+
+
+def _kind_of(name):
+    if name.endswith("_g"):
+        return "g"
+    if name.endswith("_b") and name.startswith("ln"):
+        return "beta"
+    return "w" if name.startswith("w") else "b"
+
+
+def synth_layer_weights(cfg: ModelConfig, layer_idx=0, seed=0):
+    """All weights of one encoder layer, keyed by (seed, layer, name)."""
+    out = []
+    for name, shape in layer_weight_shapes(cfg):
+        key = f"{cfg.name}/L{layer_idx}/{name}"
+        out.append((name, synth_tensor(key, shape, _kind_of(name), seed=seed)))
+    return out
+
+
+def synth_input(cfg: ModelConfig, seed=1):
+    """Deterministic synthetic int8 input activation (S, E)."""
+    t = synth_tensor(f"{cfg.name}/input", (cfg.seq, cfg.emb), "w", seed=seed)
+    return t
+
+
+def forward(cfg: ModelConfig, x, all_weights):
+    """Full-network forward: N encoder layers (build-time reference)."""
+    for li in range(cfg.layers):
+        w = dict(all_weights[li])
+        x = encoder_layer(
+            x, w["wq"], w["wk"], w["wv"], w["wo"], w["bq"], w["bk"], w["bv"],
+            w["bo"], w["w1"], w["b1"], w["w2"], w["b2"],
+            w["ln1_g"], w["ln1_b"], w["ln2_g"], w["ln2_b"], cfg,
+        )
+    return x

@@ -1,0 +1,54 @@
+"""Standalone ITAMax Pallas kernel vs the oracle — bit-exact, plus
+block-size invariance (the kernel result must not depend on how rows are
+split across the grid)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import itamax as km
+from compile.kernels import quant
+
+
+@pytest.mark.parametrize("rows,cols", [(16, 16), (64, 64), (128, 256), (64, 512)])
+def test_matches_oracle(rows, cols):
+    rng = np.random.default_rng(rows * 7 + cols)
+    x = rng.integers(-128, 128, (rows, cols)).astype(np.int32)
+    got = np.asarray(km.itamax(jnp.asarray(x)))
+    want = np.asarray(quant.itamax(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.sampled_from([32, 64, 128]),
+    cols=st.sampled_from([16, 48, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_matches_oracle(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (rows, cols)).astype(np.int32)
+    got = np.asarray(km.itamax(jnp.asarray(x)))
+    want = np.asarray(quant.itamax(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_block_size_invariance():
+    rng = np.random.default_rng(3)
+    x = rng.integers(-128, 128, (128, 64)).astype(np.int32)
+    a32 = np.asarray(km.itamax(jnp.asarray(x), block_rows=32))
+    a64 = np.asarray(km.itamax(jnp.asarray(x), block_rows=64))
+    a128 = np.asarray(km.itamax(jnp.asarray(x), block_rows=128))
+    np.testing.assert_array_equal(a32, a64)
+    np.testing.assert_array_equal(a64, a128)
+
+
+def test_saturated_inputs():
+    x = np.full((16, 32), 127, np.int32)
+    a = np.asarray(km.itamax(jnp.asarray(x)))
+    # uniform max logits -> uniform probabilities 128/32 = 4
+    assert (a == 4).all()
+    x = np.full((16, 32), -128, np.int32)
+    a = np.asarray(km.itamax(jnp.asarray(x)))
+    assert (a == 4).all(), "softmax is shift-invariant even at the rail"

@@ -1,0 +1,146 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Every test asserts *bit-exact* equality: the kernels implement the same
+integer spec as ref.py, only in streaming/tiled form.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ita_attention as att
+from compile.kernels import ita_gemm
+from compile.kernels import quant, ref
+
+
+def rand_i8(rng, shape):
+    return rng.integers(-128, 128, shape).astype(np.int32)
+
+
+# --- attention ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", [64, 128, 256])
+@pytest.mark.parametrize("p", [64, 128])
+def test_attention_head_matches_ref(s, p):
+    rng = np.random.default_rng(s * 1000 + p)
+    q, k, v = (rand_i8(rng, (s, p)) for _ in range(3))
+    o_ref, qk_ref, _ = ref.attention_head(q, k, v, 15, 14, 8, 14)
+    qk, m, den = att.qk_itamax(q, k, 15, 14)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qk_ref))
+    o = att.av_en(qk, m, den, v, 8, 14)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(o_ref))
+
+
+def test_attention_stats_match_oracle_streaming_order():
+    """The kernel's cross-tile carry must equal the oracle's chunk scan."""
+    rng = np.random.default_rng(7)
+    q, k = rand_i8(rng, (128, 64)), rand_i8(rng, (128, 64))
+    qk, m, den = att.qk_itamax(q, k, 15, 14)
+    m_ref, den_ref = quant.itamax_stats(np.asarray(qk))
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(m_ref))
+    np.testing.assert_array_equal(np.asarray(den), np.asarray(den_ref))
+
+
+def test_attention_rectangular_kv():
+    """S_q != S_kv (cross-attention shape)."""
+    rng = np.random.default_rng(11)
+    q = rand_i8(rng, (64, 64))
+    k, v = rand_i8(rng, (192, 64)), rand_i8(rng, (192, 64))
+    qk_acc = q.astype(np.int64) @ k.T.astype(np.int64)
+    qk_ref = np.asarray(quant.requant(jnp.asarray(qk_acc.astype(np.int32)), 15, 14))
+    a_ref = np.asarray(quant.itamax(jnp.asarray(qk_ref)))
+    o_ref = np.asarray(
+        quant.requant(jnp.asarray(a_ref @ v), 8, 14)
+    )
+    qk, m, den = att.qk_itamax(q, k, 15, 14)
+    o = att.av_en(qk, m, den, v, 8, 14)
+    np.testing.assert_array_equal(np.asarray(o), o_ref)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.sampled_from([64, 128, 192]),
+    p=st.sampled_from([64, 128]),
+    t_kv=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    qk_shift=st.integers(10, 16),
+)
+def test_attention_property(s, p, t_kv, seed, qk_shift):
+    """Hypothesis sweep: shapes, tile sizes, requant params, seeds."""
+    rng = np.random.default_rng(seed)
+    q, k, v = (rand_i8(rng, (s, p)) for _ in range(3))
+    o_ref, _, _ = ref.attention_head(q, k, v, 15, qk_shift, 8, 14)
+    o = att.attention_head(q, k, v, 15, qk_shift, 8, 14, t_kv=t_kv)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(o_ref))
+
+
+def test_attention_constant_rows():
+    """Degenerate input: all logits equal -> uniform probabilities."""
+    s = 64
+    q = np.zeros((s, 64), np.int32)
+    k = np.zeros((s, 64), np.int32)
+    v = np.full((s, 64), 100, np.int32)
+    o_ref, _, a = ref.attention_head(q, k, v, 15, 14, 8, 14)
+    o = att.attention_head(q, k, v, 15, 14, 8, 14)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(o_ref))
+    a = np.asarray(a)
+    assert (a == a[0, 0]).all(), "uniform logits must give uniform A"
+
+
+def test_attention_onehot_rows():
+    """One dominant logit -> A concentrates at ~127 on that element."""
+    s, p = 64, 64
+    rng = np.random.default_rng(3)
+    q = rand_i8(rng, (s, p))
+    k = rand_i8(rng, (s, p))
+    qk, m, den = att.qk_itamax(q, k, 15, 2)  # tiny shift -> saturated logits
+    a = np.asarray(quant.itamax(np.asarray(qk)))
+    assert a.max() <= 127 and a.min() >= 0
+
+
+# --- GEMM --------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("act", ["identity", "relu", "gelu"])
+@pytest.mark.parametrize("dims", [(64, 64, 64), (128, 192, 64), (64, 512, 128)])
+def test_gemm_matches_ref(act, dims):
+    m, k, n = dims
+    rng = np.random.default_rng(m + k + n)
+    x, w = rand_i8(rng, (m, k)), rand_i8(rng, (k, n))
+    b = rng.integers(-(2**11), 2**11, (n,)).astype(np.int32)
+    g_ref = ref.gemm_rq(x, w, b, 7, 13, act=act)
+    g = ita_gemm.gemm_rq(x, w, b, 7, 13, act=act)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g_ref))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mt=st.integers(1, 3),
+    kt=st.integers(1, 4),
+    nt=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    mult=st.integers(1, 64),
+    shift=st.integers(8, 16),
+)
+def test_gemm_property(mt, kt, nt, seed, mult, shift):
+    """Hypothesis sweep over tile-multiples and requant params."""
+    m, k, n = 64 * mt, 64 * kt, 64 * nt
+    rng = np.random.default_rng(seed)
+    x, w = rand_i8(rng, (m, k)), rand_i8(rng, (k, n))
+    b = rng.integers(-(2**11), 2**11, (n,)).astype(np.int32)
+    g_ref = ref.gemm_rq(x, w, b, mult, shift)
+    g = ita_gemm.gemm_rq(x, w, b, mult, shift)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g_ref))
+
+
+def test_gemm_bias_zero_and_saturation():
+    m = k = n = 64
+    x = np.full((m, k), 127, np.int32)
+    w = np.full((k, n), 127, np.int32)
+    b = np.zeros(n, np.int32)
+    g = np.asarray(ita_gemm.gemm_rq(x, w, b, 1 << 8, 8))
+    assert (g == 127).all(), "saturating accumulation must clip at +127"
+    g2 = np.asarray(ita_gemm.gemm_rq(x, -w, b, 1 << 8, 8))
+    assert (g2 == -128).all(), "negative saturation must clip at -128"

@@ -1,0 +1,144 @@
+"""L2 model tests: encoder layer shapes, determinism, synthetic weights,
+and consistency between the Pallas-kernel model and the pure-jnp oracle.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def small_cfg(**kw):
+    """A scaled-down config for fast tests."""
+    base = dict(
+        name="tiny", seq=64, seq_logical=64, emb=64, proj=64, heads=2,
+        layers=2, dff=128, ffn_stack=1, act="gelu", gop_per_inference=0.1,
+    )
+    base.update(kw)
+    return M.ModelConfig(**base)
+
+
+def weights_dict(cfg, layer=0, seed=0):
+    return dict(M.synth_layer_weights(cfg, layer_idx=layer, seed=seed))
+
+
+def run_layer(cfg, x, w):
+    return M.encoder_layer(
+        jnp.asarray(x), w["wq"], w["wk"], w["wv"], w["wo"], w["bq"], w["bk"],
+        w["bv"], w["bo"], w["w1"], w["b1"], w["w2"], w["b2"],
+        w["ln1_g"], w["ln1_b"], w["ln2_g"], w["ln2_b"], cfg,
+    )
+
+
+def test_encoder_layer_shape_and_range():
+    cfg = small_cfg()
+    w = weights_dict(cfg)
+    x = M.synth_input(cfg)
+    y = np.asarray(run_layer(cfg, x, w))
+    assert y.shape == (cfg.seq, cfg.emb)
+    assert y.min() >= -128 and y.max() <= 127
+    assert y.std() > 5.0, "activations must stay alive through the layer"
+
+
+def test_encoder_layer_deterministic():
+    cfg = small_cfg()
+    w = weights_dict(cfg)
+    x = M.synth_input(cfg)
+    y1 = np.asarray(run_layer(cfg, x, w))
+    y2 = np.asarray(run_layer(cfg, x, w))
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_mha_matches_ref_oracle():
+    """model.mha (Pallas kernels) == ref.mha (pure jnp), bit-exact."""
+    cfg = small_cfg()
+    w = weights_dict(cfg)
+    rq = M.rq_params(cfg)
+    x = M.synth_input(cfg)
+    got = np.asarray(
+        M.mha(jnp.asarray(x), w["wq"], w["wk"], w["wv"], w["wo"], w["bq"],
+              w["bk"], w["bv"], w["bo"], rq, cfg)
+    )
+    want = np.asarray(
+        ref.mha(jnp.asarray(x), w["wq"], w["wk"], w["wv"], w["wo"], w["bq"],
+                w["bk"], w["bv"], w["bo"], rq)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ffn_stack_count():
+    """MobileBERT's 4 stacked FFNs must actually change the output."""
+    cfg1 = small_cfg(ffn_stack=1)
+    cfg4 = small_cfg(ffn_stack=4)
+    x = M.synth_input(cfg1)
+    w1, w4 = weights_dict(cfg1), weights_dict(cfg4)
+    y1 = np.asarray(run_layer(cfg1, x, w1))
+    y4 = np.asarray(run_layer(cfg4, x, w4))
+    assert not np.array_equal(y1, y4)
+
+
+def test_synth_weights_deterministic_and_keyed():
+    cfg = small_cfg()
+    a = weights_dict(cfg, layer=0)
+    b = weights_dict(cfg, layer=0)
+    c = weights_dict(cfg, layer=1)
+    np.testing.assert_array_equal(a["wq"], b["wq"])
+    assert not np.array_equal(a["wq"], c["wq"]), "layers must differ"
+    assert a["wq"].min() >= -128 and a["wq"].max() <= 127
+    assert a["ln1_g"].min() >= 32 and a["ln1_g"].max() < 96
+
+
+def test_splitmix_golden():
+    """Golden values pin the splitmix64 stream shared with rust."""
+    vals = M.splitmix64(np.arange(4, dtype=np.uint64))
+    assert vals.tolist() == [
+        16294208416658607535,
+        10451216379200822465,
+        10905525725756348110,
+        2092789425003139053,
+    ]
+    assert M.fnv1a("mobilebert/L0/wq") == M.fnv1a("mobilebert/L0/wq")
+    assert M.fnv1a("a") != M.fnv1a("b")
+
+
+@pytest.mark.parametrize("name", list(M.CONFIGS))
+def test_paper_configs(name):
+    cfg = M.CONFIGS[name]
+    assert cfg.seq % 64 == 0, "ITA tiling requires padded sequence"
+    assert cfg.proj == 64  # P = 64 across all three networks
+    assert cfg.gop_per_inference > 0
+
+
+def test_forward_two_layers_composes():
+    """Full-network forward: layers chain without drift or saturation."""
+    cfg = small_cfg(layers=2)
+    weights = [M.synth_layer_weights(cfg, layer_idx=l) for l in range(2)]
+    x = M.synth_input(cfg)
+    y = np.asarray(M.forward(cfg, jnp.asarray(x), weights))
+    assert y.shape == (cfg.seq, cfg.emb)
+    assert y.min() >= -128 and y.max() <= 127
+    # layer 2 must actually transform layer 1's output
+    y1 = np.asarray(run_layer(cfg, x, dict(weights[0])))
+    assert not np.array_equal(y, y1)
+    # saturation must not collapse the distribution
+    sat = np.mean((y == 127) | (y == -128))
+    assert sat < 0.2, f"saturation fraction {sat}"
+
+
+def test_paper_gop_footnotes_consistent():
+    """Recompute GOp from geometry; must be within ~20% of the footnotes
+    (the footnotes include auxiliary ops we don't count here)."""
+    for cfg in M.CONFIGS.values():
+        s, e, p, h, dff, f = (
+            cfg.seq_logical, cfg.emb, cfg.proj, cfg.heads, cfg.dff, cfg.ffn_stack,
+        )
+        qkv = 3 * 2 * s * e * p * h
+        attn = 2 * 2 * s * s * p * h
+        out = 2 * s * p * h * e
+        ffn = f * 2 * 2 * s * e * dff
+        total = (qkv + attn + out + ffn) * cfg.layers / 1e9
+        assert abs(total - cfg.gop_per_inference) / cfg.gop_per_inference < 0.25, (
+            cfg.name, total, cfg.gop_per_inference,
+        )

@@ -1,0 +1,232 @@
+"""Integer-primitive spec tests: ITAMax / i-GeLU / i-LayerNorm / requant.
+
+These pin down the *specification* that the rust functional model
+(rust/src/ita/) re-implements — plus approximation-quality checks against
+float references (loose tolerances: these are 8-bit approximations).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+
+# --- EXP2 LUT / exp2_num -----------------------------------------------------
+
+
+def test_exp2_lut_values():
+    """The table is round(256 * 2^(-i/32)) — golden, shared with rust."""
+    expected = [int(round(256 * 2 ** (-i / 32))) for i in range(32)]
+    assert quant.EXP2_LUT_LIST == expected
+    assert quant.EXP2_LUT_LIST[0] == 256
+    assert quant.EXP2_LUT_LIST[31] == 131
+
+
+def test_exp2_num_monotone_decreasing():
+    d = jnp.arange(0, 1024, dtype=jnp.int32)
+    n = np.asarray(quant.exp2_num(d))
+    assert (np.diff(n) <= 0).all()
+    assert n[0] == 256
+    assert n[-1] == 0
+
+
+def test_exp2_num_matches_float():
+    d = np.arange(0, 512, dtype=np.int32)
+    n = np.asarray(quant.exp2_num(jnp.asarray(d))).astype(np.float64)
+    f = 256.0 * 2.0 ** (-d / 32.0)
+    # LUT quantization + truncation: error bounded by ~1 output LSB + shift
+    assert np.max(np.abs(n - f)) <= 2.0
+
+
+# --- ITAMax ------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 8),
+    cols=st.sampled_from([16, 32, 64, 128, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_itamax_rows_sum_to_one(rows, cols, seed):
+    """Quantized probabilities: rows sum to at most 128 (scale 1/2^7).
+
+    EN truncation can only lose mass, never create it. For peaked rows the
+    sum stays near 128; near-uniform long rows lose most of it to the 8-bit
+    granularity (1/128 cannot represent 1/512) — an inherent property of
+    ITA's 8-bit attention, pinned by test_itamax_uniform_long_row.
+    """
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (rows, cols)).astype(np.int32)
+    a = np.asarray(quant.itamax(jnp.asarray(x)))
+    assert a.min() >= 0 and a.max() <= 127
+    sums = a.sum(axis=-1)
+    assert (sums <= 128).all()
+    if cols <= 64:
+        assert (sums >= 96).all(), sums
+
+
+def test_itamax_uniform_long_row():
+    """Uniform 512-wide rows underflow 8-bit probabilities to zero."""
+    x = np.zeros((1, 512), np.int32)
+    a = np.asarray(quant.itamax(jnp.asarray(x)))
+    assert (a == 0).all()  # 1/512 < 1/128 LSB — documented precision floor
+
+
+def test_itamax_peaked_short_row():
+    """Max-contrast logit on a short row concentrates the mass.
+
+    With F=5 fractional bits an int8 logit spans +-4 octaves, so the
+    max/min probability ratio is 2^(255/32) ~ 250x: on a 16-wide row the
+    peak gets a = floor(256 * inv(256 + 15) >> 17) = 120 of 128.
+    Attention *sharpness* is controlled by the QK requant scale upstream,
+    exactly as ITA's calibrated dequantization eps does.
+    """
+    x = np.full((1, 16), -128, np.int32)
+    x[0, 3] = 127
+    a = np.asarray(quant.itamax(jnp.asarray(x)))
+    assert a[0, 3] == 120
+    assert a[0, 0] == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    cols=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_itamax_approximates_float_softmax(cols, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (16, cols)).astype(np.int32)
+    a = np.asarray(quant.itamax(jnp.asarray(x))) / 128.0
+    f = np.asarray(ref.float_softmax_base2(jnp.asarray(x)))
+    assert np.max(np.abs(a - f)) < 0.02
+
+
+def test_itamax_invariant_to_shift():
+    """Softmax(x + c) == Softmax(x): adding a row constant is a no-op."""
+    rng = np.random.default_rng(5)
+    x = rng.integers(-100, 20, (4, 64)).astype(np.int32)
+    a1 = np.asarray(quant.itamax(jnp.asarray(x)))
+    a2 = np.asarray(quant.itamax(jnp.asarray(x + 27)))
+    np.testing.assert_array_equal(a1, a2)
+
+
+def test_itamax_streaming_chunk_order_matters():
+    """Pin the DA chunk width: results are defined by 16-element chunks."""
+    rng = np.random.default_rng(9)
+    x = rng.integers(-128, 128, (4, 128)).astype(np.int32)
+    m, den = quant.itamax_stats(jnp.asarray(x))
+    # manual scan, numpy, same spec
+    for r in range(4):
+        mm, dd = -quant.ITAMAX_M0, 0
+        for c in range(128 // 16):
+            ch = x[r, c * 16 : (c + 1) * 16]
+            lm = ch.max()
+            m_new = max(mm, lm)
+            delta = m_new - mm
+            shift = min(8 + (delta >> 5), 31)
+            dd = (dd * quant.EXP2_LUT_LIST[delta & 31]) >> shift
+            d2 = m_new - ch
+            nums = [
+                quant.EXP2_LUT_LIST[d & 31] >> min(d >> 5, 31) for d in d2
+            ]
+            dd += sum(nums)
+            mm = m_new
+        assert int(np.asarray(m)[r, 0]) == mm
+        assert int(np.asarray(den)[r, 0]) == dd
+
+
+def test_itamax_renorm_shift_clamp():
+    """First-chunk delta is huge; the shift clamp keeps behaviour defined."""
+    x = np.full((1, 16), -128, np.int32)
+    m, den = quant.itamax_stats(jnp.asarray(x))
+    assert int(np.asarray(m)[0, 0]) == -128
+    assert int(np.asarray(den)[0, 0]) == 16 * 256  # all-equal row
+
+
+# --- requant -----------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    acc=st.integers(-(2**25), 2**25),
+    mult=st.integers(1, 255),
+    shift=st.integers(1, 20),
+)
+def test_requant_matches_scalar_spec(acc, mult, shift):
+    got = int(np.asarray(quant.requant(jnp.asarray([acc], dtype=jnp.int32), mult, shift))[0])
+    prod = acc * mult
+    if abs(prod) >= 2**31:
+        return  # out of contract
+    want = (prod + (1 << (shift - 1))) >> shift
+    want = max(-128, min(127, want))
+    assert got == want
+
+
+def test_requant_rounding_half_up():
+    # (1 * 1 + 1) >> 1 = 1 : rounds 0.5 up
+    assert int(np.asarray(quant.requant(jnp.asarray([1]), 1, 1))[0]) == 1
+    assert int(np.asarray(quant.requant(jnp.asarray([-1]), 1, 1))[0]) == 0
+
+
+# --- i-GeLU ------------------------------------------------------------------
+
+
+def test_igelu_matches_float_gelu():
+    x = np.arange(-128, 128, dtype=np.int32).reshape(1, -1)
+    s = 0.1
+    g = np.asarray(quant.igelu(jnp.asarray(x), s)).astype(np.float64)
+    f = np.asarray(ref.float_gelu(jnp.asarray(x * s))) / s
+    assert np.max(np.abs(g - f)) <= 2.0  # <= 2 LSB over the whole int8 range
+
+
+def test_igelu_fixed_points():
+    x = jnp.asarray([[0, 127, -128]], dtype=jnp.int32)
+    g = np.asarray(quant.igelu(x, 0.1))
+    assert g[0, 0] == 0
+    assert abs(int(g[0, 1]) - 127) <= 1  # gelu(12.7) ~ 12.7
+    assert abs(int(g[0, 2])) <= 1  # gelu(-12.8) ~ 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.sampled_from([0.05, 0.1, 0.2, 0.5]), seed=st.integers(0, 2**31 - 1))
+def test_igelu_property(s, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (64,)).astype(np.int32)
+    g = np.asarray(quant.igelu(jnp.asarray(x), s)).astype(np.float64)
+    f = np.asarray(ref.float_gelu(jnp.asarray(x * s))) / s
+    tol = max(2.0, 0.05 / s)  # coarser scales -> coarser approximation
+    assert np.max(np.abs(g - f)) <= tol
+
+
+# --- isqrt / i-LayerNorm -----------------------------------------------------
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=st.integers(0, 2**30))
+def test_isqrt_is_floor_sqrt(n):
+    got = int(np.asarray(quant.isqrt(jnp.asarray([n], dtype=jnp.int32)))[0])
+    want = max(1, int(np.floor(np.sqrt(n))))
+    assert got == want
+
+
+def test_ilayernorm_zero_mean_unit_var():
+    rng = np.random.default_rng(2)
+    x = rng.integers(-128, 128, (8, 128)).astype(np.int32)
+    g = np.full(128, 64, np.int32)
+    b = np.zeros(128, np.int32)
+    y = np.asarray(quant.ilayernorm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b), 16, 12))
+    yf = np.asarray(ref.float_layernorm(jnp.asarray(x)))
+    # output scale: (d*128/sigma)*64*16 >> 12 = 32*(d/sigma)
+    corr = np.corrcoef(y.ravel(), yf.ravel())[0, 1]
+    assert corr > 0.999, corr
+    assert abs(y.mean()) < 1.0
+
+
+def test_ilayernorm_beta_offset():
+    x = np.zeros((2, 64), np.int32)
+    g = np.full(64, 64, np.int32)
+    b = np.full(64, 7, np.int32)
+    y = np.asarray(quant.ilayernorm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b), 16, 12))
+    assert (y == 7).all()

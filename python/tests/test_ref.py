@@ -1,0 +1,90 @@
+"""Oracle self-consistency tests: ref.py's composed operators must equal
+their stage-by-stage composition, and degenerate cases behave physically.
+(The oracle anchors everything else, so it gets its own scrutiny.)"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import quant, ref
+
+
+def rand_i8(rng, shape):
+    return rng.integers(-128, 128, shape).astype(np.int32)
+
+
+def test_attention_head_equals_stage_composition():
+    rng = np.random.default_rng(0)
+    q, k, v = (rand_i8(rng, (64, 64)) for _ in range(3))
+    o, qk, a = ref.attention_head(q, k, v, 15, 14, 8, 14)
+    # stage 1: requantized QK
+    qk_manual = np.asarray(
+        quant.requant(jnp.asarray(q.astype(np.int64) @ k.T.astype(np.int64), dtype=jnp.int32), 15, 14)
+    )
+    np.testing.assert_array_equal(np.asarray(qk), qk_manual)
+    # stage 2: ITAMax
+    np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(quant.itamax(jnp.asarray(qk_manual)))
+    )
+    # stage 3: requantized AV
+    o_manual = np.asarray(
+        quant.requant(jnp.asarray(np.asarray(a) @ v), 8, 14)
+    )
+    np.testing.assert_array_equal(np.asarray(o), o_manual)
+
+
+def test_mha_equals_per_head_composition():
+    cfg = M.ModelConfig(
+        name="t", seq=64, seq_logical=64, emb=64, proj=64, heads=2, layers=1,
+        dff=128, ffn_stack=1, act="gelu", gop_per_inference=0.1,
+    )
+    rq = M.rq_params(cfg)
+    rng = np.random.default_rng(1)
+    x = rand_i8(rng, (64, 64))
+    wq, wk, wv = (rand_i8(rng, (2, 64, 64)) for _ in range(3))
+    wo = rand_i8(rng, (2, 64, 64))
+    bq, bk, bv = (rng.integers(-2048, 2048, (2, 64)).astype(np.int32) for _ in range(3))
+    bo = rng.integers(-2048, 2048, (64,)).astype(np.int32)
+
+    got = np.asarray(ref.mha(jnp.asarray(x), wq, wk, wv, wo, bq, bk, bv, bo, rq))
+
+    acc = np.zeros((64, 64), np.int64)
+    for h in range(2):
+        q = np.asarray(ref.gemm_rq(x, wq[h], bq[h], rq["q_mult"], rq["q_shift"]))
+        k = np.asarray(ref.gemm_rq(x, wk[h], bk[h], rq["k_mult"], rq["k_shift"]))
+        v = np.asarray(ref.gemm_rq(x, wv[h], bv[h], rq["v_mult"], rq["v_shift"]))
+        o, _, _ = ref.attention_head(
+            q, k, v, rq["qk_mult"], rq["qk_shift"], rq["av_mult"], rq["av_shift"]
+        )
+        acc += np.asarray(o).astype(np.int64) @ wo[h].astype(np.int64)
+    want = np.asarray(
+        quant.requant(jnp.asarray((acc + bo).astype(np.int32)), rq["o_mult"], rq["o_shift"])
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gemm_identity_weight_is_requant(seed):
+    """x @ I * 2^s scaled back = clip(x) — GEMM reduces to requant."""
+    rng = np.random.default_rng(seed)
+    x = rand_i8(rng, (64, 64))
+    w = (np.eye(64) * 64).astype(np.int32)  # I * 2^6
+    b = np.zeros(64, np.int32)
+    g = np.asarray(ref.gemm_rq(x, w, b, 1 << 8, 14))  # undo the 2^6
+    np.testing.assert_array_equal(g, x)
+
+
+def test_single_chunk_streaming_equals_batch():
+    """With S_kv = 16 (one DA chunk) the streaming denominator reduces to
+    the plain batch formula — verifiable directly in numpy."""
+    rng = np.random.default_rng(5)
+    qk = rand_i8(rng, (8, 16))
+    m, den = quant.itamax_stats(jnp.asarray(qk))
+    m_np = qk.max(axis=1, keepdims=True)
+    diff = m_np - qk
+    num = np.array(quant.EXP2_LUT)[diff & 31] >> np.minimum(diff >> 5, 31)
+    np.testing.assert_array_equal(np.asarray(m), m_np)
+    np.testing.assert_array_equal(np.asarray(den).ravel(), num.sum(axis=1))

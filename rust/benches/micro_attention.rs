@@ -1,0 +1,95 @@
+//! Regenerates the paper's Section V-A attention microbenchmark:
+//! "single-head Attention ... more than 3 orders of magnitude and a 901x
+//! better energy efficiency resulting in 663 GOp/s and 6.35 TOp/J with
+//! 74.9% accelerator utilization. The standalone accelerator achieves a
+//! slightly higher utilization of 79.6%, with the integration ...
+//! incurring only a small decrease of 4.7 p.p."
+//!
+//!     cargo bench --bench micro_attention
+
+use attn_tinyml::energy;
+use attn_tinyml::sim::{ClusterConfig, Cmd, CoreOp, Engine, Step};
+use attn_tinyml::util::bench::section;
+
+fn attn_stream(n: usize, s: usize) -> Vec<Step> {
+    (0..n)
+        .map(|i| {
+            let deps = if i == 0 { vec![] } else { vec![i - 1] };
+            Step::new(Cmd::ItaAttention { s_q: s, s_kv: s, p: 64 }, deps)
+        })
+        .collect()
+}
+
+fn main() {
+    let cluster = ClusterConfig::default();
+    let integrated = Engine::new(cluster.clone());
+    let standalone = Engine::standalone(cluster.clone());
+
+    section("single-head attention sweep (S x S x 64)");
+    println!(
+        "{:>6} {:>12} {:>10} {:>12} {:>14}",
+        "S", "GOp/s", "TOp/J", "util(integ)%", "util(standal)%"
+    );
+    for s in [64, 128, 256, 512] {
+        let si = integrated.run(&attn_stream(64, s));
+        let ss = standalone.run(&attn_stream(64, s));
+        let rep = energy::evaluate(&si, cluster.freq_hz);
+        println!(
+            "{:>6} {:>12.1} {:>10.2} {:>12.2} {:>14.2}",
+            s,
+            rep.gops,
+            rep.gopj / 1e3,
+            si.ita_utilization() * 100.0,
+            ss.ita_utilization() * 100.0
+        );
+    }
+
+    section("multi-core software attention (QK + softmax + AV on cores)");
+    let s = 512u64;
+    let sw_steps = vec![
+        Step::new(Cmd::Core { kind: CoreOp::GemmI8, elems: s * s * 64 }, vec![]),
+        Step::new(Cmd::Core { kind: CoreOp::Softmax, elems: s * s }, vec![0]),
+        Step::new(Cmd::Core { kind: CoreOp::GemmI8, elems: s * s * 64 }, vec![1]),
+    ];
+    let sw_stats = integrated.run(&sw_steps);
+    let sw = energy::evaluate(&sw_stats, cluster.freq_hz);
+    println!("software: {:.3} GOp/s  {:.1} GOp/J", sw.gops, sw.gopj);
+
+    section("paper comparison (Section V-A)");
+    let si = integrated.run(&attn_stream(64, 512));
+    let ss = standalone.run(&attn_stream(64, 512));
+    let ita = energy::evaluate(&si, cluster.freq_hz);
+    println!("{:<30} {:>10} {:>10}", "metric", "paper", "ours");
+    println!("{:<30} {:>10} {:>10.0}", "attention GOp/s", 663, ita.gops);
+    println!("{:<30} {:>10} {:>10.2}", "attention TOp/J", 6.35, ita.gopj / 1e3);
+    println!(
+        "{:<30} {:>10} {:>10.1}",
+        "utilization (integrated) %",
+        74.9,
+        si.ita_utilization() * 100.0
+    );
+    println!(
+        "{:<30} {:>10} {:>10.1}",
+        "utilization (standalone) %",
+        79.6,
+        ss.ita_utilization() * 100.0
+    );
+    println!(
+        "{:<30} {:>10} {:>10.1}",
+        "integration penalty (p.p.)",
+        4.7,
+        (ss.ita_utilization() - si.ita_utilization()) * 100.0
+    );
+    println!(
+        "{:<30} {:>10} {:>10.0}",
+        "throughput ratio (x)",
+        1000,
+        ita.gops / sw.gops
+    );
+    println!(
+        "{:<30} {:>10} {:>10.0}",
+        "efficiency ratio (x)",
+        901,
+        ita.gopj / sw.gopj
+    );
+}

@@ -1,0 +1,55 @@
+//! Regenerates the paper's Table I: end-to-end network performance of
+//! MobileBERT, DINOv2-Small and Whisper-Tiny's encoder on the
+//! multi-core cluster with and without ITA.
+//!
+//!     cargo bench --bench table1_e2e
+
+use attn_tinyml::coordinator::{self, run_model_layers};
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::models::ALL_MODELS;
+use attn_tinyml::util::bench::{bench, section};
+
+/// Paper Table I reference values: (model, mc_mj, mc_infs, ita_mj, ita_infs).
+const PAPER: [(&str, f64, f64, f64, f64); 3] = [
+    ("mobilebert", 164.0, 0.16, 1.60, 32.5),
+    ("dinov2s", 407.0, 0.06, 7.31, 4.83),
+    ("whisper_tiny_enc", 340.0, 0.08, 5.55, 6.52),
+];
+
+fn main() {
+    section("Table I (top): cluster-level metrics");
+    let t = coordinator::table1();
+    println!("{}", t.render());
+
+    section("Table I (bottom): paper vs ours, per network");
+    println!(
+        "{:<18} {:>22} {:>22} {:>22} {:>22}",
+        "network", "mJ/Inf MC (paper/ours)", "Inf/s MC", "mJ/Inf +ITA", "Inf/s +ITA"
+    );
+    for ((sw, acc), (name, p_mj, p_infs, p_amj, p_ainfs)) in t.rows.iter().zip(PAPER) {
+        assert_eq!(sw.model, name);
+        println!(
+            "{:<18} {:>11.1}/{:<10.1} {:>11.3}/{:<10.3} {:>11.2}/{:<10.2} {:>11.2}/{:<10.2}",
+            name, p_mj, sw.mj_per_inf, p_infs, sw.inf_per_s, p_amj, acc.mj_per_inf,
+            p_ainfs, acc.inf_per_s
+        );
+    }
+
+    section("improvement ratios (paper: up to 208x throughput, 102x efficiency)");
+    for (sw, acc) in &t.rows {
+        println!(
+            "{:<18} throughput {:>6.0}x   efficiency {:>6.0}x",
+            sw.model,
+            acc.gops / sw.gops,
+            acc.gopj / sw.gopj
+        );
+    }
+
+    section("regeneration wall-time (perf pass)");
+    bench("deploy+simulate mobilebert (1 layer, both targets)", 10, || {
+        let a = run_model_layers(&ALL_MODELS[0], Target::MultiCore, 1);
+        let b = run_model_layers(&ALL_MODELS[0], Target::MultiCoreIta, 1);
+        (a.cycles, b.cycles)
+    });
+    bench("full table1 (3 models x 2 targets)", 5, coordinator::table1);
+}

@@ -1,0 +1,214 @@
+//! Rust functional forward pass of the encoder — mirrors
+//! `python/compile/model.py::encoder_layer` operation-for-operation so
+//! the PJRT artifacts (lowered from the Pallas/jnp model) and this
+//! implementation must agree **bit-exactly** on the same synthetic
+//! weights. That cross-language equality is the repo's strongest
+//! correctness signal (rust/tests/golden_pjrt.rs).
+
+use crate::ita::engine::{
+    attention_head, gemm_rq, head_accumulate, ilayernorm, matmul_i32, residual_add, Mat,
+};
+use crate::ita::gelu::Act;
+use crate::models::{rq_params, synth_tensor, ModelConfig, SynthKind};
+
+/// The i-GeLU input scale fixed by the L2 model (model.GELU_S).
+pub const GELU_S: f64 = 0.1;
+
+/// All weights of one encoder layer, generated identically to
+/// `model.synth_layer_weights(cfg, layer_idx, seed=0)`.
+pub struct LayerWeights {
+    pub wq: Vec<i32>, // (H, E, P)
+    pub wk: Vec<i32>,
+    pub wv: Vec<i32>,
+    pub wo: Vec<i32>, // (H, P, E)
+    pub bq: Vec<i32>, // (H, P)
+    pub bk: Vec<i32>,
+    pub bv: Vec<i32>,
+    pub bo: Vec<i32>, // (E,)
+    pub w1: Vec<i32>, // (F, E, dff)
+    pub b1: Vec<i32>, // (F, dff)
+    pub w2: Vec<i32>, // (F, dff, E)
+    pub b2: Vec<i32>, // (F, E)
+    pub ln1_g: Vec<i32>,
+    pub ln1_b: Vec<i32>,
+    pub ln2_g: Vec<i32>, // (F, E)
+    pub ln2_b: Vec<i32>,
+}
+
+/// Argument order of the encoder artifacts (matches
+/// `model.layer_weight_shapes` / the AOT manifest).
+pub const WEIGHT_ORDER: [&str; 16] = [
+    "wq", "wk", "wv", "wo", "bq", "bk", "bv", "bo", "w1", "b1", "w2", "b2",
+    "ln1_g", "ln1_b", "ln2_g", "ln2_b",
+];
+
+pub fn weight_shapes(cfg: &ModelConfig) -> Vec<(&'static str, Vec<usize>)> {
+    let (e, p, h, f, dff) = (cfg.emb, cfg.proj, cfg.heads, cfg.ffn_stack, cfg.dff);
+    vec![
+        ("wq", vec![h, e, p]),
+        ("wk", vec![h, e, p]),
+        ("wv", vec![h, e, p]),
+        ("wo", vec![h, p, e]),
+        ("bq", vec![h, p]),
+        ("bk", vec![h, p]),
+        ("bv", vec![h, p]),
+        ("bo", vec![e]),
+        ("w1", vec![f, e, dff]),
+        ("b1", vec![f, dff]),
+        ("w2", vec![f, dff, e]),
+        ("b2", vec![f, e]),
+        ("ln1_g", vec![e]),
+        ("ln1_b", vec![e]),
+        ("ln2_g", vec![f, e]),
+        ("ln2_b", vec![f, e]),
+    ]
+}
+
+fn kind_of(name: &str) -> SynthKind {
+    if name.ends_with("_g") {
+        SynthKind::Gamma
+    } else if name.starts_with("ln") && name.ends_with("_b") {
+        SynthKind::Beta
+    } else if name.starts_with('w') {
+        SynthKind::Weight
+    } else {
+        SynthKind::Bias
+    }
+}
+
+/// Generate the synthetic weights of one layer (seed 0, like python).
+pub fn synth_layer_weights(cfg: &ModelConfig, layer_idx: usize) -> LayerWeights {
+    let get = |name: &str, shape: &[usize]| {
+        let key = format!("{}/L{layer_idx}/{name}", cfg.name);
+        synth_tensor(&key, shape.iter().product(), kind_of(name), 0)
+    };
+    let shapes = weight_shapes(cfg);
+    let s = |n: &str| shapes.iter().find(|(m, _)| *m == n).unwrap().1.clone();
+    LayerWeights {
+        wq: get("wq", &s("wq")),
+        wk: get("wk", &s("wk")),
+        wv: get("wv", &s("wv")),
+        wo: get("wo", &s("wo")),
+        bq: get("bq", &s("bq")),
+        bk: get("bk", &s("bk")),
+        bv: get("bv", &s("bv")),
+        bo: get("bo", &s("bo")),
+        w1: get("w1", &s("w1")),
+        b1: get("b1", &s("b1")),
+        w2: get("w2", &s("w2")),
+        b2: get("b2", &s("b2")),
+        ln1_g: get("ln1_g", &s("ln1_g")),
+        ln1_b: get("ln1_b", &s("ln1_b")),
+        ln2_g: get("ln2_g", &s("ln2_g")),
+        ln2_b: get("ln2_b", &s("ln2_b")),
+    }
+}
+
+fn slice_mat(data: &[i32], idx: usize, rows: usize, cols: usize) -> Mat {
+    let n = rows * cols;
+    Mat::new(rows, cols, data[idx * n..(idx + 1) * n].to_vec())
+}
+
+/// One encoder layer forward — mirrors model.encoder_layer exactly.
+pub fn encoder_layer(cfg: &ModelConfig, x: &Mat, w: &LayerWeights) -> Mat {
+    let rq = rq_params(cfg);
+    let (e, p, h) = (cfg.emb, cfg.proj, cfg.heads);
+    let act = match cfg.act {
+        crate::deeploy::ir::Activation::Gelu => Act::Gelu,
+        crate::deeploy::ir::Activation::Relu => Act::Relu,
+        crate::deeploy::ir::Activation::Identity => Act::Identity,
+    };
+
+    // LN1 -> MHA -> residual
+    let h1 = ilayernorm(x, &w.ln1_g, &w.ln1_b, rq.ln.0, rq.ln.1);
+    let mut partials = Vec::with_capacity(h);
+    for hd in 0..h {
+        let wq = slice_mat(&w.wq, hd, e, p);
+        let wk = slice_mat(&w.wk, hd, e, p);
+        let wv = slice_mat(&w.wv, hd, e, p);
+        let bq = &w.bq[hd * p..(hd + 1) * p];
+        let bk = &w.bk[hd * p..(hd + 1) * p];
+        let bv = &w.bv[hd * p..(hd + 1) * p];
+        let q = gemm_rq(&h1, &wq, bq, rq.q.0, rq.q.1, Act::Identity, GELU_S);
+        let k = gemm_rq(&h1, &wk, bk, rq.q.0, rq.q.1, Act::Identity, GELU_S);
+        let v = gemm_rq(&h1, &wv, bv, rq.q.0, rq.q.1, Act::Identity, GELU_S);
+        let (o, _, _) = attention_head(&q, &k, &v, rq.qk.0, rq.qk.1, rq.av.0, rq.av.1);
+        let wo = slice_mat(&w.wo, hd, p, e);
+        partials.push(matmul_i32(&o, &wo));
+    }
+    let attn = head_accumulate(&partials, &w.bo, rq.o.0, rq.o.1);
+    let mut xcur = residual_add(x, &attn);
+
+    // FFN stack
+    for f in 0..cfg.ffn_stack {
+        let g2 = &w.ln2_g[f * e..(f + 1) * e];
+        let b2v = &w.ln2_b[f * e..(f + 1) * e];
+        let hn = ilayernorm(&xcur, g2, b2v, rq.ln.0, rq.ln.1);
+        let w1 = slice_mat(&w.w1, f, e, cfg.dff);
+        let b1 = &w.b1[f * cfg.dff..(f + 1) * cfg.dff];
+        let u = gemm_rq(&hn, &w1, b1, rq.ffn1.0, rq.ffn1.1, act, GELU_S);
+        let w2 = slice_mat(&w.w2, f, cfg.dff, e);
+        let b2 = &w.b2[f * e..(f + 1) * e];
+        let d = gemm_rq(&u, &w2, b2, rq.ffn2.0, rq.ffn2.1, Act::Identity, GELU_S);
+        xcur = residual_add(&xcur, &d);
+    }
+    xcur
+}
+
+/// Full-network forward over `layers` encoder blocks.
+pub fn forward(cfg: &ModelConfig, layers: usize) -> Mat {
+    let x0 = crate::models::synth_input(cfg);
+    let mut x = Mat::new(cfg.seq, cfg.emb, x0);
+    for l in 0..layers {
+        let w = synth_layer_weights(cfg, l);
+        x = encoder_layer(cfg, &x, &w);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::MOBILEBERT;
+
+    #[test]
+    fn layer_preserves_shape_and_range() {
+        let w = synth_layer_weights(&MOBILEBERT, 0);
+        let x = Mat::new(
+            MOBILEBERT.seq,
+            MOBILEBERT.emb,
+            crate::models::synth_input(&MOBILEBERT),
+        );
+        let y = encoder_layer(&MOBILEBERT, &x, &w);
+        assert_eq!((y.rows, y.cols), (MOBILEBERT.seq, MOBILEBERT.emb));
+        assert!(y.data.iter().all(|&v| (-128..=127).contains(&v)));
+        // activations must stay alive
+        let std = {
+            let m = y.data.iter().map(|&v| v as f64).sum::<f64>() / y.data.len() as f64;
+            (y.data.iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>()
+                / y.data.len() as f64)
+                .sqrt()
+        };
+        assert!(std > 5.0, "std {std}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = synth_layer_weights(&MOBILEBERT, 0);
+        let x = Mat::new(
+            MOBILEBERT.seq,
+            MOBILEBERT.emb,
+            crate::models::synth_input(&MOBILEBERT),
+        );
+        let y1 = encoder_layer(&MOBILEBERT, &x, &w);
+        let y2 = encoder_layer(&MOBILEBERT, &x, &w);
+        assert_eq!(y1.data, y2.data);
+    }
+
+    #[test]
+    fn layers_differ() {
+        let w0 = synth_layer_weights(&MOBILEBERT, 0);
+        let w1 = synth_layer_weights(&MOBILEBERT, 1);
+        assert_ne!(w0.wq, w1.wq);
+    }
+}

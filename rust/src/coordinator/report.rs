@@ -1,0 +1,132 @@
+//! Paper-style reporting: Table I and the microbenchmark section.
+
+use crate::deeploy::Target;
+
+/// Metrics of one (model, target) simulation — one Table I cell group.
+#[derive(Debug, Clone)]
+pub struct ModelReport {
+    pub model: String,
+    pub target: Target,
+    pub seconds: f64,
+    pub energy_j: f64,
+    pub gops: f64,
+    pub gopj: f64,
+    pub power_w: f64,
+    pub inf_per_s: f64,
+    pub mj_per_inf: f64,
+    pub ita_utilization: f64,
+    pub ita_duty: f64,
+    pub cycles: u64,
+    pub l1_peak_bytes: usize,
+    pub l2_activation_bytes: usize,
+}
+
+impl ModelReport {
+    pub fn target_name(&self) -> &'static str {
+        match self.target {
+            Target::MultiCore => "Multi-Core",
+            Target::MultiCoreIta => "Multi-Core + ITA",
+        }
+    }
+}
+
+/// Table I of the paper: per-network rows, both targets.
+pub struct Table1 {
+    pub rows: Vec<(ModelReport, ModelReport)>,
+}
+
+/// Reported numbers of the commercial devices (Table I, as the paper
+/// cites them — reported figures, not re-measured).
+pub struct CommercialDevice {
+    pub name: &'static str,
+    pub gops: (f64, f64),
+    pub gopj: (f64, f64),
+}
+
+pub const COMMERCIAL: [CommercialDevice; 3] = [
+    CommercialDevice { name: "Syntiant NDP120", gops: (2.0, 7.0), gopj: (280.0, 400.0) },
+    CommercialDevice { name: "AlifSemi E3", gops: (2.0, 45.0), gopj: (50.0, 560.0) },
+    CommercialDevice { name: "GreenWaves GAP9", gops: (10.0, 60.0), gopj: (150.0, 650.0) },
+];
+
+impl Table1 {
+    /// Render the table in the paper's layout.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("END-TO-END NETWORK PERFORMANCE (paper Table I)\n");
+        s.push_str(&format!(
+            "{:<22} {:>12} {:>18} {:>12} {:>12}\n",
+            "Metric", "Multi-Core", "Multi-Core + ITA", "range lo", "range hi"
+        ));
+        let (mut gops_lo, mut gops_hi) = (f64::MAX, 0.0f64);
+        let (mut gopj_lo, mut gopj_hi) = (f64::MAX, 0.0f64);
+        let (mut pw_lo, mut pw_hi) = (f64::MAX, 0.0f64);
+        let mut sw_gops = 0.0;
+        let mut sw_gopj = 0.0;
+        let mut sw_pw = 0.0;
+        for (sw, acc) in &self.rows {
+            gops_lo = gops_lo.min(acc.gops);
+            gops_hi = gops_hi.max(acc.gops);
+            gopj_lo = gopj_lo.min(acc.gopj);
+            gopj_hi = gopj_hi.max(acc.gopj);
+            pw_lo = pw_lo.min(acc.power_w * 1e3);
+            pw_hi = pw_hi.max(acc.power_w * 1e3);
+            sw_gops = sw.gops.max(sw_gops);
+            sw_gopj = sw.gopj.max(sw_gopj);
+            sw_pw = (sw.power_w * 1e3).max(sw_pw);
+        }
+        s.push_str(&format!(
+            "{:<22} {:>12.2} {:>18} {:>12.0} {:>12.0}\n",
+            "Throughput [GOp/s]", sw_gops, "", gops_lo, gops_hi
+        ));
+        s.push_str(&format!(
+            "{:<22} {:>12.1} {:>18} {:>12.0} {:>12.0}\n",
+            "Energy Eff [GOp/J]", sw_gopj, "", gopj_lo, gopj_hi
+        ));
+        s.push_str(&format!(
+            "{:<22} {:>12.1} {:>18} {:>12.1} {:>12.1}\n\n",
+            "Power [mW]", sw_pw, "", pw_lo, pw_hi
+        ));
+
+        s.push_str(&format!(
+            "{:<24} {:>14} {:>14} {:>14} {:>14}\n",
+            "Network", "mJ/Inf (MC)", "Inf/s (MC)", "mJ/Inf (+ITA)", "Inf/s (+ITA)"
+        ));
+        for (sw, acc) in &self.rows {
+            s.push_str(&format!(
+                "{:<24} {:>14.2} {:>14.3} {:>14.2} {:>14.2}\n",
+                sw.model, sw.mj_per_inf, sw.inf_per_s, acc.mj_per_inf, acc.inf_per_s
+            ));
+        }
+        s.push('\n');
+        s.push_str("COMMERCIAL DEVICES (reported figures)\n");
+        for d in &COMMERCIAL {
+            s.push_str(&format!(
+                "{:<24} {:>6.0}-{:<6.0} GOp/s {:>6.0}-{:<6.0} GOp/J\n",
+                d.name, d.gops.0, d.gops.1, d.gopj.0, d.gopj.1
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commercial_figures_as_cited() {
+        assert_eq!(COMMERCIAL[0].gops, (2.0, 7.0));
+        assert_eq!(COMMERCIAL[2].gopj, (150.0, 650.0));
+    }
+
+    #[test]
+    fn render_contains_all_networks() {
+        let t = crate::coordinator::table1();
+        let text = t.render();
+        for name in ["mobilebert", "dinov2s", "whisper_tiny_enc"] {
+            assert!(text.contains(name), "{text}");
+        }
+        assert!(text.contains("Syntiant"));
+    }
+}

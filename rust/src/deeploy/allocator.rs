@@ -1,0 +1,175 @@
+//! Fully static memory allocation (offline, conflict-free).
+//!
+//! Greedy best-fit over live intervals: tensors whose lifetimes do not
+//! overlap may share memory. This produces the static L2 activation
+//! arena layout; tile buffers inside L1 use fixed double-buffer slots
+//! assigned by the tiler. The no-overlap invariant is property-tested.
+
+use super::lifetime::Interval;
+use std::collections::BTreeMap;
+
+/// Final allocation: byte offset per tensor + arena peak.
+#[derive(Debug, Clone, Default)]
+pub struct Allocation {
+    pub offsets: BTreeMap<String, usize>,
+    pub peak_bytes: usize,
+}
+
+/// Word alignment of every placement.
+pub const ALIGN: usize = 8;
+
+fn align_up(x: usize) -> usize {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+/// Greedy best-fit: process intervals in start order; for each, scan the
+/// already-placed tensors whose lifetime overlaps and find the lowest
+/// gap large enough.
+pub fn allocate(intervals: &[Interval]) -> Allocation {
+    #[derive(Clone)]
+    struct Placed {
+        start: usize,
+        end: usize,
+        off: usize,
+        size: usize,
+    }
+    let mut placed: Vec<Placed> = Vec::new();
+    let mut alloc = Allocation::default();
+
+    for iv in intervals {
+        let size = align_up(iv.bytes);
+        // collect live conflicts sorted by offset
+        let mut conflicts: Vec<&Placed> = placed
+            .iter()
+            .filter(|p| !(p.end < iv.start || p.start > iv.end))
+            .collect();
+        conflicts.sort_by_key(|p| p.off);
+        // find first gap
+        let mut best = 0usize;
+        for c in &conflicts {
+            if best + size <= c.off {
+                break;
+            }
+            best = best.max(c.off + c.size);
+        }
+        placed.push(Placed { start: iv.start, end: iv.end, off: best, size });
+        alloc.offsets.insert(iv.tensor.clone(), best);
+        alloc.peak_bytes = alloc.peak_bytes.max(best + size);
+    }
+    alloc
+}
+
+/// Check the fundamental invariant: tensors overlapping in time never
+/// overlap in memory. Returns the offending pair on violation.
+pub fn verify(intervals: &[Interval], alloc: &Allocation) -> Result<(), (String, String)> {
+    for (i, a) in intervals.iter().enumerate() {
+        for b in intervals.iter().skip(i + 1) {
+            let time_overlap = !(a.end < b.start || b.end < a.start);
+            if !time_overlap {
+                continue;
+            }
+            let (oa, ob) = (alloc.offsets[&a.tensor], alloc.offsets[&b.tensor]);
+            let (sa, sb) = (align_up(a.bytes), align_up(b.bytes));
+            let mem_overlap = !(oa + sa <= ob || ob + sb <= oa);
+            if mem_overlap {
+                return Err((a.tensor.clone(), b.tensor.clone()));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::prng::XorShift64;
+
+    fn iv(name: &str, start: usize, end: usize, bytes: usize) -> Interval {
+        Interval { tensor: name.into(), start, end, bytes }
+    }
+
+    #[test]
+    fn disjoint_lifetimes_share_memory() {
+        let ivs = vec![iv("a", 0, 1, 1024), iv("b", 2, 3, 1024)];
+        let a = allocate(&ivs);
+        assert_eq!(a.offsets["a"], a.offsets["b"]);
+        assert_eq!(a.peak_bytes, 1024);
+        verify(&ivs, &a).unwrap();
+    }
+
+    #[test]
+    fn overlapping_lifetimes_get_distinct_memory() {
+        let ivs = vec![iv("a", 0, 5, 1024), iv("b", 2, 3, 1024)];
+        let a = allocate(&ivs);
+        assert_ne!(a.offsets["a"], a.offsets["b"]);
+        assert_eq!(a.peak_bytes, 2048);
+        verify(&ivs, &a).unwrap();
+    }
+
+    #[test]
+    fn gap_reuse() {
+        // c fits into the hole left between a (freed) and b (live)
+        let ivs = vec![
+            iv("a", 0, 1, 1024),
+            iv("b", 0, 9, 1024),
+            iv("c", 2, 9, 512),
+        ];
+        let a = allocate(&ivs);
+        verify(&ivs, &a).unwrap();
+        assert!(a.peak_bytes <= 2048, "peak {}", a.peak_bytes);
+    }
+
+    #[test]
+    fn property_never_overlaps() {
+        check(
+            Config { cases: 60, seed: 0xA110C },
+            |rng: &mut XorShift64| {
+                let n = 3 + rng.next_below(40) as usize;
+                (0..n)
+                    .map(|i| {
+                        let s = rng.next_below(50) as usize;
+                        let e = s + rng.next_below(20) as usize;
+                        let b = 8 + rng.next_below(4096) as usize;
+                        iv(&format!("t{i}"), s, e, b)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |ivs| {
+                let mut shrunk = Vec::new();
+                if ivs.len() > 3 {
+                    shrunk.push(ivs[..ivs.len() / 2].to_vec());
+                    shrunk.push(ivs[1..].to_vec());
+                }
+                shrunk
+            },
+            |ivs| {
+                let mut sorted = ivs.clone();
+                sorted.sort_by_key(|i| (i.start, i.tensor.clone()));
+                let a = allocate(&sorted);
+                verify(&sorted, &a)
+                    .map_err(|(x, y)| format!("{x} overlaps {y}"))
+            },
+        );
+    }
+
+    #[test]
+    fn real_model_allocation_fits_reasonable_l2() {
+        use crate::deeploy::{lifetime, schedule};
+        let g = crate::models::build_graph_layers(&crate::models::MOBILEBERT, 2);
+        let order = schedule::topo_schedule(&g);
+        let ivs = lifetime::analyze(&g, &order);
+        let a = allocate(&ivs);
+        verify(&ivs, &a).unwrap();
+        // MobileBERT activations (S=128, E=128): peak well under 1 MiB
+        assert!(a.peak_bytes < 1 << 20, "peak {}", a.peak_bytes);
+    }
+
+    #[test]
+    fn alignment_respected() {
+        let ivs = vec![iv("a", 0, 5, 3), iv("b", 0, 5, 5)];
+        let a = allocate(&ivs);
+        assert_eq!(a.offsets["a"] % ALIGN, 0);
+        assert_eq!(a.offsets["b"] % ALIGN, 0);
+    }
+}

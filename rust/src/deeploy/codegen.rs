@@ -1,0 +1,436 @@
+//! Command-stream generation — the equivalent of Deeploy's C code
+//! emission, targeted at the cluster simulator.
+//!
+//! For every scheduled node the generator emits:
+//!   - ITA operators: a weight-prefetch DMA (double-buffered: it may run
+//!     in the shadow of the *previous* ITA task, gated only by the
+//!     prefetch buffer becoming free = the task before that finishing)
+//!     followed by the ITA task itself.
+//!   - Cluster operators: a parallel core kernel.
+//!   - Network input / output: activation staging DMA.
+//!
+//! Dependencies are derived from tensor data flow, so the simulator's
+//! event engine reconstructs exactly the overlap the static schedule
+//! permits — starvation appears as exposed DMA time, not as a modeling
+//! assumption.
+
+use std::collections::BTreeMap;
+
+use super::ir::{DType, Executor, Graph, Op, TensorKind};
+use super::tiler::TilePlan;
+use crate::sim::{Cmd, CoreOp, Step};
+
+/// Generate the command stream for a scheduled, mapped, tiled graph.
+pub fn generate(
+    g: &Graph,
+    order: &[usize],
+    _plans: &BTreeMap<String, TilePlan>,
+) -> Vec<Step> {
+    let mut steps: Vec<Step> = Vec::new();
+    // tensor name -> step index that produces it (for dependencies)
+    let mut produced_by: BTreeMap<&str, usize> = BTreeMap::new();
+    // double-buffer gating: the ITA task two-back
+    let mut ita_history: Vec<usize> = Vec::new();
+    let mut input_staged: BTreeMap<&str, usize> = BTreeMap::new();
+
+    // stage network inputs first
+    for t in g.tensors.values() {
+        if t.kind == TensorKind::Input {
+            steps.push(Step::new(
+                Cmd::DmaIn { rows: t.shape[0] as u64, row_bytes: row_bytes(t.shape.as_slice(), t.dtype) },
+                vec![],
+            ));
+            input_staged.insert(t.name.as_str(), steps.len() - 1);
+        }
+    }
+
+    for &ni in order {
+        let node = &g.nodes[ni];
+        // data dependencies: producing steps of our inputs
+        let mut deps: Vec<usize> = node
+            .inputs
+            .iter()
+            .filter_map(|i| {
+                produced_by
+                    .get(i.as_str())
+                    .or_else(|| input_staged.get(i.as_str()))
+                    .copied()
+            })
+            .collect();
+
+        // i-GeLU executes as a cluster kernel even for ITA GEMMs: the
+        // taped-out flow uses ITA's activation path for ReLU/Identity
+        // but runs i-GeLU on the cores (the paper's DINOv2/Whisper
+        // power+latency figures are only consistent with this split —
+        // see sim::core::CYC_GELU).
+        let gelu_followup = matches!(
+            (node.executor, &node.op),
+            (Executor::Ita, Op::Gemm { act: super::ir::Activation::Gelu })
+        );
+
+        let step_idx = match node.executor {
+            Executor::Ita => {
+                // weight prefetch: all weight-kind inputs stream from L2
+                let wbytes: u64 = node
+                    .inputs
+                    .iter()
+                    .map(|i| g.tensor(i))
+                    .filter(|t| t.kind == TensorKind::Weight)
+                    .map(|t| t.bytes() as u64)
+                    .sum();
+                if wbytes > 0 {
+                    // buffer free once the ITA task two-back completed
+                    let mut dma_deps = Vec::new();
+                    if ita_history.len() >= 2 {
+                        dma_deps.push(ita_history[ita_history.len() - 2]);
+                    }
+                    steps.push(Step::new(
+                        Cmd::DmaIn { rows: wbytes.div_ceil(64), row_bytes: 64 },
+                        dma_deps,
+                    ));
+                    deps.push(steps.len() - 1);
+                }
+                let cmd = ita_cmd(g, ni);
+                steps.push(Step::new(cmd, deps));
+                ita_history.push(steps.len() - 1);
+                let mut idx = steps.len() - 1;
+                if gelu_followup {
+                    let out_elems = g.tensor(&node.outputs[0]).elems() as u64;
+                    steps.push(Step::new(
+                        Cmd::Core { kind: CoreOp::Gelu, elems: out_elems },
+                        vec![idx],
+                    ));
+                    idx = steps.len() - 1;
+                }
+                idx
+            }
+            _ => {
+                let cmd = cluster_cmd(g, ni);
+                steps.push(Step::new(cmd, deps));
+                steps.len() - 1
+            }
+        };
+        for o in &node.outputs {
+            produced_by.insert(o, step_idx);
+        }
+    }
+
+    // stream network outputs back to L2
+    for t in g.tensors.values() {
+        if t.kind == TensorKind::Output {
+            let dep = produced_by.get(t.name.as_str()).copied();
+            steps.push(Step::new(
+                Cmd::DmaOut { rows: t.shape[0] as u64, row_bytes: row_bytes(&t.shape, t.dtype) },
+                dep.into_iter().collect(),
+            ));
+        }
+    }
+    steps
+}
+
+fn row_bytes(shape: &[usize], dtype: DType) -> u64 {
+    let row: usize = shape.iter().skip(1).product::<usize>().max(1);
+    (row * dtype.bytes()) as u64
+}
+
+/// Lower an ITA-mapped node to its accelerator command.
+fn ita_cmd(g: &Graph, ni: usize) -> Cmd {
+    let node = &g.nodes[ni];
+    match &node.op {
+        Op::Gemm { .. } | Op::MatMul => {
+            let a = g.tensor(&node.inputs[0]);
+            let b = g.tensor(&node.inputs[1]);
+            Cmd::ItaGemm { m: a.shape[0], k: a.shape[1], n: b.shape[1] }
+        }
+        Op::AttentionHead { proj } => {
+            let q = g.tensor(&node.inputs[0]);
+            let k = g.tensor(&node.inputs[1]);
+            Cmd::ItaAttention { s_q: q.shape[0], s_kv: k.shape[0], p: *proj }
+        }
+        other => panic!("{}: op {other} not ITA-executable", node.name),
+    }
+}
+
+/// Lower a cluster-mapped node to a parallel core kernel command.
+fn cluster_cmd(g: &Graph, ni: usize) -> Cmd {
+    let node = &g.nodes[ni];
+    let out = g.tensor(&node.outputs[0]);
+    let out_elems = out.elems() as u64;
+    match &node.op {
+        Op::MatMul | Op::Gemm { .. } => {
+            let a = g.tensor(&node.inputs[0]);
+            let k = *a.shape.last().unwrap() as u64;
+            Cmd::Core { kind: CoreOp::GemmI8, elems: out_elems * k }
+        }
+        Op::Softmax => Cmd::Core { kind: CoreOp::Softmax, elems: out_elems },
+        Op::LayerNorm => Cmd::Core { kind: CoreOp::LayerNorm, elems: out_elems },
+        Op::Add => Cmd::Core { kind: CoreOp::Add, elems: out_elems },
+        Op::Requant => Cmd::Core { kind: CoreOp::Requant, elems: out_elems },
+        Op::Act { act } => {
+            let kind = match act {
+                super::ir::Activation::Gelu => CoreOp::Gelu,
+                super::ir::Activation::Relu => CoreOp::Relu,
+                super::ir::Activation::Identity => CoreOp::Requant,
+            };
+            Cmd::Core { kind, elems: out_elems }
+        }
+        Op::Transpose => Cmd::Core { kind: CoreOp::Copy, elems: out_elems },
+        Op::Im2col { .. } => Cmd::Core { kind: CoreOp::Copy, elems: out_elems },
+        Op::Conv1d { .. } => {
+            // software direct conv (multi-core target): weight layout
+            // (k*cin, cout) -> MACs = out_elems * k * cin
+            let kcin = g.tensor(&node.inputs[1]).shape[0] as u64;
+            Cmd::Core { kind: CoreOp::GemmI8, elems: out_elems * kcin }
+        }
+        Op::HeadAcc { heads } => {
+            Cmd::Core { kind: CoreOp::HeadAcc, elems: out_elems * (*heads as u64) }
+        }
+        Op::Mha { .. } => panic!("{}: unsplit MHA reached codegen", node.name),
+        Op::AttentionHead { .. } => {
+            // software fallback: QK + softmax + AV as one fused kernel
+            let q = g.tensor(&node.inputs[0]);
+            let kt = g.tensor(&node.inputs[1]);
+            let s = q.shape[0] as u64;
+            let p = q.shape[1] as u64;
+            let kv = kt.shape[0] as u64;
+            Cmd::Core { kind: CoreOp::GemmI8, elems: 2 * s * kv * p + s * kv * 4 }
+        }
+    }
+}
+
+/// Tile-granular code generation: instead of one command per ITA node,
+/// emit one (DMA, compute) pair per *tile step* of the node's TilePlan —
+/// the shape of the C code the real Deeploy emits. Each tile's operand
+/// transfer is gated on the double-buffer slot freeing (the compute two
+/// steps back), so DMA startup costs and overlap are modeled per tile
+/// instead of per node. Cluster nodes are unchanged.
+pub fn generate_tiled(
+    g: &Graph,
+    order: &[usize],
+    plans: &BTreeMap<String, TilePlan>,
+) -> Vec<Step> {
+    let mut steps: Vec<Step> = Vec::new();
+    let mut produced_by: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut input_staged: BTreeMap<&str, usize> = BTreeMap::new();
+
+    for t in g.tensors.values() {
+        if t.kind == TensorKind::Input {
+            steps.push(Step::new(
+                Cmd::DmaIn {
+                    rows: t.shape[0] as u64,
+                    row_bytes: row_bytes(t.shape.as_slice(), t.dtype),
+                },
+                vec![],
+            ));
+            input_staged.insert(t.name.as_str(), steps.len() - 1);
+        }
+    }
+
+    for &ni in order {
+        let node = &g.nodes[ni];
+        let deps: Vec<usize> = node
+            .inputs
+            .iter()
+            .filter_map(|i| {
+                produced_by
+                    .get(i.as_str())
+                    .or_else(|| input_staged.get(i.as_str()))
+                    .copied()
+            })
+            .collect();
+
+        let is_tiled_gemm = node.executor == Executor::Ita
+            && matches!(node.op, Op::Gemm { .. } | Op::MatMul)
+            && plans.contains_key(&node.name);
+        let step_idx = if is_tiled_gemm {
+            let plan = &plans[&node.name];
+            // per-tile operand bytes: input tile + weight tile + bias
+            let tile_bytes = (plan.tm * plan.tk + plan.tk * plan.tn + 4 * plan.tn) as u64;
+            let mut compute_hist: Vec<usize> = Vec::new();
+            let mut last_compute = 0usize;
+            for t in 0..plan.steps {
+                // DMA gated on the slot two tiles back
+                let mut dma_deps = deps.clone();
+                if compute_hist.len() >= 2 {
+                    dma_deps = vec![compute_hist[compute_hist.len() - 2]];
+                }
+                steps.push(Step::new(
+                    Cmd::DmaIn { rows: tile_bytes.div_ceil(64), row_bytes: 64 },
+                    dma_deps,
+                ));
+                let dma_idx = steps.len() - 1;
+                let mut cdeps = vec![dma_idx];
+                if t == 0 {
+                    cdeps.extend(deps.iter().copied());
+                }
+                steps.push(Step::new(
+                    Cmd::ItaGemm { m: plan.tm, k: plan.tk, n: plan.tn },
+                    cdeps,
+                ));
+                last_compute = steps.len() - 1;
+                compute_hist.push(last_compute);
+            }
+            last_compute
+        } else {
+            match node.executor {
+                Executor::Ita => {
+                    let wbytes: u64 = node
+                        .inputs
+                        .iter()
+                        .map(|i| g.tensor(i))
+                        .filter(|t| t.kind == TensorKind::Weight)
+                        .map(|t| t.bytes() as u64)
+                        .sum();
+                    let mut d = deps.clone();
+                    if wbytes > 0 {
+                        steps.push(Step::new(
+                            Cmd::DmaIn { rows: wbytes.div_ceil(64), row_bytes: 64 },
+                            vec![],
+                        ));
+                        d.push(steps.len() - 1);
+                    }
+                    steps.push(Step::new(ita_cmd(g, ni), d));
+                    steps.len() - 1
+                }
+                _ => {
+                    steps.push(Step::new(cluster_cmd(g, ni), deps));
+                    steps.len() - 1
+                }
+            }
+        };
+        for o in &node.outputs {
+            produced_by.insert(o, step_idx);
+        }
+    }
+
+    for t in g.tensors.values() {
+        if t.kind == TensorKind::Output {
+            let dep = produced_by.get(t.name.as_str()).copied();
+            steps.push(Step::new(
+                Cmd::DmaOut {
+                    rows: t.shape[0] as u64,
+                    row_bytes: row_bytes(&t.shape, t.dtype),
+                },
+                dep.into_iter().collect(),
+            ));
+        }
+    }
+    steps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deeploy::{passes, schedule, tiler};
+    use crate::models::{build_graph_layers, MOBILEBERT};
+    use crate::sim::{ClusterConfig, Engine};
+
+    fn gen(use_ita: bool, layers: usize) -> Vec<Step> {
+        let mut g = build_graph_layers(&MOBILEBERT, layers);
+        if use_ita {
+            passes::fuse_mha(&mut g);
+        }
+        passes::map_operators(&mut g, use_ita);
+        let order = schedule::topo_schedule(&g);
+        let plans = tiler::plan_graph(&g);
+        generate(&g, &order, &plans)
+    }
+
+    #[test]
+    fn deps_are_backward_only() {
+        for steps in [gen(true, 1), gen(false, 1)] {
+            for (i, s) in steps.iter().enumerate() {
+                for &d in &s.deps {
+                    assert!(d < i, "step {i} depends on future step {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accelerated_stream_contains_ita_and_cluster_cmds() {
+        let steps = gen(true, 1);
+        let ita = steps
+            .iter()
+            .filter(|s| matches!(s.cmd, Cmd::ItaGemm { .. } | Cmd::ItaAttention { .. }))
+            .count();
+        let core = steps.iter().filter(|s| matches!(s.cmd, Cmd::Core { .. })).count();
+        let dma = steps.iter().filter(|s| matches!(s.cmd, Cmd::DmaIn { .. })).count();
+        // every weight-consuming ITA op gets a prefetch DMA (attention
+        // heads read activations only), plus the input staging transfer
+        assert!(ita > 0 && core > 0 && dma == (ita - MOBILEBERT.heads) + 1,
+                "ita {ita} core {core} dma {dma}");
+        // 4 attention heads per layer
+        let attn = steps
+            .iter()
+            .filter(|s| matches!(s.cmd, Cmd::ItaAttention { .. }))
+            .count();
+        assert_eq!(attn, MOBILEBERT.heads);
+    }
+
+    #[test]
+    fn multicore_stream_has_no_ita_cmds() {
+        let steps = gen(false, 1);
+        assert!(!steps
+            .iter()
+            .any(|s| matches!(s.cmd, Cmd::ItaGemm { .. } | Cmd::ItaAttention { .. })));
+    }
+
+    #[test]
+    fn streams_execute_and_ita_wins_big() {
+        let engine = Engine::new(ClusterConfig::default());
+        let acc = engine.run(&gen(true, 1));
+        let sw = engine.run(&gen(false, 1));
+        let speedup = sw.cycles as f64 / acc.cycles as f64;
+        // E2E speedup per layer should be enormous (paper: up to 208x)
+        assert!(speedup > 50.0, "speedup {speedup}");
+        assert!(acc.ita_utilization() > 0.5);
+    }
+
+    #[test]
+    fn tiled_codegen_equivalent_work() {
+        // node-level and tile-level streams retire the same MAC work;
+        // the tile stream has many more steps and similar makespan
+        let mut g = build_graph_layers(&MOBILEBERT, 1);
+        passes::fuse_mha(&mut g);
+        passes::map_operators(&mut g, true);
+        let order = schedule::topo_schedule(&g);
+        let plans = tiler::plan_graph(&g);
+        let node_steps = generate(&g, &order, &plans);
+        let tile_steps = generate_tiled(&g, &order, &plans);
+        assert!(tile_steps.len() > node_steps.len());
+        for (i, s) in tile_steps.iter().enumerate() {
+            for &d in &s.deps {
+                assert!(d < i, "step {i} deps on {d}");
+            }
+        }
+        let engine = Engine::new(ClusterConfig::default());
+        let a = engine.run(&node_steps);
+        let b = engine.run(&tile_steps);
+        // tile plans round up to the tile quantum, so the tiled stream
+        // retires at least the node-level work, padded by < 30%
+        let work = b.ita_ideal_cycles as f64 / a.ita_ideal_cycles as f64;
+        assert!((1.0..1.3).contains(&work), "ideal-cycle ratio {work}");
+        // per-tile DMA startup is mostly hidden by double buffering
+        let ratio = b.cycles as f64 / a.cycles as f64;
+        assert!((0.9..1.4).contains(&ratio), "makespan ratio {ratio}");
+    }
+
+    #[test]
+    fn weight_dma_overlaps_compute() {
+        let engine = Engine::new(ClusterConfig::default());
+        let stats = engine.run(&gen(true, 2));
+        // DMA busy cycles must be largely hidden: makespan much closer
+        // to ITA+core busy time than to their sum with DMA
+        let dma = stats.busy_cycles(crate::sim::trace::Resource::Dma);
+        assert!(dma > 0);
+        let ita = stats.busy_cycles(crate::sim::trace::Resource::Ita);
+        let core = stats.busy_cycles(crate::sim::trace::Resource::Cores);
+        assert!(
+            stats.cycles < ita + core + dma,
+            "no overlap at all: {} vs {}",
+            stats.cycles,
+            ita + core + dma
+        );
+    }
+}

@@ -1,0 +1,351 @@
+//! Graph IR of the deployment compiler.
+//!
+//! Deeploy is a bottom-up compiler: the graph arrives as generic ONNX-like
+//! operators; passes progressively fuse patterns (MHA), split them to match
+//! the accelerator geometry (head-by-head), assign executors, tile, and
+//! allocate. This IR is deliberately small: named tensors + a node list
+//! kept in topological order.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Element type of a tensor (int8 carried in int32 containers at runtime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I32 => 4,
+        }
+    }
+}
+
+/// Where a tensor lives before the run starts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Network input (streamed in from L2).
+    Input,
+    /// Constant parameter (resident in L2, DMA'd per tile).
+    Weight,
+    /// Intermediate activation.
+    Activation,
+    /// Network output (streamed out to L2).
+    Output,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub kind: TensorKind,
+}
+
+impl Tensor {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.bytes()
+    }
+}
+
+/// Operator set. Generic ops arrive from the ONNX-like import; fused /
+/// accelerator ops are introduced by passes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// C = A x B (int8 inputs, int32 accumulate).
+    MatMul,
+    /// GEMM with bias + requant + activation: the ITA-offloadable form.
+    Gemm { act: Activation },
+    /// Row-wise integer softmax (ITAMax when fused into attention).
+    Softmax,
+    /// Integer LayerNorm (cluster-only).
+    LayerNorm,
+    /// Saturating elementwise add (residual).
+    Add,
+    /// Standalone requantization.
+    Requant,
+    /// Standalone activation.
+    Act { act: Activation },
+    /// Transpose last two dims.
+    Transpose,
+    /// 1D convolution (Whisper stem; lowered to GEMM via im2col).
+    Conv1d { kernel: usize, stride: usize },
+    /// im2col data rearrangement (product of the conv-lowering pass;
+    /// a strided copy executed by the cluster cores).
+    Im2col { kernel: usize, stride: usize },
+    /// Fused multi-head attention (product of the MHA fusion pass).
+    Mha { heads: usize, proj: usize },
+    /// One attention head on ITA (product of the head-split pass).
+    AttentionHead { proj: usize },
+    /// Cluster-side accumulation of per-head partial projections.
+    HeadAcc { heads: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Identity,
+    Relu,
+    Gelu,
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Op::MatMul => write!(f, "MatMul"),
+            Op::Gemm { act } => write!(f, "Gemm[{act:?}]"),
+            Op::Softmax => write!(f, "Softmax"),
+            Op::LayerNorm => write!(f, "LayerNorm"),
+            Op::Add => write!(f, "Add"),
+            Op::Requant => write!(f, "Requant"),
+            Op::Act { act } => write!(f, "Act[{act:?}]"),
+            Op::Transpose => write!(f, "Transpose"),
+            Op::Conv1d { kernel, stride } => write!(f, "Conv1d[k{kernel},s{stride}]"),
+            Op::Im2col { kernel, stride } => write!(f, "Im2col[k{kernel},s{stride}]"),
+            Op::Mha { heads, .. } => write!(f, "MHA[h{heads}]"),
+            Op::AttentionHead { .. } => write!(f, "AttentionHead"),
+            Op::HeadAcc { heads } => write!(f, "HeadAcc[h{heads}]"),
+        }
+    }
+}
+
+/// Execution target assigned by the operator-mapping pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Executor {
+    /// Not yet assigned.
+    Unassigned,
+    /// Offloaded to the ITA HWPE.
+    Ita,
+    /// Fallback kernel on the worker cores.
+    Cluster,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub executor: Executor,
+    /// Requantization parameters attached by the importer/builders.
+    pub rq_mult: i32,
+    pub rq_shift: u32,
+    /// Second requant pair (fused AttentionHead: rq = QK stage, rq2 = AV).
+    pub rq2_mult: i32,
+    pub rq2_shift: u32,
+}
+
+impl Node {
+    pub fn new(name: &str, op: Op, inputs: &[&str], outputs: &[&str]) -> Node {
+        Node {
+            name: name.to_string(),
+            op,
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            executor: Executor::Unassigned,
+            rq_mult: 1,
+            rq_shift: 0,
+            rq2_mult: 1,
+            rq2_shift: 0,
+        }
+    }
+
+    pub fn with_rq(mut self, mult: i32, shift: u32) -> Node {
+        self.rq_mult = mult;
+        self.rq_shift = shift;
+        self
+    }
+}
+
+/// The graph: tensors by name + nodes in topological order.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: BTreeMap<String, Tensor>,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn add_tensor(&mut self, name: &str, shape: &[usize], dtype: DType, kind: TensorKind) {
+        self.tensors.insert(
+            name.to_string(),
+            Tensor {
+                name: name.to_string(),
+                shape: shape.to_vec(),
+                dtype,
+                kind,
+            },
+        );
+    }
+
+    pub fn add_node(&mut self, node: Node) {
+        self.nodes.push(node);
+    }
+
+    pub fn tensor(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown tensor {name}"))
+    }
+
+    /// Producer node index of a tensor, if any.
+    pub fn producer(&self, tensor: &str) -> Option<usize> {
+        self.nodes
+            .iter()
+            .position(|n| n.outputs.iter().any(|o| o == tensor))
+    }
+
+    /// Consumer node indices of a tensor.
+    pub fn consumers(&self, tensor: &str) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.inputs.iter().any(|i| i == tensor))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Validate: topological order, every input defined before use,
+    /// every referenced tensor declared.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut defined: std::collections::BTreeSet<&str> = self
+            .tensors
+            .values()
+            .filter(|t| t.kind == TensorKind::Input || t.kind == TensorKind::Weight)
+            .map(|t| t.name.as_str())
+            .collect();
+        for node in &self.nodes {
+            for i in &node.inputs {
+                if !self.tensors.contains_key(i) {
+                    return Err(format!("{}: undeclared tensor {i}", node.name));
+                }
+                if !defined.contains(i.as_str()) {
+                    return Err(format!("{}: use of {i} before definition", node.name));
+                }
+            }
+            for o in &node.outputs {
+                if !self.tensors.contains_key(o) {
+                    return Err(format!("{}: undeclared output {o}", node.name));
+                }
+                defined.insert(o);
+            }
+        }
+        for t in self.tensors.values() {
+            if t.kind == TensorKind::Output && !defined.contains(t.name.as_str()) {
+                return Err(format!("output {} never produced", t.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total ops (the paper's accounting: 2 ops per MAC, 1 per
+    /// elementwise op, 5 per softmax element).
+    pub fn total_ops(&self) -> u64 {
+        self.nodes.iter().map(|n| self.node_ops(n)).sum()
+    }
+
+    pub fn node_ops(&self, node: &Node) -> u64 {
+        let out = self.tensor(&node.outputs[0]);
+        let out_elems = out.elems() as u64;
+        match &node.op {
+            Op::MatMul | Op::Gemm { .. } => {
+                let a = self.tensor(&node.inputs[0]);
+                let k = *a.shape.last().unwrap() as u64;
+                2 * out_elems * k
+            }
+            Op::Softmax => 5 * out_elems,
+            Op::LayerNorm => 8 * out_elems,
+            Op::Add | Op::Requant | Op::Act { .. } | Op::Transpose => out_elems,
+            Op::Conv1d { kernel, .. } => {
+                // weight layout (k*cin, cout): reduction dim is shape[0]
+                let kcin = self.tensor(&node.inputs[1]).shape[0] as u64;
+                debug_assert_eq!(kcin % *kernel as u64, 0);
+                2 * out_elems * kcin
+            }
+            Op::Im2col { .. } => out_elems,
+            Op::Mha { heads, proj } => {
+                // per head: QK + AV + softmax; projections are separate nodes
+                let s = self.tensor(&node.inputs[0]).shape[0] as u64;
+                let h = *heads as u64;
+                let p = *proj as u64;
+                h * (2 * 2 * s * s * p + 5 * s * s)
+            }
+            Op::AttentionHead { proj } => {
+                let s = self.tensor(&node.inputs[0]).shape[0] as u64;
+                let p = *proj as u64;
+                2 * 2 * s * s * p + 5 * s * s
+            }
+            Op::HeadAcc { heads } => out_elems * (*heads as u64),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new("tiny");
+        g.add_tensor("x", &[64, 64], DType::I8, TensorKind::Input);
+        g.add_tensor("w", &[64, 64], DType::I8, TensorKind::Weight);
+        g.add_tensor("b", &[64], DType::I32, TensorKind::Weight);
+        g.add_tensor("y", &[64, 64], DType::I8, TensorKind::Output);
+        g.add_node(Node::new(
+            "gemm0",
+            Op::Gemm { act: Activation::Identity },
+            &["x", "w", "b"],
+            &["y"],
+        ));
+        g
+    }
+
+    #[test]
+    fn validates_well_formed() {
+        assert!(tiny_graph().validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_use_before_def() {
+        let mut g = tiny_graph();
+        g.add_tensor("z", &[64, 64], DType::I8, TensorKind::Activation);
+        // node consuming an activation that nothing produces
+        g.nodes.insert(
+            0,
+            Node::new("bad", Op::Add, &["z", "x"], &["z"]),
+        );
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unproduced_output() {
+        let mut g = tiny_graph();
+        g.add_tensor("orphan", &[4], DType::I8, TensorKind::Output);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn producer_consumer_queries() {
+        let g = tiny_graph();
+        assert_eq!(g.producer("y"), Some(0));
+        assert_eq!(g.producer("x"), None);
+        assert_eq!(g.consumers("x"), vec![0]);
+    }
+
+    #[test]
+    fn gemm_op_count() {
+        let g = tiny_graph();
+        // 2 * 64*64 outputs * 64 K
+        assert_eq!(g.total_ops(), 2 * 64 * 64 * 64);
+    }
+}

@@ -1,0 +1,124 @@
+//! Tensor lifetime analysis.
+//!
+//! Attention graphs branch heavily (per-head chains all fan out of one
+//! LayerNorm and fan back into the head accumulation), so naive
+//! stack-like allocation fails — this is the "novel lifetime analysis"
+//! requirement of Section II-B. Given a schedule order, each activation
+//! tensor is live from its producing step to its last consuming step;
+//! the static allocator then packs intervals that never overlap in time
+//! into overlapping memory.
+
+use std::collections::BTreeMap;
+
+use super::ir::{Graph, TensorKind};
+
+/// Live interval of one tensor in schedule-step indices, inclusive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Interval {
+    pub tensor: String,
+    pub start: usize,
+    pub end: usize,
+    pub bytes: usize,
+}
+
+/// Compute live intervals of all activation tensors under `order`
+/// (indices into g.nodes in execution order).
+pub fn analyze(g: &Graph, order: &[usize]) -> Vec<Interval> {
+    // map node index -> schedule position
+    let mut pos = BTreeMap::new();
+    for (p, &n) in order.iter().enumerate() {
+        pos.insert(n, p);
+    }
+    let mut birth: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut death: BTreeMap<&str, usize> = BTreeMap::new();
+    for (&node_idx, &p) in &pos {
+        let node = &g.nodes[node_idx];
+        for o in &node.outputs {
+            let e = birth.entry(o).or_insert(p);
+            *e = (*e).min(p);
+        }
+        for i in &node.inputs {
+            let e = death.entry(i).or_insert(p);
+            *e = (*e).max(p);
+        }
+    }
+    let mut out = Vec::new();
+    for t in g.tensors.values() {
+        let relevant = matches!(t.kind, TensorKind::Activation | TensorKind::Input | TensorKind::Output);
+        if !relevant {
+            continue; // weights stream from L2, not allocated here
+        }
+        let start = match t.kind {
+            TensorKind::Input => 0,
+            _ => match birth.get(t.name.as_str()) {
+                Some(&s) => s,
+                None => continue, // dead tensor
+            },
+        };
+        let end = match t.kind {
+            TensorKind::Output => order.len().saturating_sub(1),
+            _ => match death.get(t.name.as_str()) {
+                Some(&e) => e,
+                None => start, // produced but never consumed
+            },
+        };
+        out.push(Interval { tensor: t.name.clone(), start, end: end.max(start), bytes: t.bytes() });
+    }
+    out.sort_by(|a, b| (a.start, a.tensor.clone()).cmp(&(b.start, b.tensor.clone())));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deeploy::schedule::topo_schedule;
+    use crate::models::{build_graph_layers, MOBILEBERT};
+
+    #[test]
+    fn intervals_are_well_formed() {
+        let g = build_graph_layers(&MOBILEBERT, 2);
+        let order = topo_schedule(&g);
+        let ivs = analyze(&g, &order);
+        assert!(!ivs.is_empty());
+        for iv in &ivs {
+            assert!(iv.start <= iv.end, "{:?}", iv);
+            assert!(iv.bytes > 0);
+        }
+    }
+
+    #[test]
+    fn producer_before_consumers() {
+        let g = build_graph_layers(&MOBILEBERT, 1);
+        let order = topo_schedule(&g);
+        let ivs = analyze(&g, &order);
+        // the attention output of layer 0 must outlive all its consumers
+        let attn = ivs.iter().find(|i| i.tensor == "L0/attn").unwrap();
+        assert!(attn.end > attn.start);
+    }
+
+    #[test]
+    fn branching_heads_are_simultaneously_live() {
+        // all H per-head QK score matrices overlap in time with each
+        // other's chains — the branching structure the paper calls out
+        let g = build_graph_layers(&MOBILEBERT, 1);
+        let order = topo_schedule(&g);
+        let ivs = analyze(&g, &order);
+        let ln1 = ivs.iter().find(|i| i.tensor == "L0/ln1").unwrap();
+        // ln1 feeds every head's projections: it must stay live until the
+        // last head's V projection
+        let v3 = ivs.iter().find(|i| i.tensor == "L0/v3").unwrap();
+        assert!(ln1.end >= v3.start - 1, "ln1 {:?} vs v3 {:?}", ln1, v3);
+    }
+
+    #[test]
+    fn residual_input_lives_across_attention() {
+        // x0 feeds both ln1 (step 0) and the residual add after the
+        // whole attention block — a long-lived interval
+        let g = build_graph_layers(&MOBILEBERT, 1);
+        let order = topo_schedule(&g);
+        let ivs = analyze(&g, &order);
+        let x0 = ivs.iter().find(|i| i.tensor == "x0").unwrap();
+        let span = x0.end - x0.start;
+        assert!(span > MOBILEBERT.heads * 5, "x0 span {span}");
+    }
+}

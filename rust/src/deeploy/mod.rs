@@ -1,0 +1,83 @@
+//! The deployment flow — our re-implementation of the paper's extended
+//! Deeploy compiler (Sections III-B and IV-D).
+//!
+//! Pipeline: import (ONNX-like JSON or the built-in model builders)
+//!   -> [`passes`]    MHA pattern fusion + head split, operator mapping
+//!   -> [`tiler`]     geometric tiling constraints (ITA accelerator model)
+//!   -> [`lifetime`]  tensor lifetime analysis
+//!   -> [`allocator`] fully static memory layout (L1 + L2 arenas)
+//!   -> [`schedule`]  topological schedule with double-buffer prefetching
+//!   -> [`codegen`]   command-stream generation (the "C code" equivalent
+//!                    that the simulator executes)
+
+pub mod allocator;
+pub mod codegen;
+pub mod ir;
+pub mod lifetime;
+pub mod onnx;
+pub mod passes;
+pub mod schedule;
+pub mod tiler;
+
+use crate::models::ModelConfig;
+use crate::sim::Step;
+
+/// Deployment target for code generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Multi-core cluster only (the paper's baseline column).
+    MultiCore,
+    /// Multi-core cluster + ITA (the paper's accelerated column).
+    MultiCoreIta,
+}
+
+/// End-to-end deployment artifact: everything the coordinator needs.
+#[derive(Debug)]
+pub struct Deployment {
+    pub graph: ir::Graph,
+    pub target: Target,
+    pub steps: Vec<Step>,
+    pub total_ops: u64,
+    pub l1_peak_bytes: usize,
+    pub l2_activation_bytes: usize,
+}
+
+/// Run the full deployment flow on a model config.
+pub fn deploy(cfg: &ModelConfig, target: Target) -> Deployment {
+    deploy_layers(cfg, target, cfg.layers)
+}
+
+/// Deployment with overridden layer count (fast paths for tests/sweeps).
+pub fn deploy_layers(cfg: &ModelConfig, target: Target, layers: usize) -> Deployment {
+    let graph = crate::models::build_graph_layers(cfg, layers);
+    deploy_graph(graph, target)
+}
+
+/// Run the full flow on an arbitrary imported graph.
+pub fn deploy_graph(mut graph: ir::Graph, target: Target) -> Deployment {
+    graph.validate().expect("graph must validate");
+    let total_ops = graph.total_ops();
+
+    if target == Target::MultiCoreIta {
+        passes::fuse_mha(&mut graph);
+        passes::lower_conv(&mut graph);
+        passes::check_ita_constraints(&graph).expect("tiling constraints");
+    }
+    passes::map_operators(&mut graph, target == Target::MultiCoreIta);
+
+    let order = schedule::topo_schedule(&graph);
+    let lifetimes = lifetime::analyze(&graph, &order);
+    let l2_alloc = allocator::allocate(&lifetimes);
+    let plans = tiler::plan_graph(&graph);
+    let l1_peak = plans.values().map(|p| p.l1_bytes).max().unwrap_or(0);
+
+    let steps = codegen::generate(&graph, &order, &plans);
+    Deployment {
+        graph,
+        target,
+        steps,
+        total_ops,
+        l1_peak_bytes: l1_peak,
+        l2_activation_bytes: l2_alloc.peak_bytes,
+    }
+}

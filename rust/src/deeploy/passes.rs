@@ -1,0 +1,336 @@
+//! Graph transformation passes (paper Section IV-D).
+//!
+//! `fuse_mha` — the MHA pattern matcher: per attention head it finds
+//!   Transpose(K) -> MatMul(Q, K^T) -> Softmax -> MatMul(A, V)
+//! and fuses the chain into one `AttentionHead` node. This is the
+//! monolithic-MHA-fuse + head-split of the paper collapsed into one
+//! rewrite: our frontend (like QuantLib's export) already exposes the
+//! per-head chains, so fusion directly yields the head-granular ITA
+//! tasks. The standalone Softmax node disappears — ITAMax rides on the
+//! accelerator dataflow at zero latency instead of costing a cluster
+//! kernel, which is where most of the 208x E2E speedup comes from.
+//!
+//! `map_operators` — the bottom-up executor assignment: operators the
+//! accelerator model supports go to ITA, everything else falls back to
+//! optimized cluster kernels.
+//!
+//! `check_ita_constraints` — the geometric tiling constraints of the
+//! accelerator model (all matrix dims multiples of the 64-wide datapath).
+
+use super::ir::{Executor, Graph, Node, Op};
+
+/// Fuse per-head attention chains into `AttentionHead` nodes.
+/// Returns the number of heads fused.
+pub fn fuse_mha(g: &mut Graph) -> usize {
+    let mut fused = 0;
+    loop {
+        let Some((t_idx, qk_idx, sm_idx, av_idx)) = find_head_chain(g) else {
+            break;
+        };
+        // gather pieces
+        let q = g.nodes[qk_idx].inputs[0].clone();
+        let k = g.nodes[t_idx].inputs[0].clone();
+        let v = g.nodes[av_idx].inputs[1].clone();
+        let out = g.nodes[av_idx].outputs[0].clone();
+        let qk_rq = (g.nodes[qk_idx].rq_mult, g.nodes[qk_idx].rq_shift);
+        let av_rq = (g.nodes[av_idx].rq_mult, g.nodes[av_idx].rq_shift);
+        let proj = *g.tensor(&v).shape.last().unwrap();
+        let name = g.nodes[sm_idx].name.replace("sm", "attn").replace(".op", ".fused");
+
+        // the fused node replaces the softmax position; drop the others
+        let mut node = Node::new(&name, Op::AttentionHead { proj }, &[], &[]);
+        node.inputs = vec![q, k, v];
+        node.outputs = vec![out];
+        node.rq_mult = qk_rq.0;
+        node.rq_shift = qk_rq.1;
+        node.rq2_mult = av_rq.0;
+        node.rq2_shift = av_rq.1;
+
+        // remove in descending index order to keep indices valid
+        let mut to_remove = [t_idx, qk_idx, sm_idx, av_idx];
+        to_remove.sort_unstable();
+        let insert_at = to_remove[0];
+        for idx in to_remove.iter().rev() {
+            g.nodes.remove(*idx);
+        }
+        g.nodes.insert(insert_at, node);
+        fused += 1;
+    }
+    fused
+}
+
+/// Find one unfused head chain: returns (transpose, qk-matmul, softmax,
+/// av-matmul) node indices.
+fn find_head_chain(g: &Graph) -> Option<(usize, usize, usize, usize)> {
+    for (sm_idx, sm) in g.nodes.iter().enumerate() {
+        if sm.op != Op::Softmax {
+            continue;
+        }
+        // producer of the softmax input must be a MatMul
+        let qk_idx = g.producer(&sm.inputs[0])?;
+        if g.nodes[qk_idx].op != Op::MatMul {
+            continue;
+        }
+        // whose second input comes from a Transpose
+        let t_idx = match g.producer(&g.nodes[qk_idx].inputs[1]) {
+            Some(i) if g.nodes[i].op == Op::Transpose => i,
+            _ => continue,
+        };
+        // the softmax output must feed exactly one MatMul (A x V)
+        let consumers = g.consumers(&sm.outputs[0]);
+        if consumers.len() != 1 {
+            continue;
+        }
+        let av_idx = consumers[0];
+        if g.nodes[av_idx].op != Op::MatMul {
+            continue;
+        }
+        // A must be the left operand
+        if g.nodes[av_idx].inputs[0] != sm.outputs[0] {
+            continue;
+        }
+        return Some((t_idx, qk_idx, sm_idx, av_idx));
+    }
+    None
+}
+
+/// Lower Conv1d to im2col + GEMM so the accelerator can run it (the
+/// deployment flow maps Linear layers to ITA; the im2col rearrangement
+/// is a strided copy on the cluster). Returns the number lowered.
+pub fn lower_conv(g: &mut Graph) -> usize {
+    let mut lowered = 0;
+    loop {
+        let Some(idx) = g
+            .nodes
+            .iter()
+            .position(|n| matches!(n.op, Op::Conv1d { .. }))
+        else {
+            break;
+        };
+        let (kernel, stride) = match g.nodes[idx].op {
+            Op::Conv1d { kernel, stride } => (kernel, stride),
+            _ => unreachable!(),
+        };
+        let node = g.nodes[idx].clone();
+        let x = node.inputs[0].clone();
+        let w = node.inputs[1].clone();
+        let b = node.inputs[2].clone();
+        let out = node.outputs[0].clone();
+        let t_out = g.tensor(&out).shape[0];
+        let c_in = g.tensor(&x).shape[1];
+        // pad the im2col reduction dim to ITA's 64 quantum; the padded
+        // columns are zero and contribute nothing
+        let kcin = (kernel * c_in).div_ceil(64) * 64;
+        let col = format!("{}.im2col", node.name);
+        g.add_tensor(&col, &[t_out, kcin], crate::deeploy::ir::DType::I8,
+                     crate::deeploy::ir::TensorKind::Activation);
+        // padded weight view
+        let wpad = format!("{}.wpad", node.name);
+        let cout = g.tensor(&w).shape[1];
+        g.add_tensor(&wpad, &[kcin, cout], crate::deeploy::ir::DType::I8,
+                     crate::deeploy::ir::TensorKind::Weight);
+
+        let im2col = Node::new(
+            &format!("{}.im2col.op", node.name),
+            Op::Im2col { kernel, stride },
+            &[&x],
+            &[&col],
+        );
+        let mut gemm = Node::new(
+            &format!("{}.gemm", node.name),
+            Op::Gemm { act: super::ir::Activation::Identity },
+            &[&col, &wpad, &b],
+            &[&out],
+        );
+        gemm.rq_mult = node.rq_mult;
+        gemm.rq_shift = node.rq_shift;
+        g.nodes.remove(idx);
+        g.nodes.insert(idx, gemm);
+        g.nodes.insert(idx, im2col);
+        lowered += 1;
+    }
+    lowered
+}
+
+/// Assign executors bottom-up: ITA takes what its accelerator model
+/// supports; the cluster cores take everything else.
+pub fn map_operators(g: &mut Graph, use_ita: bool) {
+    for node in &mut g.nodes {
+        node.executor = if use_ita && ita_supports(&node.op) {
+            Executor::Ita
+        } else {
+            Executor::Cluster
+        };
+    }
+}
+
+/// The ITA accelerator model: operators it can execute.
+pub fn ita_supports(op: &Op) -> bool {
+    matches!(
+        op,
+        Op::Gemm { .. } | Op::MatMul | Op::AttentionHead { .. } | Op::Mha { .. }
+    )
+}
+
+/// Geometric tiling constraints: every ITA-eligible operator must have
+/// matrix dims compatible with the 64-wide datapath after padding.
+pub fn check_ita_constraints(g: &Graph) -> Result<(), String> {
+    for node in &g.nodes {
+        if !ita_supports(&node.op) {
+            continue;
+        }
+        for tname in node.inputs.iter().chain(node.outputs.iter()) {
+            let t = g.tensor(tname);
+            if t.shape.len() == 2 {
+                for &d in &t.shape {
+                    if d % 64 != 0 {
+                        return Err(format!(
+                            "{}: tensor {tname} dim {d} not a multiple of 64 \
+                             (pad the model, cf. DINOv2 S=241 -> 256)",
+                            node.name
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_graph_layers, MOBILEBERT};
+
+    #[test]
+    fn fuses_all_heads() {
+        let mut g = build_graph_layers(&MOBILEBERT, 2);
+        let before = g.nodes.len();
+        let fused = fuse_mha(&mut g);
+        assert_eq!(fused, 2 * MOBILEBERT.heads);
+        // each fusion removes 4 nodes, adds 1
+        assert_eq!(g.nodes.len(), before - fused * 3);
+        g.validate().expect("fused graph validates");
+        // no standalone softmax remains
+        assert!(!g.nodes.iter().any(|n| n.op == Op::Softmax));
+        assert!(g
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::AttentionHead { proj: 64 })));
+    }
+
+    #[test]
+    fn fusion_preserves_rq_params() {
+        let mut g = build_graph_layers(&MOBILEBERT, 1);
+        let qk_rq = g
+            .nodes
+            .iter()
+            .find(|n| n.name.contains("qk0"))
+            .map(|n| (n.rq_mult, n.rq_shift))
+            .unwrap();
+        let av_rq = g
+            .nodes
+            .iter()
+            .find(|n| n.name.contains("av0"))
+            .map(|n| (n.rq_mult, n.rq_shift))
+            .unwrap();
+        fuse_mha(&mut g);
+        let head = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::AttentionHead { .. }))
+            .unwrap();
+        assert_eq!((head.rq_mult, head.rq_shift), qk_rq);
+        assert_eq!((head.rq2_mult, head.rq2_shift), av_rq);
+    }
+
+    #[test]
+    fn mapping_assigns_executors() {
+        let mut g = build_graph_layers(&MOBILEBERT, 1);
+        fuse_mha(&mut g);
+        map_operators(&mut g, true);
+        let ita = g.nodes.iter().filter(|n| n.executor == Executor::Ita).count();
+        let cluster = g
+            .nodes
+            .iter()
+            .filter(|n| n.executor == Executor::Cluster)
+            .count();
+        assert!(ita > 0 && cluster > 0);
+        for n in &g.nodes {
+            match n.op {
+                Op::LayerNorm | Op::Add | Op::HeadAcc { .. } => {
+                    assert_eq!(n.executor, Executor::Cluster, "{}", n.name)
+                }
+                Op::AttentionHead { .. } | Op::Gemm { .. } => {
+                    assert_eq!(n.executor, Executor::Ita, "{}", n.name)
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn multicore_maps_everything_to_cluster() {
+        let mut g = build_graph_layers(&MOBILEBERT, 1);
+        map_operators(&mut g, false);
+        assert!(g.nodes.iter().all(|n| n.executor == Executor::Cluster));
+    }
+
+    #[test]
+    fn constraints_accept_padded_models() {
+        for cfg in crate::models::ALL_MODELS {
+            let mut g = build_graph_layers(cfg, 1);
+            fuse_mha(&mut g);
+            check_ita_constraints(&g).unwrap();
+        }
+    }
+
+    #[test]
+    fn constraints_reject_unpadded() {
+        use crate::deeploy::ir::{DType, Graph, Node, TensorKind};
+        let mut g = Graph::new("bad");
+        g.add_tensor("x", &[100, 64], DType::I8, TensorKind::Input);
+        g.add_tensor("w", &[64, 64], DType::I8, TensorKind::Weight);
+        g.add_tensor("b", &[64], DType::I32, TensorKind::Weight);
+        g.add_tensor("y", &[100, 64], DType::I8, TensorKind::Output);
+        g.add_node(Node::new(
+            "g",
+            Op::Gemm { act: crate::deeploy::ir::Activation::Identity },
+            &["x", "w", "b"],
+            &["y"],
+        ));
+        assert!(check_ita_constraints(&g).is_err());
+    }
+
+    #[test]
+    fn lower_conv_produces_padded_gemm() {
+        let mut g = crate::models::build_stem_graph(&crate::models::WHISPER_TINY_ENC)
+            .unwrap();
+        let n = lower_conv(&mut g);
+        assert_eq!(n, 2);
+        g.validate().unwrap();
+        assert!(!g.nodes.iter().any(|x| matches!(x.op, Op::Conv1d { .. })));
+        // conv1: k*cin = 240 -> padded to 256; conv2: 1152 (already x64)
+        let col1 = g.tensor("stem/conv1.op.im2col");
+        assert_eq!(col1.shape, vec![1024, 256]);
+        let col2 = g.tensor("stem/conv2.op.im2col");
+        assert_eq!(col2.shape, vec![512, 1152]);
+        map_operators(&mut g, true);
+        check_ita_constraints(&g).unwrap();
+        // the GEMMs go to ITA, the im2col copies stay on the cluster
+        for node in &g.nodes {
+            match node.op {
+                Op::Gemm { .. } => assert_eq!(node.executor, Executor::Ita),
+                Op::Im2col { .. } => assert_eq!(node.executor, Executor::Cluster),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn fusion_count_scales_with_heads_and_layers() {
+        use crate::models::DINOV2S;
+        let mut g = build_graph_layers(&DINOV2S, 3);
+        assert_eq!(fuse_mha(&mut g), 3 * DINOV2S.heads);
+    }
+}

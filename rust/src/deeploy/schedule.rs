@@ -1,0 +1,167 @@
+//! Topological scheduling.
+//!
+//! Produces the execution order the code generator emits. The builders
+//! keep nodes topologically sorted already, but imported graphs may not
+//! be — this is a Kahn's-algorithm list scheduler with a deterministic
+//! tie-break (original index), plus a validity checker used in tests.
+
+use std::collections::BTreeMap;
+
+use super::ir::Graph;
+
+/// Compute a topological execution order (indices into g.nodes).
+/// Deterministic: among ready nodes, lowest original index first.
+pub fn topo_schedule(g: &Graph) -> Vec<usize> {
+    let n = g.nodes.len();
+    // tensor -> producer node
+    let mut producer: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, node) in g.nodes.iter().enumerate() {
+        for o in &node.outputs {
+            producer.insert(o, i);
+        }
+    }
+    // dependency edges + indegrees
+    let mut indeg = vec![0usize; n];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        for inp in &node.inputs {
+            if let Some(&p) = producer.get(inp.as_str()) {
+                if p != i {
+                    succs[p].push(i);
+                    indeg[i] += 1;
+                }
+            }
+        }
+    }
+    // Kahn with a sorted ready set (BTreeMap keys as a min-heap)
+    let mut ready: std::collections::BTreeSet<usize> =
+        (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(&i) = ready.iter().next() {
+        ready.remove(&i);
+        order.push(i);
+        for &s in &succs[i] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.insert(s);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "cycle in graph {}", g.name);
+    order
+}
+
+/// Check that `order` is a valid topological order of `g`.
+pub fn is_valid_order(g: &Graph, order: &[usize]) -> bool {
+    let mut pos = vec![usize::MAX; g.nodes.len()];
+    for (p, &i) in order.iter().enumerate() {
+        pos[i] = p;
+    }
+    let mut producer: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, node) in g.nodes.iter().enumerate() {
+        for o in &node.outputs {
+            producer.insert(o, i);
+        }
+    }
+    for (i, node) in g.nodes.iter().enumerate() {
+        for inp in &node.inputs {
+            if let Some(&p) = producer.get(inp.as_str()) {
+                if p != i && pos[p] >= pos[i] {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_graph_layers, ALL_MODELS, MOBILEBERT};
+
+    #[test]
+    fn schedules_are_valid_for_all_models() {
+        for cfg in ALL_MODELS {
+            let g = build_graph_layers(cfg, 2);
+            let order = topo_schedule(&g);
+            assert_eq!(order.len(), g.nodes.len());
+            assert!(is_valid_order(&g, &order), "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn schedule_survives_shuffled_input() {
+        // reverse the node list (breaking builder order), reschedule
+        let mut g = build_graph_layers(&MOBILEBERT, 1);
+        g.nodes.reverse();
+        let order = topo_schedule(&g);
+        assert!(is_valid_order(&g, &order));
+    }
+
+    #[test]
+    fn fused_graph_schedules() {
+        let mut g = build_graph_layers(&MOBILEBERT, 1);
+        crate::deeploy::passes::fuse_mha(&mut g);
+        let order = topo_schedule(&g);
+        assert!(is_valid_order(&g, &order));
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = build_graph_layers(&MOBILEBERT, 1);
+        assert_eq!(topo_schedule(&g), topo_schedule(&g));
+    }
+
+    #[test]
+    fn property_random_dags_schedule_validly() {
+        // generate random layered DAGs (each node consumes 1-2 tensors
+        // from strictly earlier layers), shuffle the node order, and
+        // check the scheduler always recovers a valid topological order
+        use crate::deeploy::ir::{DType, Graph, Node, Op, TensorKind};
+        use crate::util::propcheck::{check, Config};
+        use crate::util::prng::XorShift64;
+
+        check(
+            Config { cases: 40, seed: 0x5C4ED },
+            |rng: &mut XorShift64| {
+                let n = 3 + rng.next_below(30) as usize;
+                let seed = rng.next_u64();
+                (n, seed)
+            },
+            |&(n, seed)| {
+                if n > 3 {
+                    vec![(n / 2, seed), (n - 1, seed)]
+                } else {
+                    vec![]
+                }
+            },
+            |&(n, seed)| {
+                let mut rng = XorShift64::new(seed);
+                let mut g = Graph::new("rand");
+                g.add_tensor("t0", &[4, 4], DType::I8, TensorKind::Input);
+                for i in 0..n {
+                    let out = format!("t{}", i + 1);
+                    g.add_tensor(&out, &[4, 4], DType::I8, TensorKind::Activation);
+                    let a = format!("t{}", rng.next_below(i as u64 + 1));
+                    let b = format!("t{}", rng.next_below(i as u64 + 1));
+                    let mut node =
+                        Node::new(&format!("n{i}"), Op::Add, &[], &[]);
+                    node.inputs = vec![a, b];
+                    node.outputs = vec![out];
+                    g.add_node(node);
+                }
+                // adversarial input order
+                g.nodes.reverse();
+                let order = topo_schedule(&g);
+                if order.len() != g.nodes.len() {
+                    return Err("missing nodes".into());
+                }
+                if !is_valid_order(&g, &order) {
+                    return Err("invalid topological order".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,203 @@
+//! Memory-aware operator tiling (paper Section III-B / IV-D).
+//!
+//! For every ITA-mapped operator, choose tile sizes that (a) respect the
+//! accelerator's geometric constraints (multiples of the 64-wide
+//! datapath) and (b) fit the double-buffered working set in the 128 KiB
+//! shared L1. The tiler maximizes tile volume — fewer, larger tiles mean
+//! less per-tile overhead — under the byte budget.
+
+use std::collections::BTreeMap;
+
+use super::ir::{Executor, Graph, Op};
+
+/// ITA datapath tile quantum.
+pub const TILE_Q: usize = 64;
+/// L1 budget available to tile buffers: total 128 KiB minus a reserve
+/// for cluster-kernel scratch + stack (16 KiB).
+pub const L1_BUDGET: usize = 128 * 1024 - 16 * 1024;
+
+/// Tiling decision for one operator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TilePlan {
+    /// Tile dims (tm, tk, tn) for GEMM-like ops; (tile_s, proj) for
+    /// attention (the KV tile length is tk).
+    pub tm: usize,
+    pub tk: usize,
+    pub tn: usize,
+    /// Number of tile steps to cover the operator.
+    pub steps: u64,
+    /// Double-buffered L1 bytes this plan occupies.
+    pub l1_bytes: usize,
+}
+
+/// Working-set bytes of one (tm, tk, tn) GEMM tile, double-buffered
+/// inputs + single output + bias.
+fn gemm_tile_bytes(tm: usize, tk: usize, tn: usize) -> usize {
+    2 * (tm * tk + tk * tn) + tm * tn + 4 * tn
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Plan a GEMM-like operator of logical dims (m, k, n).
+pub fn plan_gemm(m: usize, k: usize, n: usize, budget: usize) -> TilePlan {
+    // tile = [tm, tk, tn]; caps are the dims padded to the quantum.
+    // Grow greedily, preferring the reduction dim (weight reuse), then n
+    // (output columns stream), then m.
+    let caps = [ceil_div(m, TILE_Q) * TILE_Q, ceil_div(k, TILE_Q) * TILE_Q, ceil_div(n, TILE_Q) * TILE_Q];
+    let mut t = [TILE_Q; 3];
+    let bytes = |t: &[usize; 3]| gemm_tile_bytes(t[0], t[1], t[2]);
+    assert!(bytes(&t) <= budget, "minimum tile exceeds L1 budget");
+    loop {
+        let mut grew = false;
+        for idx in [1usize, 2, 0] {
+            if t[idx] < caps[idx] {
+                let mut cand = t;
+                cand[idx] += TILE_Q;
+                if bytes(&cand) <= budget {
+                    t = cand;
+                    grew = true;
+                }
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+    let [tm, tk, tn] = t;
+    let steps = (ceil_div(m, tm) * ceil_div(k, tk) * ceil_div(n, tn)) as u64;
+    TilePlan { tm, tk, tn, steps, l1_bytes: bytes(&t) }
+}
+
+/// Plan an attention head (S_q x S_kv x P): Q stays resident, K/V tiles
+/// stream, the quantized QK row block is held for the AV phase.
+pub fn plan_attention(s_q: usize, s_kv: usize, p: usize, budget: usize) -> TilePlan {
+    // working set for a query row-block of tq rows:
+    //   Q block (tq x p) + 2x K tile (64 x p) + 2x V tile (64 x p)
+    //   + QK row block (tq x s_kv) + output (tq x p)
+    let mut tq = TILE_Q;
+    let bytes = |tq: usize| tq * p + 4 * TILE_Q * p + tq * s_kv + tq * p;
+    assert!(bytes(TILE_Q) <= budget, "attention row block exceeds L1");
+    while tq < s_q && bytes(tq + TILE_Q) <= budget {
+        tq += TILE_Q;
+    }
+    let steps = (ceil_div(s_q, tq) * ceil_div(s_kv, TILE_Q)) as u64;
+    TilePlan { tm: tq, tk: TILE_Q, tn: p, steps, l1_bytes: bytes(tq) }
+}
+
+/// Plan every ITA-mapped node of a graph. Keyed by node name.
+pub fn plan_graph(g: &Graph) -> BTreeMap<String, TilePlan> {
+    let mut plans = BTreeMap::new();
+    for node in &g.nodes {
+        if node.executor != Executor::Ita {
+            continue;
+        }
+        let plan = match &node.op {
+            Op::Gemm { .. } | Op::MatMul => {
+                let a = g.tensor(&node.inputs[0]);
+                let b = g.tensor(&node.inputs[1]);
+                let m = a.shape[0];
+                let k = a.shape[1];
+                let n = b.shape[1];
+                plan_gemm(m, k, n, L1_BUDGET)
+            }
+            Op::AttentionHead { proj } => {
+                let q = g.tensor(&node.inputs[0]);
+                let k = g.tensor(&node.inputs[1]);
+                plan_attention(q.shape[0], k.shape[0], *proj, L1_BUDGET)
+            }
+            _ => continue,
+        };
+        plans.insert(node.name.clone(), plan);
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+
+    #[test]
+    fn small_gemm_single_tile() {
+        let p = plan_gemm(64, 64, 64, L1_BUDGET);
+        assert_eq!(p.steps, 1);
+        assert_eq!((p.tm, p.tk, p.tn), (64, 64, 64));
+    }
+
+    #[test]
+    fn large_gemm_fits_budget() {
+        let p = plan_gemm(512, 1536, 384, L1_BUDGET);
+        assert!(p.l1_bytes <= L1_BUDGET, "bytes {}", p.l1_bytes);
+        assert!(p.steps >= 1);
+        // tiles must be quantized
+        assert_eq!(p.tm % TILE_Q, 0);
+        assert_eq!(p.tk % TILE_Q, 0);
+        assert_eq!(p.tn % TILE_Q, 0);
+    }
+
+    #[test]
+    fn attention_plans_for_paper_models() {
+        for (s, p) in [(128, 64), (256, 64), (512, 64)] {
+            let plan = plan_attention(s, s, p, L1_BUDGET);
+            assert!(plan.l1_bytes <= L1_BUDGET, "S={s}: {}", plan.l1_bytes);
+            assert!(plan.steps >= 1);
+        }
+    }
+
+    #[test]
+    fn property_tiles_cover_and_fit() {
+        check(
+            Config { cases: 200, seed: 0x71EE },
+            |rng| {
+                (
+                    (1 + rng.next_below(10) as usize) * 64,
+                    (1 + rng.next_below(24) as usize) * 64,
+                    (1 + rng.next_below(10) as usize) * 64,
+                )
+            },
+            |&(m, k, n)| {
+                let mut c = Vec::new();
+                if m > 64 {
+                    c.push((m - 64, k, n));
+                }
+                if k > 64 {
+                    c.push((m, k - 64, n));
+                }
+                if n > 64 {
+                    c.push((m, k, n - 64));
+                }
+                c
+            },
+            |&(m, k, n)| {
+                let p = plan_gemm(m, k, n, L1_BUDGET);
+                if p.l1_bytes > L1_BUDGET {
+                    return Err(format!("over budget: {}", p.l1_bytes));
+                }
+                // coverage: steps x tile volume >= problem volume
+                let cover = p.steps as usize
+                    * (p.tm.min(m) * p.tk.min(k) * p.tn.min(n));
+                if cover < m * k * n {
+                    return Err(format!("under-covered: {cover} < {}", m * k * n));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn plans_for_all_models() {
+        use crate::deeploy::passes;
+        for cfg in crate::models::ALL_MODELS {
+            let mut g = crate::models::build_graph_layers(cfg, 1);
+            passes::fuse_mha(&mut g);
+            passes::map_operators(&mut g, true);
+            let plans = plan_graph(&g);
+            assert!(!plans.is_empty());
+            for (name, p) in &plans {
+                assert!(p.l1_bytes <= L1_BUDGET, "{name}: {}", p.l1_bytes);
+            }
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Activity-based energy model, calibrated to the paper's GF22FDX
+//! published corners (TT, 0.65 V, 425 MHz).
+//!
+//! Four constants are fitted once against the paper's own numbers
+//! (DESIGN.md §6); everything else (mJ/Inf, GOp/J, average power, the
+//! 102x/188x/901x ratios) is *derived* from simulator activity counts:
+//!
+//!   P_IDLE      5 mW    always-on (clock tree, icache leakage, L1 retain)
+//!   E_CORE_CY   49.4 pJ per cycle with the 8 worker cores busy
+//!               -> multi-core cluster at 26 mW / 28.9 GOp/J (Table I)
+//!   E_ITA_OP    0.15 pJ per ITA op
+//!               -> micro GEMM at 5.42 TOp/J, attention at 6.35 TOp/J
+//!   E_DMA_BYTE  1.0 pJ per byte moved L2 <-> L1 over the wide AXI
+//!
+//! Cross-checks (tests below): micro-GEMM implied power 136.7 mW; micro
+//! attention 104.4 mW; multi-core cluster 26 mW.
+
+pub mod area;
+
+use crate::sim::trace::Resource;
+use crate::sim::RunStats;
+
+/// Always-on power, watts.
+pub const P_IDLE_W: f64 = 0.005;
+/// Energy per cluster cycle with all worker cores active, joules.
+pub const E_CORE_CYCLE_J: f64 = 49.4e-12;
+/// Energy per ITA op (MAC = 2 ops), joules.
+pub const E_ITA_OP_J: f64 = 0.15e-12;
+/// Energy per DMA byte, joules.
+pub const E_DMA_BYTE_J: f64 = 1.0e-12;
+
+/// Energy/power breakdown of one simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyReport {
+    pub idle_j: f64,
+    pub cores_j: f64,
+    pub ita_j: f64,
+    pub dma_j: f64,
+    pub total_j: f64,
+    pub seconds: f64,
+    pub avg_power_w: f64,
+    pub gops: f64,
+    pub gopj: f64,
+}
+
+/// Evaluate the energy model on simulator statistics.
+pub fn evaluate(stats: &RunStats, freq_hz: f64) -> EnergyReport {
+    let seconds = stats.seconds(freq_hz);
+    let idle_j = P_IDLE_W * seconds;
+    let cores_j = stats.busy_cycles(Resource::Cores) as f64 * E_CORE_CYCLE_J;
+    let ita_j = stats.ita_ops as f64 * E_ITA_OP_J;
+    let dma_j = stats.dma_bytes as f64 * E_DMA_BYTE_J;
+    let total_j = idle_j + cores_j + ita_j + dma_j;
+    let gops = stats.gops(freq_hz);
+    let gopj = stats.total_ops() as f64 / total_j / 1e9;
+    EnergyReport {
+        idle_j,
+        cores_j,
+        ita_j,
+        dma_j,
+        total_j,
+        seconds,
+        avg_power_w: total_j / seconds.max(1e-12),
+        gops,
+        gopj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{ClusterConfig, Cmd, Engine, Step};
+
+    const FREQ: f64 = 425.0e6;
+
+    #[test]
+    fn micro_gemm_efficiency_matches_paper() {
+        // Large double-buffered GEMM on ITA with operands streamed from
+        // L2 at the worst-case rate (Section IV-B: every 256-cycle tile
+        // moves two 64x64 int8 inputs, 64 24-bit biases and one 64x64
+        // output = 12480 B ~ 48.75 B/cy). Paper: 741 GOp/s, 5.42 TOp/J
+        // (implying ~136.7 mW while ITA runs flat out).
+        let e = Engine::new(ClusterConfig::default());
+        let stats = e.run(&micro_gemm_steps(512));
+        let rep = evaluate(&stats, FREQ);
+        assert!((rep.gops - 741.0).abs() < 8.0, "GOp/s {}", rep.gops);
+        assert!((rep.gopj / 1000.0 - 5.42).abs() < 0.3, "TOp/J {}", rep.gopj / 1000.0);
+        // implied power during the microbenchmark
+        assert!((rep.avg_power_w * 1e3 - 136.7).abs() < 8.0, "mW {}", rep.avg_power_w * 1e3);
+    }
+
+    #[test]
+    fn micro_attention_efficiency_matches_paper() {
+        // paper: 663 GOp/s at 6.35 TOp/J (74.9% utilization)
+        let e = Engine::new(ClusterConfig::default());
+        let steps: Vec<Step> = (0..64)
+            .map(|i| {
+                let deps = if i == 0 { vec![] } else { vec![i - 1] };
+                Step::new(Cmd::ItaAttention { s_q: 512, s_kv: 512, p: 64 }, deps)
+            })
+            .collect();
+        let stats = e.run(&steps);
+        let rep = evaluate(&stats, FREQ);
+        assert!((rep.gops - 663.0).abs() < 8.0, "GOp/s {}", rep.gops);
+        assert!((rep.gopj / 1000.0 - 6.35).abs() < 0.3, "TOp/J {}", rep.gopj / 1000.0);
+    }
+
+    #[test]
+    fn multicore_cluster_matches_paper() {
+        // software GEMM on the 8 Snitch cores: paper Table I gives
+        // 0.74 GOp/s, 28.9 GOp/J, 26.0 mW for the multi-core cluster
+        let e = Engine::new(ClusterConfig::default());
+        let steps = vec![Step::new(
+            Cmd::Core { kind: crate::sim::CoreOp::GemmI8, elems: 1 << 26 },
+            vec![],
+        )];
+        let stats = e.run(&steps);
+        let rep = evaluate(&stats, FREQ);
+        assert!((rep.gops - 0.75).abs() < 0.05, "GOp/s {}", rep.gops);
+        assert!((rep.gopj - 28.9).abs() < 2.0, "GOp/J {}", rep.gopj);
+        assert!((rep.avg_power_w * 1e3 - 26.0).abs() < 2.0, "mW {}", rep.avg_power_w * 1e3);
+    }
+
+    /// The micro-GEMM workload: 512^3 GEMMs with operands streamed from
+    /// L2 at the worst-case per-tile traffic, double-buffered.
+    fn micro_gemm_steps(n: usize) -> Vec<Step> {
+        let tile_bytes = 2 * 64 * 64 + 64 * 3 + 64 * 64;
+        let mut steps = vec![Step::new(Cmd::DmaIn { rows: 512, row_bytes: tile_bytes }, vec![])];
+        for i in 0..n {
+            let dep = steps.len() - 1;
+            steps.push(Step::new(Cmd::ItaGemm { m: 512, k: 512, n: 512 }, vec![dep]));
+            if i + 1 < n {
+                steps.push(Step::new(
+                    Cmd::DmaIn { rows: 512, row_bytes: tile_bytes },
+                    vec![dep],
+                ));
+            }
+        }
+        steps
+    }
+
+    #[test]
+    fn gemm_ratios_match_paper() {
+        // paper: ITA vs multi-core GEMM = 986x throughput, 188x efficiency
+        let e = Engine::new(ClusterConfig::default());
+        let ita = evaluate(&e.run(&micro_gemm_steps(64)), FREQ);
+        let sw = {
+            let steps = vec![Step::new(
+                Cmd::Core { kind: crate::sim::CoreOp::GemmI8, elems: 1 << 26 },
+                vec![],
+            )];
+            evaluate(&e.run(&steps), FREQ)
+        };
+        let thr_ratio = ita.gops / sw.gops;
+        let eff_ratio = ita.gopj / sw.gopj;
+        assert!((thr_ratio - 986.0).abs() < 60.0, "throughput ratio {thr_ratio}");
+        assert!((eff_ratio - 188.0).abs() < 15.0, "efficiency ratio {eff_ratio}");
+    }
+
+    #[test]
+    fn energy_breakdown_sums() {
+        let e = Engine::new(ClusterConfig::default());
+        let steps = vec![
+            Step::new(Cmd::DmaIn { rows: 64, row_bytes: 64 }, vec![]),
+            Step::new(Cmd::ItaGemm { m: 64, k: 64, n: 64 }, vec![0]),
+            Step::new(Cmd::Core { kind: crate::sim::CoreOp::Add, elems: 4096 }, vec![1]),
+        ];
+        let rep = evaluate(&e.run(&steps), FREQ);
+        let sum = rep.idle_j + rep.cores_j + rep.ita_j + rep.dma_j;
+        assert!((sum - rep.total_j).abs() < 1e-15);
+        assert!(rep.ita_j > 0.0 && rep.dma_j > 0.0 && rep.cores_j > 0.0);
+    }
+}

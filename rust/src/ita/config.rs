@@ -1,0 +1,78 @@
+//! ITA geometry constants (Section IV-B of the paper).
+
+/// Hardware geometry of one ITA instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ItaConfig {
+    /// Number of dot-product units (N). Each emits one output per cycle.
+    pub n_units: usize,
+    /// Vector length per dot-product unit (M).
+    pub m_vec: usize,
+    /// Accumulator width in bits (D).
+    pub acc_bits: u32,
+    /// Maximum supported matrix dimension.
+    pub max_dim: usize,
+}
+
+impl Default for ItaConfig {
+    fn default() -> Self {
+        // the paper's instantiation: N=16, M=64, D=26, dims up to 512
+        Self { n_units: 16, m_vec: 64, acc_bits: 26, max_dim: 512 }
+    }
+}
+
+impl ItaConfig {
+    /// MACs retired per cycle at full utilization.
+    pub fn macs_per_cycle(&self) -> usize {
+        self.n_units * self.m_vec
+    }
+
+    /// Ops (multiply + add counted separately) per cycle at peak.
+    pub fn ops_per_cycle(&self) -> usize {
+        2 * self.macs_per_cycle()
+    }
+
+    /// Cycles to produce one `m_vec x m_vec` output tile with a full
+    /// `m_vec`-deep reduction: (64*64 outputs x 64 MACs) / (16*64 MACs/cy)
+    /// = 256 cycles — "to produce one output tile, ITA takes at least 256
+    /// cycles" (paper Section IV-B).
+    pub fn cycles_per_tile(&self) -> usize {
+        (self.m_vec * self.m_vec * self.m_vec) / self.macs_per_cycle()
+    }
+
+    /// Accumulator range check: K <= max_dim keeps int8 x int8 dot
+    /// products inside the D-bit accumulator.
+    pub fn acc_fits(&self, k_dim: usize) -> bool {
+        // worst case |sum| = K * 128 * 128 must fit in (acc_bits-1) bits
+        (k_dim as i64) * 128 * 128 <= (1i64 << (self.acc_bits - 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let c = ItaConfig::default();
+        assert_eq!(c.macs_per_cycle(), 1024);
+        assert_eq!(c.ops_per_cycle(), 2048);
+        assert_eq!(c.cycles_per_tile(), 256);
+    }
+
+    #[test]
+    fn peak_throughput_at_425mhz() {
+        // 2048 op/cycle * 425 MHz = 870.4 GOp/s; the paper's 741 GOp/s
+        // peak GEMM corresponds to 85.1% utilization of this figure.
+        let c = ItaConfig::default();
+        let peak = c.ops_per_cycle() as f64 * 425.0e6;
+        assert!((peak - 870.4e9).abs() < 1e6);
+        assert!((0.851 * peak - 741.0e9).abs() < 1.0e9);
+    }
+
+    #[test]
+    fn accumulator_bounds() {
+        let c = ItaConfig::default();
+        assert!(c.acc_fits(512));
+        assert!(!c.acc_fits(4096));
+    }
+}

@@ -1,0 +1,316 @@
+//! ITA datapath: int8 GEMM with requant/activation, single-head attention
+//! with streaming ITAMax, plus the *cluster-side* integer auxiliary
+//! operators (i-LayerNorm, head accumulation, saturating residual add)
+//! that the Snitch cores execute in the paper.
+//!
+//! Bit-identical to `python/compile/kernels/ref.py` + `model.py`.
+
+use super::gelu::{self, Act, GeluConsts};
+use super::quant::{clip_i8, requant};
+use super::softmax;
+
+/// Row-major int32 matrix carrying int8/intermediate values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl Mat {
+    pub fn new(rows: usize, cols: usize, data: Vec<i32>) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Integer matmul with i32 accumulation: C = A x B (A: MxK, B: KxN).
+///
+/// ikj loop order (row-major B streams through cache) with a zero-skip,
+/// parallelized over row blocks with scoped threads for large problems —
+/// the golden-model hot path (Whisper layers run 300M-MAC GEMMs).
+pub fn matmul_i32(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul dims {}x{} x {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    let macs = a.rows * a.cols * b.cols;
+    let workers = if macs < (1 << 22) {
+        1
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(a.rows)
+    };
+    let rows_per = a.rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (block_idx, c_block) in c.data.chunks_mut(rows_per * b.cols).enumerate() {
+            let row0 = block_idx * rows_per;
+            scope.spawn(move || {
+                for (bi, crow) in c_block.chunks_mut(b.cols).enumerate() {
+                    let i = row0 + bi;
+                    for k in 0..a.cols {
+                        let av = a.at(i, k);
+                        if av == 0 {
+                            continue;
+                        }
+                        let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// ITA GEMM mode: int8 GEMM + bias + requant + activation.
+/// Matches `ref.gemm_rq` / the `ita_gemm` Pallas kernel.
+pub fn gemm_rq(
+    x: &Mat,
+    w: &Mat,
+    bias: &[i32],
+    mult: i32,
+    shift: u32,
+    act: Act,
+    gelu_s: f64,
+) -> Mat {
+    assert_eq!(bias.len(), w.cols);
+    let mut acc = matmul_i32(x, w);
+    let gc = if act == Act::Gelu {
+        gelu::gelu_consts(gelu_s)
+    } else {
+        GeluConsts { b_int: 0, c_int: 0, sig_mult: 0, sig_shift: 0 }
+    };
+    for r in 0..acc.rows {
+        for c in 0..acc.cols {
+            let v = requant(acc.at(r, c) + bias[c], mult, shift, 0);
+            acc.set(r, c, gelu::apply(act, v, &gc));
+        }
+    }
+    acc
+}
+
+/// Single-head quantized attention: QK requant -> ITAMax -> AV requant.
+/// Matches `ref.attention_head` / the Pallas `attention_head`.
+/// Returns (O, QK, A) so the simulator and tests can inspect each stage.
+pub fn attention_head(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    qk_mult: i32,
+    qk_shift: u32,
+    av_mult: i32,
+    av_shift: u32,
+) -> (Mat, Mat, Mat) {
+    // QK^T: (S x P) x (P x S_kv)
+    let kt = transpose(k);
+    let qk_acc = matmul_i32(q, &kt);
+    let qk = Mat::new(
+        qk_acc.rows,
+        qk_acc.cols,
+        qk_acc.data.iter().map(|&a| requant(a, qk_mult, qk_shift, 0)).collect(),
+    );
+    let a = Mat::new(qk.rows, qk.cols, softmax::itamax(&qk.data, qk.cols));
+    let av_acc = matmul_i32(&a, v);
+    let o = Mat::new(
+        av_acc.rows,
+        av_acc.cols,
+        av_acc.data.iter().map(|&x| requant(x, av_mult, av_shift, 0)).collect(),
+    );
+    (o, qk, a)
+}
+
+pub fn transpose(m: &Mat) -> Mat {
+    let mut t = Mat::zeros(m.cols, m.rows);
+    for r in 0..m.rows {
+        for c in 0..m.cols {
+            t.set(c, r, m.at(r, c));
+        }
+    }
+    t
+}
+
+// --- cluster-side auxiliary operators (run on Snitch cores in the paper) ---
+
+/// Fixed-iteration integer Newton sqrt — bit-identical to `quant.isqrt`.
+pub fn isqrt(n: i32) -> i32 {
+    debug_assert!(n >= 0);
+    let mut x: i32 = 1 << 15;
+    for _ in 0..16 {
+        let xs = x.max(1);
+        x = (xs + n / xs) >> 1;
+    }
+    if x as i64 * x as i64 > n as i64 {
+        x -= 1;
+    }
+    x.max(1)
+}
+
+/// Integer LayerNorm over each row — bit-identical to `quant.ilayernorm`.
+pub fn ilayernorm(x: &Mat, gamma: &[i32], beta: &[i32], mult: i32, shift: u32) -> Mat {
+    assert_eq!(gamma.len(), x.cols);
+    assert_eq!(beta.len(), x.cols);
+    let e = x.cols as i32;
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let sum: i32 = row.iter().sum();
+        let mu = sum.div_euclid(e);
+        let var: i32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<i32>() / e;
+        let sigma = isqrt(var);
+        for c in 0..x.cols {
+            let d = x.at(r, c) - mu;
+            let n = (d * 128).div_euclid(sigma);
+            let y = requant(n * gamma[c], mult, shift, 0);
+            out.set(r, c, clip_i8(y + beta[c]));
+        }
+    }
+    out
+}
+
+/// Saturating int8 residual add (the cluster's requant-add).
+pub fn residual_add(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    Mat::new(
+        a.rows,
+        a.cols,
+        a.data.iter().zip(&b.data).map(|(&x, &y)| clip_i8(x + y)).collect(),
+    )
+}
+
+/// Head accumulation: sum per-head partial output projections (int32)
+/// then requantize once — the paper's cluster-side accumulation layer.
+pub fn head_accumulate(partials: &[Mat], bias: &[i32], mult: i32, shift: u32) -> Mat {
+    let (r, c) = (partials[0].rows, partials[0].cols);
+    let mut acc = Mat::zeros(r, c);
+    for p in partials {
+        for (a, &v) in acc.data.iter_mut().zip(&p.data) {
+            *a += v;
+        }
+    }
+    for row in 0..r {
+        for col in 0..c {
+            let v = requant(acc.at(row, col) + bias[col], mult, shift, 0);
+            acc.set(row, col, v);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::XorShift64;
+
+    fn rand_mat(rng: &mut XorShift64, r: usize, c: usize) -> Mat {
+        Mat::new(r, c, rng.tensor_i8(r * c))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut eye = Mat::zeros(3, 3);
+        for i in 0..3 {
+            eye.set(i, i, 1);
+        }
+        let mut rng = XorShift64::new(1);
+        let a = rand_mat(&mut rng, 3, 3);
+        assert_eq!(matmul_i32(&a, &eye), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::new(2, 2, vec![1, 2, 3, 4]);
+        let b = Mat::new(2, 2, vec![5, 6, 7, 8]);
+        assert_eq!(matmul_i32(&a, &b).data, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn gemm_saturation() {
+        // python test_gemm_bias_zero_and_saturation
+        let x = Mat::new(4, 4, vec![127; 16]);
+        let w = Mat::new(4, 4, vec![127; 16]);
+        let b = vec![0; 4];
+        let g = gemm_rq(&x, &w, &b, 1 << 8, 8, Act::Identity, 0.1);
+        assert!(g.data.iter().all(|&v| v == 127));
+        let wn = Mat::new(4, 4, vec![-127; 16]);
+        let g2 = gemm_rq(&x, &wn, &b, 1 << 8, 8, Act::Identity, 0.1);
+        assert!(g2.data.iter().all(|&v| v == -128));
+    }
+
+    #[test]
+    fn attention_uniform_rows() {
+        // all logits equal -> uniform A -> O = requant(sum(V)/S * 128)
+        let s = 64;
+        let q = Mat::zeros(s, 64);
+        let k = Mat::zeros(s, 64);
+        let v = Mat::new(s, 64, vec![100; s * 64]);
+        let (o, _, a) = attention_head(&q, &k, &v, 15, 14, 8, 14);
+        let a0 = a.at(0, 0);
+        assert!(a.data.iter().all(|&x| x == a0), "uniform A");
+        assert!(o.data.iter().all(|&x| x == o.at(0, 0)));
+    }
+
+    #[test]
+    fn isqrt_is_floor_sqrt() {
+        for n in [0, 1, 2, 3, 4, 15, 16, 17, 100, 10_000, 1 << 30] {
+            let want = (n as f64).sqrt().floor() as i32;
+            assert_eq!(isqrt(n), want.max(1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn ilayernorm_beta_offset() {
+        // python test_ilayernorm_beta_offset: zero input -> output = beta
+        let x = Mat::zeros(2, 64);
+        let g = vec![64; 64];
+        let b = vec![7; 64];
+        let y = ilayernorm(&x, &g, &b, 16, 12);
+        assert!(y.data.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn ilayernorm_normalizes() {
+        let mut rng = XorShift64::new(2);
+        let x = rand_mat(&mut rng, 8, 128);
+        let g = vec![64; 128];
+        let b = vec![0; 128];
+        let y = ilayernorm(&x, &g, &b, 16, 12);
+        // scale: 32 * (d/sigma) -> row mean ~0, magnitude < 128
+        let mean: f64 = y.data.iter().map(|&v| v as f64).sum::<f64>() / y.data.len() as f64;
+        assert!(mean.abs() < 2.0, "mean {mean}");
+        assert!(y.data.iter().all(|&v| (-128..=127).contains(&v)));
+    }
+
+    #[test]
+    fn residual_add_saturates() {
+        let a = Mat::new(1, 2, vec![120, -120]);
+        let b = Mat::new(1, 2, vec![100, -100]);
+        assert_eq!(residual_add(&a, &b).data, vec![127, -128]);
+    }
+
+    #[test]
+    fn head_accumulate_requants_once() {
+        let p1 = Mat::new(1, 2, vec![1000, -1000]);
+        let p2 = Mat::new(1, 2, vec![500, 500]);
+        let out = head_accumulate(&[p1, p2], &[0, 0], 16, 8);
+        // (1500 * 16 + 128) >> 8 = 94 ; (-500*16+128)>>8 = -31
+        assert_eq!(out.data, vec![94, -31]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Integer activation unit: Identity / ReLU / i-GeLU (I-BERT).
+//!
+//! Bit-identical to `kernels.quant.igelu` — same constants derivation from
+//! the input scale, same i32 arithmetic, same saturation.
+
+/// Activation selection (the HWPE configuration field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Identity,
+    Relu,
+    Gelu,
+}
+
+impl Act {
+    pub fn from_str(s: &str) -> Option<Act> {
+        match s {
+            "identity" => Some(Act::Identity),
+            "relu" => Some(Act::Relu),
+            "gelu" => Some(Act::Gelu),
+            _ => None,
+        }
+    }
+}
+
+/// i-GeLU polynomial constants (I-BERT, Kim et al. 2021).
+pub const IGELU_A: f64 = -0.2888;
+pub const IGELU_B: f64 = -1.769;
+
+/// Integer constants of i-GeLU for a given input scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeluConsts {
+    pub b_int: i32,
+    pub c_int: i32,
+    pub sig_mult: i32,
+    pub sig_shift: u32,
+}
+
+/// Derive the integer constants — mirrors `quant.igelu_consts`.
+pub fn gelu_consts(s_in: f64) -> GeluConsts {
+    let s_erf = s_in / std::f64::consts::SQRT_2;
+    let b_int = (IGELU_B / s_erf).floor() as i32;
+    let c_int = (1.0 / (IGELU_A * s_erf * s_erf)).floor() as i32;
+    let s_out = s_in * (IGELU_A * s_erf * s_erf) / 2.0;
+    let ratio = s_out / s_in;
+    let sig_shift = 20u32;
+    let sig_mult = (ratio * (1u64 << sig_shift) as f64).round() as i32;
+    assert!(
+        128i64 * 2 * (c_int.unsigned_abs() as i64) * (sig_mult.unsigned_abs() as i64)
+            < (1i64 << 31),
+        "igelu constants overflow i32 for s_in={s_in}"
+    );
+    GeluConsts { b_int, c_int, sig_mult, sig_shift }
+}
+
+/// i-GeLU on one int8-range value; output int8-range at the input scale.
+#[inline]
+pub fn igelu(q: i32, c: &GeluConsts) -> i32 {
+    let sgn = q.signum();
+    let q_abs = q.abs();
+    let q_clip = q_abs.min(-c.b_int);
+    let t = q_clip + c.b_int; // <= 0
+    let q_erf = sgn * (t * t + c.c_int);
+    let q_one = c.c_int;
+    let acc = q * (q_erf + q_one);
+    let out = acc.wrapping_mul(c.sig_mult) >> c.sig_shift;
+    out.clamp(-128, 127)
+}
+
+/// Apply the activation unit to one value.
+#[inline]
+pub fn apply(act: Act, q: i32, c: &GeluConsts) -> i32 {
+    match act {
+        Act::Identity => q,
+        Act::Relu => q.max(0),
+        Act::Gelu => igelu(q, c),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn float_gelu(x: f64) -> f64 {
+        // x * Phi(x) via erf
+        x * 0.5 * (1.0 + libm_erf(x / std::f64::consts::SQRT_2))
+    }
+
+    // minimal erf (Abramowitz-Stegun 7.1.26) for the tolerance test
+    fn libm_erf(x: f64) -> f64 {
+        let sgn = if x < 0.0 { -1.0 } else { 1.0 };
+        let x = x.abs();
+        let t = 1.0 / (1.0 + 0.3275911 * x);
+        let y = 1.0
+            - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+                - 0.284496736)
+                * t
+                + 0.254829592)
+                * t
+                * (-x * x).exp();
+        sgn * y
+    }
+
+    #[test]
+    fn consts_for_standard_scale() {
+        let c = gelu_consts(0.1);
+        // b_int = floor(-1.769 / 0.0707) = floor(-25.01..) = -26
+        assert_eq!(c.b_int, -26);
+        assert!(c.c_int < 0);
+        assert!(c.sig_mult < 0); // negative scale flips back to positive
+    }
+
+    #[test]
+    fn fixed_points() {
+        let c = gelu_consts(0.1);
+        assert_eq!(igelu(0, &c), 0);
+        assert!((igelu(127, &c) - 127).abs() <= 1); // gelu(12.7) ~ 12.7
+        assert!(igelu(-128, &c).abs() <= 1); // gelu(-12.8) ~ 0
+    }
+
+    #[test]
+    fn matches_float_gelu_within_2lsb() {
+        let c = gelu_consts(0.1);
+        for q in -128..128 {
+            let got = igelu(q, &c) as f64;
+            let want = float_gelu(q as f64 * 0.1) / 0.1;
+            assert!((got - want).abs() <= 2.0, "q={q} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn relu_and_identity() {
+        let c = gelu_consts(0.1);
+        assert_eq!(apply(Act::Relu, -5, &c), 0);
+        assert_eq!(apply(Act::Relu, 5, &c), 5);
+        assert_eq!(apply(Act::Identity, -5, &c), -5);
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let c = gelu_consts(0.1);
+        let mut prev = -1000;
+        for q in -128..128 {
+            let v = igelu(q, &c);
+            assert!(v >= prev - 1, "q={q}"); // allow 1 LSB quantization jitter
+            prev = v;
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Bit-exact functional model of the Integer Transformer Accelerator (ITA).
+//!
+//! This is the rust twin of `python/compile/kernels/quant.py` — the single
+//! integer-arithmetic specification implemented three times (jnp oracle,
+//! Pallas kernels, this module) and cross-checked end-to-end by executing
+//! the AOT artifacts through PJRT and comparing bit-for-bit
+//! (`rust/tests/golden_pjrt.rs`).
+//!
+//! Module map (mirrors Fig. 2 of the paper):
+//!   [`quant`]   — requantization (the PULP RQS operator)
+//!   [`softmax`] — ITAMax: streaming DA -> DI -> EN integer softmax
+//!   [`gelu`]    — i-GeLU / ReLU integer activation unit
+//!   [`engine`]  — dot-product datapath: GEMM + single-head attention
+//!   [`config`]  — the accelerator geometry (N=16, M=64, D=26)
+
+pub mod config;
+pub mod engine;
+pub mod gelu;
+pub mod quant;
+pub mod softmax;
+
+pub use config::ItaConfig;

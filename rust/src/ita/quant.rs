@@ -1,0 +1,93 @@
+//! Requantization: the PULP RQS operator, bit-identical to
+//! `kernels.quant.requant` (jnp) and the Pallas kernels.
+
+/// Clip an i32 into int8 value range.
+#[inline]
+pub fn clip_i8(x: i32) -> i32 {
+    x.clamp(-128, 127)
+}
+
+/// `(acc * mult + round) >> shift`, clipped to int8, with half-up rounding.
+///
+/// Contract: |acc * mult| < 2^31 (callers keep accumulators in 26-bit
+/// hardware range and mult is 8-bit scale), matching the jnp int32 math.
+#[inline]
+pub fn requant(acc: i32, mult: i32, shift: u32, zero: i32) -> i32 {
+    let prod = acc.wrapping_mul(mult);
+    let rnd = if shift > 0 { 1i32 << (shift - 1) } else { 0 };
+    let shifted = (prod.wrapping_add(rnd)) >> shift;
+    clip_i8(shifted + zero)
+}
+
+/// Requantize a whole buffer in place semantics (returns new vec).
+pub fn requant_vec(acc: &[i32], mult: i32, shift: u32, zero: i32) -> Vec<i32> {
+    acc.iter().map(|&a| requant(a, mult, shift, zero)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+    use crate::util::prng::XorShift64;
+
+    #[test]
+    fn rounding_half_up() {
+        // matches python test_requant_rounding_half_up
+        assert_eq!(requant(1, 1, 1, 0), 1); // (1 + 1) >> 1 = 1
+        assert_eq!(requant(-1, 1, 1, 0), 0); // (-1 + 1) >> 1 = 0
+    }
+
+    #[test]
+    fn clipping() {
+        assert_eq!(requant(1 << 20, 1 << 8, 8, 0), 127);
+        assert_eq!(requant(-(1 << 20), 1 << 8, 8, 0), -128);
+        assert_eq!(clip_i8(127), 127);
+        assert_eq!(clip_i8(128), 127);
+        assert_eq!(clip_i8(-129), -128);
+    }
+
+    #[test]
+    fn zero_point_applied_after_shift() {
+        assert_eq!(requant(0, 5, 4, 7), 7);
+        assert_eq!(requant(0, 5, 4, 200), 127);
+    }
+
+    #[test]
+    fn property_matches_scalar_spec() {
+        // same contract as python test_requant_matches_scalar_spec
+        check(
+            Config { cases: 500, seed: 0x51C2 },
+            |rng: &mut XorShift64| {
+                (
+                    rng.next_range(-(1 << 25), 1 << 25),
+                    rng.next_range(1, 256),
+                    rng.next_range(1, 21) as u32,
+                )
+            },
+            |&(a, m, s)| {
+                let mut c = Vec::new();
+                if a != 0 {
+                    c.push((a / 2, m, s));
+                }
+                if m > 1 {
+                    c.push((a, m / 2, s));
+                }
+                c
+            },
+            |&(acc, mult, shift)| {
+                let prod = (acc as i64) * (mult as i64);
+                if prod.abs() >= 1 << 31 {
+                    return Ok(()); // outside contract
+                }
+                let want =
+                    (((prod + (1i64 << (shift - 1))) >> shift) as i32).clamp(-128, 127);
+                let got = requant(acc, mult, shift, 0);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("got {got}, want {want}"))
+                }
+            },
+        );
+    }
+}

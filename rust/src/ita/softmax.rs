@@ -1,0 +1,227 @@
+//! ITAMax: the streaming integer softmax (DA -> DI -> EN stages).
+//!
+//! Numeric spec: see `python/compile/kernels/quant.py` — base-2 softmax
+//! with F=5 fractional bits, 32-entry EXP2 LUT, 16-element DA chunks,
+//! LUT-multiply renormalization on running-max updates, 2^24 denominator
+//! inversion, and 7-bit probability outputs. Everything here is
+//! bit-identical to the jnp oracle / Pallas kernels.
+
+/// Fractional bits of the base-2 exponent.
+pub const ITA_F: u32 = 5;
+/// DA stage chunk width (the N=16 dot units emit 16 elements per cycle).
+pub const DA_CHUNK: usize = 16;
+/// Denominator-Inversion precision: inv = floor(2^24 / den).
+pub const INV_BITS: u32 = 24;
+/// Element-Normalization output shift -> A scale = 1/128.
+pub const EN_SHIFT: u32 = 17;
+/// Maximum attention probability value (7-bit).
+pub const A_MAX: i32 = 127;
+/// Initial running maximum is -M0.
+pub const M0: i32 = 1 << 20;
+
+/// EXP2_LUT[f] = round(256 * 2^(-f/32)), f in 0..32.
+pub const EXP2_LUT: [i32; 32] = exp2_lut();
+
+const fn exp2_lut() -> [i32; 32] {
+    // const-fn-safe: precomputed table (checked against the formula in
+    // tests and against python test_exp2_lut_values golden).
+    [
+        256, 251, 245, 240, 235, 230, 225, 220, 215, 211, 206, 202, 197, 193,
+        189, 185, 181, 177, 173, 170, 166, 162, 159, 156, 152, 149, 146, 143,
+        140, 137, 134, 131,
+    ]
+}
+
+/// Numerator of the base-2 softmax for non-negative diff = max - x.
+#[inline]
+pub fn exp2_num(diff: i32) -> i32 {
+    debug_assert!(diff >= 0);
+    let shift = ((diff >> ITA_F) as u32).min(31);
+    let frac = (diff & 31) as usize;
+    EXP2_LUT[frac] >> shift
+}
+
+/// Streaming DA renormalization: acc * 2^(-delta/32), one multiply+shift.
+#[inline]
+pub fn renorm_den(acc: i32, delta: i32) -> i32 {
+    debug_assert!(delta >= 0);
+    let shift = (8 + (delta >> ITA_F) as u32).min(31);
+    (acc.wrapping_mul(EXP2_LUT[(delta & 31) as usize])) >> shift
+}
+
+/// Carry state of the DA stage for one row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RowStats {
+    pub max: i32,
+    pub den: i32,
+}
+
+impl Default for RowStats {
+    fn default() -> Self {
+        Self { max: -M0, den: 0 }
+    }
+}
+
+/// DA stage: fold one 16-element chunk into the running (max, den).
+pub fn da_step(stats: RowStats, chunk: &[i32]) -> RowStats {
+    debug_assert_eq!(chunk.len(), DA_CHUNK);
+    let lm = chunk.iter().copied().max().unwrap();
+    let m_new = stats.max.max(lm);
+    let delta = m_new - stats.max;
+    let mut den = renorm_den(stats.den, delta);
+    for &x in chunk {
+        den += exp2_num(m_new - x);
+    }
+    RowStats { max: m_new, den }
+}
+
+/// DA over a full row (length must be a multiple of DA_CHUNK).
+pub fn da_row(row: &[i32]) -> RowStats {
+    assert_eq!(row.len() % DA_CHUNK, 0, "row length {}", row.len());
+    row.chunks(DA_CHUNK).fold(RowStats::default(), da_step)
+}
+
+/// DI stage: inv = floor(2^24 / den).
+#[inline]
+pub fn di(den: i32) -> i32 {
+    debug_assert!(den > 0);
+    (1 << INV_BITS) / den
+}
+
+/// EN stage: one normalized probability in [0, 127].
+#[inline]
+pub fn en(x: i32, max: i32, inv: i32) -> i32 {
+    let num = exp2_num(max - x);
+    ((num.wrapping_mul(inv)) >> EN_SHIFT).min(A_MAX)
+}
+
+/// Full ITAMax over a row: returns quantized probabilities (scale 1/128).
+pub fn itamax_row(row: &[i32]) -> Vec<i32> {
+    let stats = da_row(row);
+    let inv = di(stats.den);
+    row.iter().map(|&x| en(x, stats.max, inv)).collect()
+}
+
+/// ITAMax over each row of a (rows x cols) matrix (row-major).
+pub fn itamax(x: &[i32], cols: usize) -> Vec<i32> {
+    assert_eq!(x.len() % cols, 0);
+    x.chunks(cols).flat_map(itamax_row).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::XorShift64;
+
+    #[test]
+    fn lut_matches_formula() {
+        for (i, &v) in EXP2_LUT.iter().enumerate() {
+            let f = 256.0 * f64::powf(2.0, -(i as f64) / 32.0);
+            assert_eq!(v, f.round() as i32, "LUT[{i}]");
+        }
+        assert_eq!(EXP2_LUT[0], 256);
+        assert_eq!(EXP2_LUT[31], 131); // python golden
+    }
+
+    #[test]
+    fn exp2_num_monotone() {
+        let mut prev = i32::MAX;
+        for d in 0..1024 {
+            let n = exp2_num(d);
+            assert!(n <= prev);
+            prev = n;
+        }
+        assert_eq!(exp2_num(0), 256);
+        assert_eq!(exp2_num(1023), 0);
+    }
+
+    #[test]
+    fn all_equal_row() {
+        // python golden: x = [-128; 16] -> max -128, den 16*256
+        let row = [-128; 16];
+        let s = da_row(&row);
+        assert_eq!(s.max, -128);
+        assert_eq!(s.den, 16 * 256);
+    }
+
+    #[test]
+    fn peaked_short_row_golden() {
+        // python test_itamax_peaked_short_row golden: a[3] == 120
+        let mut row = [-128i32; 16];
+        row[3] = 127;
+        let a = itamax_row(&row);
+        assert_eq!(a[3], 120);
+        assert_eq!(a[0], 0);
+    }
+
+    #[test]
+    fn uniform_long_row_underflows() {
+        let row = [0i32; 512];
+        let a = itamax_row(&row);
+        assert!(a.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn invariant_to_constant_shift() {
+        let mut rng = XorShift64::new(5);
+        let row: Vec<i32> = (0..64).map(|_| rng.next_range(-100, 21)).collect();
+        let shifted: Vec<i32> = row.iter().map(|&x| x + 27).collect();
+        assert_eq!(itamax_row(&row), itamax_row(&shifted));
+    }
+
+    #[test]
+    fn rows_never_exceed_mass() {
+        let mut rng = XorShift64::new(17);
+        for _ in 0..50 {
+            let cols = [16usize, 64, 128][rng.next_below(3) as usize];
+            let row: Vec<i32> = (0..cols).map(|_| rng.next_range(-128, 128)).collect();
+            let a = itamax_row(&row);
+            assert!(a.iter().all(|&v| (0..=127).contains(&v)));
+            assert!(a.iter().sum::<i32>() <= 128);
+        }
+    }
+
+    #[test]
+    fn streaming_equals_chunked_manual_scan() {
+        // cross-checks da_row against the explicit per-chunk recurrence
+        // (mirrors python test_itamax_streaming_chunk_order_matters)
+        let mut rng = XorShift64::new(9);
+        let row: Vec<i32> = (0..128).map(|_| rng.next_range(-128, 128)).collect();
+        let got = da_row(&row);
+        let mut m = -M0;
+        let mut den = 0i32;
+        for ch in row.chunks(16) {
+            let lm = *ch.iter().max().unwrap();
+            let m_new = m.max(lm);
+            let delta = m_new - m;
+            let shift = (8 + (delta >> 5) as u32).min(31);
+            den = (den * EXP2_LUT[(delta & 31) as usize]) >> shift;
+            for &x in ch {
+                let d = m_new - x;
+                den += EXP2_LUT[(d & 31) as usize] >> ((d >> 5) as u32).min(31);
+            }
+            m = m_new;
+        }
+        assert_eq!(got, RowStats { max: m, den });
+    }
+
+    #[test]
+    fn approximates_float_softmax() {
+        let mut rng = XorShift64::new(23);
+        for _ in 0..20 {
+            let row: Vec<i32> = (0..128).map(|_| rng.next_range(-128, 128)).collect();
+            let a = itamax_row(&row);
+            let xf: Vec<f64> = row.iter().map(|&x| x as f64 / 32.0).collect();
+            let m = xf.iter().cloned().fold(f64::MIN, f64::max);
+            let e: Vec<f64> = xf.iter().map(|&x| (x - m).exp2()).collect();
+            let s: f64 = e.iter().sum();
+            for (ai, ei) in a.iter().zip(&e) {
+                assert!(
+                    ((*ai as f64) / 128.0 - ei / s).abs() < 0.02,
+                    "a={ai} f={}",
+                    ei / s
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! # attn-tinyml
+//!
+//! Reproduction of *"Toward Attention-based TinyML: A Heterogeneous
+//! Accelerated Architecture and Automated Deployment Flow"* (Wiese et al.,
+//! IEEE Design & Test 2024) as a three-layer rust + JAX + Pallas stack:
+//!
+//! - **L1/L2 (build time, python/)** — ITA's integer attention/GEMM
+//!   kernels in Pallas and the quantized encoder models in JAX, AOT-lowered
+//!   to HLO text artifacts.
+//! - **L3 (this crate)** — the deployment flow (`deeploy`), the
+//!   cycle/energy simulator of the Snitch+ITA cluster (`sim`, `energy`),
+//!   the bit-exact ITA functional model (`ita`), the PJRT-backed golden
+//!   runtime (`runtime`), and the orchestrating `coordinator`.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod coordinator;
+pub mod deeploy;
+pub mod energy;
+pub mod ita;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,281 @@
+//! attn-tinyml CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   table1              reproduce the paper's Table I (all networks)
+//!   simulate            one network/target: latency, energy, utilization
+//!   micro               microbenchmarks (Section V-A): GEMM + attention
+//!   verify              golden-check PJRT artifacts vs the rust ITA model
+//!   deploy              show the deployment artifacts (tiling, memory)
+//!   export              dump a model graph as ONNX-like JSON
+//!
+//! Examples:
+//!   attn-tinyml table1
+//!   attn-tinyml simulate --model mobilebert --target ita
+//!   attn-tinyml verify --artifacts artifacts
+//!   attn-tinyml deploy --model dinov2s
+
+use anyhow::{anyhow, Result};
+
+use attn_tinyml::coordinator::{self, forward};
+use attn_tinyml::deeploy::{self, Target};
+use attn_tinyml::models;
+use attn_tinyml::runtime::{artifacts_available, Runtime, TensorIn};
+use attn_tinyml::sim::{ClusterConfig, Cmd, Engine, Step};
+use attn_tinyml::util::cli::Args;
+
+const SUBCOMMANDS: [&str; 6] = ["table1", "simulate", "micro", "verify", "deploy", "export"];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &SUBCOMMANDS);
+    match args.subcommand.as_deref() {
+        Some("table1") => cmd_table1(),
+        Some("simulate") => cmd_simulate(&args),
+        Some("micro") => cmd_micro(),
+        Some("verify") => cmd_verify(&args),
+        Some("deploy") => cmd_deploy(&args),
+        Some("export") => cmd_export(&args),
+        _ => {
+            eprintln!("usage: attn-tinyml <{}> [--flags]", SUBCOMMANDS.join("|"));
+            eprintln!("       see README.md for details");
+            Ok(())
+        }
+    }
+}
+
+fn model_flag(args: &Args) -> Result<&'static models::ModelConfig> {
+    let name = args.flag_or("model", "mobilebert");
+    models::by_name(&name).ok_or_else(|| {
+        anyhow!(
+            "unknown model {name}; available: {}",
+            models::ALL_MODELS.iter().map(|m| m.name).collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+fn target_flag(args: &Args) -> Target {
+    match args.flag_or("target", "ita").as_str() {
+        "multicore" | "mc" => Target::MultiCore,
+        _ => Target::MultiCoreIta,
+    }
+}
+
+fn cmd_table1() -> Result<()> {
+    println!("{}", coordinator::table1().render());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = model_flag(args)?;
+    let target = target_flag(args);
+    let layers = args.flag_usize("layers", 1);
+    let r = coordinator::run_model_layers(cfg, target, layers);
+    println!("model        : {} ({})", r.model, r.target_name());
+    println!("GOp/inf      : {:.2}", cfg.gop_per_inference);
+    println!("latency      : {:.2} ms ({} cycles @ 425 MHz)", r.seconds * 1e3, r.cycles);
+    println!("throughput   : {:.1} GOp/s", r.gops);
+    println!("energy       : {:.2} mJ/inf  ({:.0} GOp/J)", r.mj_per_inf, r.gopj);
+    println!("power        : {:.1} mW", r.power_w * 1e3);
+    println!("inference/s  : {:.2}", r.inf_per_s);
+    println!("ITA util     : {:.1} %  (duty {:.1} %)", r.ita_utilization * 100.0, r.ita_duty * 100.0);
+    println!("L1 peak      : {} B (tile buffers)", r.l1_peak_bytes);
+    println!("L2 activat.  : {} B (static arena)", r.l2_activation_bytes);
+    Ok(())
+}
+
+fn cmd_micro() -> Result<()> {
+    let cluster = ClusterConfig::default();
+    let engine = Engine::new(cluster.clone());
+    // GEMM micro (paper Section V-A)
+    let tile_bytes = 2 * 64 * 64 + 64 * 3 + 64 * 64;
+    let mut steps = vec![Step::new(Cmd::DmaIn { rows: 512, row_bytes: tile_bytes }, vec![])];
+    for i in 0..256usize {
+        let dep = steps.len() - 1;
+        steps.push(Step::new(Cmd::ItaGemm { m: 512, k: 512, n: 512 }, vec![dep]));
+        if i + 1 < 256 {
+            steps.push(Step::new(Cmd::DmaIn { rows: 512, row_bytes: tile_bytes }, vec![dep]));
+        }
+    }
+    let s = engine.run(&steps);
+    let e = attn_tinyml::energy::evaluate(&s, cluster.freq_hz);
+    println!("GEMM  (ITA) : {:.0} GOp/s  {:.2} TOp/J  util {:.1}%", e.gops, e.gopj / 1e3, s.ita_utilization() * 100.0);
+
+    let attn_steps = |n: usize| -> Vec<Step> {
+        (0..n)
+            .map(|i| {
+                let deps = if i == 0 { vec![] } else { vec![i - 1] };
+                Step::new(Cmd::ItaAttention { s_q: 512, s_kv: 512, p: 64 }, deps)
+            })
+            .collect()
+    };
+    let s = engine.run(&attn_steps(64));
+    let e = attn_tinyml::energy::evaluate(&s, cluster.freq_hz);
+    println!("Attn  (ITA) : {:.0} GOp/s  {:.2} TOp/J  util {:.1}%", e.gops, e.gopj / 1e3, s.ita_utilization() * 100.0);
+
+    let engine_sa = Engine::standalone(cluster.clone());
+    let s = engine_sa.run(&attn_steps(64));
+    println!("Attn (standalone accelerator): util {:.1}%", s.ita_utilization() * 100.0);
+
+    let steps = vec![Step::new(
+        Cmd::Core { kind: attn_tinyml::sim::CoreOp::GemmI8, elems: 1 << 26 },
+        vec![],
+    )];
+    let s = engine.run(&steps);
+    let e = attn_tinyml::energy::evaluate(&s, cluster.freq_hz);
+    println!("GEMM (multi-core SW): {:.2} GOp/s  {:.1} GOp/J  {:.1} mW", e.gops, e.gopj, e.avg_power_w * 1e3);
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let dir = args.flag_or("artifacts", "artifacts");
+    if !artifacts_available() && dir == "artifacts" {
+        return Err(anyhow!("artifacts not built; run `make artifacts`"));
+    }
+    let rt = Runtime::new(std::path::Path::new(&dir))?;
+    verify_all(&rt)
+}
+
+/// Golden check: every artifact vs the rust functional model, bit-exact.
+fn verify_all(rt: &Runtime) -> Result<()> {
+    use attn_tinyml::ita::engine::{gemm_rq, Mat};
+    use attn_tinyml::ita::gelu::Act;
+    use attn_tinyml::util::prng::XorShift64;
+
+    // GEMM artifacts
+    for (name, act) in [("gemm", Act::Identity), ("gemm_relu", Act::Relu), ("gemm_gelu", Act::Gelu)] {
+        let entry = &rt.manifest.artifacts[name];
+        let (mult, shift) = (entry.rq["mult"] as i32, entry.rq["shift"] as u32);
+        let mut rng = XorShift64::new(0xBEEF);
+        let x = rng.tensor_i8(128 * 128);
+        let w = rng.tensor_i8(128 * 128);
+        let b: Vec<i32> = (0..128).map(|_| rng.next_range(-2048, 2048)).collect();
+        let got = rt.execute(
+            name,
+            &[
+                TensorIn { data: &x, shape: vec![128, 128] },
+                TensorIn { data: &w, shape: vec![128, 128] },
+                TensorIn { data: &b, shape: vec![128] },
+            ],
+        )?;
+        let want = gemm_rq(
+            &Mat::new(128, 128, x.clone()),
+            &Mat::new(128, 128, w.clone()),
+            &b,
+            mult,
+            shift,
+            act,
+            0.1,
+        );
+        if got[0] != want.data {
+            return Err(anyhow!("{name}: PJRT != rust functional model"));
+        }
+        println!("{name:>24}: bit-exact ({} values)", want.data.len());
+    }
+
+    // attention head
+    {
+        let entry = &rt.manifest.artifacts["attn_head"];
+        let (qkm, qks) = (entry.rq["qk_mult"] as i32, entry.rq["qk_shift"] as u32);
+        let (avm, avs) = (entry.rq["av_mult"] as i32, entry.rq["av_shift"] as u32);
+        let mut rng = XorShift64::new(0xA77E);
+        let q = rng.tensor_i8(128 * 64);
+        let k = rng.tensor_i8(128 * 64);
+        let v = rng.tensor_i8(128 * 64);
+        let got = rt.execute(
+            "attn_head",
+            &[
+                TensorIn { data: &q, shape: vec![128, 64] },
+                TensorIn { data: &k, shape: vec![128, 64] },
+                TensorIn { data: &v, shape: vec![128, 64] },
+            ],
+        )?;
+        let (o, _, _) = attn_tinyml::ita::engine::attention_head(
+            &Mat::new(128, 64, q.clone()),
+            &Mat::new(128, 64, k.clone()),
+            &Mat::new(128, 64, v.clone()),
+            qkm,
+            qks,
+            avm,
+            avs,
+        );
+        if got[0] != o.data {
+            return Err(anyhow!("attn_head: PJRT != rust functional model"));
+        }
+        println!("{:>24}: bit-exact ({} values)", "attn_head", o.data.len());
+    }
+
+    // one full encoder layer per network
+    for cfg in models::ALL_MODELS {
+        let name = format!("encoder_{}", cfg.name);
+        let w = forward::synth_layer_weights(cfg, 0);
+        let x = models::synth_input(cfg);
+        let mut inputs: Vec<TensorIn> =
+            vec![TensorIn { data: &x, shape: vec![cfg.seq, cfg.emb] }];
+        let shapes = forward::weight_shapes(cfg);
+        let datas: Vec<&Vec<i32>> = vec![
+            &w.wq, &w.wk, &w.wv, &w.wo, &w.bq, &w.bk, &w.bv, &w.bo, &w.w1, &w.b1,
+            &w.w2, &w.b2, &w.ln1_g, &w.ln1_b, &w.ln2_g, &w.ln2_b,
+        ];
+        for (d, (_, s)) in datas.iter().zip(&shapes) {
+            inputs.push(TensorIn { data: d, shape: s.clone() });
+        }
+        let got = rt.execute(&name, &inputs)?;
+        let want = forward::encoder_layer(
+            cfg,
+            &Mat::new(cfg.seq, cfg.emb, x.clone()),
+            &w,
+        );
+        if got[0] != want.data {
+            let diff = got[0]
+                .iter()
+                .zip(&want.data)
+                .filter(|(a, b)| a != b)
+                .count();
+            return Err(anyhow!("{name}: {diff}/{} values differ", want.data.len()));
+        }
+        println!("{name:>24}: bit-exact ({} values)", want.data.len());
+    }
+    println!("all artifacts verified: PJRT == rust ITA functional model");
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let cfg = model_flag(args)?;
+    let target = target_flag(args);
+    let layers = args.flag_usize("layers", 1);
+    let dep = deeploy::deploy_layers(cfg, target, layers);
+    println!("model        : {} ({} layers deployed)", cfg.name, layers);
+    println!("graph nodes  : {}", dep.graph.nodes.len());
+    println!("total ops    : {:.3} GOp", dep.total_ops as f64 / 1e9);
+    println!("command steps: {}", dep.steps.len());
+    println!("L1 tile peak : {} B of {} budget", dep.l1_peak_bytes, deeploy::tiler::L1_BUDGET);
+    println!("L2 act arena : {} B", dep.l2_activation_bytes);
+    let ita = dep
+        .steps
+        .iter()
+        .filter(|s| matches!(s.cmd, Cmd::ItaGemm { .. } | Cmd::ItaAttention { .. }))
+        .count();
+    let core = dep.steps.iter().filter(|s| matches!(s.cmd, Cmd::Core { .. })).count();
+    let dma = dep
+        .steps
+        .iter()
+        .filter(|s| matches!(s.cmd, Cmd::DmaIn { .. } | Cmd::DmaOut { .. }))
+        .count();
+    println!("step mix     : {ita} ITA, {core} cluster, {dma} DMA");
+    Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let cfg = model_flag(args)?;
+    let layers = args.flag_usize("layers", 1);
+    let g = models::build_graph_layers(cfg, layers);
+    let json = attn_tinyml::deeploy::onnx::export(&g);
+    match args.flag("out") {
+        Some(path) => {
+            std::fs::write(path, json.to_string_pretty())?;
+            println!("wrote {path}");
+        }
+        None => println!("{}", json.to_string_pretty()),
+    }
+    Ok(())
+}

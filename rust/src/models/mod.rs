@@ -1,0 +1,493 @@
+//! The evaluation networks as deployment graphs + synthetic weights.
+//!
+//! Mirrors `python/compile/model.py`: the same three configs (paper
+//! footnotes 4-6), the same requant-parameter derivation, and the same
+//! splitmix64-keyed synthetic tensors (bit-identical across languages —
+//! pinned by `test_splitmix_golden` on the python side and
+//! `prng::tests::splitmix_golden_matches_python` here).
+//!
+//! The graph builders emit the network the way a quantized ONNX export
+//! looks *before* acceleration passes: per-head attention chains with
+//! standalone Softmax nodes, LayerNorm/Add on generic operators. The
+//! deployment flow (deeploy::passes) then fuses the MHA pattern,
+//! head-splits it onto ITA, and maps the rest.
+
+use crate::deeploy::ir::{Activation, DType, Graph, Node, Op, TensorKind};
+use crate::util::prng::{fnv1a, splitmix64, SPLITMIX_GAMMA};
+
+/// Geometry of one evaluation network (mirrors model.ModelConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub seq: usize,
+    pub seq_logical: usize,
+    pub emb: usize,
+    pub proj: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub dff: usize,
+    pub ffn_stack: usize,
+    pub act: Activation,
+    /// Paper-reported GOp per inference (footnotes 4-6).
+    pub gop_per_inference: f64,
+    /// Convolutional stem before the encoder blocks (Whisper: two k=3
+    /// Conv1d layers, 80 mel bins -> E channels, second with stride 2).
+    pub conv_stem: bool,
+}
+
+pub const MOBILEBERT: ModelConfig = ModelConfig {
+    name: "mobilebert",
+    seq: 128,
+    seq_logical: 128,
+    emb: 128,
+    proj: 64,
+    heads: 4,
+    layers: 24,
+    dff: 512,
+    ffn_stack: 4,
+    act: Activation::Relu,
+    gop_per_inference: 4.74,
+    conv_stem: false,
+};
+
+pub const DINOV2S: ModelConfig = ModelConfig {
+    name: "dinov2s",
+    seq: 256,
+    seq_logical: 241,
+    emb: 384,
+    proj: 64,
+    heads: 6,
+    layers: 12,
+    dff: 1536,
+    ffn_stack: 1,
+    act: Activation::Gelu,
+    gop_per_inference: 11.7,
+    conv_stem: false,
+};
+
+pub const WHISPER_TINY_ENC: ModelConfig = ModelConfig {
+    name: "whisper_tiny_enc",
+    seq: 512,
+    seq_logical: 512,
+    emb: 384,
+    proj: 64,
+    heads: 6,
+    layers: 4,
+    dff: 1536,
+    ffn_stack: 1,
+    act: Activation::Gelu,
+    gop_per_inference: 9.74,
+    conv_stem: true,
+};
+
+pub const ALL_MODELS: [&ModelConfig; 3] = [&MOBILEBERT, &DINOV2S, &WHISPER_TINY_ENC];
+
+pub fn by_name(name: &str) -> Option<&'static ModelConfig> {
+    ALL_MODELS.iter().find(|c| c.name == name).copied()
+}
+
+/// Requant (mult, shift) for a GEMM with reduction dim k — mirrors
+/// model.rq_for exactly (same float math, same rounding).
+pub fn rq_for(k_dim: usize, target_std: f64) -> (i32, u32) {
+    let acc_std = (k_dim as f64).sqrt() * 74.0 * 74.0;
+    let ratio = target_std / acc_std;
+    let shift = 14u32;
+    let mult = ((ratio * (1u64 << shift) as f64).round() as i32).max(1);
+    (mult, shift)
+}
+
+/// All requant params of one encoder layer — mirrors model.rq_params.
+#[derive(Debug, Clone, Copy)]
+pub struct RqParams {
+    pub q: (i32, u32),
+    pub qk: (i32, u32),
+    pub av: (i32, u32),
+    pub o: (i32, u32),
+    pub ffn1: (i32, u32),
+    pub ffn2: (i32, u32),
+    pub ln: (i32, u32),
+}
+
+pub fn rq_params(cfg: &ModelConfig) -> RqParams {
+    RqParams {
+        q: rq_for(cfg.emb, 30.0),
+        qk: rq_for(cfg.proj, 40.0),
+        av: rq_for(128, 30.0),
+        o: rq_for(cfg.proj * cfg.heads, 30.0),
+        ffn1: rq_for(cfg.emb, 30.0),
+        ffn2: rq_for(cfg.dff, 30.0),
+        ln: (16, 12),
+    }
+}
+
+// --- synthetic tensors (bit-identical to model.synth_tensor) ----------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthKind {
+    Weight,
+    Bias,
+    Gamma,
+    Beta,
+}
+
+/// Deterministic synthetic tensor: value_i = f(seed, name, i).
+pub fn synth_tensor(name: &str, n: usize, kind: SynthKind, seed: u64) -> Vec<i32> {
+    let key = fnv1a(name) ^ seed.wrapping_mul(SPLITMIX_GAMMA);
+    (0..n as u64)
+        .map(|i| {
+            let r = splitmix64(i.wrapping_add(key));
+            match kind {
+                SynthKind::Weight => ((r & 0xFF) as i64 - 128) as i32,
+                SynthKind::Bias => ((r & 0xFFF) as i64 - 2048) as i32,
+                SynthKind::Gamma => ((r & 0x3F) as i64 + 32) as i32,
+                SynthKind::Beta => ((r & 0x1F) as i64 - 16) as i32,
+            }
+        })
+        .collect()
+}
+
+/// The synthetic network input — mirrors model.synth_input(seed=1).
+pub fn synth_input(cfg: &ModelConfig) -> Vec<i32> {
+    synth_tensor(
+        &format!("{}/input", cfg.name),
+        cfg.seq * cfg.emb,
+        SynthKind::Weight,
+        1,
+    )
+}
+
+// --- graph builders ----------------------------------------------------------
+
+/// Build the full deployment graph of a network: `layers` encoder blocks
+/// in the unfused per-head form.
+pub fn build_graph(cfg: &ModelConfig) -> Graph {
+    build_graph_layers(cfg, cfg.layers)
+}
+
+/// Build a graph with an overridden layer count (fast tests / sweeps).
+/// The conv stem (if any) is included only for the full network — it
+/// runs once per inference, unlike the identical encoder blocks.
+pub fn build_graph_layers(cfg: &ModelConfig, layers: usize) -> Graph {
+    let mut g = Graph::new(cfg.name);
+    let mut x = if cfg.conv_stem && layers == cfg.layers {
+        build_conv_stem(&mut g, cfg)
+    } else {
+        g.add_tensor("x0", &[cfg.seq, cfg.emb], DType::I8, TensorKind::Input);
+        "x0".to_string()
+    };
+    for l in 0..layers {
+        x = build_layer(&mut g, cfg, l, &x);
+    }
+    if let Some(t) = g.tensors.get_mut(&x) {
+        t.kind = TensorKind::Output;
+    }
+    g
+}
+
+/// The stem as a standalone graph (simulated once by the coordinator).
+pub fn build_stem_graph(cfg: &ModelConfig) -> Option<Graph> {
+    if !cfg.conv_stem {
+        return None;
+    }
+    let mut g = Graph::new(&format!("{}_stem", cfg.name));
+    let out = build_conv_stem(&mut g, cfg);
+    if let Some(t) = g.tensors.get_mut(&out) {
+        t.kind = TensorKind::Output;
+    }
+    Some(g)
+}
+
+/// Whisper's convolutional stem: mel (2S, 80) -> Conv1d k3 s1 (-> E) ->
+/// GeLU -> Conv1d k3 s2 (-> E, S) -> GeLU. Returns the output tensor.
+/// Weight tensors use the im2col layout (k*cin, cout) directly.
+pub fn build_conv_stem(g: &mut Graph, cfg: &ModelConfig) -> String {
+    let (s, e) = (cfg.seq, cfg.emb);
+    let t_in = 2 * s; // mel frames before the stride-2 conv
+    let c_mel = 80;
+    g.add_tensor("mel", &[t_in, c_mel], DType::I8, TensorKind::Input);
+
+    g.add_tensor("stem/w1", &[3 * c_mel, e], DType::I8, TensorKind::Weight);
+    g.add_tensor("stem/b1", &[e], DType::I32, TensorKind::Weight);
+    g.add_tensor("stem/c1", &[t_in, e], DType::I8, TensorKind::Activation);
+    let rq1 = rq_for(3 * c_mel, 30.0);
+    g.add_node(
+        Node::new(
+            "stem/conv1.op",
+            Op::Conv1d { kernel: 3, stride: 1 },
+            &["mel", "stem/w1", "stem/b1"],
+            &["stem/c1"],
+        )
+        .with_rq(rq1.0, rq1.1),
+    );
+    g.add_tensor("stem/a1", &[t_in, e], DType::I8, TensorKind::Activation);
+    g.add_node(Node::new(
+        "stem/gelu1.op",
+        Op::Act { act: Activation::Gelu },
+        &["stem/c1"],
+        &["stem/a1"],
+    ));
+
+    g.add_tensor("stem/w2", &[3 * e, e], DType::I8, TensorKind::Weight);
+    g.add_tensor("stem/b2", &[e], DType::I32, TensorKind::Weight);
+    g.add_tensor("stem/c2", &[s, e], DType::I8, TensorKind::Activation);
+    let rq2 = rq_for(3 * e, 30.0);
+    g.add_node(
+        Node::new(
+            "stem/conv2.op",
+            Op::Conv1d { kernel: 3, stride: 2 },
+            &["stem/a1", "stem/w2", "stem/b2"],
+            &["stem/c2"],
+        )
+        .with_rq(rq2.0, rq2.1),
+    );
+    g.add_tensor("stem/a2", &[s, e], DType::I8, TensorKind::Activation);
+    g.add_node(Node::new(
+        "stem/gelu2.op",
+        Op::Act { act: Activation::Gelu },
+        &["stem/c2"],
+        &["stem/a2"],
+    ));
+    "stem/a2".to_string()
+}
+
+/// Append one encoder layer reading tensor `x`; returns the output name.
+pub fn build_layer(g: &mut Graph, cfg: &ModelConfig, l: usize, x: &str) -> String {
+    let rq = rq_params(cfg);
+    let (s, e, p, h) = (cfg.seq, cfg.emb, cfg.proj, cfg.heads);
+    let t = |n: &str| format!("L{l}/{n}");
+
+    fn act_t(g: &mut Graph, name: &str, shape: &[usize]) {
+        g.add_tensor(name, shape, DType::I8, TensorKind::Activation);
+    }
+    fn w_t(g: &mut Graph, name: &str, shape: &[usize], dt: DType) {
+        g.add_tensor(name, shape, dt, TensorKind::Weight);
+    }
+
+    // LayerNorm 1
+    w_t(g, &t("ln1_g"), &[e], DType::I8);
+    w_t(g, &t("ln1_b"), &[e], DType::I8);
+    act_t(g, &t("ln1"), &[s, e]);
+    g.add_node(
+        Node::new(&t("ln1.op"), Op::LayerNorm, &[x, &t("ln1_g"), &t("ln1_b")], &[&t("ln1")])
+            .with_rq(rq.ln.0, rq.ln.1),
+    );
+
+    // per-head attention chains (the raw ONNX-ish pattern)
+    let mut partials: Vec<String> = Vec::new();
+    for hd in 0..h {
+        for nm in ["q", "k", "v"] {
+            w_t(g, &t(&format!("w{nm}{hd}")), &[e, p], DType::I8);
+            w_t(g, &t(&format!("b{nm}{hd}")), &[p], DType::I32);
+            act_t(g, &t(&format!("{nm}{hd}")), &[s, p]);
+            g.add_node(
+                Node::new(
+                    &t(&format!("{nm}{hd}.proj")),
+                    Op::Gemm { act: Activation::Identity },
+                    &[&t("ln1"), &t(&format!("w{nm}{hd}")), &t(&format!("b{nm}{hd}"))],
+                    &[&t(&format!("{nm}{hd}"))],
+                )
+                .with_rq(rq.q.0, rq.q.1),
+            );
+        }
+        act_t(g, &t(&format!("kT{hd}")), &[p, s]);
+        g.add_node(Node::new(
+            &t(&format!("kT{hd}.op")),
+            Op::Transpose,
+            &[&t(&format!("k{hd}"))],
+            &[&t(&format!("kT{hd}"))],
+        ));
+        act_t(g, &t(&format!("s{hd}")), &[s, s]);
+        g.add_node(
+            Node::new(
+                &t(&format!("qk{hd}.op")),
+                Op::MatMul,
+                &[&t(&format!("q{hd}")), &t(&format!("kT{hd}"))],
+                &[&t(&format!("s{hd}"))],
+            )
+            .with_rq(rq.qk.0, rq.qk.1),
+        );
+        act_t(g, &t(&format!("a{hd}")), &[s, s]);
+        g.add_node(Node::new(
+            &t(&format!("sm{hd}.op")),
+            Op::Softmax,
+            &[&t(&format!("s{hd}"))],
+            &[&t(&format!("a{hd}"))],
+        ));
+        act_t(g, &t(&format!("c{hd}")), &[s, p]);
+        g.add_node(
+            Node::new(
+                &t(&format!("av{hd}.op")),
+                Op::MatMul,
+                &[&t(&format!("a{hd}")), &t(&format!("v{hd}"))],
+                &[&t(&format!("c{hd}"))],
+            )
+            .with_rq(rq.av.0, rq.av.1),
+        );
+        // partial output projection (int32, accumulated by HeadAcc)
+        w_t(g, &t(&format!("wo{hd}")), &[p, e], DType::I8);
+        g.add_tensor(
+            &t(&format!("po{hd}")),
+            &[s, e],
+            DType::I32,
+            TensorKind::Activation,
+        );
+        g.add_node(Node::new(
+            &t(&format!("po{hd}.op")),
+            Op::MatMul,
+            &[&t(&format!("c{hd}")), &t(&format!("wo{hd}"))],
+            &[&t(&format!("po{hd}"))],
+        ));
+        partials.push(t(&format!("po{hd}")));
+    }
+
+    // head accumulation (cluster)
+    w_t(g, &t("bo"), &[e], DType::I32);
+    act_t(g, &t("attn"), &[s, e]);
+    let bo = t("bo");
+    let mut acc_inputs: Vec<&str> = partials.iter().map(|s| s.as_str()).collect();
+    acc_inputs.push(&bo);
+    let attn = t("attn");
+    g.add_node(
+        Node::new(&t("headacc.op"), Op::HeadAcc { heads: h }, &acc_inputs, &[&attn])
+            .with_rq(rq.o.0, rq.o.1),
+    );
+
+    // residual 1
+    act_t(g, &t("res0"), &[s, e]);
+    g.add_node(Node::new(&t("add0.op"), Op::Add, &[x, &t("attn")], &[&t("res0")]));
+
+    // FFN stack
+    let mut cur = t("res0");
+    for f in 0..cfg.ffn_stack {
+        let tf = |n: &str| format!("L{l}/F{f}/{n}");
+        w_t(g, &tf("ln2_g"), &[e], DType::I8);
+        w_t(g, &tf("ln2_b"), &[e], DType::I8);
+        act_t(g, &tf("ln2"), &[s, e]);
+        g.add_node(
+            Node::new(
+                &tf("ln2.op"),
+                Op::LayerNorm,
+                &[&cur, &tf("ln2_g"), &tf("ln2_b")],
+                &[&tf("ln2")],
+            )
+            .with_rq(rq.ln.0, rq.ln.1),
+        );
+        w_t(g, &tf("w1"), &[e, cfg.dff], DType::I8);
+        w_t(g, &tf("b1"), &[cfg.dff], DType::I32);
+        act_t(g, &tf("u"), &[s, cfg.dff]);
+        g.add_node(
+            Node::new(
+                &tf("ffn1.op"),
+                Op::Gemm { act: cfg.act },
+                &[&tf("ln2"), &tf("w1"), &tf("b1")],
+                &[&tf("u")],
+            )
+            .with_rq(rq.ffn1.0, rq.ffn1.1),
+        );
+        w_t(g, &tf("w2"), &[cfg.dff, e], DType::I8);
+        w_t(g, &tf("b2"), &[e], DType::I32);
+        act_t(g, &tf("d"), &[s, e]);
+        g.add_node(
+            Node::new(
+                &tf("ffn2.op"),
+                Op::Gemm { act: Activation::Identity },
+                &[&tf("u"), &tf("w2"), &tf("b2")],
+                &[&tf("d")],
+            )
+            .with_rq(rq.ffn2.0, rq.ffn2.1),
+        );
+        let res = tf("res");
+        act_t(g, &res, &[s, e]);
+        g.add_node(Node::new(&tf("add.op"), Op::Add, &[&cur, &tf("d")], &[&res]));
+        cur = res;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configs_match_paper_footnotes() {
+        assert_eq!(MOBILEBERT.layers, 24);
+        assert_eq!(MOBILEBERT.ffn_stack, 4);
+        assert_eq!(DINOV2S.seq_logical, 241);
+        assert_eq!(DINOV2S.seq, 256); // padded to ITA tiling constraint
+        assert_eq!(WHISPER_TINY_ENC.layers, 4);
+        for c in ALL_MODELS {
+            assert_eq!(c.proj, 64);
+            assert_eq!(c.seq % 64, 0);
+        }
+    }
+
+    #[test]
+    fn graphs_validate() {
+        for cfg in ALL_MODELS {
+            let g = build_graph(cfg);
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+        }
+    }
+
+    #[test]
+    fn graph_ops_match_paper_gop() {
+        // within 30% of the footnote figures: the graphs count padded
+        // dims + auxiliary operators, the footnotes count logical MACs
+        for cfg in ALL_MODELS {
+            let g = build_graph(cfg);
+            let gop = g.total_ops() as f64 / 1e9;
+            let scale = cfg.seq_logical as f64 / cfg.seq as f64;
+            let adj = gop * scale;
+            let err = (adj - cfg.gop_per_inference).abs() / cfg.gop_per_inference;
+            assert!(err < 0.30, "{}: {adj:.2} vs {}", cfg.name, cfg.gop_per_inference);
+        }
+    }
+
+    #[test]
+    fn rq_matches_python_values() {
+        // golden: python model.rq_for(128) == (8, 14), rq_for(64, 40) == (15, 14)
+        assert_eq!(rq_for(128, 30.0), (8, 14));
+        assert_eq!(rq_for(64, 40.0), (15, 14));
+    }
+
+    #[test]
+    fn synth_tensor_ranges() {
+        let w = synth_tensor("t/w", 1000, SynthKind::Weight, 0);
+        assert!(w.iter().all(|&v| (-128..=127).contains(&v)));
+        let g = synth_tensor("t/g", 1000, SynthKind::Gamma, 0);
+        assert!(g.iter().all(|&v| (32..96).contains(&v)));
+        // determinism + keying
+        assert_eq!(w, synth_tensor("t/w", 1000, SynthKind::Weight, 0));
+        assert_ne!(w, synth_tensor("t/w2", 1000, SynthKind::Weight, 0));
+    }
+
+    #[test]
+    fn whisper_stem_only_whisper() {
+        assert!(build_stem_graph(&WHISPER_TINY_ENC).is_some());
+        assert!(build_stem_graph(&MOBILEBERT).is_none());
+        assert!(build_stem_graph(&DINOV2S).is_none());
+    }
+
+    #[test]
+    fn whisper_stem_ops_match_footnote_gap() {
+        // conv stem ~ 0.84 GOp: the difference between the linear-only
+        // encoder (8.85 GOp) and the paper's 9.74 GOp footnote
+        let g = build_stem_graph(&WHISPER_TINY_ENC).unwrap();
+        g.validate().unwrap();
+        let gop = g.total_ops() as f64 / 1e9;
+        assert!((0.5..1.1).contains(&gop), "stem GOp {gop}");
+        // full graph (stem + 4 layers) lands on the footnote
+        let full = build_graph(&WHISPER_TINY_ENC);
+        let total = full.total_ops() as f64 / 1e9;
+        assert!((total - 9.74).abs() / 9.74 < 0.10, "whisper total {total}");
+    }
+
+    #[test]
+    fn layer_node_count() {
+        let g = build_graph(&MOBILEBERT);
+        // per layer: 1 LN + 4 heads x 8 nodes (3 proj + transpose + QK +
+        // softmax + AV + partial-out) + headacc + add + 4 FFNs x (LN +
+        // 2 gemm + add) = 1 + 32 + 2 + 16 = 51
+        assert_eq!(g.nodes.len(), 51 * 24);
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT-backed golden-model runtime.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`) and executes them on the PJRT CPU client via the
+//! `xla` crate. Python is never on this path — the artifacts are
+//! self-contained.
+//!
+//! Interchange contract (see aot.py and /opt/xla-example/README.md):
+//! HLO *text* with large constants printed and metadata stripped;
+//! computations lowered with return_tuple=True (unwrap with to_tuple1 /
+//! decompose_tuple); all tensors i32 at the boundary carrying int8-range
+//! values.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// The artifact manifest (artifacts/manifest.json).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub input_shapes: Vec<(String, Vec<usize>)>,
+    pub output_shapes: Vec<(String, Vec<usize>)>,
+    pub rq: BTreeMap<String, i64>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in j.get("artifacts").and_then(Json::as_obj).ok_or_else(|| anyhow!("no artifacts"))? {
+            let shapes = |key: &str| -> Vec<(String, Vec<usize>)> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(|i| {
+                                Some((
+                                    i.get("name")?.as_str()?.to_string(),
+                                    i.get("shape")?
+                                        .as_arr()?
+                                        .iter()
+                                        .filter_map(Json::as_usize)
+                                        .collect(),
+                                ))
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let rq = entry
+                .get("rq")
+                .and_then(Json::as_obj)
+                .map(|o| {
+                    o.iter()
+                        .filter_map(|(k, v)| Some((k.clone(), v.as_i64()?)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    file: entry
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    input_shapes: shapes("inputs"),
+                    output_shapes: shapes("outputs"),
+                    rq,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+}
+
+/// A named input tensor: row-major i32 values + shape.
+pub struct TensorIn<'a> {
+    pub data: &'a [i32],
+    pub shape: Vec<usize>,
+}
+
+/// The runtime: one PJRT CPU client + compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+        Ok(Runtime { client, manifest, cache: Default::default() })
+    }
+
+    /// Default artifacts location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env_or("ATTN_TINYML_ARTIFACTS", "artifacts"))
+    }
+
+    /// Compile (or fetch from cache) one artifact.
+    fn executable(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e}"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact; returns all outputs flattened row-major.
+    pub fn execute(&self, name: &str, inputs: &[TensorIn]) -> Result<Vec<Vec<i32>>> {
+        self.executable(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let lit = xla::Literal::vec1(t.data);
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        let parts = tuple.decompose_tuple().map_err(|e| anyhow!("tuple: {e}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}")))
+            .collect()
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+}
+
+fn env_or(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+/// True when the artifacts directory exists with a manifest — used by
+/// integration tests to skip gracefully before `make artifacts`.
+pub fn artifacts_available() -> bool {
+    Runtime::default_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_if_present() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&Runtime::default_dir()).unwrap();
+        assert!(m.artifacts.contains_key("gemm"));
+        assert!(m.artifacts.contains_key("attn_head"));
+        let g = &m.artifacts["gemm"];
+        assert_eq!(g.input_shapes.len(), 3);
+        assert_eq!(g.input_shapes[0].1, vec![128, 128]);
+        assert!(g.rq.contains_key("mult"));
+    }
+}

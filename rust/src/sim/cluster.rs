@@ -1,0 +1,108 @@
+//! The architecture template parameters (paper Fig. 1 / Section III-IV).
+
+use crate::ita::ItaConfig;
+
+/// Full cluster configuration. Defaults are the paper's instantiation.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Worker Snitch cores (the paper uses 8 + 1 DMA-management core).
+    pub n_cores: usize,
+    /// Extra core dedicated to DMA management.
+    pub dma_core: bool,
+    /// TCDM banks (32 x 4 KiB = 128 KiB L1).
+    pub tcdm_banks: usize,
+    /// Bytes per TCDM bank.
+    pub tcdm_bank_bytes: usize,
+    /// TCDM interconnect width per port, bytes (64-bit).
+    pub tcdm_port_bytes: usize,
+    /// HWPE master ports on the TCDM interconnect (N_HWPE).
+    pub hwpe_ports: usize,
+    /// Wide AXI data width in bytes (512-bit).
+    pub wide_axi_bytes: usize,
+    /// Narrow AXI data width in bytes (64-bit).
+    pub narrow_axi_bytes: usize,
+    /// Shared instruction cache size in bytes (8 KiB).
+    pub icache_bytes: usize,
+    /// Clock frequency in Hz (energy-efficient corner: 425 MHz @ 0.65 V).
+    pub freq_hz: f64,
+    /// ITA geometry.
+    pub ita: ItaConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            n_cores: 8,
+            dma_core: true,
+            tcdm_banks: 32,
+            tcdm_bank_bytes: 4096,
+            tcdm_port_bytes: 8,
+            hwpe_ports: 16,
+            wide_axi_bytes: 64,
+            narrow_axi_bytes: 8,
+            icache_bytes: 8192,
+            freq_hz: 425.0e6,
+            ita: ItaConfig::default(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Total L1 capacity in bytes (128 KiB in the paper).
+    pub fn l1_bytes(&self) -> usize {
+        self.tcdm_banks * self.tcdm_bank_bytes
+    }
+
+    /// Peak TCDM bandwidth in bytes/cycle (256 B/cy in the paper).
+    pub fn tcdm_bw(&self) -> usize {
+        self.tcdm_banks * self.tcdm_port_bytes
+    }
+
+    /// HWPE subsystem bandwidth in bytes/cycle (16 ports x 8 B = 128 B/cy,
+    /// the "two input vectors per cycle" requirement of Section IV-B).
+    pub fn hwpe_bw(&self) -> usize {
+        self.hwpe_ports * self.tcdm_port_bytes
+    }
+
+    /// ITA peak throughput in Op/s at the configured frequency.
+    pub fn ita_peak_ops(&self) -> f64 {
+        self.ita.ops_per_cycle() as f64 * self.freq_hz
+    }
+
+    /// Paper's physical-implementation constants (GF22FDX, Section IV-C).
+    pub fn area_mm2(&self) -> f64 {
+        0.991
+    }
+
+    pub fn hwpe_area_fraction(&self) -> f64 {
+        0.393
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_parameters() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.l1_bytes(), 128 * 1024);
+        assert_eq!(c.tcdm_bw(), 256);
+        assert_eq!(c.hwpe_bw(), 128);
+        assert_eq!(c.n_cores, 8);
+        // peak 870.4 GOp/s at 425 MHz
+        assert!((c.ita_peak_ops() - 870.4e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn dma_worst_case_fits_wide_axi() {
+        // Section IV-B: one 64x64 output tile needs at most two 64x64
+        // int8 inputs + 64 24-bit biases in and 64x64 out in 256 cycles
+        // -> 48.75 B/cy average, below the 64 B/cy wide AXI.
+        let c = ClusterConfig::default();
+        let bytes = 2 * 64 * 64 + 64 * 3 + 64 * 64;
+        let per_cycle = bytes as f64 / c.ita.cycles_per_tile() as f64;
+        assert!((per_cycle - 48.75).abs() < 0.01);
+        assert!(per_cycle < c.wide_axi_bytes as f64);
+    }
+}

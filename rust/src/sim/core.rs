@@ -1,0 +1,126 @@
+//! Snitch core kernel-level cost model.
+//!
+//! The worker cores are single-issue in-order RV32IMA without packed-SIMD,
+//! so int8 kernels pay full scalar cost. Costs are cycles *per element*
+//! (or per MAC) *per core*; kernels parallelize over the 8 workers with a
+//! small fork/join overhead. The GEMM constant is calibrated so the
+//! multi-core micro GEMM lands at the paper's 986x ITA advantage
+//! (0.75 GOp/s at 425 MHz on 8 cores -> ~9 cycles per int8 MAC: lb, lb,
+//! mul, add, two address updates, loop bookkeeping on a 1-IPC core).
+
+/// Cycle cost per int8 MAC on one Snitch core (software GEMM inner loop).
+pub const CYC_PER_MAC: f64 = 9.05;
+/// Software softmax fallback per element. On FPU-less RV32IMA cores the
+/// fallback kernel computes exp via soft-float emulation plus a division
+/// per element — thousands of cycles each. 2000 cy/elem is calibrated to
+/// reconcile the paper's micro attention baseline ("more than 3 orders
+/// of magnitude" throughput gap, ~901x efficiency gap at 26 mW cluster
+/// power implies ~0.18-0.28 GOp/s software attention) with its E2E
+/// multi-core figures (which cap the term: Whisper-MC at 0.08 Inf/s
+/// leaves at most ~2.3 kcy/elem). The residual tension between those
+/// two published numbers is documented in EXPERIMENTS.md.
+pub const CYC_SOFTMAX: f64 = 2000.0;
+/// Integer LayerNorm per element (two passes + isqrt amortized).
+pub const CYC_LAYERNORM: f64 = 35.0;
+/// i-GeLU per element. Software i-GeLU on RV32IM is expensive: the
+/// I-BERT polynomial needs abs/clip/square/two 32x32->64 multiplies
+/// (mul+mulh pairs) plus requant, all scalar. 120 cy/elem is calibrated
+/// against the paper's own E2E numbers: DINOv2 (207 ms) and Whisper
+/// (153 ms) are only consistent with their 26-27 mW cluster-dominated
+/// power if GeLU executes on the cores at ~this cost (MobileBERT, which
+/// uses ReLU, needs no such term — and indeed runs 3x more GOp/s).
+pub const CYC_GELU: f64 = 120.0;
+/// ReLU per element.
+pub const CYC_RELU: f64 = 2.0;
+/// Saturating residual add per element.
+pub const CYC_ADD: f64 = 3.0;
+/// Strided copy (transpose, im2col) per element.
+pub const CYC_COPY: f64 = 2.0;
+/// Requantization per element (mul + shift + clip).
+pub const CYC_REQUANT: f64 = 6.0;
+/// Head-accumulation per element per head (int32 add, final requant
+/// charged separately as REQUANT).
+pub const CYC_HEAD_ACC: f64 = 3.0;
+/// Fork/join overhead per parallel kernel launch, cycles.
+pub const FORK_JOIN: f64 = 120.0;
+
+/// Kinds of cluster-core kernels the deployment flow can emit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    GemmI8,   // elems = MACs
+    Softmax,  // elems = matrix elements
+    LayerNorm,
+    Gelu,
+    Relu,
+    Add,
+    Copy,     // transpose / im2col rearrangement
+    Requant,
+    HeadAcc,  // elems = elements x heads
+}
+
+impl KernelKind {
+    pub fn cycles_per_elem(&self) -> f64 {
+        match self {
+            KernelKind::GemmI8 => CYC_PER_MAC,
+            KernelKind::Softmax => CYC_SOFTMAX,
+            KernelKind::LayerNorm => CYC_LAYERNORM,
+            KernelKind::Gelu => CYC_GELU,
+            KernelKind::Relu => CYC_RELU,
+            KernelKind::Add => CYC_ADD,
+            KernelKind::Copy => CYC_COPY,
+            KernelKind::Requant => CYC_REQUANT,
+            KernelKind::HeadAcc => CYC_HEAD_ACC,
+        }
+    }
+
+    /// "Ops" contributed per element for throughput accounting (a MAC is
+    /// 2 ops; elementwise kernels count 1 op per element, matching how
+    /// the paper's GOp footnotes count workloads).
+    pub fn ops_per_elem(&self) -> f64 {
+        match self {
+            KernelKind::GemmI8 => 2.0,
+            _ => 1.0,
+        }
+    }
+}
+
+/// Cycles for one parallel kernel on `n_cores` workers.
+pub fn kernel_cycles(kind: KernelKind, elems: u64, n_cores: usize) -> u64 {
+    let per_core = (elems as f64 * kind.cycles_per_elem()) / n_cores as f64;
+    (per_core + FORK_JOIN).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multicore_gemm_matches_paper_ratio() {
+        // software int8 GEMM: ops/s on 8 cores at 425 MHz
+        let macs = 1u64 << 24; // large GEMM
+        let cyc = kernel_cycles(KernelKind::GemmI8, macs, 8);
+        let gops = (macs as f64 * 2.0) / (cyc as f64 / 425.0e6) / 1e9;
+        // paper: ITA's 741 GOp/s is 986x the multi-core cluster
+        let ratio = 741.0 / gops;
+        assert!((ratio - 986.0).abs() < 30.0, "ratio {ratio} (gops {gops})");
+    }
+
+    #[test]
+    fn parallel_scaling() {
+        let c1 = kernel_cycles(KernelKind::LayerNorm, 100_000, 1);
+        let c8 = kernel_cycles(KernelKind::LayerNorm, 100_000, 8);
+        let speedup = c1 as f64 / c8 as f64;
+        assert!(speedup > 7.5 && speedup <= 8.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn fork_join_floors_small_kernels() {
+        let c = kernel_cycles(KernelKind::Add, 8, 8);
+        assert!(c >= FORK_JOIN as u64);
+    }
+
+    #[test]
+    fn softmax_much_costlier_than_relu() {
+        assert!(CYC_SOFTMAX / CYC_RELU >= 10.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! Cycle-level simulator of the heterogeneous Snitch + ITA cluster.
+//!
+//! Substitution for the paper's QuestaSim post-layout simulation (see
+//! DESIGN.md §2): the evaluation quantities — cycles, utilization, bank
+//! conflicts, DMA overlap — are architectural, so a cycle-level model
+//! parameterized with the paper's published geometry reproduces the
+//! shape of every result.
+//!
+//! Components:
+//!   [`cluster`]    — the architecture template parameters (Fig. 1)
+//!   [`timing`]     — calibrated ITA tile timing + contention model
+//!   [`tcdm`]       — 32-bank interleaved L1 with a per-cycle arbiter
+//!                    (validates the analytic contention factor)
+//!   [`core`]       — Snitch core kernel-level cost model
+//!   [`ita_timing`] — ITA task timing (GEMM / attention phases)
+//!   [`dma`]        — wide-AXI DMA transfer model
+//!   [`hwpe`]       — controller FSM + dual-context register file
+//!   [`engine`]     — discrete-event executor over command streams
+//!   [`trace`]      — activity counters and utilization reports
+
+pub mod axi;
+pub mod cluster;
+pub mod core;
+pub mod dma;
+pub mod engine;
+pub mod hwpe;
+pub mod ita_timing;
+pub mod tcdm;
+pub mod timing;
+pub mod trace;
+
+pub use cluster::ClusterConfig;
+pub use engine::{Cmd, CoreOp, Engine, Step};
+pub use trace::RunStats;

@@ -1,0 +1,188 @@
+//! Calibrated ITA tile timing + shared-memory contention model.
+//!
+//! Three named constants reproduce all four utilization figures the paper
+//! reports (DESIGN.md §6 documents the fit):
+//!
+//!   TILE_FILL = 25 cy    streamer pipeline fill/turnaround per tile
+//!   CONTENTION = 20 cy   typical TCDM interference per tile when the
+//!                        template's DMA + cores run concurrently
+//!                        (double-buffered E2E operation)
+//!   AV_EXTRA = 82 cy     extra cycles per A x V tile: the EN stage
+//!                        re-reads the stored QK logits from L1, doubling
+//!                        streamer traffic during the second phase
+//!
+//! With the 256-cycle base tile (ItaConfig::cycles_per_tile):
+//!   GEMM integrated      256 / (256+25+20)          = 85.05 %  (paper 85.1 %)
+//!   Attention integrated 512 / (2*256+2*45+82)      = 74.96 %  (paper 74.9 %)
+//!   Attention standalone 512 / (2*256+2*25+82)      = 79.56 %  (paper 79.6 %)
+//!   Integration penalty                               4.6 p.p. (paper 4.7 p.p.)
+
+use crate::ita::ItaConfig;
+
+/// Streamer pipeline fill + weight-buffer turnaround per output tile.
+pub const TILE_FILL: u64 = 25;
+/// Typical per-tile TCDM contention when DMA + cores share the L1.
+pub const CONTENTION: u64 = 20;
+/// Competing TCDM request rate (requests/cycle) during double-buffered
+/// E2E operation: the DMA (~1.0 wide beats landing as bank writes) plus
+/// the cores' auxiliary-kernel traffic (~1.5). With the analytic
+/// bank-conflict model (tcdm::conflict_slowdown) this reproduces
+/// CONTENTION = 256 * 2.5 / 32 = 20 cycles/tile at the paper's 32 banks,
+/// and lets the interconnect ablation sweep the bank count.
+pub const OTHER_REQS_TYP: f64 = 2.5;
+
+/// Per-tile contention cycles for a given bank count.
+pub fn contention_cycles(tile_base: u64, banks: usize) -> u64 {
+    (tile_base as f64 * OTHER_REQS_TYP / banks as f64).round() as u64
+}
+/// Extra cycles per AV tile (EN re-read of QK from L1).
+pub const AV_EXTRA: u64 = 82;
+/// HWPE task configuration cost over narrow AXI when NOT hidden by the
+/// dual-context register file (first task of a sequence).
+pub const CONFIG_CYCLES: u64 = 32;
+
+/// Timing model handed to the ITA task scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingModel {
+    pub tile_base: u64,
+    pub tile_fill: u64,
+    pub contention: u64,
+    pub av_extra: u64,
+    /// true when cores + DMA run concurrently with ITA (the template);
+    /// false models the standalone accelerator of the ITA paper.
+    pub integrated: bool,
+    /// Streamer bandwidth stretch: >1 when the HWPE has fewer TCDM
+    /// master ports than the datapath needs (2 input vectors/cycle =
+    /// 128 B/cy = 16 ports x 8 B). The compute phase dilates by this
+    /// factor — the starvation the paper's provisioning avoids.
+    pub bw_scale: f64,
+    /// Tile quantum: one tile covers (tile_q x tile_q) outputs with a
+    /// tile_q-deep reduction (= the accelerator's vector length M).
+    pub tile_q: usize,
+}
+
+impl TimingModel {
+    pub fn integrated(ita: &ItaConfig) -> Self {
+        Self::integrated_banks(ita, 32)
+    }
+
+    /// Integrated model with an explicit TCDM bank count (the tunable
+    /// interconnect of the template — see benches/ablation_interconnect).
+    pub fn integrated_banks(ita: &ItaConfig, banks: usize) -> Self {
+        let tile_base = ita.cycles_per_tile() as u64;
+        Self {
+            tile_base,
+            tile_fill: TILE_FILL,
+            contention: contention_cycles(tile_base, banks),
+            av_extra: AV_EXTRA,
+            integrated: true,
+            bw_scale: 1.0,
+            tile_q: ita.m_vec,
+        }
+    }
+
+    /// Integrated model with an explicit HWPE port count: below the
+    /// provisioned 16 ports the streamers cannot sustain two input
+    /// vectors per cycle and the datapath starves proportionally.
+    pub fn with_ports(ita: &ItaConfig, banks: usize, ports: usize) -> Self {
+        let needed = 16.0 * 8.0; // B/cy the datapath consumes
+        let avail = (ports * 8) as f64;
+        Self {
+            bw_scale: (needed / avail).max(1.0),
+            ..Self::integrated_banks(ita, banks)
+        }
+    }
+
+    pub fn standalone(ita: &ItaConfig) -> Self {
+        Self { integrated: false, ..Self::integrated(ita) }
+    }
+
+    fn cont(&self) -> u64 {
+        if self.integrated {
+            self.contention
+        } else {
+            0
+        }
+    }
+
+    /// Cycles for one 64x64x64 GEMM tile step.
+    pub fn gemm_tile(&self) -> u64 {
+        (self.tile_base as f64 * self.bw_scale) as u64 + self.tile_fill + self.cont()
+    }
+
+    /// Cycles for one AV tile step (EN normalization re-read included).
+    pub fn av_tile(&self) -> u64 {
+        self.gemm_tile() + self.av_extra
+    }
+
+    /// Ideal (zero-overhead) cycles for one tile step.
+    pub fn ideal_tile(&self) -> u64 {
+        self.tile_base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ita::ItaConfig;
+
+    fn models() -> (TimingModel, TimingModel) {
+        let ita = ItaConfig::default();
+        (TimingModel::integrated(&ita), TimingModel::standalone(&ita))
+    }
+
+    #[test]
+    fn gemm_utilization_matches_paper() {
+        let (integ, _) = models();
+        let util = 256.0 / integ.gemm_tile() as f64;
+        assert!((util - 0.851).abs() < 0.005, "gemm util {util}");
+    }
+
+    #[test]
+    fn attention_utilization_matches_paper() {
+        // single-head attention = equal QK and AV tile-step counts
+        let (integ, standalone) = models();
+        let util_i = (2.0 * 256.0) / (integ.gemm_tile() + integ.av_tile()) as f64;
+        assert!((util_i - 0.749).abs() < 0.005, "integrated util {util_i}");
+        let util_s =
+            (2.0 * 256.0) / (standalone.gemm_tile() + standalone.av_tile()) as f64;
+        assert!((util_s - 0.796).abs() < 0.005, "standalone util {util_s}");
+        // integration penalty ~4.7 p.p.
+        let penalty = util_s - util_i;
+        assert!((penalty - 0.047).abs() < 0.005, "penalty {penalty}");
+    }
+
+    #[test]
+    fn contention_scales_with_banks() {
+        // the paper's 32-bank point reproduces the calibrated constant;
+        // halving the banks roughly doubles the interference
+        assert_eq!(contention_cycles(256, 32), CONTENTION);
+        assert_eq!(contention_cycles(256, 16), 40);
+        assert_eq!(contention_cycles(256, 64), 10);
+        let ita = ItaConfig::default();
+        let u16 = 256.0 / TimingModel::integrated_banks(&ita, 16).gemm_tile() as f64;
+        let u64b = 256.0 / TimingModel::integrated_banks(&ita, 64).gemm_tile() as f64;
+        assert!(u16 < 0.851 && u64b > 0.851);
+    }
+
+    #[test]
+    fn peak_gemm_throughput_matches_paper() {
+        // 2048 op/cy * 425 MHz * 85.05% = 740.4 GOp/s (paper: 741)
+        let (integ, _) = models();
+        let util = 256.0 / integ.gemm_tile() as f64;
+        let gops = 2048.0 * 425.0e6 * util / 1e9;
+        assert!((gops - 741.0).abs() < 5.0, "gemm GOp/s {gops}");
+    }
+
+    #[test]
+    fn attention_throughput_matches_paper() {
+        // paper: 663 GOp/s single-head attention. MAC throughput is
+        // 74.96% x 870.4 = 652.5 GOp/s; the ITAMax ops retired in the
+        // shadow of the matmuls (5 per element = +5/256 per MAC-op)
+        // bring the figure to the paper's number.
+        let (integ, _) = models();
+        let util = (2.0 * 256.0) / (integ.gemm_tile() + integ.av_tile()) as f64;
+        let gops = 2048.0 * 425.0e6 * util / 1e9 * (261.0 / 256.0);
+        assert!((gops - 663.0).abs() < 10.0, "attention GOp/s {gops}");
+    }
+}

@@ -1,0 +1,98 @@
+//! Activity accounting: per-resource busy cycles, data movement, ops.
+
+use std::collections::BTreeMap;
+
+/// Resources of the cluster template that commands occupy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Resource {
+    Ita,
+    Dma,
+    Cores,
+}
+
+/// Aggregated statistics of one simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Total makespan in cycles.
+    pub cycles: u64,
+    /// Busy cycles per resource.
+    pub busy: BTreeMap<Resource, u64>,
+    /// Ideal (zero-overhead) ITA cycles — utilization numerator.
+    pub ita_ideal_cycles: u64,
+    /// Ops retired on ITA / on the cores.
+    pub ita_ops: u64,
+    pub core_ops: u64,
+    /// Bytes moved by the DMA (L2 <-> L1).
+    pub dma_bytes: u64,
+    /// Bytes moved through TCDM by ITA streamers (L1 side).
+    pub tcdm_bytes: u64,
+    /// Commands executed.
+    pub commands: u64,
+}
+
+impl RunStats {
+    pub fn busy_cycles(&self, r: Resource) -> u64 {
+        self.busy.get(&r).copied().unwrap_or(0)
+    }
+
+    pub fn add_busy(&mut self, r: Resource, cycles: u64) {
+        *self.busy.entry(r).or_insert(0) += cycles;
+    }
+
+    /// ITA utilization = ideal cycles / busy cycles (the accelerator's
+    /// datapath efficiency while active, the paper's metric).
+    pub fn ita_utilization(&self) -> f64 {
+        let busy = self.busy_cycles(Resource::Ita);
+        if busy == 0 {
+            0.0
+        } else {
+            self.ita_ideal_cycles as f64 / busy as f64
+        }
+    }
+
+    /// ITA duty cycle over the whole run (drives the energy model).
+    pub fn ita_duty(&self) -> f64 {
+        self.busy_cycles(Resource::Ita) as f64 / self.cycles.max(1) as f64
+    }
+
+    pub fn core_duty(&self) -> f64 {
+        self.busy_cycles(Resource::Cores) as f64 / self.cycles.max(1) as f64
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.ita_ops + self.core_ops
+    }
+
+    /// Wall-clock seconds at the given frequency.
+    pub fn seconds(&self, freq_hz: f64) -> f64 {
+        self.cycles as f64 / freq_hz
+    }
+
+    /// Throughput in GOp/s at the given frequency.
+    pub fn gops(&self, freq_hz: f64) -> f64 {
+        self.total_ops() as f64 / self.seconds(freq_hz) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_and_duty() {
+        let mut s = RunStats::default();
+        s.cycles = 1000;
+        s.add_busy(Resource::Ita, 500);
+        s.ita_ideal_cycles = 425;
+        assert!((s.ita_utilization() - 0.85).abs() < 1e-9);
+        assert!((s.ita_duty() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gops_accounting() {
+        let mut s = RunStats::default();
+        s.cycles = 425_000_000; // 1 second at 425 MHz
+        s.ita_ops = 100_000_000_000;
+        assert!((s.gops(425.0e6) - 100.0).abs() < 1e-6);
+    }
+}

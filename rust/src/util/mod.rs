@@ -1,0 +1,34 @@
+//! Substrate utilities for the std-only offline environment: JSON, CLI
+//! parsing, deterministic PRNGs, and a property-testing harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+
+/// Format a quantity with engineering suffix (k/M/G/T) for reports.
+pub fn eng(v: f64) -> String {
+    let (div, suf) = if v.abs() >= 1e12 {
+        (1e12, "T")
+    } else if v.abs() >= 1e9 {
+        (1e9, "G")
+    } else if v.abs() >= 1e6 {
+        (1e6, "M")
+    } else if v.abs() >= 1e3 {
+        (1e3, "k")
+    } else {
+        (1.0, "")
+    };
+    format!("{:.3}{}", v / div, suf)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn eng_suffixes() {
+        assert_eq!(super::eng(741.0e9), "741.000G");
+        assert_eq!(super::eng(5.42e12), "5.420T");
+        assert_eq!(super::eng(12.0), "12.000");
+    }
+}

@@ -1,0 +1,122 @@
+//! Deterministic PRNG primitives shared with the Python build path.
+//!
+//! `splitmix64` is a *pure function of the index*, so synthetic tensors can
+//! be generated identically (and in any order) by `python/compile/model.py`
+//! and `models::synth_tensor` — the cross-language golden contract.
+//! `XorShift64` is a tiny stateful generator for test/bench workloads.
+
+pub const SPLITMIX_GAMMA: u64 = 0x9E3779B97F4A7C15;
+
+/// splitmix64 finalizer — bit-identical to model.splitmix64.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(SPLITMIX_GAMMA);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a 64-bit string hash — bit-identical to model.fnv1a.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in s.as_bytes() {
+        h = (h ^ (*b as u64)).wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// xorshift64* — fast stateful PRNG for workload generation.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zero fixed point
+        Self { state: splitmix64(seed) | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform i32 in [lo, hi).
+    pub fn next_range(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + (self.next_below((hi - lo) as u64) as i32)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// int8-range tensor of length n (as i32 container).
+    pub fn tensor_i8(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.next_range(-128, 128)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_golden_matches_python() {
+        // same constants as python/tests/test_model.py::test_splitmix_golden
+        assert_eq!(splitmix64(0), 16294208416658607535);
+        assert_eq!(splitmix64(1), 10451216379200822465);
+        assert_eq!(splitmix64(2), 10905525725756348110);
+        assert_eq!(splitmix64(3), 2092789425003139053);
+    }
+
+    #[test]
+    fn fnv1a_stable() {
+        assert_ne!(fnv1a("a"), fnv1a("b"));
+        assert_eq!(fnv1a(""), 0xCBF29CE484222325);
+    }
+
+    #[test]
+    fn xorshift_deterministic() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..1000 {
+            let v = r.next_range(-128, 128);
+            assert!((-128..128).contains(&v));
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn distribution_roughly_uniform() {
+        let mut r = XorShift64::new(1);
+        let mut counts = [0usize; 16];
+        for _ in 0..16000 {
+            counts[r.next_below(16) as usize] += 1;
+        }
+        for c in counts {
+            assert!((700..1300).contains(&c), "bucket count {c}");
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Integration tests of the full deployment flow: graph -> passes ->
+//! tiling -> lifetime -> allocation -> schedule -> codegen -> simulate,
+//! across all three evaluation networks and both targets.
+
+use attn_tinyml::coordinator::run_model_layers;
+use attn_tinyml::deeploy::{
+    self, allocator, lifetime, passes, schedule, tiler, Target,
+};
+use attn_tinyml::models::{self, ALL_MODELS, MOBILEBERT};
+use attn_tinyml::sim::{ClusterConfig, Cmd, Engine};
+use attn_tinyml::util::propcheck::{check, Config};
+use attn_tinyml::util::prng::XorShift64;
+
+#[test]
+fn deploy_all_models_both_targets() {
+    for cfg in ALL_MODELS {
+        for target in [Target::MultiCore, Target::MultiCoreIta] {
+            let dep = deeploy::deploy_layers(cfg, target, 1);
+            assert!(!dep.steps.is_empty(), "{}", cfg.name);
+            assert!(dep.total_ops > 0);
+            assert!(
+                dep.l1_peak_bytes <= tiler::L1_BUDGET,
+                "{}: L1 {}",
+                cfg.name,
+                dep.l1_peak_bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn allocator_invariant_on_real_graphs() {
+    // the property test in allocator.rs uses synthetic intervals; this
+    // runs the verifier on every real network graph
+    for cfg in ALL_MODELS {
+        for fuse in [false, true] {
+            let mut g = models::build_graph_layers(cfg, 2);
+            if fuse {
+                passes::fuse_mha(&mut g);
+            }
+            passes::map_operators(&mut g, fuse);
+            let order = schedule::topo_schedule(&g);
+            let ivs = lifetime::analyze(&g, &order);
+            let alloc = allocator::allocate(&ivs);
+            allocator::verify(&ivs, &alloc)
+                .unwrap_or_else(|(a, b)| panic!("{}: {a} overlaps {b}", cfg.name));
+        }
+    }
+}
+
+#[test]
+fn fusion_preserves_mac_work() {
+    // fusing MHA must not change the MAC content of the network
+    // (softmax accounting differs: 5 ops/elem ride on the fused op)
+    let mut g1 = models::build_graph_layers(&MOBILEBERT, 1);
+    let before_macs: u64 = g1
+        .nodes
+        .iter()
+        .filter(|n| {
+            matches!(
+                n.op,
+                deeploy::ir::Op::MatMul | deeploy::ir::Op::Gemm { .. }
+            )
+        })
+        .map(|n| g1.node_ops(n))
+        .sum();
+    passes::fuse_mha(&mut g1);
+    let after: u64 = g1.nodes.iter().map(|n| g1.node_ops(n)).sum();
+    // fused total >= unfused MACs (adds softmax ops, removes none)
+    assert!(after >= before_macs);
+}
+
+#[test]
+fn simulation_deterministic() {
+    let a = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let b = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.mj_per_inf, b.mj_per_inf);
+}
+
+#[test]
+fn acceleration_strictly_ordered() {
+    // multicore < unfused ITA < fused ITA, for every network
+    let cluster = ClusterConfig::default();
+    let engine = Engine::new(cluster);
+    for cfg in ALL_MODELS {
+        let mut cycles = Vec::new();
+        for (fuse, ita) in [(false, false), (false, true), (true, true)] {
+            let mut g = models::build_graph_layers(cfg, 1);
+            if fuse {
+                passes::fuse_mha(&mut g);
+            }
+            passes::map_operators(&mut g, ita);
+            let order = schedule::topo_schedule(&g);
+            let plans = tiler::plan_graph(&g);
+            let steps = deeploy::codegen::generate(&g, &order, &plans);
+            cycles.push(engine.run(&steps).cycles);
+        }
+        assert!(cycles[0] > cycles[1], "{}: {:?}", cfg.name, cycles);
+        assert!(cycles[1] > cycles[2], "{}: {:?}", cfg.name, cycles);
+    }
+}
+
+#[test]
+fn layer_scaling_is_linear() {
+    // identical encoder blocks: N layers ~ N x 1 layer (within the
+    // one-off input staging)
+    let one = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let four = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 4);
+    let ratio = four.seconds / one.seconds; // both extrapolate to 24 layers
+    assert!((ratio - 1.0).abs() < 0.02, "ratio {ratio}");
+}
+
+#[test]
+fn property_deployment_never_breaks_invariants() {
+    // random layer counts and models: steps reference only earlier
+    // steps, ITA commands only appear for the ITA target
+    check(
+        Config { cases: 12, seed: 0xDEB10 },
+        |rng: &mut XorShift64| {
+            (
+                rng.next_below(3) as usize,
+                1 + rng.next_below(2) as usize,
+                rng.next_below(2) == 0,
+            )
+        },
+        |&(m, l, t)| {
+            let mut v = Vec::new();
+            if l > 1 {
+                v.push((m, l - 1, t));
+            }
+            v
+        },
+        |&(model_idx, layers, use_ita)| {
+            let cfg = ALL_MODELS[model_idx];
+            let target = if use_ita { Target::MultiCoreIta } else { Target::MultiCore };
+            let dep = deeploy::deploy_layers(cfg, target, layers);
+            for (i, s) in dep.steps.iter().enumerate() {
+                for &d in &s.deps {
+                    if d >= i {
+                        return Err(format!("step {i} deps on {d}"));
+                    }
+                }
+                if !use_ita
+                    && matches!(s.cmd, Cmd::ItaGemm { .. } | Cmd::ItaAttention { .. })
+                {
+                    return Err("ITA command on multicore target".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bank_sweep_monotone() {
+    // more banks -> less contention -> never slower (the tunable
+    // interconnect claim, quantified by benches/ablation_interconnect)
+    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let mut prev = u64::MAX;
+    for banks in [8, 16, 32, 64] {
+        let mut cfg = ClusterConfig::default();
+        cfg.tcdm_banks = banks;
+        cfg.tcdm_bank_bytes = 128 * 1024 / banks;
+        let cycles = Engine::new(cfg).run(&dep.steps).cycles;
+        assert!(cycles <= prev, "banks {banks}: {cycles} > {prev}");
+        prev = cycles;
+    }
+}
+
+#[test]
+fn port_sweep_saturates_at_sixteen() {
+    use attn_tinyml::sim::timing::TimingModel;
+    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let base = ClusterConfig::default();
+    let run_ports = |ports: usize| {
+        let tm = TimingModel::with_ports(&base.ita, base.tcdm_banks, ports);
+        Engine::with_timing(base.clone(), tm).run(&dep.steps).cycles
+    };
+    let c8 = run_ports(8);
+    let c16 = run_ports(16);
+    let c32 = run_ports(32);
+    assert!(c8 > c16, "under-provisioned ports must starve the datapath");
+    assert_eq!(c16, c32, "beyond 128 B/cy the datapath is the limit");
+}
+
+#[test]
+fn single_context_regfile_exposes_config() {
+    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let dual = Engine::new(ClusterConfig::default()).run(&dep.steps).cycles;
+    let mut e = Engine::new(ClusterConfig::default());
+    e.expose_config = true;
+    let single = e.run(&dep.steps).cycles;
+    assert!(single > dual);
+    // bounded by (#ITA tasks - 1) x CONFIG_CYCLES
+    let n_ita = dep
+        .steps
+        .iter()
+        .filter(|s| matches!(s.cmd, Cmd::ItaGemm { .. } | Cmd::ItaAttention { .. }))
+        .count() as u64;
+    assert!(single - dual <= n_ita * attn_tinyml::sim::timing::CONFIG_CYCLES);
+}
+
+#[test]
+fn whisper_stem_accounted_once() {
+    use attn_tinyml::models::WHISPER_TINY_ENC;
+    // extrapolating from 1 layer (+ stem added analytically) must agree
+    // with the full-network simulation within a few percent
+    let one = run_model_layers(&WHISPER_TINY_ENC, Target::MultiCoreIta, 1);
+    let full = run_model_layers(
+        &WHISPER_TINY_ENC,
+        Target::MultiCoreIta,
+        WHISPER_TINY_ENC.layers,
+    );
+    let err = (one.seconds - full.seconds).abs() / full.seconds;
+    assert!(err < 0.05, "extrapolation error {err}");
+}
+
+#[test]
+fn e2e_report_fields_consistent() {
+    let r = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    assert!((r.gops - MOBILEBERT.gop_per_inference / r.seconds).abs() < 1e-9);
+    assert!((r.mj_per_inf - r.energy_j * 1e3).abs() < 1e-12);
+    assert!((r.inf_per_s * r.seconds - 1.0).abs() < 1e-9);
+    assert!(r.ita_utilization > 0.5 && r.ita_utilization < 1.0);
+}

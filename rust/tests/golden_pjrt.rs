@@ -1,0 +1,146 @@
+//! Cross-language golden tests: the AOT artifacts (Pallas/JAX lowered to
+//! HLO text, executed via PJRT) must agree BIT-EXACTLY with the rust ITA
+//! functional model. This closes the loop over all three layers:
+//!
+//!   Pallas kernel == jnp oracle        (pytest, python side)
+//!   jnp model -> HLO text -> PJRT      (aot.py + runtime)
+//!   PJRT output == rust ita::engine    (these tests)
+//!
+//! Tests skip with a notice when `make artifacts` has not run.
+
+use attn_tinyml::coordinator::forward;
+use attn_tinyml::ita::engine::{attention_head, gemm_rq, Mat};
+use attn_tinyml::ita::gelu::Act;
+use attn_tinyml::models;
+use attn_tinyml::runtime::{artifacts_available, Runtime, TensorIn};
+use attn_tinyml::util::prng::XorShift64;
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(&Runtime::default_dir()).expect("runtime"))
+}
+
+#[test]
+fn gemm_artifacts_bit_exact() {
+    let Some(rt) = runtime() else { return };
+    for (name, act) in
+        [("gemm", Act::Identity), ("gemm_relu", Act::Relu), ("gemm_gelu", Act::Gelu)]
+    {
+        let entry = &rt.manifest.artifacts[name];
+        let (mult, shift) = (entry.rq["mult"] as i32, entry.rq["shift"] as u32);
+        for seed in [1u64, 2, 3] {
+            let mut rng = XorShift64::new(seed);
+            let x = rng.tensor_i8(128 * 128);
+            let w = rng.tensor_i8(128 * 128);
+            let b: Vec<i32> = (0..128).map(|_| rng.next_range(-2048, 2048)).collect();
+            let got = rt
+                .execute(
+                    name,
+                    &[
+                        TensorIn { data: &x, shape: vec![128, 128] },
+                        TensorIn { data: &w, shape: vec![128, 128] },
+                        TensorIn { data: &b, shape: vec![128] },
+                    ],
+                )
+                .unwrap();
+            let want = gemm_rq(
+                &Mat::new(128, 128, x),
+                &Mat::new(128, 128, w),
+                &b,
+                mult,
+                shift,
+                act,
+                0.1,
+            );
+            assert_eq!(got[0], want.data, "{name} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn attention_artifact_bit_exact() {
+    let Some(rt) = runtime() else { return };
+    let entry = &rt.manifest.artifacts["attn_head"];
+    let (qkm, qks) = (entry.rq["qk_mult"] as i32, entry.rq["qk_shift"] as u32);
+    let (avm, avs) = (entry.rq["av_mult"] as i32, entry.rq["av_shift"] as u32);
+    for seed in [5u64, 6, 7] {
+        let mut rng = XorShift64::new(seed);
+        let q = rng.tensor_i8(128 * 64);
+        let k = rng.tensor_i8(128 * 64);
+        let v = rng.tensor_i8(128 * 64);
+        let got = rt
+            .execute(
+                "attn_head",
+                &[
+                    TensorIn { data: &q, shape: vec![128, 64] },
+                    TensorIn { data: &k, shape: vec![128, 64] },
+                    TensorIn { data: &v, shape: vec![128, 64] },
+                ],
+            )
+            .unwrap();
+        let (o, _, _) = attention_head(
+            &Mat::new(128, 64, q),
+            &Mat::new(128, 64, k),
+            &Mat::new(128, 64, v),
+            qkm,
+            qks,
+            avm,
+            avs,
+        );
+        assert_eq!(got[0], o.data, "seed {seed}");
+    }
+}
+
+#[test]
+fn encoder_layers_bit_exact_all_models() {
+    let Some(rt) = runtime() else { return };
+    for cfg in models::ALL_MODELS {
+        let name = format!("encoder_{}", cfg.name);
+        let w = forward::synth_layer_weights(cfg, 0);
+        let x = models::synth_input(cfg);
+        let shapes = forward::weight_shapes(cfg);
+        let datas: Vec<&Vec<i32>> = vec![
+            &w.wq, &w.wk, &w.wv, &w.wo, &w.bq, &w.bk, &w.bv, &w.bo, &w.w1, &w.b1,
+            &w.w2, &w.b2, &w.ln1_g, &w.ln1_b, &w.ln2_g, &w.ln2_b,
+        ];
+        let mut inputs: Vec<TensorIn> =
+            vec![TensorIn { data: &x, shape: vec![cfg.seq, cfg.emb] }];
+        for (d, (_, s)) in datas.iter().zip(&shapes) {
+            inputs.push(TensorIn { data: d, shape: s.clone() });
+        }
+        let got = rt.execute(&name, &inputs).unwrap();
+        let want =
+            forward::encoder_layer(cfg, &Mat::new(cfg.seq, cfg.emb, x.clone()), &w);
+        assert_eq!(got[0], want.data, "{name}");
+    }
+}
+
+#[test]
+fn two_layer_chain_composes() {
+    // chaining the artifact output back as input must equal the rust
+    // two-layer forward — proves composition without accumulation drift
+    let Some(rt) = runtime() else { return };
+    let cfg = &models::MOBILEBERT;
+    let name = format!("encoder_{}", cfg.name);
+    let shapes = forward::weight_shapes(cfg);
+    let mut x = models::synth_input(cfg);
+    let mut x_rust = Mat::new(cfg.seq, cfg.emb, x.clone());
+    for l in 0..2 {
+        let w = forward::synth_layer_weights(cfg, l);
+        let datas: Vec<&Vec<i32>> = vec![
+            &w.wq, &w.wk, &w.wv, &w.wo, &w.bq, &w.bk, &w.bv, &w.bo, &w.w1, &w.b1,
+            &w.w2, &w.b2, &w.ln1_g, &w.ln1_b, &w.ln2_g, &w.ln2_b,
+        ];
+        let mut inputs: Vec<TensorIn> =
+            vec![TensorIn { data: &x, shape: vec![cfg.seq, cfg.emb] }];
+        for (d, (_, s)) in datas.iter().zip(&shapes) {
+            inputs.push(TensorIn { data: d, shape: s.clone() });
+        }
+        x = rt.execute(&name, &inputs).unwrap().remove(0);
+        x_rust = forward::encoder_layer(cfg, &x_rust, &w);
+        assert_eq!(x, x_rust.data, "layer {l}");
+    }
+}
