@@ -1,0 +1,41 @@
+# attn-tinyml build entry points.
+#
+#   make build       release build (std-only default features)
+#   make test        tier-1 verify: cargo build --release && cargo test -q
+#   make bench       compile + run every bench target
+#   make artifacts   AOT-lower the JAX/Pallas models to HLO-text artifacts
+#                    (needs the python environment; the rust side works
+#                    without this — the reference backend is the default)
+#   make check       type-check all feature combinations
+#   make fmt         rustfmt check
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: build test bench artifacts check fmt clean
+
+build:
+	$(CARGO) build --release
+
+test: build
+	$(CARGO) test -q
+
+bench:
+	$(CARGO) bench --no-run
+	$(CARGO) bench
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+check:
+	$(CARGO) check --all-targets
+	$(CARGO) check --all-targets --no-default-features
+	$(CARGO) check --all-targets --features pjrt
+
+fmt:
+	$(CARGO) fmt --check
+
+clean:
+	$(CARGO) clean
+	rm -rf $(ARTIFACTS_DIR)

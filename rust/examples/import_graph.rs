@@ -9,10 +9,11 @@
 use attn_tinyml::deeploy::{codegen, onnx, passes, schedule, tiler};
 use attn_tinyml::energy;
 use attn_tinyml::models;
+use attn_tinyml::runtime::RuntimeError;
 use attn_tinyml::sim::{ClusterConfig, Engine};
 use attn_tinyml::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), RuntimeError> {
     let path = match std::env::args().nth(1) {
         Some(p) => p,
         None => {
@@ -26,13 +27,13 @@ fn main() -> anyhow::Result<()> {
 
     // import
     let text = std::fs::read_to_string(&path)?;
-    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let mut g = onnx::import(&j).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let j = Json::parse(&text)?;
+    let mut g = onnx::import(&j).map_err(RuntimeError::InvalidInput)?;
     println!("imported {}: {} tensors, {} nodes", g.name, g.tensors.len(), g.nodes.len());
 
     // deployment flow
     let fused = passes::fuse_mha(&mut g);
-    passes::check_ita_constraints(&g).map_err(|e| anyhow::anyhow!("{e}"))?;
+    passes::check_ita_constraints(&g).map_err(RuntimeError::InvalidInput)?;
     passes::map_operators(&mut g, true);
     println!("fused {fused} attention heads onto ITA");
 

@@ -6,13 +6,13 @@
 //!      allocated and lowered to a command stream.
 //!   2. **Cycle/energy simulation** — the full 24-layer network executes
 //!      on the cluster simulator; we report the paper's Table I metrics.
-//!   3. **Numerics via PJRT** — the complete 24-layer inference runs
-//!      through the AOT-compiled encoder artifact (lowered from the
-//!      Pallas/JAX model), layer by layer with per-layer synthetic
-//!      weights, and is checked BIT-EXACTLY against the rust ITA
-//!      functional model at every layer.
-//!
-//! Requires `make artifacts` for step 3 (skipped with a notice if absent).
+//!   3. **Numerics via the golden runtime** — the complete 24-layer
+//!      inference runs through the encoder artifact on the active
+//!      runtime backend (PJRT when built with `--features pjrt` and
+//!      `make artifacts` has run; the std-only reference backend
+//!      otherwise), layer by layer with per-layer synthetic weights,
+//!      and is checked BIT-EXACTLY against the rust ITA functional
+//!      model at every layer.
 //!
 //!     cargo run --release --example mobilebert_e2e
 
@@ -20,9 +20,9 @@ use attn_tinyml::coordinator::{self, forward};
 use attn_tinyml::deeploy::{self, Target};
 use attn_tinyml::ita::engine::Mat;
 use attn_tinyml::models::{self, MOBILEBERT};
-use attn_tinyml::runtime::{artifacts_available, Runtime, TensorIn};
+use attn_tinyml::runtime::{Runtime, RuntimeError, TensorIn};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), RuntimeError> {
     let cfg = &MOBILEBERT;
 
     // --- 1. deployment flow over the FULL network -----------------------
@@ -46,14 +46,10 @@ fn main() -> anyhow::Result<()> {
     println!("      ITA utilization {:.1}%, duty {:.1}%, power {:.1} mW",
              r.ita_utilization * 100.0, r.ita_duty * 100.0, r.power_w * 1e3);
 
-    // --- 3. full-network numerics through PJRT --------------------------
-    if !artifacts_available() {
-        println!("[3/3] SKIPPED: artifacts not built (run `make artifacts`)");
-        return Ok(());
-    }
-    println!("[3/3] full inference through the AOT artifact (PJRT), checked");
-    println!("      bit-exactly against the rust ITA functional model:");
+    // --- 3. full-network numerics through the golden runtime ------------
     let rt = Runtime::new(&Runtime::default_dir())?;
+    println!("[3/3] full inference through the encoder artifact ({} backend),", rt.backend_name());
+    println!("      checked bit-exactly against the rust ITA functional model:");
     let name = format!("encoder_{}", cfg.name);
     let shapes = forward::weight_shapes(cfg);
 
@@ -73,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         }
         let out = rt.execute(&name, &inputs)?;
         x_rust = forward::encoder_layer(cfg, &x_rust, &w);
-        assert_eq!(out[0], x_rust.data, "layer {l}: PJRT != rust model");
+        assert_eq!(out[0], x_rust.data, "layer {l}: backend != rust model");
         x_pjrt = out.into_iter().next().unwrap();
         if l % 6 == 5 {
             println!("      layer {:>2}: OK ({} values bit-exact)", l, x_pjrt.len());

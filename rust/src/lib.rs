@@ -9,10 +9,13 @@
 //!   to HLO text artifacts.
 //! - **L3 (this crate)** — the deployment flow (`deeploy`), the
 //!   cycle/energy simulator of the Snitch+ITA cluster (`sim`, `energy`),
-//!   the bit-exact ITA functional model (`ita`), the PJRT-backed golden
-//!   runtime (`runtime`), and the orchestrating `coordinator`.
+//!   the bit-exact ITA functional model (`ita`), the golden `runtime`
+//!   with pluggable execution backends (the std-only reference backend
+//!   by default, PJRT/XLA behind `--features pjrt`), and the
+//!   orchestrating `coordinator`.
 //!
-//! See DESIGN.md for the full system inventory and experiment index.
+//! See DESIGN.md for the full system inventory and experiment index,
+//! and README.md for build/run instructions.
 
 pub mod coordinator;
 pub mod deeploy;

@@ -4,7 +4,7 @@
 //!   table1              reproduce the paper's Table I (all networks)
 //!   simulate            one network/target: latency, energy, utilization
 //!   micro               microbenchmarks (Section V-A): GEMM + attention
-//!   verify              golden-check PJRT artifacts vs the rust ITA model
+//!   verify              golden-check the runtime backend vs the rust ITA model
 //!   deploy              show the deployment artifacts (tiling, memory)
 //!   export              dump a model graph as ONNX-like JSON
 //!
@@ -14,14 +14,14 @@
 //!   attn-tinyml verify --artifacts artifacts
 //!   attn-tinyml deploy --model dinov2s
 
-use anyhow::{anyhow, Result};
-
 use attn_tinyml::coordinator::{self, forward};
 use attn_tinyml::deeploy::{self, Target};
 use attn_tinyml::models;
-use attn_tinyml::runtime::{artifacts_available, Runtime, TensorIn};
+use attn_tinyml::runtime::{Runtime, RuntimeError, TensorIn};
 use attn_tinyml::sim::{ClusterConfig, Cmd, Engine, Step};
 use attn_tinyml::util::cli::Args;
+
+type Result<T> = std::result::Result<T, RuntimeError>;
 
 const SUBCOMMANDS: [&str; 6] = ["table1", "simulate", "micro", "verify", "deploy", "export"];
 
@@ -46,10 +46,10 @@ fn main() -> Result<()> {
 fn model_flag(args: &Args) -> Result<&'static models::ModelConfig> {
     let name = args.flag_or("model", "mobilebert");
     models::by_name(&name).ok_or_else(|| {
-        anyhow!(
+        RuntimeError::Usage(format!(
             "unknown model {name}; available: {}",
             models::ALL_MODELS.iter().map(|m| m.name).collect::<Vec<_>>().join(", ")
-        )
+        ))
     })
 }
 
@@ -128,10 +128,22 @@ fn cmd_micro() -> Result<()> {
 
 fn cmd_verify(args: &Args) -> Result<()> {
     let dir = args.flag_or("artifacts", "artifacts");
-    if !artifacts_available() && dir == "artifacts" {
-        return Err(anyhow!("artifacts not built; run `make artifacts`"));
+    let path = std::path::Path::new(&dir);
+    let on_disk = path.join("manifest.json").exists();
+    // an explicitly named artifacts dir must exist — silently verifying
+    // the built-in manifest instead would be a vacuous pass
+    if args.has("artifacts") && !on_disk {
+        return Err(RuntimeError::Usage(format!(
+            "no manifest.json in {dir}; run `make artifacts`, or omit --artifacts \
+             to verify against the built-in reference manifest"
+        )));
     }
-    let rt = Runtime::new(std::path::Path::new(&dir))?;
+    let rt = Runtime::new(path)?;
+    println!(
+        "backend      : {} (AOT artifacts in {dir}: {})",
+        rt.backend_name(),
+        if on_disk { "yes" } else { "no" }
+    );
     verify_all(&rt)
 }
 
@@ -167,7 +179,9 @@ fn verify_all(rt: &Runtime) -> Result<()> {
             0.1,
         );
         if got[0] != want.data {
-            return Err(anyhow!("{name}: PJRT != rust functional model"));
+            return Err(RuntimeError::Backend(format!(
+                "{name}: backend output != rust functional model"
+            )));
         }
         println!("{name:>24}: bit-exact ({} values)", want.data.len());
     }
@@ -199,7 +213,9 @@ fn verify_all(rt: &Runtime) -> Result<()> {
             avs,
         );
         if got[0] != o.data {
-            return Err(anyhow!("attn_head: PJRT != rust functional model"));
+            return Err(RuntimeError::Backend(
+                "attn_head: backend output != rust functional model".to_string(),
+            ));
         }
         println!("{:>24}: bit-exact ({} values)", "attn_head", o.data.len());
     }
@@ -231,11 +247,17 @@ fn verify_all(rt: &Runtime) -> Result<()> {
                 .zip(&want.data)
                 .filter(|(a, b)| a != b)
                 .count();
-            return Err(anyhow!("{name}: {diff}/{} values differ", want.data.len()));
+            return Err(RuntimeError::Backend(format!(
+                "{name}: {diff}/{} values differ",
+                want.data.len()
+            )));
         }
         println!("{name:>24}: bit-exact ({} values)", want.data.len());
     }
-    println!("all artifacts verified: PJRT == rust ITA functional model");
+    println!(
+        "all artifacts verified: {} backend == rust ITA functional model",
+        rt.backend_name()
+    );
     Ok(())
 }
 

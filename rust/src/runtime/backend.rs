@@ -1,0 +1,63 @@
+//! The execution-backend abstraction of the golden runtime.
+//!
+//! Mirrors Deeploy's philosophy of swappable execution targets: the
+//! artifact contract (names, shapes, requant constants — the
+//! [`Manifest`]) is fixed, and a [`Backend`] decides *how* an artifact
+//! executes. The crate ships two implementations — the std-only
+//! [`super::reference::ReferenceBackend`] and the feature-gated
+//! [`super::pjrt::PjrtBackend`] — and [`super::Runtime::with_backend`]
+//! accepts any other (a future RTL cosimulation bridge, a remote
+//! device, a batching server shard, ...).
+
+use super::{ArtifactEntry, Manifest, RuntimeError, TensorIn};
+
+/// One way of executing the AOT artifact set.
+pub trait Backend {
+    /// Short identifier for reports ("reference", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The artifact manifest this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Compile (or otherwise prepare) one artifact ahead of execution.
+    /// Idempotent; backends may cache the result.
+    fn compile(&self, artifact: &str) -> Result<(), RuntimeError>;
+
+    /// Execute an artifact; returns all outputs flattened row-major.
+    fn execute(
+        &self,
+        artifact: &str,
+        inputs: &[TensorIn],
+    ) -> Result<Vec<Vec<i32>>, RuntimeError>;
+
+    /// Whether the backend can execute right now (e.g. artifacts exist
+    /// on disk for PJRT; always true for the reference model).
+    fn artifacts_available(&self) -> bool;
+}
+
+/// Shared input validation: arity against the manifest entry, and each
+/// tensor's element count against its caller-declared shape.
+pub fn validate_inputs(
+    artifact: &str,
+    entry: &ArtifactEntry,
+    inputs: &[TensorIn],
+) -> Result<(), RuntimeError> {
+    if !entry.input_shapes.is_empty() && inputs.len() != entry.input_shapes.len() {
+        return Err(RuntimeError::InvalidInput(format!(
+            "{artifact}: expected {} inputs, got {}",
+            entry.input_shapes.len(),
+            inputs.len()
+        )));
+    }
+    for (idx, t) in inputs.iter().enumerate() {
+        let elems: usize = t.shape.iter().product();
+        if elems != t.data.len() {
+            return Err(RuntimeError::InvalidInput(format!(
+                "{artifact}: input {idx} shape {:?} implies {elems} elements, got {}",
+                t.shape,
+                t.data.len()
+            )));
+        }
+    }
+    Ok(())
+}

@@ -1,24 +1,112 @@
-//! PJRT-backed golden-model runtime.
+//! Golden-model runtime with pluggable execution backends.
 //!
-//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
-//! (`make artifacts`) and executes them on the PJRT CPU client via the
-//! `xla` crate. Python is never on this path — the artifacts are
-//! self-contained.
+//! The runtime executes the AOT artifact set (the contract produced by
+//! `python/compile/aot.py` — see `make artifacts`) through a
+//! [`Backend`] implementation:
 //!
-//! Interchange contract (see aot.py and /opt/xla-example/README.md):
-//! HLO *text* with large constants printed and metadata stripped;
-//! computations lowered with return_tuple=True (unwrap with to_tuple1 /
-//! decompose_tuple); all tensors i32 at the boundary carrying int8-range
-//! values.
+//! * [`reference::ReferenceBackend`] — the **default**, std-only
+//!   backend: executes the golden path through the bit-exact
+//!   [`crate::ita::engine`] functional model. It needs no artifacts on
+//!   disk and works fully offline, so `attn-tinyml verify` and the
+//!   cross-layer golden tests always run.
+//! * [`pjrt::PjrtBackend`] (`--features pjrt`) — loads the HLO-text
+//!   artifacts and executes them on the PJRT CPU client via the `xla`
+//!   crate. Python is never on this path — the artifacts are
+//!   self-contained. When artifacts or the native XLA runtime are
+//!   missing, [`Runtime::new`] falls back to the reference backend.
+//!
+//! Backend selection can be forced with `ATTN_TINYML_BACKEND=reference`
+//! or `ATTN_TINYML_BACKEND=pjrt`.
+//!
+//! Interchange contract (see aot.py and DESIGN.md §4): HLO *text* with
+//! large constants printed and metadata stripped; computations lowered
+//! with return_tuple=True (unwrap with to_tuple1 / decompose_tuple);
+//! all tensors i32 at the boundary carrying int8-range values.
+
+pub mod backend;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
+
+pub use backend::Backend;
+pub use reference::ReferenceBackend;
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::json::{Json, JsonError};
 
-use crate::util::json::Json;
+/// Geometry of the micro-kernel artifacts (mirrors aot.py GEMM_DIM /
+/// ATTN_S / ATTN_P).
+pub const REF_GEMM_DIM: usize = 128;
+pub const REF_ATTN_S: usize = 128;
+pub const REF_ATTN_P: usize = 64;
 
-/// The artifact manifest (artifacts/manifest.json).
+/// Crate-local runtime error — the default build carries no external
+/// error-handling dependency.
+#[derive(Debug)]
+pub enum RuntimeError {
+    /// Filesystem failure with context.
+    Io { context: String, source: std::io::Error },
+    /// JSON syntax error (manifest or graph files).
+    Json(JsonError),
+    /// Structurally invalid manifest.
+    Manifest(String),
+    /// Artifact name not present in the manifest.
+    UnknownArtifact(String),
+    /// Caller-supplied tensors inconsistent with the artifact contract.
+    InvalidInput(String),
+    /// Backend-specific failure (compile/execute/unavailable).
+    Backend(String),
+    /// CLI usage error.
+    Usage(String),
+}
+
+impl RuntimeError {
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> RuntimeError {
+        RuntimeError::Io { context: context.into(), source }
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::Io { context, source } => write!(f, "{context}: {source}"),
+            RuntimeError::Json(e) => write!(f, "json: {e}"),
+            RuntimeError::Manifest(m) => write!(f, "manifest: {m}"),
+            RuntimeError::UnknownArtifact(n) => write!(f, "unknown artifact {n}"),
+            RuntimeError::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            RuntimeError::Backend(m) => write!(f, "{m}"),
+            RuntimeError::Usage(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io { source, .. } => Some(source),
+            RuntimeError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> RuntimeError {
+        RuntimeError::Io { context: "I/O".to_string(), source: e }
+    }
+}
+
+impl From<JsonError> for RuntimeError {
+    fn from(e: JsonError) -> RuntimeError {
+        RuntimeError::Json(e)
+    }
+}
+
+/// The artifact manifest (artifacts/manifest.json, or the built-in
+/// mirror of it served by the reference backend).
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub dir: PathBuf,
@@ -31,15 +119,34 @@ pub struct ArtifactEntry {
     pub input_shapes: Vec<(String, Vec<usize>)>,
     pub output_shapes: Vec<(String, Vec<usize>)>,
     pub rq: BTreeMap<String, i64>,
+    /// Fused activation of GEMM artifacts ("identity"/"relu"/"gelu").
+    pub act: Option<String>,
+}
+
+impl ArtifactEntry {
+    /// Fetch one requant constant; errors name the missing key.
+    pub fn rq_i64(&self, key: &str) -> Result<i64, RuntimeError> {
+        self.rq
+            .get(key)
+            .copied()
+            .ok_or_else(|| RuntimeError::Manifest(format!("missing rq key {key}")))
+    }
 }
 
 impl Manifest {
-    pub fn load(dir: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+    /// Load manifest.json from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest, RuntimeError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            RuntimeError::io(format!("reading {path:?} (run `make artifacts`)"), e)
+        })?;
+        let j = Json::parse(&text)?;
         let mut artifacts = BTreeMap::new();
-        for (name, entry) in j.get("artifacts").and_then(Json::as_obj).ok_or_else(|| anyhow!("no artifacts"))? {
+        let entries = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| RuntimeError::Manifest("no artifacts object".to_string()))?;
+        for (name, entry) in entries {
             let shapes = |key: &str| -> Vec<(String, Vec<usize>)> {
                 entry
                     .get(key)
@@ -80,10 +187,103 @@ impl Manifest {
                     input_shapes: shapes("inputs"),
                     output_shapes: shapes("outputs"),
                     rq,
+                    act: entry.get("act").and_then(Json::as_str).map(str::to_string),
                 },
             );
         }
         Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// The built-in manifest: the same artifact set, shapes and requant
+    /// constants aot.py emits, derived from the shared model configs —
+    /// what the reference backend serves when no artifacts are on disk.
+    pub fn builtin() -> Manifest {
+        use crate::coordinator::forward::weight_shapes;
+        use crate::models;
+
+        fn rq_map(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+            pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+        }
+
+        let mut artifacts = BTreeMap::new();
+        let (gm, gs) = models::rq_for(REF_GEMM_DIM, 30.0);
+        for (name, act) in [("gemm", "identity"), ("gemm_relu", "relu"), ("gemm_gelu", "gelu")]
+        {
+            artifacts.insert(
+                name.to_string(),
+                ArtifactEntry {
+                    file: format!("{name}.hlo.txt"),
+                    input_shapes: vec![
+                        ("x".to_string(), vec![REF_GEMM_DIM, REF_GEMM_DIM]),
+                        ("w".to_string(), vec![REF_GEMM_DIM, REF_GEMM_DIM]),
+                        ("bias".to_string(), vec![REF_GEMM_DIM]),
+                    ],
+                    output_shapes: vec![("y".to_string(), vec![REF_GEMM_DIM, REF_GEMM_DIM])],
+                    rq: rq_map(&[("mult", gm as i64), ("shift", gs as i64)]),
+                    act: Some(act.to_string()),
+                },
+            );
+        }
+
+        let (qkm, qks) = models::rq_for(REF_ATTN_P, 40.0);
+        let (avm, avs) = models::rq_for(128, 30.0);
+        artifacts.insert(
+            "attn_head".to_string(),
+            ArtifactEntry {
+                file: "attn_head.hlo.txt".to_string(),
+                input_shapes: ["q", "k", "v"]
+                    .iter()
+                    .map(|n| (n.to_string(), vec![REF_ATTN_S, REF_ATTN_P]))
+                    .collect(),
+                output_shapes: vec![("o".to_string(), vec![REF_ATTN_S, REF_ATTN_P])],
+                rq: rq_map(&[
+                    ("qk_mult", qkm as i64),
+                    ("qk_shift", qks as i64),
+                    ("av_mult", avm as i64),
+                    ("av_shift", avs as i64),
+                ]),
+                act: None,
+            },
+        );
+
+        for cfg in models::ALL_MODELS {
+            let p = models::rq_params(cfg);
+            let mut input_shapes = vec![("x".to_string(), vec![cfg.seq, cfg.emb])];
+            for (n, s) in weight_shapes(cfg) {
+                input_shapes.push((n.to_string(), s));
+            }
+            artifacts.insert(
+                format!("encoder_{}", cfg.name),
+                ArtifactEntry {
+                    file: format!("encoder_{}.hlo.txt", cfg.name),
+                    input_shapes,
+                    output_shapes: vec![("x_out".to_string(), vec![cfg.seq, cfg.emb])],
+                    rq: rq_map(&[
+                        ("q_mult", p.q.0 as i64),
+                        ("q_shift", p.q.1 as i64),
+                        ("k_mult", p.q.0 as i64),
+                        ("k_shift", p.q.1 as i64),
+                        ("v_mult", p.q.0 as i64),
+                        ("v_shift", p.q.1 as i64),
+                        ("qk_mult", p.qk.0 as i64),
+                        ("qk_shift", p.qk.1 as i64),
+                        ("av_mult", p.av.0 as i64),
+                        ("av_shift", p.av.1 as i64),
+                        ("o_mult", p.o.0 as i64),
+                        ("o_shift", p.o.1 as i64),
+                        ("ffn1_mult", p.ffn1.0 as i64),
+                        ("ffn1_shift", p.ffn1.1 as i64),
+                        ("ffn2_mult", p.ffn2.0 as i64),
+                        ("ffn2_shift", p.ffn2.1 as i64),
+                        ("ln_mult", p.ln.0 as i64),
+                        ("ln_shift", p.ln.1 as i64),
+                    ]),
+                    act: None,
+                },
+            );
+        }
+
+        Manifest { dir: PathBuf::from("<builtin>"), artifacts }
     }
 }
 
@@ -93,18 +293,91 @@ pub struct TensorIn<'a> {
     pub shape: Vec<usize>,
 }
 
-/// The runtime: one PJRT CPU client + compiled executable cache.
+/// The runtime facade: one execution [`Backend`] + its manifest.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     pub manifest: Manifest,
-    cache: std::cell::RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
 }
 
 impl Runtime {
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
-        Ok(Runtime { client, manifest, cache: Default::default() })
+    /// Open a runtime over the artifacts directory, selecting the best
+    /// available backend (PJRT when compiled in and artifacts exist,
+    /// the reference functional model otherwise). Never requires the
+    /// network or Python.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime, RuntimeError> {
+        match std::env::var("ATTN_TINYML_BACKEND").ok().as_deref() {
+            Some("reference") => Ok(Self::reference_from(artifacts_dir)),
+            Some("pjrt") => Self::forced_pjrt(artifacts_dir),
+            Some(other) => Err(RuntimeError::Backend(format!(
+                "unknown ATTN_TINYML_BACKEND {other:?} (expected \"reference\" or \"pjrt\")"
+            ))),
+            None => Ok(Self::auto(artifacts_dir)),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn forced_pjrt(artifacts_dir: &Path) -> Result<Runtime, RuntimeError> {
+        Ok(Runtime::with_backend(Box::new(pjrt::PjrtBackend::new(artifacts_dir)?)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn forced_pjrt(_artifacts_dir: &Path) -> Result<Runtime, RuntimeError> {
+        Err(RuntimeError::Backend(
+            "pjrt backend requested but the crate was built without `--features pjrt`"
+                .to_string(),
+        ))
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn auto(artifacts_dir: &Path) -> Runtime {
+        if artifacts_dir.join("manifest.json").exists() {
+            match pjrt::PjrtBackend::new(artifacts_dir) {
+                Ok(b) => return Runtime::with_backend(Box::new(b)),
+                Err(e) => eprintln!(
+                    "note: pjrt backend unavailable ({e}); using reference backend"
+                ),
+            }
+        }
+        Self::reference_from(artifacts_dir)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn auto(artifacts_dir: &Path) -> Runtime {
+        Self::reference_from(artifacts_dir)
+    }
+
+    /// Reference backend, preferring an on-disk manifest when present
+    /// (gemm/attention honor its requant constants; encoder artifacts
+    /// derive theirs from the shared model configs — the same
+    /// derivation aot.py uses). Falls back to the built-in mirror,
+    /// loudly if a manifest exists but cannot be parsed.
+    fn reference_from(dir: &Path) -> Runtime {
+        let manifest = if dir.join("manifest.json").exists() {
+            match Manifest::load(dir) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!(
+                        "warning: ignoring unreadable manifest in {dir:?} ({e}); \
+                         using the built-in reference manifest"
+                    );
+                    Manifest::builtin()
+                }
+            }
+        } else {
+            Manifest::builtin()
+        };
+        Runtime::with_backend(Box::new(ReferenceBackend::with_manifest(manifest)))
+    }
+
+    /// The always-available reference runtime (built-in manifest).
+    pub fn reference() -> Runtime {
+        Runtime::with_backend(Box::new(ReferenceBackend::new()))
+    }
+
+    /// Plug in any backend implementation.
+    pub fn with_backend(backend: Box<dyn Backend>) -> Runtime {
+        let manifest = backend.manifest().clone();
+        Runtime { backend, manifest }
     }
 
     /// Default artifacts location relative to the repo root.
@@ -112,51 +385,23 @@ impl Runtime {
         PathBuf::from(env_or("ATTN_TINYML_ARTIFACTS", "artifacts"))
     }
 
-    /// Compile (or fetch from cache) one artifact.
-    fn executable(&self, name: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(name) {
-            return Ok(());
-        }
-        let entry = self
-            .manifest
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
-        let path = self.manifest.dir.join(&entry.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e}"))?;
-        self.cache.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
+    /// Short name of the active backend ("reference" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Compile (or otherwise prepare) one artifact ahead of execution.
+    pub fn compile(&self, name: &str) -> Result<(), RuntimeError> {
+        self.backend.compile(name)
     }
 
     /// Execute an artifact; returns all outputs flattened row-major.
-    pub fn execute(&self, name: &str, inputs: &[TensorIn]) -> Result<Vec<Vec<i32>>> {
-        self.executable(name)?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).unwrap();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let lit = xla::Literal::vec1(t.data);
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e}"))?;
-        let mut tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e}"))?;
-        let parts = tuple.decompose_tuple().map_err(|e| anyhow!("tuple: {e}"))?;
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}")))
-            .collect()
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[TensorIn],
+    ) -> Result<Vec<Vec<i32>>, RuntimeError> {
+        self.backend.execute(name, inputs)
     }
 
     /// Artifact names available.
@@ -169,8 +414,10 @@ fn env_or(key: &str, default: &str) -> String {
     std::env::var(key).unwrap_or_else(|_| default.to_string())
 }
 
-/// True when the artifacts directory exists with a manifest — used by
-/// integration tests to skip gracefully before `make artifacts`.
+/// True when AOT artifacts (manifest.json) exist on disk — the PJRT
+/// backend's prerequisite. The reference backend needs no artifacts, so
+/// a [`Runtime`] can be constructed either way; use this only to report
+/// which golden source is in play.
 pub fn artifacts_available() -> bool {
     Runtime::default_dir().join("manifest.json").exists()
 }
@@ -192,5 +439,55 @@ mod tests {
         assert_eq!(g.input_shapes.len(), 3);
         assert_eq!(g.input_shapes[0].1, vec![128, 128]);
         assert!(g.rq.contains_key("mult"));
+    }
+
+    #[test]
+    fn builtin_manifest_mirrors_aot_contract() {
+        let m = Manifest::builtin();
+        for name in ["gemm", "gemm_relu", "gemm_gelu", "attn_head"] {
+            assert!(m.artifacts.contains_key(name), "{name}");
+        }
+        for cfg in crate::models::ALL_MODELS {
+            let e = &m.artifacts[&format!("encoder_{}", cfg.name)];
+            // x + 16 weight tensors, argument order pinned by forward
+            assert_eq!(e.input_shapes.len(), 17, "{}", cfg.name);
+            assert_eq!(e.input_shapes[0].1, vec![cfg.seq, cfg.emb]);
+            assert!(e.rq.contains_key("qk_mult"));
+        }
+        // golden rq values (pinned against python model.rq_for)
+        let g = &m.artifacts["gemm"];
+        assert_eq!((g.rq["mult"], g.rq["shift"]), (8, 14));
+        let a = &m.artifacts["attn_head"];
+        assert_eq!((a.rq["qk_mult"], a.rq["qk_shift"]), (15, 14));
+        assert_eq!((a.rq["av_mult"], a.rq["av_shift"]), (8, 14));
+    }
+
+    #[test]
+    fn runtime_always_constructible() {
+        // tier-1 invariant: a clean checkout with no artifacts and no
+        // network still gets a working runtime (the reference backend)
+        let rt = Runtime::new(&Runtime::default_dir()).expect("runtime");
+        assert!(!rt.names().is_empty());
+        assert!(!rt.backend_name().is_empty());
+    }
+
+    #[test]
+    fn unknown_artifact_is_an_error() {
+        let rt = Runtime::reference();
+        let err = rt.execute("nonexistent", &[]).unwrap_err();
+        assert!(matches!(err, RuntimeError::UnknownArtifact(_)), "{err}");
+        assert!(rt.compile("nonexistent").is_err());
+        assert!(rt.compile("gemm").is_ok());
+    }
+
+    #[test]
+    fn error_display_is_informative() {
+        let e = RuntimeError::UnknownArtifact("foo".to_string());
+        assert!(e.to_string().contains("foo"));
+        let e = RuntimeError::io(
+            "reading x",
+            std::io::Error::new(std::io::ErrorKind::Other, "boom"),
+        );
+        assert!(e.to_string().contains("reading x"));
     }
 }

@@ -1,0 +1,117 @@
+//! The PJRT backend: executes the HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) on the PJRT CPU client
+//! via the `xla` crate. Python is never on this path — the artifacts
+//! are self-contained.
+//!
+//! Compiled only with `--features pjrt`. The workspace vendors an
+//! API-compatible stub of the `xla` crate so this backend always
+//! type-checks offline; executing for real requires swapping in the
+//! actual `xla` crate (and its native XLA runtime), at which point
+//! nothing here changes.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::backend::{validate_inputs, Backend};
+use super::{Manifest, RuntimeError, TensorIn};
+
+/// One PJRT CPU client + compiled executable cache.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtBackend, RuntimeError> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RuntimeError::Backend(format!("pjrt: {e}")))?;
+        Ok(PjrtBackend { client, manifest, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) one artifact.
+    fn executable(&self, name: &str) -> Result<(), RuntimeError> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        let path = self.manifest.dir.join(&entry.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| RuntimeError::Manifest(format!("non-UTF8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| RuntimeError::Backend(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| RuntimeError::Backend(format!("compile {name}: {e}")))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile(&self, artifact: &str) -> Result<(), RuntimeError> {
+        self.executable(artifact)
+    }
+
+    fn execute(
+        &self,
+        artifact: &str,
+        inputs: &[TensorIn],
+    ) -> Result<Vec<Vec<i32>>, RuntimeError> {
+        let entry = self
+            .manifest
+            .artifacts
+            .get(artifact)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(artifact.to_string()))?;
+        validate_inputs(artifact, entry, inputs)?;
+        self.executable(artifact)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(artifact).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let lit = xla::Literal::vec1(t.data);
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+                    .map_err(|e| RuntimeError::Backend(format!("reshape: {e}")))
+            })
+            .collect::<Result<Vec<_>, RuntimeError>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| RuntimeError::Backend(format!("execute {artifact}: {e}")))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| RuntimeError::Backend(format!("to_literal: {e}")))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| RuntimeError::Backend(format!("tuple: {e}")))?;
+        parts
+            .into_iter()
+            .map(|p| {
+                p.to_vec::<i32>()
+                    .map_err(|e| RuntimeError::Backend(format!("to_vec: {e}")))
+            })
+            .collect()
+    }
+
+    fn artifacts_available(&self) -> bool {
+        self.manifest.dir.join("manifest.json").exists()
+    }
+}

@@ -1,0 +1,310 @@
+//! The reference backend: executes the golden path through the
+//! bit-exact [`crate::ita::engine`] functional model.
+//!
+//! This is the default execution target of the runtime. It serves the
+//! same artifact contract aot.py lowers to HLO — the three requantized
+//! GEMM variants, the single attention head, and one full encoder layer
+//! per evaluation network — but computes them with the rust twin of the
+//! Pallas kernels instead of PJRT, so the golden comparison in
+//! `tests/golden_pjrt.rs`, `attn-tinyml verify` and the examples run
+//! offline from a clean checkout. Weights arrive as call inputs (never
+//! synthesized here), so the argument-marshalling contract is exercised
+//! exactly as on the PJRT path.
+
+use super::backend::{validate_inputs, Backend};
+use super::{ArtifactEntry, Manifest, RuntimeError, TensorIn};
+use crate::coordinator::forward::{encoder_layer, weight_shapes, LayerWeights, GELU_S};
+use crate::ita::engine::{attention_head, gemm_rq, Mat};
+use crate::ita::gelu::Act;
+use crate::models;
+
+/// Std-only golden backend over the ITA functional model.
+pub struct ReferenceBackend {
+    manifest: Manifest,
+}
+
+impl ReferenceBackend {
+    /// Backend over the built-in manifest (no disk artifacts needed).
+    pub fn new() -> ReferenceBackend {
+        ReferenceBackend { manifest: Manifest::builtin() }
+    }
+
+    /// Backend over an explicit manifest (e.g. loaded from disk so the
+    /// requant constants match a previously exported artifact set).
+    pub fn with_manifest(manifest: Manifest) -> ReferenceBackend {
+        ReferenceBackend { manifest }
+    }
+
+    fn entry(&self, artifact: &str) -> Result<&ArtifactEntry, RuntimeError> {
+        self.manifest
+            .artifacts
+            .get(artifact)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(artifact.to_string()))
+    }
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile(&self, artifact: &str) -> Result<(), RuntimeError> {
+        // nothing to compile — just check the artifact is known
+        self.entry(artifact).map(|_| ())
+    }
+
+    fn execute(
+        &self,
+        artifact: &str,
+        inputs: &[TensorIn],
+    ) -> Result<Vec<Vec<i32>>, RuntimeError> {
+        let entry = self.entry(artifact)?;
+        validate_inputs(artifact, entry, inputs)?;
+        if let Some(model) = artifact.strip_prefix("encoder_") {
+            return exec_encoder(artifact, model, inputs);
+        }
+        match artifact {
+            "attn_head" => exec_attention(artifact, entry, inputs),
+            name if name.starts_with("gemm") => exec_gemm(artifact, entry, inputs),
+            // present in a (disk-loaded) manifest but outside the
+            // contract this backend emulates — not "unknown"
+            other => Err(RuntimeError::Backend(format!(
+                "artifact {other} is in the manifest but the reference backend \
+                 cannot emulate it (supported: gemm*, attn_head, encoder_*)"
+            ))),
+        }
+    }
+
+    fn artifacts_available(&self) -> bool {
+        true
+    }
+}
+
+/// Interpret a caller tensor as a 2-D matrix.
+fn as_mat(artifact: &str, idx: usize, t: &TensorIn) -> Result<Mat, RuntimeError> {
+    if t.shape.len() != 2 {
+        return Err(RuntimeError::InvalidInput(format!(
+            "{artifact}: input {idx} must be 2-D, got shape {:?}",
+            t.shape
+        )));
+    }
+    Ok(Mat::new(t.shape[0], t.shape[1], t.data.to_vec()))
+}
+
+fn rq_i32(entry: &ArtifactEntry, key: &str) -> Result<i32, RuntimeError> {
+    Ok(entry.rq_i64(key)? as i32)
+}
+
+fn rq_u32(entry: &ArtifactEntry, key: &str) -> Result<u32, RuntimeError> {
+    Ok(entry.rq_i64(key)? as u32)
+}
+
+/// The fused activation of a GEMM artifact: the manifest `act` field
+/// when present, the artifact-name suffix otherwise.
+fn gemm_act(artifact: &str, entry: &ArtifactEntry) -> Act {
+    let tag = entry.act.as_deref().unwrap_or(match artifact {
+        "gemm_relu" => "relu",
+        "gemm_gelu" => "gelu",
+        _ => "identity",
+    });
+    Act::from_str(tag).unwrap_or(Act::Identity)
+}
+
+fn exec_gemm(
+    artifact: &str,
+    entry: &ArtifactEntry,
+    inputs: &[TensorIn],
+) -> Result<Vec<Vec<i32>>, RuntimeError> {
+    let [x, w, bias] = inputs else {
+        return Err(RuntimeError::InvalidInput(format!(
+            "{artifact}: expected (x, w, bias), got {} inputs",
+            inputs.len()
+        )));
+    };
+    let x = as_mat(artifact, 0, x)?;
+    let w = as_mat(artifact, 1, w)?;
+    if x.cols != w.rows || bias.data.len() != w.cols {
+        return Err(RuntimeError::InvalidInput(format!(
+            "{artifact}: x {}x{} / w {}x{} / bias {} dims inconsistent",
+            x.rows,
+            x.cols,
+            w.rows,
+            w.cols,
+            bias.data.len()
+        )));
+    }
+    let mult = rq_i32(entry, "mult")?;
+    let shift = rq_u32(entry, "shift")?;
+    let out = gemm_rq(&x, &w, bias.data, mult, shift, gemm_act(artifact, entry), GELU_S);
+    Ok(vec![out.data])
+}
+
+fn exec_attention(
+    artifact: &str,
+    entry: &ArtifactEntry,
+    inputs: &[TensorIn],
+) -> Result<Vec<Vec<i32>>, RuntimeError> {
+    let [q, k, v] = inputs else {
+        return Err(RuntimeError::InvalidInput(format!(
+            "{artifact}: expected (q, k, v), got {} inputs",
+            inputs.len()
+        )));
+    };
+    let q = as_mat(artifact, 0, q)?;
+    let k = as_mat(artifact, 1, k)?;
+    let v = as_mat(artifact, 2, v)?;
+    if q.cols != k.cols || k.rows != v.rows || q.cols != v.cols {
+        return Err(RuntimeError::InvalidInput(format!(
+            "{artifact}: q {}x{} / k {}x{} / v {}x{} dims inconsistent",
+            q.rows, q.cols, k.rows, k.cols, v.rows, v.cols
+        )));
+    }
+    let (o, _, _) = attention_head(
+        &q,
+        &k,
+        &v,
+        rq_i32(entry, "qk_mult")?,
+        rq_u32(entry, "qk_shift")?,
+        rq_i32(entry, "av_mult")?,
+        rq_u32(entry, "av_shift")?,
+    );
+    Ok(vec![o.data])
+}
+
+/// Encoder artifacts derive their requant constants from the shared
+/// model config (`models::rq_params`, inside `encoder_layer`) — the
+/// same derivation aot.py bakes into the HLO — rather than from the
+/// manifest entry; gemm/attention honor the manifest so a disk-loaded
+/// artifact set keeps its exported constants on the micro kernels.
+fn exec_encoder(
+    artifact: &str,
+    model: &str,
+    inputs: &[TensorIn],
+) -> Result<Vec<Vec<i32>>, RuntimeError> {
+    let cfg = models::by_name(model)
+        .ok_or_else(|| RuntimeError::UnknownArtifact(artifact.to_string()))?;
+    if inputs.len() != 17 {
+        return Err(RuntimeError::InvalidInput(format!(
+            "{artifact}: expected x + 16 weight tensors, got {}",
+            inputs.len()
+        )));
+    }
+    if inputs[0].data.len() != cfg.seq * cfg.emb {
+        return Err(RuntimeError::InvalidInput(format!(
+            "{artifact}: x has {} elements, expected {}x{}",
+            inputs[0].data.len(),
+            cfg.seq,
+            cfg.emb
+        )));
+    }
+    for ((name, shape), t) in weight_shapes(cfg).iter().zip(&inputs[1..]) {
+        let want: usize = shape.iter().product();
+        if t.data.len() != want {
+            return Err(RuntimeError::InvalidInput(format!(
+                "{artifact}: weight {name} has {} elements, expected {want}",
+                t.data.len()
+            )));
+        }
+    }
+    // argument order pinned by forward::WEIGHT_ORDER / the AOT manifest
+    let w = LayerWeights {
+        wq: inputs[1].data.to_vec(),
+        wk: inputs[2].data.to_vec(),
+        wv: inputs[3].data.to_vec(),
+        wo: inputs[4].data.to_vec(),
+        bq: inputs[5].data.to_vec(),
+        bk: inputs[6].data.to_vec(),
+        bv: inputs[7].data.to_vec(),
+        bo: inputs[8].data.to_vec(),
+        w1: inputs[9].data.to_vec(),
+        b1: inputs[10].data.to_vec(),
+        w2: inputs[11].data.to_vec(),
+        b2: inputs[12].data.to_vec(),
+        ln1_g: inputs[13].data.to_vec(),
+        ln1_b: inputs[14].data.to_vec(),
+        ln2_g: inputs[15].data.to_vec(),
+        ln2_b: inputs[16].data.to_vec(),
+    };
+    let x = Mat::new(cfg.seq, cfg.emb, inputs[0].data.to_vec());
+    Ok(vec![encoder_layer(cfg, &x, &w).data])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::util::prng::XorShift64;
+
+    #[test]
+    fn gemm_executes_bit_exactly() {
+        let rt = Runtime::reference();
+        let entry = rt.manifest.artifacts["gemm_relu"].clone();
+        let (mult, shift) = (entry.rq["mult"] as i32, entry.rq["shift"] as u32);
+        let mut rng = XorShift64::new(0xFACE);
+        let x = rng.tensor_i8(128 * 128);
+        let w = rng.tensor_i8(128 * 128);
+        let b: Vec<i32> = (0..128).map(|_| rng.next_range(-2048, 2048)).collect();
+        let got = rt
+            .execute(
+                "gemm_relu",
+                &[
+                    TensorIn { data: &x, shape: vec![128, 128] },
+                    TensorIn { data: &w, shape: vec![128, 128] },
+                    TensorIn { data: &b, shape: vec![128] },
+                ],
+            )
+            .unwrap();
+        let want = gemm_rq(
+            &Mat::new(128, 128, x),
+            &Mat::new(128, 128, w),
+            &b,
+            mult,
+            shift,
+            Act::Relu,
+            GELU_S,
+        );
+        assert_eq!(got[0], want.data);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error_not_a_panic() {
+        let rt = Runtime::reference();
+        let x = vec![0i32; 64];
+        let err = rt
+            .execute("gemm", &[TensorIn { data: &x, shape: vec![128, 128] }])
+            .unwrap_err();
+        assert!(matches!(err, RuntimeError::InvalidInput(_)), "{err}");
+    }
+
+    #[test]
+    fn encoder_requires_full_weight_set() {
+        let rt = Runtime::reference();
+        let cfg = &crate::models::MOBILEBERT;
+        let x = crate::models::synth_input(cfg);
+        let err = rt
+            .execute(
+                "encoder_mobilebert",
+                &[TensorIn { data: &x, shape: vec![cfg.seq, cfg.emb] }],
+            )
+            .unwrap_err();
+        assert!(matches!(err, RuntimeError::InvalidInput(_)), "{err}");
+    }
+
+    #[test]
+    fn backend_reports_itself() {
+        let b = ReferenceBackend::new();
+        assert_eq!(b.name(), "reference");
+        assert!(b.artifacts_available());
+        assert!(b.compile("attn_head").is_ok());
+    }
+}

@@ -428,6 +428,47 @@ mod tests {
     }
 
     #[test]
+    fn escapes_roundtrip_exactly() {
+        // every escape class the serializer emits must survive
+        // parse(to_string(v)) — quotes, backslashes, whitespace
+        // controls, raw control bytes, and multi-byte UTF-8
+        let hairy = "quote:\" backslash:\\ nl:\n cr:\r tab:\t bell:\u{7} nul:\u{0} é➤";
+        let v = Json::Obj(
+            [
+                ("k\"ey".to_string(), Json::Str(hairy.to_string())),
+                ("arr".to_string(), Json::Arr(vec![Json::Str("a\\b/c".into()), Json::Null])),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let compact = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(compact, v);
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(pretty, v);
+        // control characters must be emitted as escapes, never raw
+        assert!(!v.to_string().contains('\u{7}'));
+        assert!(v.to_string().contains("\\u0007"));
+    }
+
+    #[test]
+    fn deep_nesting_roundtrip() {
+        // nested objects inside arrays inside objects, five levels deep
+        let src = r#"{"a":{"b":[{"c":[1,[2,[3,{"d":"x\ny"}]]]}],"e":{}},"f":[]}"#;
+        let j = Json::parse(src).unwrap();
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(Json::parse(&j.to_string_pretty()).unwrap(), j);
+        assert_eq!(
+            j.path(&["a", "b"]).unwrap().as_arr().unwrap()[0]
+                .get("c")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .len(),
+            2
+        );
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());

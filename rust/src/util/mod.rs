@@ -8,27 +8,71 @@ pub mod prng;
 pub mod propcheck;
 
 /// Format a quantity with engineering suffix (k/M/G/T) for reports.
+///
+/// The suffix is chosen on the value as it will *print* at three
+/// decimals, so boundary values never render as four integer digits:
+/// `eng(999.9996)` is `"1.000k"`, not `"1000.000"`. Negative values
+/// carry the sign through unchanged.
 pub fn eng(v: f64) -> String {
-    let (div, suf) = if v.abs() >= 1e12 {
-        (1e12, "T")
-    } else if v.abs() >= 1e9 {
-        (1e9, "G")
-    } else if v.abs() >= 1e6 {
-        (1e6, "M")
-    } else if v.abs() >= 1e3 {
-        (1e3, "k")
-    } else {
-        (1.0, "")
-    };
-    format!("{:.3}{}", v / div, suf)
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    const SUFFIXES: [&str; 5] = ["", "k", "M", "G", "T"];
+    let mut idx = 0;
+    let mut scaled = v;
+    while scaled.abs() >= 1e3 && idx + 1 < SUFFIXES.len() {
+        scaled /= 1e3;
+        idx += 1;
+    }
+    // rounding to three decimals can push the magnitude to exactly
+    // 1000.000 — bump one more tier so the mantissa stays < 1000
+    if (scaled.abs() * 1e3).round() >= 1e6 && idx + 1 < SUFFIXES.len() {
+        scaled /= 1e3;
+        idx += 1;
+    }
+    format!("{scaled:.3}{}", SUFFIXES[idx])
 }
 
 #[cfg(test)]
 mod tests {
+    use super::eng;
+
     #[test]
     fn eng_suffixes() {
-        assert_eq!(super::eng(741.0e9), "741.000G");
-        assert_eq!(super::eng(5.42e12), "5.420T");
-        assert_eq!(super::eng(12.0), "12.000");
+        assert_eq!(eng(741.0e9), "741.000G");
+        assert_eq!(eng(5.42e12), "5.420T");
+        assert_eq!(eng(12.0), "12.000");
+        assert_eq!(eng(0.0), "0.000");
+    }
+
+    #[test]
+    fn eng_exact_boundaries() {
+        assert_eq!(eng(1e3), "1.000k");
+        assert_eq!(eng(1e6), "1.000M");
+        assert_eq!(eng(1e9), "1.000G");
+        assert_eq!(eng(1e12), "1.000T");
+    }
+
+    #[test]
+    fn eng_rounding_never_prints_four_integer_digits() {
+        // just below each boundary, three-decimal rounding used to
+        // produce "1000.000" with no suffix bump
+        assert_eq!(eng(999.9996), "1.000k");
+        assert_eq!(eng(999.9996e3), "1.000M");
+        assert_eq!(eng(999.4), "999.400");
+        assert_eq!(eng(999.99949e9), "999.999G");
+    }
+
+    #[test]
+    fn eng_negative_values() {
+        assert_eq!(eng(-12.0), "-12.000");
+        assert_eq!(eng(-1e3), "-1.000k");
+        assert_eq!(eng(-999.9996), "-1.000k");
+        assert_eq!(eng(-741.0e9), "-741.000G");
+    }
+
+    #[test]
+    fn eng_beyond_tera_saturates_suffix() {
+        assert_eq!(eng(5.0e15), "5000.000T");
     }
 }

@@ -119,4 +119,57 @@ mod tests {
             assert!((700..1300).contains(&c), "bucket count {c}");
         }
     }
+
+    #[test]
+    fn seeds_decorrelate() {
+        // nearby seeds must not produce overlapping streams (splitmix
+        // seeding); identical seeds must (determinism, tested above)
+        let a: Vec<u64> = {
+            let mut r = XorShift64::new(1);
+            (0..64).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = XorShift64::new(2);
+            (0..64).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, b);
+        let common = a.iter().filter(|&v| b.contains(v)).count();
+        assert_eq!(common, 0, "streams share {common} values");
+    }
+
+    #[test]
+    fn tensor_i8_distribution_smoke() {
+        // int8 tensors drive every synthetic workload: the full value
+        // range must appear, both signs roughly balanced, mean near 0
+        let mut r = XorShift64::new(0xD157);
+        let t = r.tensor_i8(64 * 1024);
+        assert!(t.iter().all(|&v| (-128..=127).contains(&v)));
+        assert!(t.contains(&-128) && t.contains(&127), "range endpoints missing");
+        let neg = t.iter().filter(|&&v| v < 0).count() as f64 / t.len() as f64;
+        assert!((0.45..0.55).contains(&neg), "negative fraction {neg}");
+        let mean = t.iter().map(|&v| v as f64).sum::<f64>() / t.len() as f64;
+        assert!(mean.abs() < 1.5, "mean {mean}");
+        // no runaway repetition (a stuck generator repeats one value)
+        let first = t[0];
+        assert!(t.iter().filter(|&&v| v == first).count() < t.len() / 64);
+    }
+
+    #[test]
+    fn next_f64_covers_unit_interval() {
+        let mut r = XorShift64::new(99);
+        let mut lo = 1.0f64;
+        let mut hi = 0.0f64;
+        let mut sum = 0.0;
+        let n = 10_000;
+        for _ in 0..n {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+            lo = lo.min(f);
+            hi = hi.max(f);
+            sum += f;
+        }
+        assert!(lo < 0.01 && hi > 0.99, "range [{lo}, {hi}]");
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
 }

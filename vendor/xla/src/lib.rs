@@ -1,0 +1,148 @@
+//! API-compatible stub of the `xla` crate (the PJRT client surface that
+//! `attn_tinyml`'s `pjrt` runtime backend programs against).
+//!
+//! The offline build environment cannot link the native XLA/PJRT
+//! runtime, so this stub exists to keep the backend *type-checking* and
+//! *linking* without it: every fallible entry point returns
+//! [`Error::Unavailable`] at runtime, and `attn_tinyml` falls back to
+//! its reference backend. To execute HLO artifacts natively, replace
+//! this path dependency with the real `xla` crate (same method names;
+//! see `rust/src/runtime/pjrt.rs` for the exact call surface).
+
+use std::fmt;
+
+/// Stub error: the native XLA/PJRT runtime is not linked.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub cannot perform any real XLA operation.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the native XLA/PJRT runtime \
+                 (replace vendor/xla with the real xla crate)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A host-side literal (tensor value + shape).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::reshape"))
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::decompose_tuple"))
+    }
+
+    /// Copy the literal out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// A parsed HLO module proto.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO *text* file (the artifact interchange format).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device-side buffer returned by execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Transfer the buffer to a host literal, synchronously.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; one result row per device.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("native XLA"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let mut lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.reshape(&[3]).is_err());
+        assert!(lit.decompose_tuple().is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+}
