@@ -7,13 +7,14 @@
 #                    (needs the python environment; the rust side works
 #                    without this — the reference backend is the default)
 #   make check       type-check all feature combinations
+#   make lint        clippy, warnings as errors (same as CI)
 #   make fmt         rustfmt check
 
 CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench artifacts check fmt clean
+.PHONY: build test bench artifacts check lint fmt clean
 
 build:
 	$(CARGO) build --release
@@ -32,6 +33,9 @@ check:
 	$(CARGO) check --all-targets
 	$(CARGO) check --all-targets --no-default-features
 	$(CARGO) check --all-targets --features pjrt
+
+lint:
+	$(CARGO) clippy --all-targets -- -D warnings
 
 fmt:
 	$(CARGO) fmt --check

@@ -8,27 +8,21 @@
 //!   2. HWPE master ports      (bandwidth: <16 ports starves the datapath)
 //!   3. analytic vs Monte-Carlo bank-conflict model (validates 1.)
 //!
+//! Sweep 1 runs fully through the public `Pipeline` API (the bank count
+//! is part of the `ClusterConfig` the pipeline threads everywhere);
+//! sweep 2 reuses the pipeline's compiled deployment under a custom
+//! `TimingModel` — the explicit escape hatch for timing ablations.
+//!
 //!     cargo bench --bench ablation_interconnect
 
-use attn_tinyml::deeploy::{self, Target};
+use attn_tinyml::deeploy::Target;
 use attn_tinyml::energy;
 use attn_tinyml::models::MOBILEBERT;
+use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::sim::tcdm;
 use attn_tinyml::sim::timing::TimingModel;
 use attn_tinyml::sim::{ClusterConfig, Engine};
 use attn_tinyml::util::bench::section;
-
-fn run(engine: &Engine) -> (f64, f64, f64) {
-    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
-    let stats = engine.run(&dep.steps);
-    let rep = energy::evaluate(&stats, engine.cfg.freq_hz);
-    let scale = MOBILEBERT.layers as f64;
-    (
-        MOBILEBERT.gop_per_inference / (rep.seconds * scale),
-        stats.ita_utilization() * 100.0,
-        MOBILEBERT.gop_per_inference / (rep.total_j * scale),
-    )
-}
 
 fn main() {
     let base = ClusterConfig::default();
@@ -36,25 +30,53 @@ fn main() {
     section("1. TCDM bank sweep (paper point: 32 banks)");
     println!("{:>8} {:>12} {:>10} {:>10}", "banks", "GOp/s", "util %", "GOp/J");
     for banks in [8, 16, 32, 64, 128] {
-        let mut cfg = base.clone();
-        cfg.tcdm_banks = banks;
-        cfg.tcdm_bank_bytes = 128 * 1024 / banks; // keep 128 KiB total
-        let engine = Engine::new(cfg);
-        let (gops, util, gopj) = run(&engine);
+        let cluster = ClusterConfig {
+            tcdm_banks: banks,
+            tcdm_bank_bytes: 128 * 1024 / banks, // keep 128 KiB total
+            ..base.clone()
+        };
+        let r = Pipeline::new(cluster)
+            .model(&MOBILEBERT)
+            .target(Target::MultiCoreIta)
+            .layers(1)
+            .compile()
+            .expect("bank sweep keeps the 128 KiB L1")
+            .simulate();
         let mark = if banks == 32 { "  <- paper" } else { "" };
-        println!("{:>8} {:>12.1} {:>10.1} {:>10.0}{mark}", banks, gops, util, gopj);
+        println!(
+            "{:>8} {:>12.1} {:>10.1} {:>10.0}{mark}",
+            banks,
+            r.gops,
+            r.ita_utilization * 100.0,
+            r.gopj
+        );
     }
 
     section("2. HWPE master-port sweep (paper point: 16 ports = 128 B/cy)");
+    // one compiled deployment (the command stream does not depend on the
+    // port count), re-simulated under per-point timing models
+    let compiled = Pipeline::new(base.clone())
+        .model(&MOBILEBERT)
+        .target(Target::MultiCoreIta)
+        .layers(1)
+        .compile()
+        .expect("paper geometry deploys");
+    let scale = MOBILEBERT.layers as f64;
     println!("{:>8} {:>12} {:>10} {:>10}", "ports", "GOp/s", "util %", "GOp/J");
     for ports in [4, 8, 12, 16, 24] {
         let timing = TimingModel::with_ports(&base.ita, base.tcdm_banks, ports);
-        let mut cfg = base.clone();
-        cfg.hwpe_ports = ports;
+        let cfg = ClusterConfig { hwpe_ports: ports, ..base.clone() };
         let engine = Engine::with_timing(cfg, timing);
-        let (gops, util, gopj) = run(&engine);
+        let stats = engine.run(&compiled.deployment().steps);
+        let rep = energy::evaluate(&stats, base.freq_hz);
         let mark = if ports == 16 { "  <- paper" } else { "" };
-        println!("{:>8} {:>12.1} {:>10.1} {:>10.0}{mark}", ports, gops, util, gopj);
+        println!(
+            "{:>8} {:>12.1} {:>10.1} {:>10.0}{mark}",
+            ports,
+            MOBILEBERT.gop_per_inference / (rep.seconds * scale),
+            stats.ita_utilization() * 100.0,
+            MOBILEBERT.gop_per_inference / (rep.total_j * scale)
+        );
     }
     println!("reading: beyond 16 ports nothing improves (the datapath is the");
     println!("limit); below, the streamers starve the MACs — the provisioning");

@@ -5,13 +5,16 @@
 //!   2. dual-context HWPE register file vs exposing the configuration
 //!      latency on every task (Section III-A / IV-D: "preprogram the
 //!      next tile using the dual-context register file"),
-//!   3. MHA fusion on/off (the operator-mapping ablation, also shown per
-//!      model by examples/collab_execution).
+//!   3. codegen granularity (node-level vs per-tile command streams),
+//!   4. MHA fusion on/off via the pipeline's `.fuse_mha(..)` toggle
+//!      (the operator-mapping ablation, also shown per model by
+//!      examples/collab_execution).
 //!
 //!     cargo bench --bench ablation_schedule
 
 use attn_tinyml::deeploy::{self, Target};
 use attn_tinyml::models::{ALL_MODELS, MOBILEBERT};
+use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::sim::{ClusterConfig, Cmd, Engine, Step};
 use attn_tinyml::util::bench::section;
 
@@ -30,12 +33,18 @@ fn serialize(steps: &[Step]) -> Vec<Step> {
 
 fn main() {
     let cluster = ClusterConfig::default();
-    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let compiled = Pipeline::new(cluster.clone())
+        .model(&MOBILEBERT)
+        .target(Target::MultiCoreIta)
+        .layers(1)
+        .compile()
+        .expect("paper geometry deploys");
+    let steps = &compiled.deployment().steps;
 
     section("1. double buffering (MobileBERT, one layer)");
     let engine = Engine::new(cluster.clone());
-    let db = engine.run(&dep.steps);
-    let serial = engine.run(&serialize(&dep.steps));
+    let db = engine.run(steps);
+    let serial = engine.run(&serialize(steps));
     println!("double-buffered : {:>9} cycles, ITA util {:.1}%", db.cycles, db.ita_utilization() * 100.0);
     println!("serialized DMA  : {:>9} cycles, ITA util {:.1}%", serial.cycles, serial.ita_utilization() * 100.0);
     println!("overlap benefit : {:.1}% fewer cycles",
@@ -44,11 +53,11 @@ fn main() {
     section("2. dual-context register file (config-latency hiding)");
     let mut exposed_engine = Engine::new(cluster.clone());
     exposed_engine.expose_config = true;
-    let exposed = exposed_engine.run(&dep.steps);
+    let exposed = exposed_engine.run(steps);
     println!("dual-context    : {:>9} cycles", db.cycles);
     println!("single-context  : {:>9} cycles (+{} exposed config cycles)",
         exposed.cycles, exposed.cycles - db.cycles);
-    let n_tasks = dep.steps.iter()
+    let n_tasks = steps.iter()
         .filter(|s| matches!(s.cmd, Cmd::ItaGemm { .. } | Cmd::ItaAttention { .. }))
         .count();
     println!("                  ({} ITA tasks x 32-cycle configuration)", n_tasks);
@@ -60,9 +69,10 @@ fn main() {
         passes::fuse_mha(&mut g);
         passes::map_operators(&mut g, true);
         let order = schedule::topo_schedule(&g);
-        let plans = tiler::plan_graph(&g);
-        let node_steps = codegen::generate(&g, &order, &plans);
-        let tile_steps = codegen::generate_tiled(&g, &order, &plans);
+        let budget = deeploy::l1_tile_budget(&cluster);
+        let plans = tiler::plan_graph(&g, budget).unwrap();
+        let node_steps = codegen::generate(&g, &order, &plans).unwrap();
+        let tile_steps = codegen::generate_tiled(&g, &order, &plans).unwrap();
         let a = engine.run(&node_steps);
         let b = engine.run(&tile_steps);
         println!("node-level : {:>6} steps, {:>9} cycles", node_steps.len(), a.cycles);
@@ -76,15 +86,19 @@ fn main() {
     section("4. MHA fusion (all models, cycles for one layer)");
     println!("{:<18} {:>12} {:>12} {:>8}", "model", "unfused", "fused", "gain");
     for cfg in ALL_MODELS {
-        let mut g1 = attn_tinyml::models::build_graph_layers(cfg, 1);
-        attn_tinyml::deeploy::passes::map_operators(&mut g1, true);
-        let o1 = attn_tinyml::deeploy::schedule::topo_schedule(&g1);
-        let p1 = attn_tinyml::deeploy::tiler::plan_graph(&g1);
-        let s1 = attn_tinyml::deeploy::codegen::generate(&g1, &o1, &p1);
-        let unfused = engine.run(&s1).cycles;
-
-        let d2 = deeploy::deploy_layers(cfg, Target::MultiCoreIta, 1);
-        let fused = engine.run(&d2.steps).cycles;
+        let run = |fuse: bool| {
+            Pipeline::new(cluster.clone())
+                .model(cfg)
+                .target(Target::MultiCoreIta)
+                .layers(1)
+                .fuse_mha(fuse)
+                .compile()
+                .expect("paper models deploy")
+                .stats()
+                .cycles
+        };
+        let unfused = run(false);
+        let fused = run(true);
         println!(
             "{:<18} {:>12} {:>12} {:>7.2}x",
             cfg.name, unfused, fused,

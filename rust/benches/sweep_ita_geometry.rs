@@ -8,18 +8,20 @@
 //! unit per cycle needs N operand streams), so the TCDM port count must
 //! scale too — the sweep reports the provisioning each point needs.
 //!
+//! Every point runs through the public `Pipeline` API with its own
+//! `ClusterConfig` — the cluster geometry is a first-class input, and
+//! each geometry gets its own cached deployment.
+//!
 //!     cargo bench --bench sweep_ita_geometry
 
-use attn_tinyml::deeploy::{self, Target};
-use attn_tinyml::energy;
+use attn_tinyml::deeploy::Target;
 use attn_tinyml::ita::ItaConfig;
 use attn_tinyml::models::MOBILEBERT;
-use attn_tinyml::sim::{ClusterConfig, Engine};
+use attn_tinyml::pipeline::Pipeline;
+use attn_tinyml::sim::ClusterConfig;
 use attn_tinyml::util::bench::section;
 
 fn main() {
-    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
-
     section("ITA geometry sweep (MobileBERT E2E; paper point: N=16, M=64)");
     println!(
         "{:>5} {:>5} {:>9} {:>11} {:>10} {:>10} {:>11}",
@@ -27,16 +29,17 @@ fn main() {
     );
     for (n, m) in [(8, 64), (16, 32), (16, 64), (16, 128), (32, 64), (64, 64)] {
         let ita = ItaConfig { n_units: n, m_vec: m, ..ItaConfig::default() };
-        let mut cfg = ClusterConfig::default();
         // bandwidth need: two operand vectors per cycle = 2*M bytes for
         // weights + inputs streamed at the datapath rate scaled by N/16
         let ports_needed = (2 * m * n / 64).div_ceil(8).max(4);
-        cfg.hwpe_ports = ports_needed;
-        cfg.ita = ita;
-        let engine = Engine::new(cfg.clone());
-        let stats = engine.run(&dep.steps);
-        let rep = energy::evaluate(&stats, cfg.freq_hz);
-        let scale = MOBILEBERT.layers as f64;
+        let cluster = ClusterConfig { hwpe_ports: ports_needed, ita, ..Default::default() };
+        let r = Pipeline::new(cluster)
+            .model(&MOBILEBERT)
+            .target(Target::MultiCoreIta)
+            .layers(1)
+            .compile()
+            .expect("paper geometry deploys")
+            .simulate();
         let mark = if (n, m) == (16, 64) { "  <- paper" } else { "" };
         println!(
             "{:>5} {:>5} {:>9} {:>11} {:>10.1} {:>10.0} {:>10.1}%{}",
@@ -44,9 +47,9 @@ fn main() {
             m,
             ita.ops_per_cycle(),
             ports_needed,
-            MOBILEBERT.gop_per_inference / (rep.seconds * scale),
-            MOBILEBERT.gop_per_inference / (rep.total_j * scale),
-            stats.ita_duty() * 100.0,
+            r.gops,
+            r.gopj,
+            r.ita_duty * 100.0,
             mark
         );
     }

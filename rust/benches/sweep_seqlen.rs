@@ -4,15 +4,19 @@
 //! the (accelerated) attention and away from the cluster-bound
 //! auxiliaries — the forward-looking argument of the paper's conclusion.
 //!
+//! Each point deploys a custom one-layer encoder config through the
+//! `Pipeline` (model-sourced, so the per-(config, target) deployments
+//! are cached and keyed by the full config, not just the name).
+//!
 //!     cargo bench --bench sweep_seqlen
 
-use attn_tinyml::deeploy::{self, ir::Activation, Target};
-use attn_tinyml::energy;
+use attn_tinyml::deeploy::{ir::Activation, Target};
 use attn_tinyml::models::ModelConfig;
-use attn_tinyml::sim::{ClusterConfig, Engine};
+use attn_tinyml::pipeline::Pipeline;
+use attn_tinyml::sim::ClusterConfig;
 use attn_tinyml::util::bench::section;
 
-fn cfg_for_seq(s: usize) -> ModelConfig {
+fn cfg_for_seq(s: usize, gop: f64) -> ModelConfig {
     ModelConfig {
         name: "sweep",
         seq: s,
@@ -24,14 +28,13 @@ fn cfg_for_seq(s: usize) -> ModelConfig {
         dff: 1536,
         ffn_stack: 1,
         act: Activation::Relu, // isolate attention scaling from the GeLU term
-        gop_per_inference: 0.0,
+        gop_per_inference: gop,
         conv_stem: false,
     }
 }
 
 fn main() {
     let cluster = ClusterConfig::default();
-    let engine = Engine::new(cluster.clone());
 
     section("sequence-length sweep (E=384, H=6, one layer, ReLU FFN)");
     println!(
@@ -39,27 +42,31 @@ fn main() {
         "S", "GOp/layer", "ITA GOp/s", "SW GOp/s", "speedup", "ITA duty"
     );
     for s in [64usize, 128, 256, 512, 1024] {
-        let cfg = cfg_for_seq(s);
+        // the workload GOp comes from the graph itself
         let gop = {
-            let g = attn_tinyml::models::build_graph_layers(&cfg, 1);
+            let g = attn_tinyml::models::build_graph_layers(&cfg_for_seq(s, 0.0), 1);
             g.total_ops() as f64 / 1e9
         };
-        let acc = {
-            let dep = deeploy::deploy_layers(&cfg, Target::MultiCoreIta, 1);
-            let st = engine.run(&dep.steps);
-            (energy::evaluate(&st, cluster.freq_hz), st)
+        let cfg = cfg_for_seq(s, gop);
+        let run = |target| {
+            Pipeline::new(cluster.clone())
+                .model(&cfg)
+                .target(target)
+                .layers(1)
+                .compile()
+                .expect("sweep configs deploy")
+                .simulate()
         };
-        let sw = {
-            let dep = deeploy::deploy_layers(&cfg, Target::MultiCore, 1);
-            let st = engine.run(&dep.steps);
-            energy::evaluate(&st, cluster.freq_hz)
-        };
-        let acc_gops = gop / acc.0.seconds;
-        let sw_gops = gop / sw.seconds;
+        let acc = run(Target::MultiCoreIta);
+        let sw = run(Target::MultiCore);
         println!(
             "{:>6} {:>10.3} {:>12.1} {:>12.2} {:>9.0}x {:>9.1}%",
-            s, gop, acc_gops, sw_gops, acc_gops / sw_gops,
-            acc.1.ita_duty() * 100.0
+            s,
+            gop,
+            acc.gops,
+            sw.gops,
+            acc.gops / sw.gops,
+            acc.ita_duty * 100.0
         );
     }
     println!("\nreading: the accelerated-vs-software gap widens with S (the S^2");

@@ -1,13 +1,21 @@
 //! Regenerates the paper's Table I: end-to-end network performance of
 //! MobileBERT, DINOv2-Small and Whisper-Tiny's encoder on the
-//! multi-core cluster with and without ITA.
+//! multi-core cluster with and without ITA — and measures the
+//! compiled-deployment cache (the second Table I evaluation reuses every
+//! deployment and memoized simulation), emitting a machine-readable
+//! `BENCH_table1.json` so the perf trajectory is recorded.
 //!
 //!     cargo bench --bench table1_e2e
 
-use attn_tinyml::coordinator::{self, run_model_layers};
+use std::time::Instant;
+
+use attn_tinyml::coordinator;
 use attn_tinyml::deeploy::Target;
-use attn_tinyml::models::ALL_MODELS;
+use attn_tinyml::models::MOBILEBERT;
+use attn_tinyml::pipeline::{self, Pipeline};
+use attn_tinyml::sim::ClusterConfig;
 use attn_tinyml::util::bench::{bench, section};
+use attn_tinyml::util::json::Json;
 
 /// Paper Table I reference values: (model, mc_mj, mc_infs, ita_mj, ita_infs).
 const PAPER: [(&str, f64, f64, f64, f64); 3] = [
@@ -18,7 +26,10 @@ const PAPER: [(&str, f64, f64, f64, f64); 3] = [
 
 fn main() {
     section("Table I (top): cluster-level metrics");
+    pipeline::clear_cache();
+    let t_cold = Instant::now();
     let t = coordinator::table1();
+    let cold_s = t_cold.elapsed().as_secs_f64();
     println!("{}", t.render());
 
     section("Table I (bottom): paper vs ours, per network");
@@ -45,11 +56,87 @@ fn main() {
         );
     }
 
+    section("compiled-deployment cache (second Table I evaluation is warm)");
+    let t_warm = Instant::now();
+    let t2 = coordinator::table1();
+    let warm_s = t_warm.elapsed().as_secs_f64();
+    assert_eq!(t.rows.len(), t2.rows.len());
+    let speedup = cold_s / warm_s.max(1e-9);
+    let stats = pipeline::cache_stats();
+    println!("cold table1 : {:>9.3} ms (deploy + simulate, all networks x targets)", cold_s * 1e3);
+    println!("warm table1 : {:>9.3} ms (cache hits: deployments + memoized sims)", warm_s * 1e3);
+    println!("speedup     : {speedup:>9.1}x  (acceptance floor: 5x)");
+    println!(
+        "cache       : {} entries, {} hits, {} misses",
+        stats.entries, stats.hits, stats.misses
+    );
+    assert!(
+        speedup >= 5.0,
+        "cache must make the second table1 evaluation >= 5x faster (got {speedup:.1}x)"
+    );
+
+    // single-pipeline view of the same effect
+    let t0 = Instant::now();
+    let compiled = Pipeline::new(ClusterConfig::default())
+        .model(&MOBILEBERT)
+        .target(Target::MultiCoreIta)
+        .layers(1)
+        .compile()
+        .unwrap();
+    let hit_s = t0.elapsed().as_secs_f64();
+    println!(
+        "cache-hit compile (mobilebert/ita/1 layer): {:.3} ms ({})",
+        hit_s * 1e3,
+        if compiled.was_cached() { "hit" } else { "miss" }
+    );
+
     section("regeneration wall-time (perf pass)");
-    bench("deploy+simulate mobilebert (1 layer, both targets)", 10, || {
-        let a = run_model_layers(&ALL_MODELS[0], Target::MultiCore, 1);
-        let b = run_model_layers(&ALL_MODELS[0], Target::MultiCoreIta, 1);
-        (a.cycles, b.cycles)
+    bench("uncached deploy+simulate mobilebert (both targets)", 10, || {
+        let run = |target| {
+            Pipeline::new(ClusterConfig::default())
+                .model(&MOBILEBERT)
+                .target(target)
+                .layers(1)
+                .uncached()
+                .compile()
+                .unwrap()
+                .simulate()
+                .cycles
+        };
+        (run(Target::MultiCore), run(Target::MultiCoreIta))
     });
-    bench("full table1 (3 models x 2 targets)", 5, coordinator::table1);
+    bench("full table1 (3 models x 2 targets, warm cache)", 5, coordinator::table1);
+
+    // machine-readable record of the run
+    let rows: Vec<Json> = t
+        .rows
+        .iter()
+        .map(|(sw, acc)| {
+            Json::obj(vec![
+                ("model", Json::str(&sw.model)),
+                ("mc_inf_per_s", Json::num(sw.inf_per_s)),
+                ("mc_mj_per_inf", Json::num(sw.mj_per_inf)),
+                ("ita_inf_per_s", Json::num(acc.inf_per_s)),
+                ("ita_mj_per_inf", Json::num(acc.mj_per_inf)),
+                ("ita_gops", Json::num(acc.gops)),
+                ("ita_gopj", Json::num(acc.gopj)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("table1_e2e")),
+        ("rows", Json::Arr(rows)),
+        ("cold_table1_ms", Json::num(cold_s * 1e3)),
+        ("warm_table1_ms", Json::num(warm_s * 1e3)),
+        ("cache_speedup", Json::num(speedup)),
+        ("cache_hit_compile_ms", Json::num(hit_s * 1e3)),
+        ("cache_entries", Json::num(stats.entries as f64)),
+        ("cache_hits", Json::num(stats.hits as f64)),
+        ("cache_misses", Json::num(stats.misses as f64)),
+    ]);
+    let out = "BENCH_table1.json";
+    match std::fs::write(out, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
 }

@@ -4,53 +4,48 @@
 //! together on the shared L1 — ITA for MHA/GEMM, cores for the
 //! auxiliary operators, DMA double-buffering in the shadow.
 //!
-//! The ablation dimensions:
+//! The ablation dimensions, all through the `Pipeline` builder:
 //!   - no ITA at all            (the Table I "Multi-Core" column)
-//!   - ITA but no MHA fusion    (softmax falls back to the cores)
+//!   - ITA but no MHA fusion    (`.fuse_mha(false)`: softmax falls back
+//!                               to the cores)
 //!   - full flow                (the Table I "Multi-Core + ITA" column)
 //!
 //!     cargo run --release --example collab_execution
 
-use attn_tinyml::deeploy::{codegen, passes, schedule, tiler, Target};
-use attn_tinyml::energy;
-use attn_tinyml::models::{self, ALL_MODELS};
-use attn_tinyml::sim::{ClusterConfig, Engine};
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::models::ALL_MODELS;
+use attn_tinyml::pipeline::Pipeline;
+use attn_tinyml::sim::ClusterConfig;
 
 fn main() {
     let cluster = ClusterConfig::default();
-    let engine = Engine::new(cluster.clone());
 
     println!(
         "{:<18} {:<26} {:>10} {:>10} {:>9} {:>8}",
         "model", "configuration", "GOp/s", "GOp/J", "Inf/s", "ITAduty"
     );
     for cfg in ALL_MODELS {
-        for (label, fuse, use_ita) in [
-            ("multi-core only", false, false),
-            ("ITA, unfused softmax", false, true),
-            ("full flow (fused MHA)", true, true),
+        for (label, fuse, target) in [
+            ("multi-core only", false, Target::MultiCore),
+            ("ITA, unfused softmax", false, Target::MultiCoreIta),
+            ("full flow (fused MHA)", true, Target::MultiCoreIta),
         ] {
-            let mut g = models::build_graph_layers(cfg, 1);
-            if fuse {
-                passes::fuse_mha(&mut g);
-            }
-            passes::map_operators(&mut g, use_ita);
-            let order = schedule::topo_schedule(&g);
-            let plans = tiler::plan_graph(&g);
-            let steps = codegen::generate(&g, &order, &plans);
-            let stats = engine.run(&steps);
-            let rep = energy::evaluate(&stats, cluster.freq_hz);
-            let scale = cfg.layers as f64;
-            let seconds = rep.seconds * scale;
-            let energy_j = rep.total_j * scale;
+            let r = Pipeline::new(cluster.clone())
+                .model(cfg)
+                .target(target)
+                .layers(1)
+                .fuse_mha(fuse)
+                .compile()
+                .expect("paper models deploy")
+                .simulate();
             println!(
                 "{:<18} {:<26} {:>10.2} {:>10.1} {:>9.3} {:>7.1}%",
                 cfg.name,
                 label,
-                cfg.gop_per_inference / seconds,
-                cfg.gop_per_inference / energy_j,
-                1.0 / seconds,
-                stats.ita_duty() * 100.0
+                r.gops,
+                r.gopj,
+                r.inf_per_s,
+                r.ita_duty * 100.0
             );
         }
         println!();

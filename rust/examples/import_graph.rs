@@ -1,16 +1,19 @@
 //! Deploy a network from an ONNX-like JSON graph file — the path a
-//! downstream user takes with their own model.
+//! downstream user takes with their own model, through the same
+//! `Pipeline` builder the built-in networks use. Invalid graphs surface
+//! typed `DeployError`s (cycle, ITA constraint, L1 budget, ...), never
+//! panics.
 //!
 //! With no argument, the example exports DINOv2-S to a temp file first
 //! and then deploys from that file, demonstrating the full round trip:
 //!
 //!     cargo run --release --example import_graph [graph.json]
 
-use attn_tinyml::deeploy::{codegen, onnx, passes, schedule, tiler};
-use attn_tinyml::energy;
+use attn_tinyml::deeploy::{onnx, Target};
 use attn_tinyml::models;
+use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::runtime::RuntimeError;
-use attn_tinyml::sim::{ClusterConfig, Engine};
+use attn_tinyml::sim::ClusterConfig;
 use attn_tinyml::util::json::Json;
 
 fn main() -> Result<(), RuntimeError> {
@@ -25,36 +28,27 @@ fn main() -> Result<(), RuntimeError> {
         }
     };
 
-    // import
+    // import (schema errors and structural problems are typed)
     let text = std::fs::read_to_string(&path)?;
     let j = Json::parse(&text)?;
-    let mut g = onnx::import(&j).map_err(RuntimeError::InvalidInput)?;
+    let g = onnx::import(&j)?;
     println!("imported {}: {} tensors, {} nodes", g.name, g.tensors.len(), g.nodes.len());
 
-    // deployment flow
-    let fused = passes::fuse_mha(&mut g);
-    passes::check_ita_constraints(&g).map_err(RuntimeError::InvalidInput)?;
-    passes::map_operators(&mut g, true);
-    println!("fused {fused} attention heads onto ITA");
-
-    let order = schedule::topo_schedule(&g);
-    let plans = tiler::plan_graph(&g);
-    println!("tiling plans for {} ITA operators", plans.len());
-    for (name, p) in plans.iter().take(3) {
-        println!("  {name}: tile {}x{}x{}, {} steps, {} B L1", p.tm, p.tk, p.tn, p.steps, p.l1_bytes);
-    }
-
-    let steps = codegen::generate(&g, &order, &plans);
-    let cluster = ClusterConfig::default();
-    let stats = Engine::new(cluster.clone()).run(&steps);
-    let rep = energy::evaluate(&stats, cluster.freq_hz);
+    // compile + simulate through the builder pipeline
+    let compiled = Pipeline::new(ClusterConfig::default())
+        .graph(g)
+        .target(Target::MultiCoreIta)
+        .compile()?;
+    print!("{}", compiled.report());
+    let r = compiled.simulate();
     println!(
-        "simulated: {} cycles = {:.3} ms, {:.1} GOp/s, {:.0} GOp/J, ITA util {:.1}%",
-        stats.cycles,
-        rep.seconds * 1e3,
-        rep.gops,
-        rep.gopj,
-        stats.ita_utilization() * 100.0
+        "simulated: {} cycles = {:.3} ms, {:.1} GOp/s, {:.0} GOp/J, ITA util {:.1}% @ {:.0} MHz",
+        r.cycles,
+        r.seconds * 1e3,
+        r.gops,
+        r.gopj,
+        r.ita_utilization * 100.0,
+        r.freq_hz / 1e6
     );
     Ok(())
 }

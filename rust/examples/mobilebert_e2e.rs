@@ -16,18 +16,25 @@
 //!
 //!     cargo run --release --example mobilebert_e2e
 
-use attn_tinyml::coordinator::{self, forward};
-use attn_tinyml::deeploy::{self, Target};
+use attn_tinyml::coordinator::forward;
+use attn_tinyml::deeploy::Target;
 use attn_tinyml::ita::engine::Mat;
 use attn_tinyml::models::{self, MOBILEBERT};
+use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::runtime::{Runtime, RuntimeError, TensorIn};
+use attn_tinyml::sim::ClusterConfig;
 
 fn main() -> Result<(), RuntimeError> {
     let cfg = &MOBILEBERT;
+    let cluster = ClusterConfig::default();
 
     // --- 1. deployment flow over the FULL network -----------------------
     println!("[1/3] deployment flow: {} x{} layers", cfg.name, cfg.layers);
-    let dep = deeploy::deploy(cfg, Target::MultiCoreIta);
+    let compiled = Pipeline::new(cluster.clone())
+        .model(cfg)
+        .target(Target::MultiCoreIta)
+        .compile()?;
+    let dep = compiled.deployment();
     println!("      graph nodes   : {}", dep.graph.nodes.len());
     println!("      command steps : {}", dep.steps.len());
     println!("      L1 tile peak  : {} B", dep.l1_peak_bytes);
@@ -35,8 +42,12 @@ fn main() -> Result<(), RuntimeError> {
 
     // --- 2. full-network simulation -------------------------------------
     println!("[2/3] cycle/energy simulation (all {} layers)", cfg.layers);
-    let r = coordinator::run_model_layers(cfg, Target::MultiCoreIta, cfg.layers);
-    let sw = coordinator::run_model_layers(cfg, Target::MultiCore, cfg.layers);
+    let r = compiled.simulate();
+    let sw = Pipeline::new(cluster)
+        .model(cfg)
+        .target(Target::MultiCore)
+        .compile()?
+        .simulate();
     println!("      multi-core     : {:>7.2} GOp/s {:>8.1} GOp/J {:>7.3} Inf/s",
              sw.gops, sw.gopj, sw.inf_per_s);
     println!("      multi-core+ITA : {:>7.2} GOp/s {:>8.1} GOp/J {:>7.2} Inf/s",

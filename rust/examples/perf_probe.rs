@@ -8,7 +8,7 @@ use std::time::Instant;
 use attn_tinyml::*;
 fn main() {
     // L3 simulator throughput: simulated cycles per host second
-    let dep = deeploy::deploy(&models::MOBILEBERT, deeploy::Target::MultiCoreIta);
+    let dep = deeploy::deploy(&models::MOBILEBERT, deeploy::Target::MultiCoreIta).unwrap();
     let engine = sim::Engine::new(sim::ClusterConfig::default());
     let t0 = Instant::now();
     let mut cyc = 0u64;
@@ -17,11 +17,25 @@ fn main() {
     println!("sim: {} steps, {:.2}M simulated cycles in {:.3} ms host = {:.1}G cy/s",
         dep.steps.len(), cyc as f64/1e6, dt*1e3, cyc as f64/dt/1e9);
 
-    // deployment flow wall time (whisper full = biggest graph)
+    // deployment flow wall time (whisper full = biggest graph), then the
+    // pipeline's cached recompile of the same (model, target, geometry)
     let t0 = Instant::now();
-    let d = deeploy::deploy(&models::WHISPER_TINY_ENC, deeploy::Target::MultiCoreIta);
+    let d = deeploy::deploy(&models::WHISPER_TINY_ENC, deeploy::Target::MultiCoreIta).unwrap();
     println!("deploy whisper full: {} nodes -> {} steps in {:.1} ms",
         d.graph.nodes.len(), d.steps.len(), t0.elapsed().as_secs_f64()*1e3);
+    let compile = || pipeline::Pipeline::new(sim::ClusterConfig::default())
+        .model(&models::WHISPER_TINY_ENC)
+        .target(deeploy::Target::MultiCoreIta)
+        .compile()
+        .unwrap();
+    let t0 = Instant::now();
+    let cold = compile();
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let warm = compile();
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!("pipeline compile: cold {:.1} ms (cached: {}), warm {:.3} ms (cached: {})",
+        cold_ms, cold.was_cached(), warm_ms, warm.was_cached());
 
     // functional-model matmul throughput (golden-path hot loop)
     use ita::engine::{matmul_i32, Mat};

@@ -3,9 +3,9 @@
 //!
 //!     cargo run --release --example quickstart
 
-use attn_tinyml::coordinator;
 use attn_tinyml::deeploy::Target;
 use attn_tinyml::models::MOBILEBERT;
+use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::sim::ClusterConfig;
 
 fn main() {
@@ -25,10 +25,18 @@ fn main() {
     println!("  area            : {:.3} mm^2 (HWPE {:.1}%)",
              cluster.area_mm2(), cluster.hwpe_area_fraction() * 100.0);
 
-    // 2. Deploy MobileBERT both ways and compare (paper Table I).
+    // 2. Deploy MobileBERT both ways through the builder pipeline and
+    //    compare (paper Table I). The cluster geometry is an explicit
+    //    input; the compiled deployment is cached for reuse.
     println!("\nMobileBERT ({} GOp/inference)", MOBILEBERT.gop_per_inference);
     for target in [Target::MultiCore, Target::MultiCoreIta] {
-        let r = coordinator::run_model_layers(&MOBILEBERT, target, 1);
+        let r = Pipeline::new(cluster.clone())
+            .model(&MOBILEBERT)
+            .target(target)
+            .layers(1)
+            .compile()
+            .expect("the paper's geometry deploys MobileBERT")
+            .simulate();
         println!(
             "  {:<18} {:>8.2} GOp/s {:>8.1} GOp/J {:>8.2} Inf/s {:>8.2} mJ/Inf",
             r.target_name(),

@@ -10,9 +10,10 @@
 //!
 //!     cargo run --release --example whisper_streaming
 
-use attn_tinyml::coordinator;
 use attn_tinyml::deeploy::Target;
 use attn_tinyml::models::WHISPER_TINY_ENC;
+use attn_tinyml::pipeline::Pipeline;
+use attn_tinyml::sim::ClusterConfig;
 
 fn main() {
     let cfg = &WHISPER_TINY_ENC;
@@ -22,8 +23,17 @@ fn main() {
     println!("whisper-tiny encoder service ({} GOp/chunk, {:.1} s audio/chunk)",
              cfg.gop_per_inference, audio_s_per_chunk);
 
-    let r = coordinator::run_model_layers(cfg, Target::MultiCoreIta, cfg.layers);
-    let sw = coordinator::run_model_layers(cfg, Target::MultiCore, cfg.layers);
+    // deploy once (the compiled deployment is cached), serve many chunks
+    let run = |target| {
+        Pipeline::new(ClusterConfig::default())
+            .model(cfg)
+            .target(target)
+            .compile()
+            .expect("whisper deploys on the paper geometry")
+            .simulate()
+    };
+    let r = run(Target::MultiCoreIta);
+    let sw = run(Target::MultiCore);
 
     let chunks = 64;
     println!("\nserving {chunks} chunks (back-to-back):");

@@ -11,8 +11,10 @@ use crate::ita::engine::{
 use crate::ita::gelu::Act;
 use crate::models::{rq_params, synth_tensor, ModelConfig, SynthKind};
 
-/// The i-GeLU input scale fixed by the L2 model (model.GELU_S).
-pub const GELU_S: f64 = 0.1;
+/// Re-export: the i-GeLU input scale lives with the functional model
+/// (`ita::engine::GELU_S`); kept here for callers that import it from
+/// the forward pass.
+pub use crate::ita::engine::GELU_S;
 
 /// All weights of one encoder layer, generated identically to
 /// `model.synth_layer_weights(cfg, layer_idx, seed=0)`.

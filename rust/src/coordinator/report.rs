@@ -19,6 +19,10 @@ pub struct ModelReport {
     pub cycles: u64,
     pub l1_peak_bytes: usize,
     pub l2_activation_bytes: usize,
+    /// Clock frequency of the cluster geometry this report was
+    /// simulated with — reporting derives labels from it instead of
+    /// hardcoding the paper's 425 MHz.
+    pub freq_hz: f64,
 }
 
 impl ModelReport {

@@ -18,6 +18,7 @@ use std::collections::BTreeMap;
 
 use super::ir::{DType, Executor, Graph, Op, TensorKind};
 use super::tiler::TilePlan;
+use super::DeployError;
 use crate::sim::{Cmd, CoreOp, Step};
 
 /// Generate the command stream for a scheduled, mapped, tiled graph.
@@ -25,7 +26,7 @@ pub fn generate(
     g: &Graph,
     order: &[usize],
     _plans: &BTreeMap<String, TilePlan>,
-) -> Vec<Step> {
+) -> Result<Vec<Step>, DeployError> {
     let mut steps: Vec<Step> = Vec::new();
     // tensor name -> step index that produces it (for dependencies)
     let mut produced_by: BTreeMap<&str, usize> = BTreeMap::new();
@@ -37,7 +38,7 @@ pub fn generate(
     for t in g.tensors.values() {
         if t.kind == TensorKind::Input {
             steps.push(Step::new(
-                Cmd::DmaIn { rows: t.shape[0] as u64, row_bytes: row_bytes(t.shape.as_slice(), t.dtype) },
+                Cmd::DmaIn { rows: out_rows(&t.shape), row_bytes: row_bytes(t.shape.as_slice(), t.dtype) },
                 vec![],
             ));
             input_staged.insert(t.name.as_str(), steps.len() - 1);
@@ -90,7 +91,7 @@ pub fn generate(
                     ));
                     deps.push(steps.len() - 1);
                 }
-                let cmd = ita_cmd(g, ni);
+                let cmd = ita_cmd(g, ni)?;
                 steps.push(Step::new(cmd, deps));
                 ita_history.push(steps.len() - 1);
                 let mut idx = steps.len() - 1;
@@ -105,7 +106,7 @@ pub fn generate(
                 idx
             }
             _ => {
-                let cmd = cluster_cmd(g, ni);
+                let cmd = cluster_cmd(g, ni)?;
                 steps.push(Step::new(cmd, deps));
                 steps.len() - 1
             }
@@ -120,12 +121,12 @@ pub fn generate(
         if t.kind == TensorKind::Output {
             let dep = produced_by.get(t.name.as_str()).copied();
             steps.push(Step::new(
-                Cmd::DmaOut { rows: t.shape[0] as u64, row_bytes: row_bytes(&t.shape, t.dtype) },
+                Cmd::DmaOut { rows: out_rows(&t.shape), row_bytes: row_bytes(&t.shape, t.dtype) },
                 dep.into_iter().collect(),
             ));
         }
     }
-    steps
+    Ok(steps)
 }
 
 fn row_bytes(shape: &[usize], dtype: DType) -> u64 {
@@ -133,10 +134,15 @@ fn row_bytes(shape: &[usize], dtype: DType) -> u64 {
     (row * dtype.bytes()) as u64
 }
 
+/// Leading dim as the DMA row count (1 for rank-0 tensors).
+fn out_rows(shape: &[usize]) -> u64 {
+    shape.first().copied().unwrap_or(1) as u64
+}
+
 /// Lower an ITA-mapped node to its accelerator command.
-fn ita_cmd(g: &Graph, ni: usize) -> Cmd {
+fn ita_cmd(g: &Graph, ni: usize) -> Result<Cmd, DeployError> {
     let node = &g.nodes[ni];
-    match &node.op {
+    Ok(match &node.op {
         Op::Gemm { .. } | Op::MatMul => {
             let a = g.tensor(&node.inputs[0]);
             let b = g.tensor(&node.inputs[1]);
@@ -147,16 +153,21 @@ fn ita_cmd(g: &Graph, ni: usize) -> Cmd {
             let k = g.tensor(&node.inputs[1]);
             Cmd::ItaAttention { s_q: q.shape[0], s_kv: k.shape[0], p: *proj }
         }
-        other => panic!("{}: op {other} not ITA-executable", node.name),
-    }
+        other => {
+            return Err(DeployError::UnsupportedOp {
+                node: node.name.clone(),
+                op: other.to_string(),
+            })
+        }
+    })
 }
 
 /// Lower a cluster-mapped node to a parallel core kernel command.
-fn cluster_cmd(g: &Graph, ni: usize) -> Cmd {
+fn cluster_cmd(g: &Graph, ni: usize) -> Result<Cmd, DeployError> {
     let node = &g.nodes[ni];
     let out = g.tensor(&node.outputs[0]);
     let out_elems = out.elems() as u64;
-    match &node.op {
+    Ok(match &node.op {
         Op::MatMul | Op::Gemm { .. } => {
             let a = g.tensor(&node.inputs[0]);
             let k = *a.shape.last().unwrap() as u64;
@@ -185,7 +196,12 @@ fn cluster_cmd(g: &Graph, ni: usize) -> Cmd {
         Op::HeadAcc { heads } => {
             Cmd::Core { kind: CoreOp::HeadAcc, elems: out_elems * (*heads as u64) }
         }
-        Op::Mha { .. } => panic!("{}: unsplit MHA reached codegen", node.name),
+        Op::Mha { .. } => {
+            return Err(DeployError::UnsupportedOp {
+                node: node.name.clone(),
+                op: format!("{} (unsplit MHA reached codegen)", node.op),
+            })
+        }
         Op::AttentionHead { .. } => {
             // software fallback: QK + softmax + AV as one fused kernel
             let q = g.tensor(&node.inputs[0]);
@@ -195,7 +211,7 @@ fn cluster_cmd(g: &Graph, ni: usize) -> Cmd {
             let kv = kt.shape[0] as u64;
             Cmd::Core { kind: CoreOp::GemmI8, elems: 2 * s * kv * p + s * kv * 4 }
         }
-    }
+    })
 }
 
 /// Tile-granular code generation: instead of one command per ITA node,
@@ -208,7 +224,7 @@ pub fn generate_tiled(
     g: &Graph,
     order: &[usize],
     plans: &BTreeMap<String, TilePlan>,
-) -> Vec<Step> {
+) -> Result<Vec<Step>, DeployError> {
     let mut steps: Vec<Step> = Vec::new();
     let mut produced_by: BTreeMap<&str, usize> = BTreeMap::new();
     let mut input_staged: BTreeMap<&str, usize> = BTreeMap::new();
@@ -217,7 +233,7 @@ pub fn generate_tiled(
         if t.kind == TensorKind::Input {
             steps.push(Step::new(
                 Cmd::DmaIn {
-                    rows: t.shape[0] as u64,
+                    rows: out_rows(&t.shape),
                     row_bytes: row_bytes(t.shape.as_slice(), t.dtype),
                 },
                 vec![],
@@ -289,11 +305,11 @@ pub fn generate_tiled(
                         ));
                         d.push(steps.len() - 1);
                     }
-                    steps.push(Step::new(ita_cmd(g, ni), d));
+                    steps.push(Step::new(ita_cmd(g, ni)?, d));
                     steps.len() - 1
                 }
                 _ => {
-                    steps.push(Step::new(cluster_cmd(g, ni), deps));
+                    steps.push(Step::new(cluster_cmd(g, ni)?, deps));
                     steps.len() - 1
                 }
             }
@@ -308,14 +324,14 @@ pub fn generate_tiled(
             let dep = produced_by.get(t.name.as_str()).copied();
             steps.push(Step::new(
                 Cmd::DmaOut {
-                    rows: t.shape[0] as u64,
+                    rows: out_rows(&t.shape),
                     row_bytes: row_bytes(&t.shape, t.dtype),
                 },
                 dep.into_iter().collect(),
             ));
         }
     }
-    steps
+    Ok(steps)
 }
 
 #[cfg(test)]
@@ -332,8 +348,8 @@ mod tests {
         }
         passes::map_operators(&mut g, use_ita);
         let order = schedule::topo_schedule(&g);
-        let plans = tiler::plan_graph(&g);
-        generate(&g, &order, &plans)
+        let plans = tiler::plan_graph(&g, tiler::L1_BUDGET).unwrap();
+        generate(&g, &order, &plans).unwrap()
     }
 
     #[test]
@@ -395,9 +411,9 @@ mod tests {
         passes::fuse_mha(&mut g);
         passes::map_operators(&mut g, true);
         let order = schedule::topo_schedule(&g);
-        let plans = tiler::plan_graph(&g);
-        let node_steps = generate(&g, &order, &plans);
-        let tile_steps = generate_tiled(&g, &order, &plans);
+        let plans = tiler::plan_graph(&g, tiler::L1_BUDGET).unwrap();
+        let node_steps = generate(&g, &order, &plans).unwrap();
+        let tile_steps = generate_tiled(&g, &order, &plans).unwrap();
         assert!(tile_steps.len() > node_steps.len());
         for (i, s) in tile_steps.iter().enumerate() {
             for &d in &s.deps {

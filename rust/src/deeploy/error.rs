@@ -1,0 +1,133 @@
+//! Typed deployment-flow errors.
+//!
+//! Every failure mode of the deploy→compile surface is a [`DeployError`]
+//! variant: structural graph invalidity, dependency cycles, accelerator
+//! geometry violations, tiles that cannot fit the L1 budget, operators
+//! that cannot be lowered for a target, and import/builder misuse. The
+//! public entry points (`deeploy::deploy_graph`, `Pipeline::compile`)
+//! return `Result<_, DeployError>` — user-supplied graphs never panic
+//! the flow.
+
+use std::fmt;
+
+/// Failure of the deployment flow on a given graph + target + geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DeployError {
+    /// Structurally invalid graph: undeclared tensor, use before
+    /// definition, bad operator arity, wrong tensor rank, or an output
+    /// that is never produced.
+    InvalidGraph {
+        graph: String,
+        reason: String,
+    },
+    /// The node dependencies contain a cycle — no topological schedule
+    /// exists. `scheduled` of `total` nodes were orderable.
+    CyclicGraph {
+        graph: String,
+        scheduled: usize,
+        total: usize,
+    },
+    /// An ITA-mapped operator violates the accelerator's geometric
+    /// tiling constraints (matrix dims must be multiples of the
+    /// datapath quantum).
+    ItaConstraint {
+        node: String,
+        tensor: String,
+        dim: usize,
+    },
+    /// The minimum (single-quantum) tile working set of an operator
+    /// exceeds the L1 bytes available for tile buffers.
+    L1Budget {
+        node: String,
+        required: usize,
+        budget: usize,
+    },
+    /// An operator reached code generation that the assigned executor
+    /// cannot lower (e.g. an unsplit MHA node).
+    UnsupportedOp {
+        node: String,
+        op: String,
+    },
+    /// ONNX-like JSON import failure (syntax is caught earlier by the
+    /// JSON parser; this covers schema violations).
+    Import(String),
+    /// Pipeline builder misuse: no source set, bad layer count, an
+    /// option that does not apply to the source kind.
+    Builder(String),
+}
+
+impl DeployError {
+    /// Attach a node name to an error produced without node context
+    /// (the tile planners work on bare (m, k, n) problems).
+    pub fn with_node(self, name: &str) -> DeployError {
+        match self {
+            DeployError::L1Budget { required, budget, .. } => DeployError::L1Budget {
+                node: name.to_string(),
+                required,
+                budget,
+            },
+            other => other,
+        }
+    }
+}
+
+impl fmt::Display for DeployError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeployError::InvalidGraph { graph, reason } => {
+                write!(f, "invalid graph {graph}: {reason}")
+            }
+            DeployError::CyclicGraph { graph, scheduled, total } => write!(
+                f,
+                "graph {graph} has a dependency cycle ({scheduled}/{total} nodes schedulable)"
+            ),
+            DeployError::ItaConstraint { node, tensor, dim } => write!(
+                f,
+                "{node}: tensor {tensor} dim {dim} not a multiple of the ITA tile \
+                 quantum (pad the model, cf. DINOv2 S=241 -> 256)"
+            ),
+            DeployError::L1Budget { node, required, budget } => write!(
+                f,
+                "{node}: minimum tile working set {required} B exceeds the \
+                 {budget} B L1 tile budget"
+            ),
+            DeployError::UnsupportedOp { node, op } => {
+                write!(f, "{node}: operator {op} cannot be lowered for its executor")
+            }
+            DeployError::Import(m) => write!(f, "graph import: {m}"),
+            DeployError::Builder(m) => write!(f, "pipeline: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DeployError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = DeployError::ItaConstraint {
+            node: "g0".into(),
+            tensor: "x".into(),
+            dim: 100,
+        };
+        let s = e.to_string();
+        assert!(s.contains("g0") && s.contains('x') && s.contains("100"));
+        let e = DeployError::L1Budget { node: "n".into(), required: 999, budget: 10 };
+        assert!(e.to_string().contains("999"));
+    }
+
+    #[test]
+    fn with_node_fills_budget_context() {
+        let e = DeployError::L1Budget { node: String::new(), required: 1, budget: 2 };
+        match e.with_node("gemm0") {
+            DeployError::L1Budget { node, .. } => assert_eq!(node, "gemm0"),
+            other => panic!("unexpected {other:?}"),
+        }
+        // other variants pass through unchanged
+        let e = DeployError::Import("x".into());
+        assert_eq!(e.clone().with_node("n"), e);
+    }
+}

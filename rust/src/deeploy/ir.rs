@@ -9,6 +9,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+use super::DeployError;
+
 /// Element type of a tensor (int8 carried in int32 containers at runtime).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
@@ -46,13 +48,29 @@ pub struct Tensor {
     pub kind: TensorKind,
 }
 
+/// Upper bound on any tensor dim and operator attribute (heads, proj,
+/// kernel, stride) accepted by [`Graph::validate`]. Generous for tinyML
+/// (the largest real dim is 1536) while keeping every downstream size
+/// and op-count computation comfortably inside u64 — hostile imported
+/// graphs cannot provoke arithmetic overflow panics.
+pub const DIM_MAX: usize = 1 << 20;
+/// Upper bound on tensor rank accepted by [`Graph::validate`].
+pub const RANK_MAX: usize = 8;
+/// Upper bound on total elements per tensor accepted by
+/// [`Graph::validate`] (4 Gi elements ≫ any tinyML activation): keeps
+/// byte counts and per-node op counts inside u64 without saturation.
+/// `u64` so the constant also compiles on 32-bit targets.
+pub const ELEMS_MAX: u64 = 1 << 32;
+
 impl Tensor {
     pub fn elems(&self) -> usize {
-        self.shape.iter().product()
+        // saturating: validate bounds dims, but elems() must not panic
+        // even on graphs that have not been validated yet
+        self.shape.iter().fold(1usize, |acc, &d| acc.saturating_mul(d))
     }
 
     pub fn bytes(&self) -> usize {
-        self.elems() * self.dtype.bytes()
+        self.elems().saturating_mul(self.dtype.bytes())
     }
 }
 
@@ -216,9 +234,120 @@ impl Graph {
             .collect()
     }
 
+    /// Reorder `nodes` into the given schedule order (a permutation of
+    /// `0..nodes.len()`, e.g. from [`super::schedule::try_topo_schedule`]).
+    /// Imported graphs may arrive in any node order; reordering first
+    /// lets [`Graph::validate`] check def-before-use meaningfully.
+    pub fn apply_order(&mut self, order: &[usize]) {
+        debug_assert_eq!(order.len(), self.nodes.len());
+        let mut nodes = Vec::with_capacity(self.nodes.len());
+        for &i in order {
+            nodes.push(self.nodes[i].clone());
+        }
+        self.nodes = nodes;
+    }
+
+    /// Minimum input arity + rank requirements the rest of the flow
+    /// (op accounting, tiling, code generation) relies on.
+    fn check_node_shape(&self, node: &Node) -> Result<(), String> {
+        let need = match &node.op {
+            Op::MatMul | Op::Add => 2,
+            Op::Gemm { .. } | Op::Conv1d { .. } | Op::AttentionHead { .. } | Op::Mha { .. } => 3,
+            Op::Softmax
+            | Op::LayerNorm
+            | Op::Requant
+            | Op::Act { .. }
+            | Op::Transpose
+            | Op::Im2col { .. }
+            | Op::HeadAcc { .. } => 1,
+        };
+        if node.inputs.len() < need {
+            return Err(format!(
+                "{}: {} needs >= {need} inputs, has {}",
+                node.name,
+                node.op,
+                node.inputs.len()
+            ));
+        }
+        // matrix operands must be 2-D: the tiler and code generator read
+        // shape[0]/shape[1] of these positions
+        let need_rank2: &[usize] = match &node.op {
+            Op::MatMul | Op::Gemm { .. } | Op::Conv1d { .. } => &[0, 1],
+            Op::AttentionHead { .. } => &[0, 1, 2],
+            Op::Mha { .. } => &[0],
+            _ => &[],
+        };
+        for &pos in need_rank2 {
+            let name = &node.inputs[pos];
+            if let Some(t) = self.tensors.get(name) {
+                if t.shape.len() != 2 {
+                    return Err(format!(
+                        "{}: input {name} must be 2-D, has shape {:?}",
+                        node.name, t.shape
+                    ));
+                }
+            }
+        }
+        // operator attributes are sizes too: bound them like dims so no
+        // downstream size/op-count computation can overflow
+        let attr_ok = |what: &str, v: usize| -> Result<(), String> {
+            if v == 0 || v > DIM_MAX {
+                return Err(format!(
+                    "{}: {what} must be in 1..={DIM_MAX}, got {v}",
+                    node.name
+                ));
+            }
+            Ok(())
+        };
+        match node.op {
+            Op::Conv1d { kernel, stride } | Op::Im2col { kernel, stride } => {
+                return self.check_conv_attrs(node, kernel, stride);
+            }
+            Op::Mha { heads, proj } => {
+                attr_ok("heads", heads)?;
+                attr_ok("proj", proj)?;
+            }
+            Op::AttentionHead { proj } => attr_ok("proj", proj)?,
+            Op::HeadAcc { heads } => attr_ok("heads", heads)?,
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Conv contract: bounded positive kernel/stride, and the weight
+    /// uses the im2col layout (kernel * c_in, c_out) — op accounting
+    /// and the lowering pass both derive the reduction dim from it.
+    fn check_conv_attrs(&self, node: &Node, kernel: usize, stride: usize) -> Result<(), String> {
+        for (what, v) in [("kernel", kernel), ("stride", stride)] {
+            if v == 0 || v > DIM_MAX {
+                return Err(format!(
+                    "{}: {what} must be in 1..={DIM_MAX}, got {v}",
+                    node.name
+                ));
+            }
+        }
+        if let Op::Conv1d { .. } = node.op {
+            let c_in = self.tensors.get(&node.inputs[0]).map(|t| t.shape[1]);
+            let w_rows = self.tensors.get(&node.inputs[1]).map(|t| t.shape[0]);
+            if let (Some(c_in), Some(w_rows)) = (c_in, w_rows) {
+                if kernel.checked_mul(c_in) != Some(w_rows) {
+                    return Err(format!(
+                        "{}: weight rows {w_rows} != kernel {kernel} x c_in {c_in} \
+                         (im2col weight layout)",
+                        node.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Validate: topological order, every input defined before use,
-    /// every referenced tensor declared.
-    pub fn validate(&self) -> Result<(), String> {
+    /// every referenced tensor declared, operator arity/rank sound.
+    pub fn validate(&self) -> Result<(), DeployError> {
+        let fail = |reason: String| -> Result<(), DeployError> {
+            Err(DeployError::InvalidGraph { graph: self.name.clone(), reason })
+        };
         let mut defined: std::collections::BTreeSet<&str> = self
             .tensors
             .values()
@@ -226,52 +355,82 @@ impl Graph {
             .map(|t| t.name.as_str())
             .collect();
         for node in &self.nodes {
+            if node.outputs.is_empty() {
+                return fail(format!("{}: node produces no outputs", node.name));
+            }
             for i in &node.inputs {
                 if !self.tensors.contains_key(i) {
-                    return Err(format!("{}: undeclared tensor {i}", node.name));
+                    return fail(format!("{}: undeclared tensor {i}", node.name));
                 }
                 if !defined.contains(i.as_str()) {
-                    return Err(format!("{}: use of {i} before definition", node.name));
+                    return fail(format!("{}: use of {i} before definition", node.name));
                 }
+            }
+            if let Err(reason) = self.check_node_shape(node) {
+                return fail(reason);
             }
             for o in &node.outputs {
                 if !self.tensors.contains_key(o) {
-                    return Err(format!("{}: undeclared output {o}", node.name));
+                    return fail(format!("{}: undeclared output {o}", node.name));
                 }
                 defined.insert(o);
             }
         }
         for t in self.tensors.values() {
+            if t.shape.len() > RANK_MAX {
+                return fail(format!("tensor {} rank {} > {RANK_MAX}", t.name, t.shape.len()));
+            }
+            if let Some(&d) = t.shape.iter().find(|&&d| d == 0 || d > DIM_MAX) {
+                return fail(format!(
+                    "tensor {} dim {d} outside 1..={DIM_MAX}: {:?}",
+                    t.name, t.shape
+                ));
+            }
+            if t.elems() as u64 > ELEMS_MAX {
+                return fail(format!(
+                    "tensor {} has {} elements (> {ELEMS_MAX}): {:?}",
+                    t.name,
+                    t.elems(),
+                    t.shape
+                ));
+            }
             if t.kind == TensorKind::Output && !defined.contains(t.name.as_str()) {
-                return Err(format!("output {} never produced", t.name));
+                return fail(format!("output {} never produced", t.name));
             }
         }
         Ok(())
     }
 
     /// Total ops (the paper's accounting: 2 ops per MAC, 1 per
-    /// elementwise op, 5 per softmax element).
+    /// elementwise op, 5 per softmax element). Saturating, like
+    /// [`Graph::node_ops`].
     pub fn total_ops(&self) -> u64 {
-        self.nodes.iter().map(|n| self.node_ops(n)).sum()
+        self.nodes
+            .iter()
+            .fold(0u64, |acc, n| acc.saturating_add(self.node_ops(n)))
     }
 
+    /// Op count of one node. Saturating arithmetic throughout: with
+    /// [`DIM_MAX`]-bounded dims the products fit u64 for every real
+    /// graph, and pathological (unvalidated) graphs saturate instead of
+    /// panicking.
     pub fn node_ops(&self, node: &Node) -> u64 {
+        let mul = |a: u64, b: u64| a.saturating_mul(b);
         let out = self.tensor(&node.outputs[0]);
         let out_elems = out.elems() as u64;
         match &node.op {
             Op::MatMul | Op::Gemm { .. } => {
                 let a = self.tensor(&node.inputs[0]);
                 let k = *a.shape.last().unwrap() as u64;
-                2 * out_elems * k
+                mul(mul(2, out_elems), k)
             }
-            Op::Softmax => 5 * out_elems,
-            Op::LayerNorm => 8 * out_elems,
+            Op::Softmax => mul(5, out_elems),
+            Op::LayerNorm => mul(8, out_elems),
             Op::Add | Op::Requant | Op::Act { .. } | Op::Transpose => out_elems,
-            Op::Conv1d { kernel, .. } => {
+            Op::Conv1d { .. } => {
                 // weight layout (k*cin, cout): reduction dim is shape[0]
                 let kcin = self.tensor(&node.inputs[1]).shape[0] as u64;
-                debug_assert_eq!(kcin % *kernel as u64, 0);
-                2 * out_elems * kcin
+                mul(mul(2, out_elems), kcin)
             }
             Op::Im2col { .. } => out_elems,
             Op::Mha { heads, proj } => {
@@ -279,14 +438,14 @@ impl Graph {
                 let s = self.tensor(&node.inputs[0]).shape[0] as u64;
                 let h = *heads as u64;
                 let p = *proj as u64;
-                h * (2 * 2 * s * s * p + 5 * s * s)
+                mul(h, mul(mul(4, mul(s, s)), p).saturating_add(mul(5, mul(s, s))))
             }
             Op::AttentionHead { proj } => {
                 let s = self.tensor(&node.inputs[0]).shape[0] as u64;
                 let p = *proj as u64;
-                2 * 2 * s * s * p + 5 * s * s
+                mul(mul(4, mul(s, s)), p).saturating_add(mul(5, mul(s, s)))
             }
-            Op::HeadAcc { heads } => out_elems * (*heads as u64),
+            Op::HeadAcc { heads } => mul(out_elems, *heads as u64),
         }
     }
 }
@@ -347,5 +506,67 @@ mod tests {
         let g = tiny_graph();
         // 2 * 64*64 outputs * 64 K
         assert_eq!(g.total_ops(), 2 * 64 * 64 * 64);
+    }
+
+    #[test]
+    fn rejects_bad_arity_and_rank() {
+        // MatMul with a single input
+        let mut g = tiny_graph();
+        g.add_tensor("m", &[64, 64], DType::I8, TensorKind::Activation);
+        g.add_node(Node::new("mm", Op::MatMul, &["y"], &["m"]));
+        match g.validate() {
+            Err(DeployError::InvalidGraph { reason, .. }) => {
+                assert!(reason.contains("inputs"), "{reason}")
+            }
+            other => panic!("expected InvalidGraph, got {other:?}"),
+        }
+        // Gemm whose weight operand is 1-D
+        let mut g = tiny_graph();
+        g.tensors.get_mut("w").unwrap().shape = vec![64];
+        assert!(matches!(g.validate(), Err(DeployError::InvalidGraph { .. })));
+    }
+
+    #[test]
+    fn rejects_conv_weight_layout_mismatch() {
+        // weight rows must equal kernel * c_in (im2col layout)
+        let mut g = Graph::new("conv");
+        g.add_tensor("x", &[64, 80], DType::I8, TensorKind::Input);
+        g.add_tensor("w", &[128, 64], DType::I8, TensorKind::Weight); // != 3*80
+        g.add_tensor("b", &[64], DType::I32, TensorKind::Weight);
+        g.add_tensor("y", &[64, 64], DType::I8, TensorKind::Output);
+        g.add_node(Node::new(
+            "c0",
+            Op::Conv1d { kernel: 3, stride: 1 },
+            &["x", "w", "b"],
+            &["y"],
+        ));
+        match g.validate() {
+            Err(DeployError::InvalidGraph { reason, .. }) => {
+                assert!(reason.contains("weight rows"), "{reason}")
+            }
+            other => panic!("expected InvalidGraph, got {other:?}"),
+        }
+        // zero kernel is rejected too
+        g.nodes[0].op = Op::Conv1d { kernel: 0, stride: 1 };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_dim_tensor() {
+        let mut g = tiny_graph();
+        g.tensors.get_mut("b").unwrap().shape = vec![0];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn apply_order_reorders_nodes() {
+        let mut g = tiny_graph();
+        g.add_tensor("y2", &[64, 64], DType::I8, TensorKind::Activation);
+        g.add_node(Node::new("add1", Op::Add, &["y", "x"], &["y2"]));
+        g.nodes.reverse();
+        assert!(g.validate().is_err()); // y consumed before produced
+        g.apply_order(&[1, 0]);
+        g.validate().unwrap();
+        assert_eq!(g.nodes[0].name, "gemm0");
     }
 }

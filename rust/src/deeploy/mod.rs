@@ -12,6 +12,7 @@
 
 pub mod allocator;
 pub mod codegen;
+pub mod error;
 pub mod ir;
 pub mod lifetime;
 pub mod onnx;
@@ -19,11 +20,13 @@ pub mod passes;
 pub mod schedule;
 pub mod tiler;
 
+pub use error::DeployError;
+
 use crate::models::ModelConfig;
-use crate::sim::Step;
+use crate::sim::{ClusterConfig, Step};
 
 /// Deployment target for code generation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Target {
     /// Multi-core cluster only (the paper's baseline column).
     MultiCore,
@@ -42,42 +45,88 @@ pub struct Deployment {
     pub l2_activation_bytes: usize,
 }
 
+/// L1 bytes available to tile buffers for a given cluster geometry:
+/// the TCDM capacity minus the cluster-kernel scratch reserve.
+pub fn l1_tile_budget(cluster: &ClusterConfig) -> usize {
+    cluster.l1_bytes().saturating_sub(tiler::L1_RESERVE)
+}
+
 /// Run the full deployment flow on a model config.
-pub fn deploy(cfg: &ModelConfig, target: Target) -> Deployment {
+pub fn deploy(cfg: &ModelConfig, target: Target) -> Result<Deployment, DeployError> {
     deploy_layers(cfg, target, cfg.layers)
 }
 
 /// Deployment with overridden layer count (fast paths for tests/sweeps).
-pub fn deploy_layers(cfg: &ModelConfig, target: Target, layers: usize) -> Deployment {
+pub fn deploy_layers(
+    cfg: &ModelConfig,
+    target: Target,
+    layers: usize,
+) -> Result<Deployment, DeployError> {
     let graph = crate::models::build_graph_layers(cfg, layers);
     deploy_graph(graph, target)
 }
 
-/// Run the full flow on an arbitrary imported graph.
-pub fn deploy_graph(mut graph: ir::Graph, target: Target) -> Deployment {
-    graph.validate().expect("graph must validate");
+/// Run the full flow on an arbitrary imported graph against the paper's
+/// default cluster geometry.
+pub fn deploy_graph(graph: ir::Graph, target: Target) -> Result<Deployment, DeployError> {
+    deploy_graph_on(graph, target, &ClusterConfig::default())
+}
+
+/// Run the full flow against an explicit cluster geometry (the L1 tile
+/// budget follows the configured TCDM capacity). This is the fallible
+/// core every public entry point (including `Pipeline::compile`) funnels
+/// through: user-supplied graphs return typed [`DeployError`]s instead
+/// of panicking.
+pub fn deploy_graph_on(
+    graph: ir::Graph,
+    target: Target,
+    cluster: &ClusterConfig,
+) -> Result<Deployment, DeployError> {
+    deploy_graph_opts(graph, target, cluster, true)
+}
+
+/// Like [`deploy_graph_on`] with the MHA-fusion pass switchable — the
+/// collaborative-execution ablation measures the flow with ITAMax left
+/// on the cluster cores.
+pub fn deploy_graph_opts(
+    mut graph: ir::Graph,
+    target: Target,
+    cluster: &ClusterConfig,
+    fuse_mha: bool,
+) -> Result<Deployment, DeployError> {
+    // normalize node order first: imported graphs may arrive unordered,
+    // and cycles must surface as CyclicGraph, not a validity error
+    // (already-ordered graphs — the builders, onnx::import output —
+    // schedule to the identity and skip the rebuild)
+    let order = schedule::try_topo_schedule(&graph)?;
+    if order.iter().enumerate().any(|(pos, &node)| pos != node) {
+        graph.apply_order(&order);
+    }
+    graph.validate()?;
     let total_ops = graph.total_ops();
 
     if target == Target::MultiCoreIta {
-        passes::fuse_mha(&mut graph);
-        passes::lower_conv(&mut graph);
-        passes::check_ita_constraints(&graph).expect("tiling constraints");
+        if fuse_mha {
+            passes::fuse_mha(&mut graph);
+        }
+        passes::lower_conv(&mut graph)?;
+        passes::check_ita_constraints(&graph)?;
     }
     passes::map_operators(&mut graph, target == Target::MultiCoreIta);
 
-    let order = schedule::topo_schedule(&graph);
+    let order = schedule::try_topo_schedule(&graph)?;
     let lifetimes = lifetime::analyze(&graph, &order);
     let l2_alloc = allocator::allocate(&lifetimes);
-    let plans = tiler::plan_graph(&graph);
+    let plans = tiler::plan_graph(&graph, l1_tile_budget(cluster))?;
     let l1_peak = plans.values().map(|p| p.l1_bytes).max().unwrap_or(0);
 
-    let steps = codegen::generate(&graph, &order, &plans);
-    Deployment {
+    let steps = codegen::generate(&graph, &order, &plans)?;
+    Ok(Deployment {
         graph,
         target,
         steps,
         total_ops,
         l1_peak_bytes: l1_peak,
         l2_activation_bytes: l2_alloc.peak_bytes,
-    }
+    })
 }

@@ -16,6 +16,7 @@
 //! from a JSON file.
 
 use super::ir::{Activation, DType, Executor, Graph, Node, Op, Tensor, TensorKind};
+use super::DeployError;
 use crate::util::json::Json;
 
 pub fn export(g: &Graph) -> Json {
@@ -109,7 +110,19 @@ fn parse_act(s: &str) -> Result<Activation, String> {
     }
 }
 
-pub fn import(j: &Json) -> Result<Graph, String> {
+/// Import a graph from the ONNX-like JSON schema. Schema violations
+/// surface as [`DeployError::Import`]; the node list is normalized into
+/// topological order (imported graphs may arrive in any order), so
+/// cycles and structural errors surface as their own typed variants.
+pub fn import(j: &Json) -> Result<Graph, DeployError> {
+    let mut g = import_raw(j).map_err(DeployError::Import)?;
+    let order = super::schedule::try_topo_schedule(&g)?;
+    g.apply_order(&order);
+    g.validate()?;
+    Ok(g)
+}
+
+fn import_raw(j: &Json) -> Result<Graph, String> {
     let name = j.get("name").and_then(Json::as_str).ok_or("missing name")?;
     let mut g = Graph::new(name);
     for t in j.get("tensors").and_then(Json::as_arr).ok_or("missing tensors")? {
@@ -179,7 +192,6 @@ pub fn import(j: &Json) -> Result<Graph, String> {
         node.rq2_shift = n.get("rq2_shift").and_then(Json::as_i64).unwrap_or(0) as u32;
         g.add_node(node);
     }
-    g.validate()?;
     Ok(g)
 }
 
@@ -211,6 +223,35 @@ mod tests {
         let j = crate::util::json::Json::parse(&text).unwrap();
         let g2 = import(&j).unwrap();
         assert_eq!(g.nodes.len(), g2.nodes.len());
+    }
+
+    #[test]
+    fn import_normalizes_shuffled_node_order() {
+        let mut g = build_graph_layers(&MOBILEBERT, 1);
+        g.nodes.reverse();
+        let g2 = import(&export(&g)).unwrap();
+        g2.validate().unwrap();
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+        // the first node must again be the layer's leading LayerNorm
+        assert_eq!(g2.nodes[0].name, "L0/ln1.op");
+    }
+
+    #[test]
+    fn import_cyclic_graph_is_typed() {
+        let j = crate::util::json::Json::parse(
+            r#"{"name":"loop","tensors":[
+                {"name":"x","shape":[4,4],"dtype":"i8","kind":"input"},
+                {"name":"a","shape":[4,4],"dtype":"i8","kind":"activation"},
+                {"name":"b","shape":[4,4],"dtype":"i8","kind":"activation"}],
+              "nodes":[
+                {"name":"n0","op":"Add","inputs":["x","b"],"outputs":["a"]},
+                {"name":"n1","op":"Add","inputs":["a","x"],"outputs":["b"]}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            import(&j),
+            Err(crate::deeploy::DeployError::CyclicGraph { .. })
+        ));
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! accelerator model (all matrix dims multiples of the 64-wide datapath).
 
 use super::ir::{Executor, Graph, Node, Op};
+use super::DeployError;
 
 /// Fuse per-head attention chains into `AttentionHead` nodes.
 /// Returns the number of heads fused.
@@ -34,7 +35,8 @@ pub fn fuse_mha(g: &mut Graph) -> usize {
         let out = g.nodes[av_idx].outputs[0].clone();
         let qk_rq = (g.nodes[qk_idx].rq_mult, g.nodes[qk_idx].rq_shift);
         let av_rq = (g.nodes[av_idx].rq_mult, g.nodes[av_idx].rq_shift);
-        let proj = *g.tensor(&v).shape.last().unwrap();
+        // find_head_chain only matches chains whose V is a declared 2-D tensor
+        let proj = g.tensors[&v].shape[1];
         let name = g.nodes[sm_idx].name.replace("sm", "attn").replace(".op", ".fused");
 
         // the fused node replaces the softmax position; drop the others
@@ -63,31 +65,45 @@ pub fn fuse_mha(g: &mut Graph) -> usize {
 /// av-matmul) node indices.
 fn find_head_chain(g: &Graph) -> Option<(usize, usize, usize, usize)> {
     for (sm_idx, sm) in g.nodes.iter().enumerate() {
-        if sm.op != Op::Softmax {
+        if sm.op != Op::Softmax || sm.inputs.is_empty() || sm.outputs.is_empty() {
             continue;
         }
         // producer of the softmax input must be a MatMul
-        let qk_idx = g.producer(&sm.inputs[0])?;
-        if g.nodes[qk_idx].op != Op::MatMul {
+        let Some(qk_idx) = g.producer(&sm.inputs[0]) else {
+            continue;
+        };
+        if g.nodes[qk_idx].op != Op::MatMul || g.nodes[qk_idx].inputs.len() < 2 {
             continue;
         }
-        // whose second input comes from a Transpose
+        // whose second input comes from a Transpose of a 2-D K (the
+        // fused node's K operand: the tiler/codegen read its shape[0])
         let t_idx = match g.producer(&g.nodes[qk_idx].inputs[1]) {
-            Some(i) if g.nodes[i].op == Op::Transpose => i,
+            Some(i) if g.nodes[i].op == Op::Transpose && !g.nodes[i].inputs.is_empty() => i,
             _ => continue,
         };
+        match g.tensors.get(&g.nodes[t_idx].inputs[0]) {
+            Some(k) if k.shape.len() == 2 => {}
+            _ => continue,
+        }
         // the softmax output must feed exactly one MatMul (A x V)
         let consumers = g.consumers(&sm.outputs[0]);
         if consumers.len() != 1 {
             continue;
         }
         let av_idx = consumers[0];
-        if g.nodes[av_idx].op != Op::MatMul {
+        if g.nodes[av_idx].op != Op::MatMul
+            || g.nodes[av_idx].inputs.len() < 2
+            || g.nodes[av_idx].outputs.is_empty()
+        {
             continue;
         }
-        // A must be the left operand
+        // A must be the left operand, V a declared 2-D tensor
         if g.nodes[av_idx].inputs[0] != sm.outputs[0] {
             continue;
+        }
+        match g.tensors.get(&g.nodes[av_idx].inputs[1]) {
+            Some(v) if v.shape.len() == 2 => {}
+            _ => continue,
         }
         return Some((t_idx, qk_idx, sm_idx, av_idx));
     }
@@ -97,7 +113,10 @@ fn find_head_chain(g: &Graph) -> Option<(usize, usize, usize, usize)> {
 /// Lower Conv1d to im2col + GEMM so the accelerator can run it (the
 /// deployment flow maps Linear layers to ITA; the im2col rearrangement
 /// is a strided copy on the cluster). Returns the number lowered.
-pub fn lower_conv(g: &mut Graph) -> usize {
+/// The graph must have passed [`Graph::validate`] (arity/rank); this
+/// re-checks cheaply and returns [`DeployError::InvalidGraph`] instead
+/// of panicking on a malformed conv.
+pub fn lower_conv(g: &mut Graph) -> Result<usize, DeployError> {
     let mut lowered = 0;
     loop {
         let Some(idx) = g
@@ -112,12 +131,19 @@ pub fn lower_conv(g: &mut Graph) -> usize {
             _ => unreachable!(),
         };
         let node = g.nodes[idx].clone();
+        if node.inputs.len() < 3 || node.outputs.is_empty() {
+            return Err(DeployError::InvalidGraph {
+                graph: g.name.clone(),
+                reason: format!("{}: Conv1d needs x, w, b inputs", node.name),
+            });
+        }
         let x = node.inputs[0].clone();
         let w = node.inputs[1].clone();
         let b = node.inputs[2].clone();
         let out = node.outputs[0].clone();
-        let t_out = g.tensor(&out).shape[0];
-        let c_in = g.tensor(&x).shape[1];
+        let t_out = dim_of(g, &node.name, &out, 0)?;
+        let c_in = dim_of(g, &node.name, &x, 1)?;
+        let cout = dim_of(g, &node.name, &w, 1)?;
         // pad the im2col reduction dim to ITA's 64 quantum; the padded
         // columns are zero and contribute nothing
         let kcin = (kernel * c_in).div_ceil(64) * 64;
@@ -126,7 +152,6 @@ pub fn lower_conv(g: &mut Graph) -> usize {
                      crate::deeploy::ir::TensorKind::Activation);
         // padded weight view
         let wpad = format!("{}.wpad", node.name);
-        let cout = g.tensor(&w).shape[1];
         g.add_tensor(&wpad, &[kcin, cout], crate::deeploy::ir::DType::I8,
                      crate::deeploy::ir::TensorKind::Weight);
 
@@ -149,7 +174,19 @@ pub fn lower_conv(g: &mut Graph) -> usize {
         g.nodes.insert(idx, im2col);
         lowered += 1;
     }
-    lowered
+    Ok(lowered)
+}
+
+/// Dimension `axis` of tensor `name`, or a typed error naming the node.
+fn dim_of(g: &Graph, node: &str, name: &str, axis: usize) -> Result<usize, DeployError> {
+    g.tensors
+        .get(name)
+        .and_then(|t| t.shape.get(axis))
+        .copied()
+        .ok_or_else(|| DeployError::InvalidGraph {
+            graph: g.name.clone(),
+            reason: format!("{node}: tensor {name} needs dim {axis}"),
+        })
 }
 
 /// Assign executors bottom-up: ITA takes what its accelerator model
@@ -174,21 +211,26 @@ pub fn ita_supports(op: &Op) -> bool {
 
 /// Geometric tiling constraints: every ITA-eligible operator must have
 /// matrix dims compatible with the 64-wide datapath after padding.
-pub fn check_ita_constraints(g: &Graph) -> Result<(), String> {
+pub fn check_ita_constraints(g: &Graph) -> Result<(), DeployError> {
     for node in &g.nodes {
         if !ita_supports(&node.op) {
             continue;
         }
         for tname in node.inputs.iter().chain(node.outputs.iter()) {
-            let t = g.tensor(tname);
+            let Some(t) = g.tensors.get(tname) else {
+                return Err(DeployError::InvalidGraph {
+                    graph: g.name.clone(),
+                    reason: format!("{}: undeclared tensor {tname}", node.name),
+                });
+            };
             if t.shape.len() == 2 {
                 for &d in &t.shape {
                     if d % 64 != 0 {
-                        return Err(format!(
-                            "{}: tensor {tname} dim {d} not a multiple of 64 \
-                             (pad the model, cf. DINOv2 S=241 -> 256)",
-                            node.name
-                        ));
+                        return Err(DeployError::ItaConstraint {
+                            node: node.name.clone(),
+                            tensor: tname.clone(),
+                            dim: d,
+                        });
                     }
                 }
             }
@@ -299,14 +341,19 @@ mod tests {
             &["x", "w", "b"],
             &["y"],
         ));
-        assert!(check_ita_constraints(&g).is_err());
+        match check_ita_constraints(&g) {
+            Err(DeployError::ItaConstraint { tensor, dim, .. }) => {
+                assert_eq!((tensor.as_str(), dim), ("x", 100));
+            }
+            other => panic!("expected ItaConstraint, got {other:?}"),
+        }
     }
 
     #[test]
     fn lower_conv_produces_padded_gemm() {
         let mut g = crate::models::build_stem_graph(&crate::models::WHISPER_TINY_ENC)
             .unwrap();
-        let n = lower_conv(&mut g);
+        let n = lower_conv(&mut g).unwrap();
         assert_eq!(n, 2);
         g.validate().unwrap();
         assert!(!g.nodes.iter().any(|x| matches!(x.op, Op::Conv1d { .. })));

@@ -8,10 +8,14 @@
 use std::collections::BTreeMap;
 
 use super::ir::Graph;
+use super::DeployError;
 
 /// Compute a topological execution order (indices into g.nodes).
-/// Deterministic: among ready nodes, lowest original index first.
-pub fn topo_schedule(g: &Graph) -> Vec<usize> {
+/// Deterministic: among ready nodes, lowest original index first —
+/// so an already-topologically-ordered node list schedules to the
+/// identity permutation. Returns [`DeployError::CyclicGraph`] when the
+/// dependencies contain a cycle.
+pub fn try_topo_schedule(g: &Graph) -> Result<Vec<usize>, DeployError> {
     let n = g.nodes.len();
     // tensor -> producer node
     let mut producer: BTreeMap<&str, usize> = BTreeMap::new();
@@ -47,8 +51,21 @@ pub fn topo_schedule(g: &Graph) -> Vec<usize> {
             }
         }
     }
-    assert_eq!(order.len(), n, "cycle in graph {}", g.name);
-    order
+    if order.len() != n {
+        return Err(DeployError::CyclicGraph {
+            graph: g.name.clone(),
+            scheduled: order.len(),
+            total: n,
+        });
+    }
+    Ok(order)
+}
+
+/// Schedule a graph known to be acyclic (the built-in model builders).
+/// Panics on a cycle — user-supplied graphs go through
+/// [`try_topo_schedule`] / `deeploy::deploy_graph` instead.
+pub fn topo_schedule(g: &Graph) -> Vec<usize> {
+    try_topo_schedule(g).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Check that `order` is a valid topological order of `g`.
@@ -111,6 +128,32 @@ mod tests {
     fn deterministic() {
         let g = build_graph_layers(&MOBILEBERT, 1);
         assert_eq!(topo_schedule(&g), topo_schedule(&g));
+    }
+
+    #[test]
+    fn ordered_graph_schedules_to_identity() {
+        // builders emit topological order; min-index Kahn must keep it
+        let g = build_graph_layers(&MOBILEBERT, 1);
+        let order = try_topo_schedule(&g).unwrap();
+        assert!(order.iter().enumerate().all(|(p, &i)| p == i));
+    }
+
+    #[test]
+    fn cycle_is_a_typed_error() {
+        use crate::deeploy::ir::{DType, Graph, Node, Op, TensorKind};
+        use crate::deeploy::DeployError;
+        let mut g = Graph::new("loop");
+        g.add_tensor("x", &[4, 4], DType::I8, TensorKind::Input);
+        g.add_tensor("a", &[4, 4], DType::I8, TensorKind::Activation);
+        g.add_tensor("b", &[4, 4], DType::I8, TensorKind::Activation);
+        g.add_node(Node::new("n0", Op::Add, &["x", "b"], &["a"]));
+        g.add_node(Node::new("n1", Op::Add, &["a", "x"], &["b"]));
+        match try_topo_schedule(&g) {
+            Err(DeployError::CyclicGraph { scheduled, total, .. }) => {
+                assert_eq!((scheduled, total), (0, 2));
+            }
+            other => panic!("expected CyclicGraph, got {other:?}"),
+        }
     }
 
     #[test]

@@ -9,12 +9,16 @@
 use std::collections::BTreeMap;
 
 use super::ir::{Executor, Graph, Op};
+use super::DeployError;
 
 /// ITA datapath tile quantum.
 pub const TILE_Q: usize = 64;
-/// L1 budget available to tile buffers: total 128 KiB minus a reserve
-/// for cluster-kernel scratch + stack (16 KiB).
-pub const L1_BUDGET: usize = 128 * 1024 - 16 * 1024;
+/// L1 bytes reserved for cluster-kernel scratch + stack.
+pub const L1_RESERVE: usize = 16 * 1024;
+/// Default L1 budget available to tile buffers: the paper's 128 KiB
+/// TCDM minus [`L1_RESERVE`]. Geometry-aware callers derive the budget
+/// from their `ClusterConfig` instead (`deeploy::l1_tile_budget`).
+pub const L1_BUDGET: usize = 128 * 1024 - L1_RESERVE;
 
 /// Tiling decision for one operator.
 #[derive(Debug, Clone, PartialEq)]
@@ -40,15 +44,22 @@ fn ceil_div(a: usize, b: usize) -> usize {
     a.div_ceil(b)
 }
 
-/// Plan a GEMM-like operator of logical dims (m, k, n).
-pub fn plan_gemm(m: usize, k: usize, n: usize, budget: usize) -> TilePlan {
+/// Plan a GEMM-like operator of logical dims (m, k, n). Errors when
+/// even a single-quantum tile cannot fit the budget.
+pub fn plan_gemm(m: usize, k: usize, n: usize, budget: usize) -> Result<TilePlan, DeployError> {
     // tile = [tm, tk, tn]; caps are the dims padded to the quantum.
     // Grow greedily, preferring the reduction dim (weight reuse), then n
     // (output columns stream), then m.
     let caps = [ceil_div(m, TILE_Q) * TILE_Q, ceil_div(k, TILE_Q) * TILE_Q, ceil_div(n, TILE_Q) * TILE_Q];
     let mut t = [TILE_Q; 3];
     let bytes = |t: &[usize; 3]| gemm_tile_bytes(t[0], t[1], t[2]);
-    assert!(bytes(&t) <= budget, "minimum tile exceeds L1 budget");
+    if bytes(&t) > budget {
+        return Err(DeployError::L1Budget {
+            node: String::new(),
+            required: bytes(&t),
+            budget,
+        });
+    }
     loop {
         let mut grew = false;
         for idx in [1usize, 2, 0] {
@@ -67,27 +78,41 @@ pub fn plan_gemm(m: usize, k: usize, n: usize, budget: usize) -> TilePlan {
     }
     let [tm, tk, tn] = t;
     let steps = (ceil_div(m, tm) * ceil_div(k, tk) * ceil_div(n, tn)) as u64;
-    TilePlan { tm, tk, tn, steps, l1_bytes: bytes(&t) }
+    Ok(TilePlan { tm, tk, tn, steps, l1_bytes: bytes(&t) })
 }
 
 /// Plan an attention head (S_q x S_kv x P): Q stays resident, K/V tiles
-/// stream, the quantized QK row block is held for the AV phase.
-pub fn plan_attention(s_q: usize, s_kv: usize, p: usize, budget: usize) -> TilePlan {
+/// stream, the quantized QK row block is held for the AV phase. Errors
+/// when even a single row block cannot fit (long sequences on a small
+/// L1 — the geometry-dependent failure mode).
+pub fn plan_attention(
+    s_q: usize,
+    s_kv: usize,
+    p: usize,
+    budget: usize,
+) -> Result<TilePlan, DeployError> {
     // working set for a query row-block of tq rows:
     //   Q block (tq x p) + 2x K tile (64 x p) + 2x V tile (64 x p)
     //   + QK row block (tq x s_kv) + output (tq x p)
     let mut tq = TILE_Q;
     let bytes = |tq: usize| tq * p + 4 * TILE_Q * p + tq * s_kv + tq * p;
-    assert!(bytes(TILE_Q) <= budget, "attention row block exceeds L1");
+    if bytes(TILE_Q) > budget {
+        return Err(DeployError::L1Budget {
+            node: String::new(),
+            required: bytes(TILE_Q),
+            budget,
+        });
+    }
     while tq < s_q && bytes(tq + TILE_Q) <= budget {
         tq += TILE_Q;
     }
     let steps = (ceil_div(s_q, tq) * ceil_div(s_kv, TILE_Q)) as u64;
-    TilePlan { tm: tq, tk: TILE_Q, tn: p, steps, l1_bytes: bytes(tq) }
+    Ok(TilePlan { tm: tq, tk: TILE_Q, tn: p, steps, l1_bytes: bytes(tq) })
 }
 
-/// Plan every ITA-mapped node of a graph. Keyed by node name.
-pub fn plan_graph(g: &Graph) -> BTreeMap<String, TilePlan> {
+/// Plan every ITA-mapped node of a graph under an explicit L1 tile
+/// budget (derived from the cluster geometry). Keyed by node name.
+pub fn plan_graph(g: &Graph, budget: usize) -> Result<BTreeMap<String, TilePlan>, DeployError> {
     let mut plans = BTreeMap::new();
     for node in &g.nodes {
         if node.executor != Executor::Ita {
@@ -100,18 +125,19 @@ pub fn plan_graph(g: &Graph) -> BTreeMap<String, TilePlan> {
                 let m = a.shape[0];
                 let k = a.shape[1];
                 let n = b.shape[1];
-                plan_gemm(m, k, n, L1_BUDGET)
+                plan_gemm(m, k, n, budget)
             }
             Op::AttentionHead { proj } => {
                 let q = g.tensor(&node.inputs[0]);
                 let k = g.tensor(&node.inputs[1]);
-                plan_attention(q.shape[0], k.shape[0], *proj, L1_BUDGET)
+                plan_attention(q.shape[0], k.shape[0], *proj, budget)
             }
             _ => continue,
-        };
+        }
+        .map_err(|e| e.with_node(&node.name))?;
         plans.insert(node.name.clone(), plan);
     }
-    plans
+    Ok(plans)
 }
 
 #[cfg(test)]
@@ -121,14 +147,31 @@ mod tests {
 
     #[test]
     fn small_gemm_single_tile() {
-        let p = plan_gemm(64, 64, 64, L1_BUDGET);
+        let p = plan_gemm(64, 64, 64, L1_BUDGET).unwrap();
         assert_eq!(p.steps, 1);
         assert_eq!((p.tm, p.tk, p.tn), (64, 64, 64));
     }
 
     #[test]
+    fn over_budget_is_a_typed_error() {
+        use crate::deeploy::DeployError;
+        match plan_gemm(64, 64, 64, 1024) {
+            Err(DeployError::L1Budget { required, budget, .. }) => {
+                assert!(required > budget);
+                assert_eq!(budget, 1024);
+            }
+            other => panic!("expected L1Budget, got {other:?}"),
+        }
+        // a 4096-long KV sequence cannot hold a row block in 16 KiB
+        assert!(matches!(
+            plan_attention(4096, 4096, 64, 16 * 1024),
+            Err(DeployError::L1Budget { .. })
+        ));
+    }
+
+    #[test]
     fn large_gemm_fits_budget() {
-        let p = plan_gemm(512, 1536, 384, L1_BUDGET);
+        let p = plan_gemm(512, 1536, 384, L1_BUDGET).unwrap();
         assert!(p.l1_bytes <= L1_BUDGET, "bytes {}", p.l1_bytes);
         assert!(p.steps >= 1);
         // tiles must be quantized
@@ -140,7 +183,7 @@ mod tests {
     #[test]
     fn attention_plans_for_paper_models() {
         for (s, p) in [(128, 64), (256, 64), (512, 64)] {
-            let plan = plan_attention(s, s, p, L1_BUDGET);
+            let plan = plan_attention(s, s, p, L1_BUDGET).unwrap();
             assert!(plan.l1_bytes <= L1_BUDGET, "S={s}: {}", plan.l1_bytes);
             assert!(plan.steps >= 1);
         }
@@ -171,7 +214,8 @@ mod tests {
                 c
             },
             |&(m, k, n)| {
-                let p = plan_gemm(m, k, n, L1_BUDGET);
+                let p = plan_gemm(m, k, n, L1_BUDGET)
+                    .map_err(|e| format!("planner error: {e}"))?;
                 if p.l1_bytes > L1_BUDGET {
                     return Err(format!("over budget: {}", p.l1_bytes));
                 }
@@ -193,7 +237,7 @@ mod tests {
             let mut g = crate::models::build_graph_layers(cfg, 1);
             passes::fuse_mha(&mut g);
             passes::map_operators(&mut g, true);
-            let plans = plan_graph(&g);
+            let plans = plan_graph(&g, L1_BUDGET).unwrap();
             assert!(!plans.is_empty());
             for (name, p) in &plans {
                 assert!(p.l1_bytes <= L1_BUDGET, "{name}: {}", p.l1_bytes);

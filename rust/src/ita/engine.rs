@@ -9,6 +9,13 @@ use super::gelu::{self, Act, GeluConsts};
 use super::quant::{clip_i8, requant};
 use super::softmax;
 
+/// The i-GeLU input scale fixed by the quantized L2 model
+/// (`python/compile/model.py::GELU_S`). Every caller that feeds
+/// [`gemm_rq`] a GeLU activation must pass this same scale — the golden
+/// checks compare backend output against the functional model built
+/// from it, so both sides of the comparison reference this constant.
+pub const GELU_S: f64 = 0.1;
+
 /// Row-major int32 matrix carrying int8/intermediate values.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {

@@ -12,16 +12,25 @@
 //!   the bit-exact ITA functional model (`ita`), the golden `runtime`
 //!   with pluggable execution backends (the std-only reference backend
 //!   by default, PJRT/XLA behind `--features pjrt`), and the
-//!   orchestrating `coordinator`.
+//!   builder-style [`Pipeline`] compile surface over the
+//!   deploy→simulate→verify seam (typed `DeployError`s, explicit
+//!   cluster geometry, compiled-deployment caching), driven by the
+//!   `coordinator` and CLI.
 //!
 //! See DESIGN.md for the full system inventory and experiment index,
 //! and README.md for build/run instructions.
+
+// Lint policy (including the deliberate allows for hardware-mirroring
+// loop nests) lives in [workspace.lints.clippy] in the root Cargo.toml.
 
 pub mod coordinator;
 pub mod deeploy;
 pub mod energy;
 pub mod ita;
 pub mod models;
+pub mod pipeline;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+
+pub use pipeline::{Compiled, Pipeline};

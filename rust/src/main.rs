@@ -11,12 +11,14 @@
 //! Examples:
 //!   attn-tinyml table1
 //!   attn-tinyml simulate --model mobilebert --target ita
+//!   attn-tinyml simulate --model dinov2s --freq-mhz 500 --banks 64
 //!   attn-tinyml verify --artifacts artifacts
 //!   attn-tinyml deploy --model dinov2s
 
-use attn_tinyml::coordinator::{self, forward};
-use attn_tinyml::deeploy::{self, Target};
+use attn_tinyml::coordinator;
+use attn_tinyml::deeploy::Target;
 use attn_tinyml::models;
+use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::runtime::{Runtime, RuntimeError, TensorIn};
 use attn_tinyml::sim::{ClusterConfig, Cmd, Engine, Step};
 use attn_tinyml::util::cli::Args;
@@ -60,6 +62,35 @@ fn target_flag(args: &Args) -> Target {
     }
 }
 
+/// Cluster geometry from CLI flags: the paper's default, with the
+/// frequency (and TCDM banking) overridable so reports derive from the
+/// geometry actually simulated.
+fn cluster_flag(args: &Args) -> Result<ClusterConfig> {
+    let mut cluster = ClusterConfig::default();
+    if let Some(raw) = args.flag("freq-mhz") {
+        let mhz: f64 = raw.parse().map_err(|_| {
+            RuntimeError::Usage(format!("--freq-mhz expects a number, got {raw:?}"))
+        })?;
+        if !mhz.is_finite() || mhz <= 0.0 {
+            return Err(RuntimeError::Usage(format!(
+                "--freq-mhz must be a positive frequency, got {mhz}"
+            )));
+        }
+        cluster.freq_hz = mhz * 1e6;
+    }
+    if let Some(raw) = args.flag("banks") {
+        let banks: usize = raw.parse().map_err(|_| {
+            RuntimeError::Usage(format!("--banks expects an integer, got {raw:?}"))
+        })?;
+        if banks == 0 {
+            return Err(RuntimeError::Usage("--banks must be >= 1".to_string()));
+        }
+        cluster.tcdm_bank_bytes = cluster.l1_bytes() / banks;
+        cluster.tcdm_banks = banks;
+    }
+    Ok(cluster)
+}
+
 fn cmd_table1() -> Result<()> {
     println!("{}", coordinator::table1().render());
     Ok(())
@@ -69,10 +100,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = model_flag(args)?;
     let target = target_flag(args);
     let layers = args.flag_usize("layers", 1);
-    let r = coordinator::run_model_layers(cfg, target, layers);
+    let compiled = Pipeline::new(cluster_flag(args)?)
+        .model(cfg)
+        .target(target)
+        .layers(layers)
+        .compile()?;
+    let r = compiled.simulate();
     println!("model        : {} ({})", r.model, r.target_name());
     println!("GOp/inf      : {:.2}", cfg.gop_per_inference);
-    println!("latency      : {:.2} ms ({} cycles @ 425 MHz)", r.seconds * 1e3, r.cycles);
+    // the frequency label derives from the geometry actually simulated
+    println!(
+        "latency      : {:.2} ms ({} cycles @ {:.0} MHz)",
+        r.seconds * 1e3,
+        r.cycles,
+        r.freq_hz / 1e6
+    );
     println!("throughput   : {:.1} GOp/s", r.gops);
     println!("energy       : {:.2} mJ/inf  ({:.0} GOp/J)", r.mj_per_inf, r.gopj);
     println!("power        : {:.1} mW", r.power_w * 1e3);
@@ -149,7 +191,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
 
 /// Golden check: every artifact vs the rust functional model, bit-exact.
 fn verify_all(rt: &Runtime) -> Result<()> {
-    use attn_tinyml::ita::engine::{gemm_rq, Mat};
+    use attn_tinyml::ita::engine::{gemm_rq, Mat, GELU_S};
     use attn_tinyml::ita::gelu::Act;
     use attn_tinyml::util::prng::XorShift64;
 
@@ -169,6 +211,8 @@ fn verify_all(rt: &Runtime) -> Result<()> {
                 TensorIn { data: &b, shape: vec![128] },
             ],
         )?;
+        // GELU_S names the i-GeLU input scale both the backend and the
+        // functional model derive their integer constants from
         let want = gemm_rq(
             &Mat::new(128, 128, x.clone()),
             &Mat::new(128, 128, w.clone()),
@@ -176,7 +220,7 @@ fn verify_all(rt: &Runtime) -> Result<()> {
             mult,
             shift,
             act,
-            0.1,
+            GELU_S,
         );
         if got[0] != want.data {
             return Err(RuntimeError::Backend(format!(
@@ -220,39 +264,18 @@ fn verify_all(rt: &Runtime) -> Result<()> {
         println!("{:>24}: bit-exact ({} values)", "attn_head", o.data.len());
     }
 
-    // one full encoder layer per network
+    // one full encoder layer per network, through the compile pipeline
+    // (the deployment is cached; verify golden-checks the encoder
+    // artifact against the rust functional model)
     for cfg in models::ALL_MODELS {
+        let compiled = Pipeline::new(ClusterConfig::default())
+            .model(cfg)
+            .target(Target::MultiCoreIta)
+            .layers(1)
+            .compile()?;
+        let values = compiled.verify(rt)?;
         let name = format!("encoder_{}", cfg.name);
-        let w = forward::synth_layer_weights(cfg, 0);
-        let x = models::synth_input(cfg);
-        let mut inputs: Vec<TensorIn> =
-            vec![TensorIn { data: &x, shape: vec![cfg.seq, cfg.emb] }];
-        let shapes = forward::weight_shapes(cfg);
-        let datas: Vec<&Vec<i32>> = vec![
-            &w.wq, &w.wk, &w.wv, &w.wo, &w.bq, &w.bk, &w.bv, &w.bo, &w.w1, &w.b1,
-            &w.w2, &w.b2, &w.ln1_g, &w.ln1_b, &w.ln2_g, &w.ln2_b,
-        ];
-        for (d, (_, s)) in datas.iter().zip(&shapes) {
-            inputs.push(TensorIn { data: d, shape: s.clone() });
-        }
-        let got = rt.execute(&name, &inputs)?;
-        let want = forward::encoder_layer(
-            cfg,
-            &Mat::new(cfg.seq, cfg.emb, x.clone()),
-            &w,
-        );
-        if got[0] != want.data {
-            let diff = got[0]
-                .iter()
-                .zip(&want.data)
-                .filter(|(a, b)| a != b)
-                .count();
-            return Err(RuntimeError::Backend(format!(
-                "{name}: {diff}/{} values differ",
-                want.data.len()
-            )));
-        }
-        println!("{name:>24}: bit-exact ({} values)", want.data.len());
+        println!("{name:>24}: bit-exact ({values} values)");
     }
     println!(
         "all artifacts verified: {} backend == rust ITA functional model",
@@ -265,25 +288,12 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     let cfg = model_flag(args)?;
     let target = target_flag(args);
     let layers = args.flag_usize("layers", 1);
-    let dep = deeploy::deploy_layers(cfg, target, layers);
-    println!("model        : {} ({} layers deployed)", cfg.name, layers);
-    println!("graph nodes  : {}", dep.graph.nodes.len());
-    println!("total ops    : {:.3} GOp", dep.total_ops as f64 / 1e9);
-    println!("command steps: {}", dep.steps.len());
-    println!("L1 tile peak : {} B of {} budget", dep.l1_peak_bytes, deeploy::tiler::L1_BUDGET);
-    println!("L2 act arena : {} B", dep.l2_activation_bytes);
-    let ita = dep
-        .steps
-        .iter()
-        .filter(|s| matches!(s.cmd, Cmd::ItaGemm { .. } | Cmd::ItaAttention { .. }))
-        .count();
-    let core = dep.steps.iter().filter(|s| matches!(s.cmd, Cmd::Core { .. })).count();
-    let dma = dep
-        .steps
-        .iter()
-        .filter(|s| matches!(s.cmd, Cmd::DmaIn { .. } | Cmd::DmaOut { .. }))
-        .count();
-    println!("step mix     : {ita} ITA, {core} cluster, {dma} DMA");
+    let compiled = Pipeline::new(cluster_flag(args)?)
+        .model(cfg)
+        .target(target)
+        .layers(layers)
+        .compile()?;
+    print!("{}", compiled.report());
     Ok(())
 }
 

@@ -59,6 +59,8 @@ pub enum RuntimeError {
     InvalidInput(String),
     /// Backend-specific failure (compile/execute/unavailable).
     Backend(String),
+    /// Deployment-flow failure (typed; see [`crate::deeploy::DeployError`]).
+    Deploy(crate::deeploy::DeployError),
     /// CLI usage error.
     Usage(String),
 }
@@ -78,6 +80,7 @@ impl fmt::Display for RuntimeError {
             RuntimeError::UnknownArtifact(n) => write!(f, "unknown artifact {n}"),
             RuntimeError::InvalidInput(m) => write!(f, "invalid input: {m}"),
             RuntimeError::Backend(m) => write!(f, "{m}"),
+            RuntimeError::Deploy(e) => write!(f, "deploy: {e}"),
             RuntimeError::Usage(m) => write!(f, "{m}"),
         }
     }
@@ -88,6 +91,7 @@ impl std::error::Error for RuntimeError {
         match self {
             RuntimeError::Io { source, .. } => Some(source),
             RuntimeError::Json(e) => Some(e),
+            RuntimeError::Deploy(e) => Some(e),
             _ => None,
         }
     }
@@ -96,6 +100,12 @@ impl std::error::Error for RuntimeError {
 impl From<std::io::Error> for RuntimeError {
     fn from(e: std::io::Error) -> RuntimeError {
         RuntimeError::Io { context: "I/O".to_string(), source: e }
+    }
+}
+
+impl From<crate::deeploy::DeployError> for RuntimeError {
+    fn from(e: crate::deeploy::DeployError) -> RuntimeError {
+        RuntimeError::Deploy(e)
     }
 }
 

@@ -1,0 +1,251 @@
+//! Error-path tests of the deployment flow: user-supplied graphs must
+//! surface typed [`DeployError`]s — never panic — for every failure
+//! mode: structural invalidity, cycles, ITA geometry violations,
+//! over-budget tiling, and unlowerable operators. A property test
+//! corrupts valid graphs in random ways and checks the flow always
+//! returns a `Result`.
+
+use attn_tinyml::deeploy::ir::{Activation, DType, Graph, Node, Op, TensorKind};
+use attn_tinyml::deeploy::{self, DeployError, Target};
+use attn_tinyml::models::{self, MOBILEBERT};
+use attn_tinyml::pipeline::Pipeline;
+use attn_tinyml::sim::ClusterConfig;
+use attn_tinyml::util::propcheck::{check, Config};
+use attn_tinyml::util::prng::XorShift64;
+
+/// A minimal valid single-GEMM graph (ITA-compatible dims).
+fn gemm_graph() -> Graph {
+    let mut g = Graph::new("tiny");
+    g.add_tensor("x", &[64, 64], DType::I8, TensorKind::Input);
+    g.add_tensor("w", &[64, 64], DType::I8, TensorKind::Weight);
+    g.add_tensor("b", &[64], DType::I32, TensorKind::Weight);
+    g.add_tensor("y", &[64, 64], DType::I8, TensorKind::Output);
+    g.add_node(Node::new(
+        "gemm0",
+        Op::Gemm { act: Activation::Identity },
+        &["x", "w", "b"],
+        &["y"],
+    ));
+    g
+}
+
+#[test]
+fn valid_graph_deploys_on_both_targets() {
+    for target in [Target::MultiCore, Target::MultiCoreIta] {
+        deeploy::deploy_graph(gemm_graph(), target).unwrap();
+    }
+}
+
+#[test]
+fn undeclared_tensor_is_invalid_graph() {
+    let mut g = gemm_graph();
+    g.nodes[0].inputs[1] = "nope".into();
+    match deeploy::deploy_graph(g, Target::MultiCoreIta) {
+        Err(DeployError::InvalidGraph { reason, .. }) => {
+            assert!(reason.contains("nope"), "{reason}")
+        }
+        other => panic!("expected InvalidGraph, got {:?}", other.err()),
+    }
+}
+
+#[test]
+fn consumed_but_never_produced_is_invalid_graph() {
+    let mut g = gemm_graph();
+    g.add_tensor("ghost", &[64, 64], DType::I8, TensorKind::Activation);
+    g.add_tensor("z", &[64, 64], DType::I8, TensorKind::Activation);
+    g.add_node(Node::new("add0", Op::Add, &["ghost", "y"], &["z"]));
+    assert!(matches!(
+        deeploy::deploy_graph(g, Target::MultiCore),
+        Err(DeployError::InvalidGraph { .. })
+    ));
+}
+
+#[test]
+fn cyclic_graph_is_typed_through_the_public_api() {
+    let mut g = Graph::new("loop");
+    g.add_tensor("x", &[64, 64], DType::I8, TensorKind::Input);
+    g.add_tensor("a", &[64, 64], DType::I8, TensorKind::Activation);
+    g.add_tensor("b", &[64, 64], DType::I8, TensorKind::Output);
+    g.add_node(Node::new("n0", Op::Add, &["x", "b"], &["a"]));
+    g.add_node(Node::new("n1", Op::Add, &["a", "x"], &["b"]));
+    match deeploy::deploy_graph(g, Target::MultiCore) {
+        Err(DeployError::CyclicGraph { graph, .. }) => assert_eq!(graph, "loop"),
+        other => panic!("expected CyclicGraph, got {:?}", other.err()),
+    }
+    // ... and through the pipeline
+    let mut g = Graph::new("loop2");
+    g.add_tensor("x", &[64, 64], DType::I8, TensorKind::Input);
+    g.add_tensor("a", &[64, 64], DType::I8, TensorKind::Activation);
+    g.add_tensor("b", &[64, 64], DType::I8, TensorKind::Output);
+    g.add_node(Node::new("n0", Op::Add, &["x", "b"], &["a"]));
+    g.add_node(Node::new("n1", Op::Add, &["a", "x"], &["b"]));
+    assert!(matches!(
+        Pipeline::new(ClusterConfig::default()).graph(g).compile(),
+        Err(DeployError::CyclicGraph { .. })
+    ));
+}
+
+#[test]
+fn unpadded_dims_are_an_ita_constraint_error() {
+    let mut g = Graph::new("unpadded");
+    g.add_tensor("x", &[100, 64], DType::I8, TensorKind::Input);
+    g.add_tensor("w", &[64, 64], DType::I8, TensorKind::Weight);
+    g.add_tensor("b", &[64], DType::I32, TensorKind::Weight);
+    g.add_tensor("y", &[100, 64], DType::I8, TensorKind::Output);
+    g.add_node(Node::new(
+        "g0",
+        Op::Gemm { act: Activation::Identity },
+        &["x", "w", "b"],
+        &["y"],
+    ));
+    match Pipeline::new(ClusterConfig::default())
+        .graph(g)
+        .target(Target::MultiCoreIta)
+        .compile()
+    {
+        Err(DeployError::ItaConstraint { dim, .. }) => assert_eq!(dim, 100),
+        other => panic!("expected ItaConstraint, got {:?}", other.err()),
+    }
+}
+
+#[test]
+fn unpadded_graph_still_deploys_on_multicore() {
+    // the constraint is ITA-specific; the software target accepts it
+    let mut g = Graph::new("unpadded");
+    g.add_tensor("x", &[100, 64], DType::I8, TensorKind::Input);
+    g.add_tensor("w", &[64, 64], DType::I8, TensorKind::Weight);
+    g.add_tensor("b", &[64], DType::I32, TensorKind::Weight);
+    g.add_tensor("y", &[100, 64], DType::I8, TensorKind::Output);
+    g.add_node(Node::new(
+        "g0",
+        Op::Gemm { act: Activation::Identity },
+        &["x", "w", "b"],
+        &["y"],
+    ));
+    deeploy::deploy_graph(g, Target::MultiCore).unwrap();
+}
+
+#[test]
+fn tiny_l1_is_an_l1_budget_error() {
+    // 8 KiB of TCDM cannot hold even one double-buffered 64^3 tile
+    let mut cluster = ClusterConfig::default();
+    cluster.tcdm_banks = 2;
+    cluster.tcdm_bank_bytes = 4096;
+    match Pipeline::new(cluster)
+        .model(&MOBILEBERT)
+        .target(Target::MultiCoreIta)
+        .layers(1)
+        .compile()
+    {
+        Err(DeployError::L1Budget { node, required, .. }) => {
+            assert!(!node.is_empty(), "error must name the offending node");
+            assert!(required > 8 * 1024);
+        }
+        other => panic!("expected L1Budget, got {:?}", other.err()),
+    }
+}
+
+#[test]
+fn unsplit_mha_is_unsupported_in_codegen() {
+    let mut g = Graph::new("mha");
+    g.add_tensor("x", &[128, 128], DType::I8, TensorKind::Input);
+    g.add_tensor("wq", &[128, 128], DType::I8, TensorKind::Weight);
+    g.add_tensor("wk", &[128, 128], DType::I8, TensorKind::Weight);
+    g.add_tensor("y", &[128, 128], DType::I8, TensorKind::Output);
+    g.add_node(Node::new(
+        "mha0",
+        Op::Mha { heads: 2, proj: 64 },
+        &["x", "wq", "wk"],
+        &["y"],
+    ));
+    for target in [Target::MultiCore, Target::MultiCoreIta] {
+        match deeploy::deploy_graph(g.clone(), target) {
+            Err(DeployError::UnsupportedOp { node, .. }) => assert_eq!(node, "mha0"),
+            other => panic!("{target:?}: expected UnsupportedOp, got {:?}", other.err()),
+        }
+    }
+}
+
+#[test]
+fn property_corrupted_graphs_never_panic() {
+    // start from a real model layer and corrupt it in random ways; the
+    // flow must return Ok or a typed error — any panic fails the test
+    check(
+        Config { cases: 60, seed: 0xE6607 },
+        |rng: &mut XorShift64| (rng.next_u64(), rng.next_below(6) as usize),
+        |_| Vec::new(),
+        |&(seed, kind)| {
+            let mut rng = XorShift64::new(seed);
+            let mut g = models::build_graph_layers(&MOBILEBERT, 1);
+            let n_nodes = g.nodes.len() as u64;
+            match kind {
+                0 => {
+                    // drop a random node (breaks producer chains)
+                    let idx = rng.next_below(n_nodes) as usize;
+                    g.nodes.remove(idx);
+                }
+                1 => {
+                    // rename a random input to an undeclared tensor
+                    let idx = rng.next_below(n_nodes) as usize;
+                    if !g.nodes[idx].inputs.is_empty() {
+                        g.nodes[idx].inputs[0] = "undeclared".into();
+                    }
+                }
+                2 => {
+                    // un-pad a random tensor dim
+                    let names: Vec<String> = g.tensors.keys().cloned().collect();
+                    let name = &names[rng.next_below(names.len() as u64) as usize];
+                    if let Some(t) = g.tensors.get_mut(name) {
+                        if !t.shape.is_empty() {
+                            t.shape[0] = t.shape[0].saturating_sub(1).max(1);
+                        }
+                    }
+                }
+                3 => {
+                    // introduce a cycle between two adjacent nodes
+                    let idx = (rng.next_below(n_nodes - 1)) as usize;
+                    let later_out = g.nodes[idx + 1].outputs[0].clone();
+                    g.nodes[idx].inputs.push(later_out);
+                }
+                4 => {
+                    // truncate a node's inputs (arity violation)
+                    let idx = rng.next_below(n_nodes) as usize;
+                    g.nodes[idx].inputs.truncate(1);
+                }
+                _ => {
+                    // shuffle the node order (must still deploy fine)
+                    let swaps = 8;
+                    for _ in 0..swaps {
+                        let a = rng.next_below(n_nodes) as usize;
+                        let b = rng.next_below(n_nodes) as usize;
+                        g.nodes.swap(a, b);
+                    }
+                }
+            }
+            let target = if seed % 2 == 0 { Target::MultiCoreIta } else { Target::MultiCore };
+            match deeploy::deploy_graph(g, target) {
+                Ok(dep) => {
+                    if dep.steps.is_empty() {
+                        return Err("deployment with no steps".into());
+                    }
+                    Ok(())
+                }
+                // any typed error is acceptable; panics abort the test
+                Err(_) => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn shuffled_valid_graph_deploys_identically() {
+    // node order must not matter: the flow normalizes the schedule
+    let g = models::build_graph_layers(&MOBILEBERT, 1);
+    let a = deeploy::deploy_graph(g.clone(), Target::MultiCoreIta).unwrap();
+    let mut shuffled = g;
+    shuffled.nodes.reverse();
+    let b = deeploy::deploy_graph(shuffled, Target::MultiCoreIta).unwrap();
+    assert_eq!(a.steps.len(), b.steps.len());
+    assert_eq!(a.total_ops, b.total_ops);
+    assert_eq!(a.l1_peak_bytes, b.l1_peak_bytes);
+}

@@ -2,20 +2,32 @@
 //! tiling -> lifetime -> allocation -> schedule -> codegen -> simulate,
 //! across all three evaluation networks and both targets.
 
-use attn_tinyml::coordinator::run_model_layers;
+use attn_tinyml::coordinator::ModelReport;
 use attn_tinyml::deeploy::{
     self, allocator, lifetime, passes, schedule, tiler, Target,
 };
-use attn_tinyml::models::{self, ALL_MODELS, MOBILEBERT};
+use attn_tinyml::models::{self, ModelConfig, ALL_MODELS, MOBILEBERT};
+use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::sim::{ClusterConfig, Cmd, Engine};
 use attn_tinyml::util::propcheck::{check, Config};
 use attn_tinyml::util::prng::XorShift64;
+
+/// The builder API with the paper's default geometry.
+fn run_layers(cfg: &ModelConfig, target: Target, layers: usize) -> ModelReport {
+    Pipeline::new(ClusterConfig::default())
+        .model(cfg)
+        .target(target)
+        .layers(layers)
+        .compile()
+        .unwrap()
+        .simulate()
+}
 
 #[test]
 fn deploy_all_models_both_targets() {
     for cfg in ALL_MODELS {
         for target in [Target::MultiCore, Target::MultiCoreIta] {
-            let dep = deeploy::deploy_layers(cfg, target, 1);
+            let dep = deeploy::deploy_layers(cfg, target, 1).unwrap();
             assert!(!dep.steps.is_empty(), "{}", cfg.name);
             assert!(dep.total_ops > 0);
             assert!(
@@ -72,8 +84,20 @@ fn fusion_preserves_mac_work() {
 
 #[test]
 fn simulation_deterministic() {
-    let a = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
-    let b = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    // .uncached() forces two genuinely independent deploy+simulate runs
+    // (the cache would otherwise share one memoized simulation)
+    let run = || {
+        Pipeline::new(ClusterConfig::default())
+            .model(&MOBILEBERT)
+            .target(Target::MultiCoreIta)
+            .layers(1)
+            .uncached()
+            .compile()
+            .unwrap()
+            .simulate()
+    };
+    let a = run();
+    let b = run();
     assert_eq!(a.cycles, b.cycles);
     assert_eq!(a.mj_per_inf, b.mj_per_inf);
 }
@@ -92,8 +116,8 @@ fn acceleration_strictly_ordered() {
             }
             passes::map_operators(&mut g, ita);
             let order = schedule::topo_schedule(&g);
-            let plans = tiler::plan_graph(&g);
-            let steps = deeploy::codegen::generate(&g, &order, &plans);
+            let plans = tiler::plan_graph(&g, tiler::L1_BUDGET).unwrap();
+            let steps = deeploy::codegen::generate(&g, &order, &plans).unwrap();
             cycles.push(engine.run(&steps).cycles);
         }
         assert!(cycles[0] > cycles[1], "{}: {:?}", cfg.name, cycles);
@@ -105,8 +129,8 @@ fn acceleration_strictly_ordered() {
 fn layer_scaling_is_linear() {
     // identical encoder blocks: N layers ~ N x 1 layer (within the
     // one-off input staging)
-    let one = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
-    let four = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 4);
+    let one = run_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let four = run_layers(&MOBILEBERT, Target::MultiCoreIta, 4);
     let ratio = four.seconds / one.seconds; // both extrapolate to 24 layers
     assert!((ratio - 1.0).abs() < 0.02, "ratio {ratio}");
 }
@@ -134,7 +158,8 @@ fn property_deployment_never_breaks_invariants() {
         |&(model_idx, layers, use_ita)| {
             let cfg = ALL_MODELS[model_idx];
             let target = if use_ita { Target::MultiCoreIta } else { Target::MultiCore };
-            let dep = deeploy::deploy_layers(cfg, target, layers);
+            let dep = deeploy::deploy_layers(cfg, target, layers)
+                .map_err(|e| format!("deploy failed: {e}"))?;
             for (i, s) in dep.steps.iter().enumerate() {
                 for &d in &s.deps {
                     if d >= i {
@@ -156,7 +181,7 @@ fn property_deployment_never_breaks_invariants() {
 fn bank_sweep_monotone() {
     // more banks -> less contention -> never slower (the tunable
     // interconnect claim, quantified by benches/ablation_interconnect)
-    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1).unwrap();
     let mut prev = u64::MAX;
     for banks in [8, 16, 32, 64] {
         let mut cfg = ClusterConfig::default();
@@ -171,7 +196,7 @@ fn bank_sweep_monotone() {
 #[test]
 fn port_sweep_saturates_at_sixteen() {
     use attn_tinyml::sim::timing::TimingModel;
-    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1).unwrap();
     let base = ClusterConfig::default();
     let run_ports = |ports: usize| {
         let tm = TimingModel::with_ports(&base.ita, base.tcdm_banks, ports);
@@ -186,7 +211,7 @@ fn port_sweep_saturates_at_sixteen() {
 
 #[test]
 fn single_context_regfile_exposes_config() {
-    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let dep = deeploy::deploy_layers(&MOBILEBERT, Target::MultiCoreIta, 1).unwrap();
     let dual = Engine::new(ClusterConfig::default()).run(&dep.steps).cycles;
     let mut e = Engine::new(ClusterConfig::default());
     e.expose_config = true;
@@ -206,8 +231,8 @@ fn whisper_stem_accounted_once() {
     use attn_tinyml::models::WHISPER_TINY_ENC;
     // extrapolating from 1 layer (+ stem added analytically) must agree
     // with the full-network simulation within a few percent
-    let one = run_model_layers(&WHISPER_TINY_ENC, Target::MultiCoreIta, 1);
-    let full = run_model_layers(
+    let one = run_layers(&WHISPER_TINY_ENC, Target::MultiCoreIta, 1);
+    let full = run_layers(
         &WHISPER_TINY_ENC,
         Target::MultiCoreIta,
         WHISPER_TINY_ENC.layers,
@@ -218,7 +243,7 @@ fn whisper_stem_accounted_once() {
 
 #[test]
 fn e2e_report_fields_consistent() {
-    let r = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
+    let r = run_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
     assert!((r.gops - MOBILEBERT.gop_per_inference / r.seconds).abs() < 1e-9);
     assert!((r.mj_per_inf - r.energy_j * 1e3).abs() < 1e-12);
     assert!((r.inf_per_s * r.seconds - 1.0).abs() < 1e-9);
