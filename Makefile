@@ -3,6 +3,8 @@
 #   make build       release build (std-only default features)
 #   make test        tier-1 verify: cargo build --release && cargo test -q
 #   make bench       compile + run every bench target
+#   make serve-smoke multi-request serving smoke run (the CI guard that
+#                    keeps the serve subcommand from bitrotting)
 #   make artifacts   AOT-lower the JAX/Pallas models to HLO-text artifacts
 #                    (needs the python environment; the rust side works
 #                    without this — the reference backend is the default)
@@ -14,7 +16,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench artifacts check lint fmt clean
+.PHONY: build test bench serve-smoke artifacts check lint fmt clean
 
 build:
 	$(CARGO) build --release
@@ -25,6 +27,9 @@ test: build
 bench:
 	$(CARGO) bench --no-run
 	$(CARGO) bench
+
+serve-smoke: build
+	$(CARGO) run --release -- serve --requests 32 --clusters 2
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)

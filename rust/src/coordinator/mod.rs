@@ -10,41 +10,15 @@ pub mod forward;
 pub mod report;
 
 use crate::deeploy::Target;
-use crate::models::ModelConfig;
 use crate::pipeline::Pipeline;
 use crate::sim::ClusterConfig;
 
-pub use report::{ModelReport, Table1};
+pub use report::{render_serve, ModelReport, Table1};
 
-/// Simulate one network on one target with the paper's default cluster
-/// geometry.
-///
-/// Deprecated shim over the builder API — geometry sweeps, caching
-/// control and typed errors live there:
-/// `Pipeline::new(cluster).model(cfg).target(target).compile()?.simulate()`.
-#[deprecated(since = "0.2.0", note = "use pipeline::Pipeline — see README \"Migrating\"")]
-pub fn run_model(cfg: &ModelConfig, target: Target) -> ModelReport {
-    #[allow(deprecated)]
-    let report = run_model_layers(cfg, target, cfg.layers);
-    report
-}
-
-/// Like [`run_model`] but simulating only `layers` blocks and linearly
-/// extrapolating — the paper itself measures each layer separately and
-/// sums ("due to the extensive simulation time"). With identical blocks,
-/// simulating one and scaling is exact up to the one-off input staging.
-///
-/// Deprecated shim over `Pipeline::new(..).model(..).layers(n)`.
-#[deprecated(since = "0.2.0", note = "use pipeline::Pipeline — see README \"Migrating\"")]
-pub fn run_model_layers(cfg: &ModelConfig, target: Target, layers: usize) -> ModelReport {
-    Pipeline::new(ClusterConfig::default())
-        .model(cfg)
-        .target(target)
-        .layers(layers)
-        .compile()
-        .unwrap_or_else(|e| panic!("{}: built-in model must deploy: {e}", cfg.name))
-        .simulate()
-}
+// The 0.1.0 free functions `run_model{,_layers}` were deprecated shims
+// over the builder API through the 0.2.x series and are gone as of
+// 0.3.0: use `Pipeline::new(cluster).model(cfg).target(t).layers(n)
+// .compile()?.simulate()` (see README "Migrating").
 
 /// Produce the full Table I (both sub-tables) of the paper. Compiled
 /// deployments and their deterministic simulations are cached, so
@@ -72,7 +46,7 @@ pub fn table1() -> Table1 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::{DINOV2S, MOBILEBERT, WHISPER_TINY_ENC};
+    use crate::models::{ModelConfig, DINOV2S, MOBILEBERT, WHISPER_TINY_ENC};
 
     /// Test shim over the builder API (the default geometry, one layer).
     fn run_layers(cfg: &ModelConfig, target: Target, layers: usize) -> ModelReport {
@@ -83,18 +57,6 @@ mod tests {
             .compile()
             .unwrap()
             .simulate()
-    }
-
-    #[test]
-    fn deprecated_shims_agree_with_pipeline() {
-        #[allow(deprecated)]
-        let shim = run_model_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
-        let direct = run_layers(&MOBILEBERT, Target::MultiCoreIta, 1);
-        assert_eq!(shim.cycles, direct.cycles);
-        assert_eq!(shim.mj_per_inf, direct.mj_per_inf);
-        #[allow(deprecated)]
-        let full = run_model(&MOBILEBERT, Target::MultiCoreIta);
-        assert!(full.seconds > 0.0);
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! Paper-style reporting: Table I and the microbenchmark section.
+//! Paper-style reporting: Table I, the microbenchmark section, and the
+//! serving-side [`ServeReport`] rendering.
 
 use crate::deeploy::Target;
+use crate::serve::ServeReport;
 
 /// Metrics of one (model, target) simulation — one Table I cell group.
 #[derive(Debug, Clone)]
@@ -114,9 +116,60 @@ impl Table1 {
     }
 }
 
+/// Render a serving run (the `serve` subcommand / serving benches).
+pub fn render_serve(r: &ServeReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "MULTI-REQUEST SERVING  ({} scheduler, {} cluster{})\n",
+        r.scheduler,
+        r.clusters,
+        if r.clusters == 1 { "" } else { "s" }
+    ));
+    s.push_str(&format!("requests     : {} served of {} offered\n", r.served, r.offered));
+    s.push_str(&format!(
+        "makespan     : {:.2} ms ({} cycles @ {:.0} MHz)\n",
+        r.seconds * 1e3,
+        r.makespan_cycles,
+        r.freq_hz / 1e6
+    ));
+    s.push_str(&format!(
+        "throughput   : {:.1} req/s   {:.1} GOp/s\n",
+        r.req_per_s, r.gops
+    ));
+    s.push_str(&format!(
+        "latency      : p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms  (mean {:.2} ms)\n",
+        r.p50_ms(),
+        r.p90_ms(),
+        r.p99_ms(),
+        r.latency_ms(r.mean_latency_cycles as u64)
+    ));
+    s.push_str(&format!(
+        "queue depth  : mean {:.1}  max {}\n",
+        r.mean_queue_depth, r.max_queue_depth
+    ));
+    s.push_str(&format!(
+        "energy       : {:.2} mJ total  {:.3} mJ/req  ({:.0} GOp/J)\n",
+        r.energy_j * 1e3,
+        r.mj_per_req,
+        r.gopj
+    ));
+    let utils: Vec<String> =
+        r.cluster_utilization.iter().map(|u| format!("{:.0}%", u * 100.0)).collect();
+    s.push_str(&format!("fleet util   : [{}]\n", utils.join(" ")));
+    s.push_str(&format!(
+        "dispatches   : {} batches, {} class switches\n",
+        r.batches, r.class_switches
+    ));
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::models::MOBILEBERT;
+    use crate::pipeline::Pipeline;
+    use crate::serve::Workload;
+    use crate::sim::ClusterConfig;
 
     #[test]
     fn commercial_figures_as_cited() {
@@ -132,5 +185,20 @@ mod tests {
             assert!(text.contains(name), "{text}");
         }
         assert!(text.contains("Syntiant"));
+    }
+
+    #[test]
+    fn render_serve_lists_the_serving_facts() {
+        let r = Pipeline::new(ClusterConfig::default())
+            .fleet(2)
+            .serve(&Workload::single(&MOBILEBERT, 1))
+            .unwrap();
+        let text = render_serve(&r);
+        for needle in
+            ["fifo scheduler", "2 clusters", "p50", "queue depth", "fleet util", "req/s"]
+        {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+        assert!(text.contains("1 served of 1 offered"), "{text}");
     }
 }

@@ -11,11 +11,13 @@
 //!   cycle/energy simulator of the Snitch+ITA cluster (`sim`, `energy`),
 //!   the bit-exact ITA functional model (`ita`), the golden `runtime`
 //!   with pluggable execution backends (the std-only reference backend
-//!   by default, PJRT/XLA behind `--features pjrt`), and the
-//!   builder-style [`Pipeline`] compile surface over the
-//!   deploy→simulate→verify seam (typed `DeployError`s, explicit
-//!   cluster geometry, compiled-deployment caching), driven by the
-//!   `coordinator` and CLI.
+//!   by default, PJRT/XLA behind `--features pjrt`), the builder-style
+//!   [`Pipeline`] compile surface over the deploy→simulate→verify seam
+//!   (typed `DeployError`s, explicit cluster geometry,
+//!   compiled-deployment caching), and the multi-request [`serve`]
+//!   subsystem (workloads, schedulers, sharded cluster fleets) that
+//!   makes single-inference `simulate()` the degenerate serving case —
+//!   driven by the `coordinator` and CLI.
 //!
 //! See DESIGN.md for the full system inventory and experiment index,
 //! and README.md for build/run instructions.
@@ -30,7 +32,9 @@ pub mod ita;
 pub mod models;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 
 pub use pipeline::{Compiled, Pipeline};
+pub use serve::{Fleet, ServeReport, Workload};

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   table1              reproduce the paper's Table I (all networks)
 //!   simulate            one network/target: latency, energy, utilization
+//!   serve               multi-request serving on a cluster fleet
 //!   micro               microbenchmarks (Section V-A): GEMM + attention
 //!   verify              golden-check the runtime backend vs the rust ITA model
 //!   deploy              show the deployment artifacts (tiling, memory)
@@ -12,6 +13,7 @@
 //!   attn-tinyml table1
 //!   attn-tinyml simulate --model mobilebert --target ita
 //!   attn-tinyml simulate --model dinov2s --freq-mhz 500 --banks 64
+//!   attn-tinyml serve --requests 64 --arrival-rate 200 --clusters 4 --scheduler batch
 //!   attn-tinyml verify --artifacts artifacts
 //!   attn-tinyml deploy --model dinov2s
 
@@ -20,12 +22,14 @@ use attn_tinyml::deeploy::Target;
 use attn_tinyml::models;
 use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::runtime::{Runtime, RuntimeError, TensorIn};
+use attn_tinyml::serve::{scheduler_by_name, RequestClass, Workload};
 use attn_tinyml::sim::{ClusterConfig, Cmd, Engine, Step};
 use attn_tinyml::util::cli::Args;
 
 type Result<T> = std::result::Result<T, RuntimeError>;
 
-const SUBCOMMANDS: [&str; 6] = ["table1", "simulate", "micro", "verify", "deploy", "export"];
+const SUBCOMMANDS: [&str; 7] =
+    ["table1", "simulate", "serve", "micro", "verify", "deploy", "export"];
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -33,6 +37,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("table1") => cmd_table1(),
         Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
         Some("micro") => cmd_micro(),
         Some("verify") => cmd_verify(&args),
         Some("deploy") => cmd_deploy(&args),
@@ -122,6 +127,55 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("ITA util     : {:.1} %  (duty {:.1} %)", r.ita_utilization * 100.0, r.ita_duty * 100.0);
     println!("L1 peak      : {} B (tile buffers)", r.l1_peak_bytes);
     println!("L2 activat.  : {} B (static arena)", r.l2_activation_bytes);
+    Ok(())
+}
+
+/// Multi-request serving on a fleet of clusters.
+///
+/// Flags: --requests N (64), --arrival-rate RPS (200), --clusters N (1),
+/// --scheduler fifo|rr|batch (fifo), --model mix|<name> (mix = all three
+/// networks), --layers N (1), --seed S, --burst FACTOR (off; square-wave
+/// bursty Poisson with a 20 ms period), plus the usual geometry flags.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cluster = cluster_flag(args)?;
+    let target = target_flag(args);
+    let requests = args.flag_usize("requests", 64);
+    let clusters = args.flag_usize("clusters", 1);
+    let rate = args.flag_f64("arrival-rate", 200.0);
+    let layers = args.flag_usize("layers", 1);
+    let seed = args.flag_usize("seed", 48879) as u64;
+    let sched_name = args.flag_or("scheduler", "fifo");
+    let mut sched = scheduler_by_name(&sched_name).ok_or_else(|| {
+        RuntimeError::Usage(format!(
+            "unknown scheduler {sched_name}; available: fifo, rr, batch"
+        ))
+    })?;
+    let classes: Vec<RequestClass> = match args.flag_or("model", "mix").as_str() {
+        "mix" => models::ALL_MODELS.iter().map(|m| RequestClass::new(m, layers)).collect(),
+        name => {
+            let cfg = models::by_name(name).ok_or_else(|| {
+                RuntimeError::Usage(format!(
+                    "unknown model {name}; available: mix, {}",
+                    models::ALL_MODELS.iter().map(|m| m.name).collect::<Vec<_>>().join(", ")
+                ))
+            })?;
+            vec![RequestClass::new(cfg, layers)]
+        }
+    };
+    let workload = match args.flag("burst") {
+        Some(raw) => {
+            let factor: f64 = raw.parse().map_err(|_| {
+                RuntimeError::Usage(format!("--burst expects a number, got {raw:?}"))
+            })?;
+            Workload::bursty(classes, rate, factor, 0.02, requests, seed)
+        }
+        None => Workload::poisson(classes, rate, requests, seed),
+    };
+    let report = Pipeline::new(cluster)
+        .target(target)
+        .fleet(clusters)
+        .serve_with(&workload, sched.as_mut())?;
+    print!("{}", coordinator::render_serve(&report));
     Ok(())
 }
 

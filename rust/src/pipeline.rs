@@ -27,11 +27,19 @@
 //! keyed by (model config, target, layers, cluster geometry, fusion):
 //! `table1()`, the benches, and repeated evaluations reuse the passes /
 //! tiling / allocation / codegen work — and the deterministic
-//! simulation statistics — instead of re-running them. Graph-sourced
-//! compilations are never cached (hashing an arbitrary graph would
-//! cost as much as deploying it). The cache grows by one entry per
-//! distinct key and never evicts — a long-lived process sweeping many
-//! geometries should call [`clear_cache`] between sweeps.
+//! simulation statistics — instead of re-running them. Concurrent
+//! compilations of the same key serialize on a per-key slot, so each
+//! key is built exactly once no matter how many threads race for it.
+//! Graph-sourced compilations are never cached (hashing an arbitrary
+//! graph would cost as much as deploying it). The cache grows by one
+//! entry per distinct key and never evicts — a long-lived process
+//! sweeping many geometries should call [`clear_cache`] between sweeps.
+//!
+//! The run side scales past one inference: `.fleet(n)` plus
+//! [`Pipeline::serve`] / [`Pipeline::serve_with`] dispatch a
+//! multi-request [`Workload`] across n clusters (see [`crate::serve`]);
+//! `Compiled::simulate()` is the degenerate one-request/one-cluster
+//! case.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -45,6 +53,7 @@ use crate::ita::engine::Mat;
 use crate::ita::ItaConfig;
 use crate::models::{self, ModelConfig};
 use crate::runtime::{Runtime, RuntimeError, TensorIn};
+use crate::serve::{Fifo, Fleet, RequestClass, Scheduler, ServeReport, Workload};
 use crate::sim::{ClusterConfig, Cmd, Engine, RunStats};
 
 // --- cache ------------------------------------------------------------------
@@ -189,8 +198,16 @@ impl Entry {
     }
 }
 
-fn cache() -> &'static Mutex<HashMap<CacheKey, Arc<Entry>>> {
-    static CACHE: OnceLock<Mutex<HashMap<CacheKey, Arc<Entry>>>> = OnceLock::new();
+/// One cache slot: a per-key build lock around the (eventually
+/// populated) entry. The first compiler of a key builds while holding
+/// the slot lock; racers on the *same* key block on the slot — not on
+/// the map — and wake up to a hit, so each key is compiled exactly
+/// once. Unrelated keys never serialize: the map lock is only held for
+/// the slot lookup.
+type Slot = Arc<Mutex<Option<Arc<Entry>>>>;
+
+fn cache() -> &'static Mutex<HashMap<CacheKey, Slot>> {
+    static CACHE: OnceLock<Mutex<HashMap<CacheKey, Slot>>> = OnceLock::new();
     CACHE.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
@@ -207,8 +224,16 @@ pub struct CacheStats {
 }
 
 pub fn cache_stats() -> CacheStats {
+    // in-flight compilations (slot locked, not yet populated) and slots
+    // whose build errored do not count as entries
+    let entries = cache()
+        .lock()
+        .unwrap()
+        .values()
+        .filter(|slot| slot.try_lock().map(|g| g.is_some()).unwrap_or(false))
+        .count();
     CacheStats {
-        entries: cache().lock().unwrap().len(),
+        entries,
         hits: HITS.load(Ordering::Relaxed),
         misses: MISSES.load(Ordering::Relaxed),
     }
@@ -220,24 +245,28 @@ pub fn clear_cache() {
     cache().lock().unwrap().clear();
 }
 
-/// Compile-or-lookup. Returns (entry, was_cache_hit).
+/// Compile-or-lookup. Returns (entry, was_cache_hit). A failed build
+/// leaves the slot empty, so the next caller retries (and counts its
+/// own miss).
 fn compile_cached(
     key: CacheKey,
     build: impl FnOnce() -> Result<Deployment, DeployError>,
 ) -> Result<(Arc<Entry>, bool), DeployError> {
-    if let Some(hit) = cache().lock().unwrap().get(&key).cloned() {
+    let slot: Slot = cache()
+        .lock()
+        .unwrap()
+        .entry(key)
+        .or_insert_with(|| Arc::new(Mutex::new(None)))
+        .clone();
+    let mut guard = slot.lock().unwrap();
+    if let Some(entry) = guard.as_ref() {
         HITS.fetch_add(1, Ordering::Relaxed);
-        return Ok((hit, true));
+        return Ok((entry.clone(), true));
     }
-    // build outside the lock: deployments take milliseconds and must not
-    // serialize unrelated compilations behind the mutex
-    let entry = Entry::new(build()?);
     MISSES.fetch_add(1, Ordering::Relaxed);
-    let mut map = cache().lock().unwrap();
-    // two threads may race to build the same key; first insert wins so
-    // every caller shares one memoized simulation
-    let winner = map.entry(key).or_insert_with(|| entry.clone()).clone();
-    Ok((winner, false))
+    let entry = Entry::new(build()?);
+    *guard = Some(entry.clone());
+    Ok((entry, false))
 }
 
 // --- builder ----------------------------------------------------------------
@@ -257,6 +286,7 @@ pub struct Pipeline {
     layers: Option<usize>,
     fuse: bool,
     use_cache: bool,
+    fleet: usize,
 }
 
 impl Default for Pipeline {
@@ -276,6 +306,7 @@ impl Pipeline {
             layers: None,
             fuse: true,
             use_cache: true,
+            fleet: 1,
         }
     }
 
@@ -318,9 +349,60 @@ impl Pipeline {
         self
     }
 
+    /// Shard count for [`serve`](Pipeline::serve): the workload is
+    /// dispatched across `n` identical clusters of this geometry.
+    /// Default: 1.
+    pub fn fleet(mut self, n: usize) -> Pipeline {
+        self.fleet = n;
+        self
+    }
+
+    /// Serve a multi-request workload on the configured fleet under the
+    /// FIFO scheduler. `Compiled::simulate()` is the degenerate case:
+    /// a single-request workload on one cluster reproduces
+    /// `Compiled::stats()` cycle-for-cycle.
+    pub fn serve(self, w: &Workload) -> Result<ServeReport, DeployError> {
+        self.serve_with(w, &mut Fifo)
+    }
+
+    /// Serve a multi-request workload under an explicit [`Scheduler`].
+    /// The workload's classes compile through the cached pipeline; if
+    /// the workload has no classes, the builder's `.model()` /
+    /// `.layers()` become the single request class.
+    pub fn serve_with(
+        self,
+        w: &Workload,
+        sched: &mut dyn Scheduler,
+    ) -> Result<ServeReport, DeployError> {
+        let Pipeline { cluster, source, target, layers, fuse, use_cache, fleet } = self;
+        let filled: Option<Workload> = if w.classes.is_empty() {
+            match source {
+                Source::Model(cfg) => {
+                    let layers = layers.unwrap_or(cfg.layers);
+                    let mut with_class = w.clone();
+                    with_class.classes = vec![RequestClass::new(&cfg, layers)];
+                    Some(with_class)
+                }
+                _ => {
+                    return Err(DeployError::Builder(
+                        "serve needs workload classes or a .model() source".into(),
+                    ))
+                }
+            }
+        } else {
+            None
+        };
+        let w = filled.as_ref().unwrap_or(w);
+        let mut f = Fleet::new(cluster, target, fleet).fuse_mha(fuse);
+        if !use_cache {
+            f = f.uncached();
+        }
+        f.serve(w, sched)
+    }
+
     /// Run the deployment flow (or fetch the memoized result).
     pub fn compile(self) -> Result<Compiled, DeployError> {
-        let Pipeline { cluster, source, target, layers, fuse, use_cache } = self;
+        let Pipeline { cluster, source, target, layers, fuse, use_cache, fleet: _ } = self;
         // MHA fusion only exists on the ITA path; canonicalize the flag
         // so MultiCore compilations share one cache entry regardless of
         // the toggle (deploy_graph_opts ignores it for MultiCore)
@@ -782,6 +864,34 @@ mod tests {
         let rt = Runtime::reference();
         let n = c.verify(&rt).unwrap();
         assert_eq!(n, MOBILEBERT.seq * MOBILEBERT.emb);
+    }
+
+    #[test]
+    fn serve_without_source_or_classes_errors() {
+        let w = Workload::poisson(vec![], 100.0, 4, 1);
+        let r = Pipeline::new(ClusterConfig::default()).serve(&w);
+        assert!(matches!(r, Err(DeployError::Builder(_))));
+        let zero_fleet = Pipeline::new(ClusterConfig::default())
+            .model(&MOBILEBERT)
+            .layers(1)
+            .fleet(0)
+            .serve(&Workload::single(&MOBILEBERT, 1));
+        assert!(matches!(zero_fleet, Err(DeployError::Builder(_))));
+    }
+
+    #[test]
+    fn serve_fills_the_class_from_the_model_source() {
+        // an empty-class workload borrows the builder's model + layers
+        let w = Workload::poisson(vec![], 500.0, 3, 42);
+        let r = Pipeline::new(ClusterConfig::default())
+            .model(&MOBILEBERT)
+            .layers(1)
+            .fleet(2)
+            .serve(&w)
+            .unwrap();
+        assert_eq!(r.served, 3);
+        assert_eq!(r.clusters, 2);
+        assert_eq!(r.scheduler, "fifo");
     }
 
     #[test]

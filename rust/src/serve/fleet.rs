@@ -1,0 +1,409 @@
+//! The cluster fleet: N shards of the heterogeneous cluster serving one
+//! request stream under a [`Scheduler`].
+//!
+//! Each shard wraps a cached [`crate::pipeline::Compiled`] per request
+//! class — the process-wide compiled-deployment cache means N shards
+//! (and repeated `serve()` calls) share one deployment and one memoized
+//! simulation per class. The serve loop is event-driven over integer
+//! cycles: arrivals enter a queue, free shards ask the scheduler for a
+//! batch, and batch completions are derived from the engine's per-step
+//! timing ([`Engine::run_spans`]), not re-simulated per request:
+//!
+//! - `first` — cycles of one cold pass of the command stream
+//!   (`Compiled::stats().cycles`).
+//! - `steady` — the incremental cycles of one more request of the same
+//!   class inside a batch. The serving runtime double-buffers request
+//!   boundaries: request j+1's input staging (the stream's no-dep lead-in
+//!   DMAs) prefetches under request j's compute, and request j's output
+//!   writeback (the trailing `DmaOut`s) drains under request j+1's
+//!   compute. Off the solo span schedule: `steady = max(compute_end -
+//!   lead_in_end, busiest-resource cycles)`, clamped to `[1, first]` —
+//!   the hidden lead/tail shrink the increment, while the bottleneck
+//!   resource's busy time floors it (no resource can be oversubscribed).
+//! - `switch` — weight re-staging DMA paid when a shard changes request
+//!   class (a cold shard pays nothing: weights are staged at deploy
+//!   time, which keeps the one-request/one-cluster case identical to
+//!   `Compiled::simulate()`).
+//!
+//! Energy is per-request active energy (cores + ITA + DMA activity of
+//! the class) plus the always-on idle floor over the whole fleet for
+//! the whole makespan.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::deeploy::ir::TensorKind;
+use crate::deeploy::{DeployError, Target};
+use crate::energy;
+use crate::pipeline::Pipeline;
+use crate::sim::dma::DmaModel;
+use crate::sim::{ClusterConfig, Cmd, Engine};
+
+use super::metrics::{percentile, ServeReport};
+use super::scheduler::{Queued, Scheduler};
+use super::workload::{RequestClass, Workload};
+
+/// Per-class serving parameters, derived once per serve run from the
+/// cached compiled deployment.
+struct ClassRuntime {
+    /// Cycles of one cold pass of the command stream.
+    first: u64,
+    /// Incremental cycles of one extra back-to-back pass in a batch.
+    steady: u64,
+    /// Weight re-staging cycles when a shard switches to this class.
+    switch: u64,
+    /// Active (non-idle) energy of one pass, joules.
+    active_j: f64,
+    /// Simulated ops of one pass.
+    ops: u64,
+}
+
+impl ClassRuntime {
+    fn build(fleet: &Fleet, class: &RequestClass) -> Result<ClassRuntime, DeployError> {
+        let mut pipeline = Pipeline::new(fleet.cluster.clone())
+            .model(&class.model)
+            .target(fleet.target)
+            .layers(class.layers)
+            .fuse_mha(fleet.fuse);
+        if !fleet.use_cache {
+            pipeline = pipeline.uncached();
+        }
+        let compiled = pipeline.compile()?;
+        let stats = compiled.stats();
+        let first = stats.cycles.max(1);
+        let e = energy::evaluate(stats, fleet.cluster.freq_hz);
+        let active_j = (e.total_j - e.idle_j).max(0.0);
+        let ops = stats.total_ops();
+
+        // steady-state increment from the solo per-step schedule (see
+        // the module docs): lead-in staging and writeback tail hide
+        // under neighboring requests; the bottleneck resource floors it
+        let steps = &compiled.deployment().steps;
+        let engine = Engine::new(compiled.cluster().clone());
+        let (span_stats, spans) = engine.run_spans(steps);
+        debug_assert_eq!(span_stats.cycles, first, "{}: span/stats drift", class.model.name);
+        let lead_in_end = steps
+            .iter()
+            .zip(&spans)
+            .filter(|(s, _)| s.deps.is_empty() && matches!(s.cmd, Cmd::DmaIn { .. }))
+            .map(|(_, sp)| sp.end)
+            .max()
+            .unwrap_or(0);
+        let compute_end = steps
+            .iter()
+            .zip(&spans)
+            .filter(|(s, _)| !matches!(s.cmd, Cmd::DmaOut { .. }))
+            .map(|(_, sp)| sp.end)
+            .max()
+            .unwrap_or(first);
+        let bottleneck = stats.busy.values().copied().max().unwrap_or(first);
+        let steady =
+            compute_end.saturating_sub(lead_in_end).max(bottleneck).clamp(1, first);
+
+        // class switch: re-stage the network's weights into L2 over the
+        // wide AXI before the first request of a different bucket
+        let weight_bytes: u64 = compiled
+            .deployment()
+            .graph
+            .tensors
+            .values()
+            .filter(|t| t.kind == TensorKind::Weight)
+            .map(|t| t.bytes() as u64)
+            .sum();
+        let switch = DmaModel::new(fleet.cluster.wide_axi_bytes).transfer_1d(weight_bytes);
+        Ok(ClassRuntime { first, steady, switch, active_j, ops })
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct Shard {
+    free_at: u64,
+    class: Option<usize>,
+    busy: u64,
+}
+
+/// N clusters of one geometry serving one workload.
+pub struct Fleet {
+    cluster: ClusterConfig,
+    target: Target,
+    n: usize,
+    fuse: bool,
+    use_cache: bool,
+}
+
+impl Fleet {
+    /// A fleet of `n` identical clusters (geometry is first-class, as
+    /// everywhere in the pipeline).
+    pub fn new(cluster: ClusterConfig, target: Target, n: usize) -> Fleet {
+        Fleet { cluster, target, n, fuse: true, use_cache: true }
+    }
+
+    /// Toggle the MHA fusion pass for every class compilation.
+    pub fn fuse_mha(mut self, on: bool) -> Fleet {
+        self.fuse = on;
+        self
+    }
+
+    /// Bypass the compiled-deployment cache for every class compilation
+    /// (mirrors `Pipeline::uncached` — geometry sweeps stay out of the
+    /// never-evicting process-wide cache).
+    pub fn uncached(mut self) -> Fleet {
+        self.use_cache = false;
+        self
+    }
+
+    pub fn clusters(&self) -> usize {
+        self.n
+    }
+
+    /// Run the workload to completion under `sched` and report.
+    pub fn serve(
+        &self,
+        w: &Workload,
+        sched: &mut dyn Scheduler,
+    ) -> Result<ServeReport, DeployError> {
+        if self.n == 0 {
+            return Err(DeployError::Builder("fleet size must be >= 1".into()));
+        }
+        w.validate()?;
+        let freq = self.cluster.freq_hz;
+        let mut classes = Vec::with_capacity(w.classes.len());
+        for c in &w.classes {
+            classes.push(ClassRuntime::build(self, c)?);
+        }
+
+        let mut crng = w.class_rng();
+        let seeds = w.seed_requests(freq, &mut crng);
+        let mut heap: BinaryHeap<Reverse<(u64, usize, usize)>> =
+            seeds.iter().map(|r| Reverse((r.arrival, r.id, r.class))).collect();
+        let mut issued = seeds.len();
+        let closed = w.is_closed_loop();
+        let think = w.think_cycles();
+
+        let mut queue: Vec<Queued> = Vec::new();
+        let mut shards: Vec<Shard> = vec![Shard::default(); self.n];
+        let mut latencies: Vec<u64> = Vec::with_capacity(w.requests);
+        let (mut depth_sum, mut depth_samples) = (0u64, 0u64);
+        let mut depth_max = 0usize;
+        let (mut switches, mut batches) = (0u64, 0u64);
+        let mut active_j = 0.0f64;
+        let mut ops_served = 0u64;
+        let mut makespan = 0u64;
+        let mut now = 0u64;
+
+        loop {
+            // admit everything due by now (heap pops in (cycle, id) order,
+            // so the queue stays in arrival order)
+            while let Some(&Reverse((t, id, class))) = heap.peek() {
+                if t > now {
+                    break;
+                }
+                heap.pop();
+                queue.push(Queued {
+                    id,
+                    class,
+                    bucket: w.classes[class].bucket(),
+                    arrival: t,
+                });
+            }
+            depth_sum += queue.len() as u64;
+            depth_samples += 1;
+            depth_max = depth_max.max(queue.len());
+
+            // dispatch until no free shard selects anything
+            loop {
+                let mut dispatched = false;
+                for si in 0..self.n {
+                    if shards[si].free_at > now || queue.is_empty() {
+                        continue;
+                    }
+                    let free = shards.iter().filter(|s| s.free_at <= now).count();
+                    let mut sel = sched.select(now, &queue, si, free, self.n);
+                    sel.retain(|&i| i < queue.len());
+                    sel.sort_unstable();
+                    sel.dedup();
+                    if sel.is_empty() {
+                        continue;
+                    }
+                    // a batch is one class (one command stream); filter
+                    // defensively if a custom scheduler mixes classes
+                    let class = queue[sel[0]].class;
+                    debug_assert!(
+                        sel.iter().all(|&i| queue[i].class == class),
+                        "{}: mixed-class batch",
+                        sched.name()
+                    );
+                    sel.retain(|&i| queue[i].class == class);
+
+                    let rt = &classes[class];
+                    let mut cost_switch = 0u64;
+                    if let Some(cur) = shards[si].class {
+                        if cur != class {
+                            cost_switch = rt.switch;
+                            switches += 1;
+                        }
+                    }
+                    // cold shard: weights staged at deploy time — free,
+                    // matching Compiled::simulate() semantics
+                    shards[si].class = Some(class);
+                    let start = now;
+                    let base = start + cost_switch + rt.first;
+                    let mut completion = base;
+                    for (j, &qi) in sel.iter().enumerate() {
+                        let done = base + j as u64 * rt.steady;
+                        completion = done;
+                        latencies.push(done - queue[qi].arrival);
+                        if closed && issued < w.requests {
+                            let id = issued;
+                            issued += 1;
+                            let next_class = w.sample_class(&mut crng);
+                            heap.push(Reverse((done + think, id, next_class)));
+                        }
+                    }
+                    active_j += rt.active_j * sel.len() as f64;
+                    ops_served += rt.ops * sel.len() as u64;
+                    shards[si].free_at = completion;
+                    shards[si].busy += completion - start;
+                    batches += 1;
+                    makespan = makespan.max(completion);
+                    for &qi in sel.iter().rev() {
+                        queue.remove(qi);
+                    }
+                    dispatched = true;
+                }
+                if !dispatched {
+                    break;
+                }
+            }
+
+            // advance to the next event; both candidates are strictly
+            // in the future, so time always progresses
+            let next_arrival = heap.peek().map(|&Reverse((t, _, _))| t);
+            let next_free = shards.iter().map(|s| s.free_at).filter(|&f| f > now).min();
+            now = match (next_arrival, next_free) {
+                (None, None) => break,
+                (Some(a), None) => a,
+                (None, Some(f)) => f,
+                (Some(a), Some(f)) => a.min(f),
+            };
+        }
+
+        let served = latencies.len();
+        let mean_latency_cycles = if served == 0 {
+            0.0
+        } else {
+            latencies.iter().sum::<u64>() as f64 / served as f64
+        };
+        latencies.sort_unstable();
+        let sorted = latencies;
+        let sec = makespan.max(1) as f64 / freq;
+        let energy_j = active_j + energy::P_IDLE_W * sec * self.n as f64;
+        Ok(ServeReport {
+            scheduler: sched.name().to_string(),
+            clusters: self.n,
+            offered: w.requests,
+            served,
+            makespan_cycles: makespan,
+            seconds: sec,
+            req_per_s: served as f64 / sec,
+            gops: ops_served as f64 / 1e9 / sec,
+            energy_j,
+            mj_per_req: energy_j * 1e3 / (served.max(1)) as f64,
+            gopj: ops_served as f64 / 1e9 / energy_j,
+            p50_cycles: percentile(&sorted, 0.50),
+            p90_cycles: percentile(&sorted, 0.90),
+            p99_cycles: percentile(&sorted, 0.99),
+            mean_latency_cycles,
+            mean_queue_depth: depth_sum as f64 / depth_samples.max(1) as f64,
+            max_queue_depth: depth_max,
+            cluster_utilization: shards
+                .iter()
+                .map(|s| s.busy as f64 / makespan.max(1) as f64)
+                .collect(),
+            class_switches: switches,
+            batches,
+            freq_hz: freq,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{DINOV2S, MOBILEBERT};
+    use crate::serve::scheduler::{DynamicBatch, Fifo, RoundRobin};
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::new(ClusterConfig::default(), Target::MultiCoreIta, n)
+    }
+
+    fn first_cycles(model: &crate::models::ModelConfig) -> u64 {
+        Pipeline::new(ClusterConfig::default())
+            .model(model)
+            .target(Target::MultiCoreIta)
+            .layers(1)
+            .compile()
+            .unwrap()
+            .stats()
+            .cycles
+    }
+
+    #[test]
+    fn batching_two_same_class_requests_beats_fifo() {
+        let classes = vec![RequestClass::new(&MOBILEBERT, 1)];
+        let w = Workload::trace(classes, vec![(0, 0), (0, 0)]);
+        let fifo = fleet(1).serve(&w, &mut Fifo).unwrap();
+        let batch = fleet(1).serve(&w, &mut DynamicBatch::default()).unwrap();
+        let first = first_cycles(&MOBILEBERT);
+        // fifo: two cold passes back to back, no switch
+        assert_eq!(fifo.makespan_cycles, 2 * first);
+        assert_eq!(fifo.served, 2);
+        assert_eq!(fifo.class_switches, 0);
+        // batch: one cold pass + one steady-state increment (< first:
+        // the lead-in staging and writeback tail hide in the batch)
+        assert_eq!(batch.served, 2);
+        assert_eq!(batch.batches, 1);
+        assert!(
+            batch.makespan_cycles < fifo.makespan_cycles,
+            "batched {} !< fifo {}",
+            batch.makespan_cycles,
+            fifo.makespan_cycles
+        );
+        assert!(batch.makespan_cycles > first, "steady increment must cost > 0");
+    }
+
+    #[test]
+    fn round_robin_runs_two_shards_in_parallel() {
+        let classes = vec![RequestClass::new(&MOBILEBERT, 1)];
+        let w = Workload::trace(classes, vec![(0, 0), (0, 0)]);
+        let r = fleet(2).serve(&w, &mut RoundRobin).unwrap();
+        assert_eq!(r.served, 2);
+        assert_eq!(r.makespan_cycles, first_cycles(&MOBILEBERT));
+        assert_eq!(r.cluster_utilization.len(), 2);
+        assert!(r.cluster_utilization.iter().all(|&u| (u - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn class_switch_is_charged_between_buckets() {
+        let classes =
+            vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&DINOV2S, 1)];
+        let w = Workload::trace(classes, vec![(0, 0), (0, 1)]);
+        let r = fleet(1).serve(&w, &mut Fifo).unwrap();
+        assert_eq!(r.served, 2);
+        assert_eq!(r.class_switches, 1);
+        let sum_first = first_cycles(&MOBILEBERT) + first_cycles(&DINOV2S);
+        assert!(
+            r.makespan_cycles > sum_first,
+            "switch DMA must add cycles: {} <= {sum_first}",
+            r.makespan_cycles
+        );
+    }
+
+    #[test]
+    fn zero_fleet_is_a_builder_error() {
+        let w = Workload::single(&MOBILEBERT, 1);
+        let r = Fleet::new(ClusterConfig::default(), Target::MultiCoreIta, 0)
+            .serve(&w, &mut Fifo);
+        assert!(matches!(r, Err(DeployError::Builder(_))));
+    }
+}

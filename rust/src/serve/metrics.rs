@@ -1,0 +1,105 @@
+//! Serving metrics: the [`ServeReport`] and its percentile machinery.
+
+/// Aggregate result of one serve run — the serving-side analogue of
+/// `coordinator::report::ModelReport`. Rendered by
+/// `coordinator::report::render_serve`.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Scheduler that produced this run (`Scheduler::name`).
+    pub scheduler: String,
+    /// Fleet size.
+    pub clusters: usize,
+    /// Requests the workload offered.
+    pub offered: usize,
+    /// Requests actually served (== offered for the built-in
+    /// schedulers; a custom scheduler that strands work serves fewer).
+    pub served: usize,
+    /// Cycle of the last completion.
+    pub makespan_cycles: u64,
+    /// Makespan in seconds at `freq_hz`.
+    pub seconds: f64,
+    /// Served requests per second.
+    pub req_per_s: f64,
+    /// Simulated-op throughput across the fleet.
+    pub gops: f64,
+    /// Total energy: per-request active energy + fleet idle floor.
+    pub energy_j: f64,
+    pub mj_per_req: f64,
+    pub gopj: f64,
+    /// Request latency (arrival -> completion) percentiles, in cycles.
+    pub p50_cycles: u64,
+    pub p90_cycles: u64,
+    pub p99_cycles: u64,
+    pub mean_latency_cycles: f64,
+    /// Queue depth sampled at every event time (after admission,
+    /// before dispatch).
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
+    /// Busy fraction of each cluster over the makespan.
+    pub cluster_utilization: Vec<f64>,
+    /// Class switches paid (weight re-staging between buckets).
+    pub class_switches: u64,
+    /// Dispatches issued (batches of >= 1 request).
+    pub batches: u64,
+    pub freq_hz: f64,
+}
+
+impl ServeReport {
+    pub fn latency_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_hz * 1e3
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.latency_ms(self.p50_cycles)
+    }
+
+    pub fn p90_ms(&self) -> f64 {
+        self.latency_ms(self.p90_cycles)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latency_ms(self.p99_cycles)
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice: the smallest
+/// element whose rank covers fraction `q` of the population. Monotone
+/// in `q` by construction, so p50 <= p90 <= p99 always holds.
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let n = sorted.len();
+    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_matches_hand_values() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.90), 90);
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&v, 1.0), 100);
+        let two = [10u64, 20];
+        assert_eq!(percentile(&two, 0.50), 10);
+        assert_eq!(percentile(&two, 0.99), 20);
+        assert_eq!(percentile(&[7], 0.5), 7);
+        assert_eq!(percentile(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_q() {
+        let v = [3u64, 3, 5, 9, 9, 14, 20, 20, 21, 40];
+        let mut last = 0;
+        for q in [0.01, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let p = percentile(&v, q);
+            assert!(p >= last, "q={q}: {p} < {last}");
+            last = p;
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Multi-request serving: workloads, schedulers, and a sharded fleet.
+//!
+//! The paper's headline numbers are single-inference figures; this
+//! subsystem is the production-scale execution surface over the same
+//! compiled deployments. A [`Workload`] describes a request stream
+//! (deterministic Poisson / bursty / trace-replay / closed-loop), a
+//! [`Scheduler`] ([`Fifo`], [`RoundRobin`], seq-len-bucketed
+//! [`DynamicBatch`]) dispatches requests onto a [`Fleet`] of N clusters
+//! — each wrapping a cached `Compiled` from the pipeline, shared across
+//! shards through the process-wide deployment cache — and the
+//! event-driven serve loop produces a [`ServeReport`] with throughput
+//! (req/s, GOp/s), latency percentiles (p50/p90/p99), queue depth,
+//! per-cluster utilization and energy.
+//!
+//! ```no_run
+//! use attn_tinyml::pipeline::Pipeline;
+//! use attn_tinyml::models::{MOBILEBERT, DINOV2S};
+//! use attn_tinyml::serve::{DynamicBatch, RequestClass, Workload};
+//! use attn_tinyml::sim::ClusterConfig;
+//!
+//! let classes = vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&DINOV2S, 1)];
+//! let w = Workload::poisson(classes, 200.0, 64, 0x5EED);
+//! let report = Pipeline::new(ClusterConfig::default())
+//!     .fleet(4)
+//!     .serve_with(&w, &mut DynamicBatch::default())
+//!     .unwrap();
+//! println!("{:.0} req/s, p99 {:.2} ms", report.req_per_s, report.p99_ms());
+//! ```
+//!
+//! **Determinism contract:** serving never reads a wall clock. Arrivals
+//! are derived from the workload seed through `util::prng`, service
+//! times come from the deterministic cycle-level engine, and batch
+//! interleaving is computed from [`crate::sim::Engine::run_spans`]
+//! per-step timing — so a serve run is a pure function of (workload,
+//! geometry, scheduler) and reproduces bit-identically. One request on
+//! one cluster is the degenerate case: its makespan equals
+//! `Compiled::stats().cycles` cycle-for-cycle, making
+//! `Compiled::simulate()` a special case of `serve()`.
+
+pub mod fleet;
+pub mod metrics;
+pub mod scheduler;
+pub mod workload;
+
+pub use fleet::Fleet;
+pub use metrics::ServeReport;
+pub use scheduler::{
+    by_name as scheduler_by_name, DynamicBatch, Fifo, Queued, RoundRobin, Scheduler,
+};
+pub use workload::{Arrivals, Request, RequestClass, Workload};

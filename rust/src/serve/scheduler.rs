@@ -1,0 +1,219 @@
+//! Dispatch policies: which queued requests a free cluster runs next.
+//!
+//! A [`Scheduler`] sees the waiting queue (always in arrival order) and
+//! returns the indices of the requests to dispatch as **one batch** on
+//! the free cluster — all of one class, because a batch executes a
+//! single compiled command stream back-to-back. An empty selection
+//! leaves the cluster idle until the next event.
+//!
+//! Three built-in policies:
+//!
+//! - [`Fifo`] — strict arrival order, one request per dispatch. The
+//!   baseline every serving paper compares against.
+//! - [`RoundRobin`] — static sharding: request `id % n_clusters` belongs
+//!   to that cluster. Perfectly fair, but a burst of one class can
+//!   strand work behind one shard while others idle.
+//! - [`DynamicBatch`] — head-of-line seq-len-bucket batching: take the
+//!   oldest waiter's bucket, narrowed to its class (a batch executes
+//!   one compiled command stream), and coalesce those requests into
+//!   one batch. Coalescing converts repeated cold dispatches into
+//!   pipelined steady-state iterations and removes class switches
+//!   (weight re-staging), which is where its throughput edge on bursty
+//!   multi-class traffic comes from. The batch is capped both by
+//!   `max_batch` and by an even share of the bucket over the whole
+//!   fleet, so a draining queue degrades to single fifo-like dispatches
+//!   instead of hoarding the last requests on one shard.
+
+/// One waiting request as schedulers see it.
+#[derive(Debug, Clone)]
+pub struct Queued {
+    pub id: usize,
+    /// Index into the workload's class list.
+    pub class: usize,
+    /// Seq-len bucket of the class (its padded sequence length).
+    pub bucket: usize,
+    /// Arrival cycle.
+    pub arrival: u64,
+}
+
+/// A dispatch policy. Implementations must return indices into `queue`
+/// that all share one class (the fleet debug-asserts and defensively
+/// filters mixed selections).
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Pick the batch for `cluster`, which is free at `now`. `free` is
+    /// the number of currently free clusters (including this one),
+    /// `n_clusters` the fleet size. Empty = leave this cluster idle.
+    fn select(
+        &mut self,
+        now: u64,
+        queue: &[Queued],
+        cluster: usize,
+        free: usize,
+        n_clusters: usize,
+    ) -> Vec<usize>;
+}
+
+/// Strict arrival order, one request per dispatch.
+pub struct Fifo;
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn select(
+        &mut self,
+        _now: u64,
+        queue: &[Queued],
+        _cluster: usize,
+        _free: usize,
+        _n_clusters: usize,
+    ) -> Vec<usize> {
+        if queue.is_empty() {
+            Vec::new()
+        } else {
+            vec![0]
+        }
+    }
+}
+
+/// Static sharding: request `id % n_clusters` is pinned to that cluster.
+pub struct RoundRobin;
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn select(
+        &mut self,
+        _now: u64,
+        queue: &[Queued],
+        cluster: usize,
+        _free: usize,
+        n_clusters: usize,
+    ) -> Vec<usize> {
+        queue
+            .iter()
+            .position(|q| q.id % n_clusters.max(1) == cluster)
+            .map(|i| vec![i])
+            .unwrap_or_default()
+    }
+}
+
+/// Head-of-line seq-len-bucket batching (see the module docs).
+pub struct DynamicBatch {
+    /// Upper bound on one batch (HWPE context + L2 staging pragmatics).
+    pub max_batch: usize,
+}
+
+impl DynamicBatch {
+    pub fn new(max_batch: usize) -> DynamicBatch {
+        DynamicBatch { max_batch: max_batch.max(1) }
+    }
+}
+
+impl Default for DynamicBatch {
+    fn default() -> Self {
+        DynamicBatch::new(8)
+    }
+}
+
+impl Scheduler for DynamicBatch {
+    fn name(&self) -> &'static str {
+        "dynamic-batch"
+    }
+
+    fn select(
+        &mut self,
+        _now: u64,
+        queue: &[Queued],
+        _cluster: usize,
+        _free: usize,
+        n_clusters: usize,
+    ) -> Vec<usize> {
+        let Some(head) = queue.first() else {
+            return Vec::new();
+        };
+        // the oldest waiter picks the seq-len bucket (head-of-line,
+        // Fifo-fair), narrowed to its class: a batch executes one
+        // command stream, so same-bucket requests of a different class
+        // (same padded seq, different network/depth) wait their turn
+        let idx: Vec<usize> = queue
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.bucket == head.bucket && q.class == head.class)
+            .map(|(i, _)| i)
+            .collect();
+        // spread over the whole fleet: take at most an even share of
+        // the bucket so a draining queue degrades to single dispatches
+        // (fifo-like tail) instead of hoarding the last requests on one
+        // shard while the others idle
+        let share = idx.len().div_ceil(n_clusters.max(1));
+        let k = share.min(self.max_batch).max(1);
+        idx[..k.min(idx.len())].to_vec()
+    }
+}
+
+/// CLI lookup: `fifo`, `rr`/`round-robin`, `batch`/`dynamic-batch`.
+pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "fifo" => Some(Box::new(Fifo)),
+        "rr" | "round-robin" => Some(Box::new(RoundRobin)),
+        "batch" | "dynamic-batch" => Some(Box::new(DynamicBatch::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: usize, class: usize) -> Queued {
+        Queued { id, class, bucket: 128 * (class + 1), arrival: id as u64 }
+    }
+
+    #[test]
+    fn fifo_takes_the_head() {
+        let mut s = Fifo;
+        assert!(s.select(0, &[], 0, 1, 1).is_empty());
+        assert_eq!(s.select(0, &[q(0, 1), q(1, 0)], 0, 1, 1), vec![0]);
+    }
+
+    #[test]
+    fn round_robin_pins_requests_to_their_shard() {
+        let mut s = RoundRobin;
+        let queue = [q(0, 0), q(1, 0), q(2, 0), q(5, 1)];
+        assert_eq!(s.select(0, &queue, 0, 2, 2), vec![0]);
+        assert_eq!(s.select(0, &queue, 1, 2, 2), vec![1]); // id 1 % 2 == 1
+        // a shard with no assigned work stays idle
+        let only_even = [q(0, 0), q(2, 0)];
+        assert!(s.select(0, &only_even, 1, 2, 2).is_empty());
+    }
+
+    #[test]
+    fn dynamic_batch_coalesces_the_head_bucket() {
+        let mut s = DynamicBatch::new(8);
+        // head class 0; co-bucketed ids 0, 2, 3 coalesce past the class-1
+        // request at position 1
+        let queue = [q(0, 0), q(1, 1), q(2, 0), q(3, 0)];
+        assert_eq!(s.select(0, &queue, 0, 1, 1), vec![0, 2, 3]);
+        // spread over a 2-cluster fleet: take only the even share
+        assert_eq!(s.select(0, &queue, 0, 2, 2), vec![0, 2]);
+        // max_batch caps the batch
+        let mut tight = DynamicBatch::new(2);
+        assert_eq!(tight.select(0, &queue, 0, 1, 1), vec![0, 2]);
+    }
+
+    #[test]
+    fn by_name_resolves_all_policies() {
+        for (name, want) in
+            [("fifo", "fifo"), ("rr", "round-robin"), ("batch", "dynamic-batch")]
+        {
+            assert_eq!(by_name(name).unwrap().name(), want);
+        }
+        assert!(by_name("lifo").is_none());
+    }
+}

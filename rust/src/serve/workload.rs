@@ -1,0 +1,390 @@
+//! Request-stream descriptions for the serving layer.
+//!
+//! A [`Workload`] is a deterministic description of *who asks for what,
+//! when*: a set of [`RequestClass`]es (each one compiled deployment) and
+//! an arrival process. Every arrival is derived from the workload seed
+//! through [`XorShift64`] — no wall clock anywhere — so a serve run is a
+//! pure function of (workload, geometry, scheduler) and two runs with
+//! the same inputs produce bit-identical [`super::ServeReport`]s.
+//!
+//! Three arrival shapes cover the classic serving scenarios:
+//!
+//! - [`Arrivals::Poisson`] / [`Arrivals::Bursty`] — open-loop traffic.
+//!   Inter-arrival gaps are exponential (`-ln(1-u)/rate`); the bursty
+//!   variant modulates the rate with a square wave (on-half of each
+//!   period at `rate x burst_factor`, off-half at `rate / burst_factor`),
+//!   which is what makes batching schedulers earn their keep.
+//! - [`Arrivals::Trace`] — explicit `(cycle, class)` replay.
+//! - [`Arrivals::ClosedLoop`] — N clients, each issuing its next request
+//!   `think_cycles` after its previous one completes (the fleet issues
+//!   follow-ons from completions; only the first wave is pre-generated).
+
+use crate::deeploy::DeployError;
+use crate::models::ModelConfig;
+use crate::util::prng::XorShift64;
+
+/// One request kind: a network to infer, pre-compiled once per fleet.
+/// Classes are bucketed by their padded sequence length ([`bucket`]),
+/// the quantity the dynamic-batch scheduler groups on.
+///
+/// [`bucket`]: RequestClass::bucket
+#[derive(Debug, Clone)]
+pub struct RequestClass {
+    pub model: ModelConfig,
+    /// Encoder blocks to deploy (a request executes the compiled command
+    /// stream once — deploy the full depth to serve full inferences).
+    pub layers: usize,
+}
+
+impl RequestClass {
+    pub fn new(model: &ModelConfig, layers: usize) -> RequestClass {
+        RequestClass { model: model.clone(), layers }
+    }
+
+    /// Seq-len bucket of the class: the padded sequence length its
+    /// deployment is compiled for. Requests in one bucket share a
+    /// command stream and can run back-to-back as one batch.
+    pub fn bucket(&self) -> usize {
+        self.model.seq
+    }
+}
+
+/// Arrival process of a workload (all times in cluster cycles once
+/// materialized; rates are specified in requests/second and converted
+/// at the fleet's clock frequency).
+#[derive(Debug, Clone)]
+pub enum Arrivals {
+    /// Open-loop Poisson arrivals at a constant rate.
+    Poisson { rate_rps: f64 },
+    /// Square-wave-modulated Poisson: the first half of each period
+    /// arrives at `rate_rps * burst_factor`, the second half at
+    /// `rate_rps / burst_factor`. Exponential memorylessness makes
+    /// advance-to-boundary-and-resample sampling exact.
+    Bursty { rate_rps: f64, burst_factor: f64, period_s: f64 },
+    /// Explicit replay: (arrival cycle, class index) pairs.
+    Trace(Vec<(u64, usize)>),
+    /// `clients` closed-loop clients; each issues its next request
+    /// `think_cycles` after its previous one completes.
+    ClosedLoop { clients: usize, think_cycles: u64 },
+}
+
+/// A deterministic request stream over a set of request classes.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub classes: Vec<RequestClass>,
+    pub arrivals: Arrivals,
+    /// Total requests offered (for traces: the trace length).
+    pub requests: usize,
+    pub seed: u64,
+}
+
+/// One materialized request.
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub id: usize,
+    /// Index into [`Workload::classes`].
+    pub class: usize,
+    /// Arrival time in cluster cycles.
+    pub arrival: u64,
+}
+
+impl Workload {
+    pub fn poisson(
+        classes: Vec<RequestClass>,
+        rate_rps: f64,
+        requests: usize,
+        seed: u64,
+    ) -> Workload {
+        Workload { classes, arrivals: Arrivals::Poisson { rate_rps }, requests, seed }
+    }
+
+    pub fn bursty(
+        classes: Vec<RequestClass>,
+        rate_rps: f64,
+        burst_factor: f64,
+        period_s: f64,
+        requests: usize,
+        seed: u64,
+    ) -> Workload {
+        Workload {
+            classes,
+            arrivals: Arrivals::Bursty { rate_rps, burst_factor, period_s },
+            requests,
+            seed,
+        }
+    }
+
+    /// Replay an explicit (cycle, class) trace.
+    pub fn trace(classes: Vec<RequestClass>, entries: Vec<(u64, usize)>) -> Workload {
+        let requests = entries.len();
+        Workload { classes, arrivals: Arrivals::Trace(entries), requests, seed: 0 }
+    }
+
+    pub fn closed_loop(
+        classes: Vec<RequestClass>,
+        clients: usize,
+        think_cycles: u64,
+        requests: usize,
+        seed: u64,
+    ) -> Workload {
+        Workload {
+            classes,
+            arrivals: Arrivals::ClosedLoop { clients, think_cycles },
+            requests,
+            seed,
+        }
+    }
+
+    /// The degenerate workload: one request of one model at cycle 0 —
+    /// `serve()` on one cluster reproduces `Compiled::stats()`
+    /// cycle-for-cycle.
+    pub fn single(model: &ModelConfig, layers: usize) -> Workload {
+        Workload::trace(vec![RequestClass::new(model, layers)], vec![(0, 0)])
+    }
+
+    /// Structural validation (rates, indices, counts). The fleet calls
+    /// this before compiling anything.
+    pub fn validate(&self) -> Result<(), DeployError> {
+        let err = |m: String| Err(DeployError::Builder(m));
+        if self.classes.is_empty() {
+            return err("workload has no request classes".into());
+        }
+        if self.requests == 0 {
+            return err("workload must offer at least one request".into());
+        }
+        for c in &self.classes {
+            if c.layers == 0 {
+                return err(format!("class {}: layers must be >= 1", c.model.name));
+            }
+        }
+        match &self.arrivals {
+            Arrivals::Poisson { rate_rps } => {
+                if !rate_rps.is_finite() || *rate_rps <= 0.0 {
+                    return err(format!("arrival rate must be positive, got {rate_rps}"));
+                }
+            }
+            Arrivals::Bursty { rate_rps, burst_factor, period_s } => {
+                if !rate_rps.is_finite() || *rate_rps <= 0.0 {
+                    return err(format!("arrival rate must be positive, got {rate_rps}"));
+                }
+                if !burst_factor.is_finite() || *burst_factor < 1.0 {
+                    return err(format!("burst factor must be >= 1, got {burst_factor}"));
+                }
+                if !period_s.is_finite() || *period_s <= 0.0 {
+                    return err(format!("burst period must be positive, got {period_s}"));
+                }
+            }
+            Arrivals::Trace(entries) => {
+                if entries.is_empty() {
+                    return err("trace workload has no entries".into());
+                }
+                if entries.len() != self.requests {
+                    return err(format!(
+                        "trace length {} != offered requests {}",
+                        entries.len(),
+                        self.requests
+                    ));
+                }
+                if let Some((_, c)) = entries.iter().find(|(_, c)| *c >= self.classes.len()) {
+                    return err(format!(
+                        "trace references class {c} but only {} classes exist",
+                        self.classes.len()
+                    ));
+                }
+            }
+            Arrivals::ClosedLoop { clients, .. } => {
+                if *clients == 0 {
+                    return err("closed-loop workload needs at least one client".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn is_closed_loop(&self) -> bool {
+        matches!(self.arrivals, Arrivals::ClosedLoop { .. })
+    }
+
+    pub fn think_cycles(&self) -> u64 {
+        match self.arrivals {
+            Arrivals::ClosedLoop { think_cycles, .. } => think_cycles,
+            _ => 0,
+        }
+    }
+
+    /// The class-assignment PRNG stream. The fleet holds it across the
+    /// run so closed-loop follow-ons continue the same deterministic
+    /// sequence the first wave started.
+    pub fn class_rng(&self) -> XorShift64 {
+        XorShift64::new(self.seed ^ 0xC1A5_5E5)
+    }
+
+    /// Uniform class pick from the dedicated class stream.
+    pub fn sample_class(&self, rng: &mut XorShift64) -> usize {
+        rng.next_below(self.classes.len() as u64) as usize
+    }
+
+    /// Materialize the pre-known arrivals, sorted by (cycle, id):
+    /// everything for open-loop processes, the first per-client wave for
+    /// closed loop (follow-ons are issued by the fleet on completions).
+    pub fn seed_requests(&self, freq_hz: f64, class_rng: &mut XorShift64) -> Vec<Request> {
+        match &self.arrivals {
+            Arrivals::Poisson { rate_rps } => {
+                let mut rng = XorShift64::new(self.seed);
+                let mut t_s = 0.0f64;
+                (0..self.requests)
+                    .map(|id| {
+                        t_s += exp_gap(&mut rng, *rate_rps);
+                        Request {
+                            id,
+                            class: self.sample_class(class_rng),
+                            arrival: (t_s * freq_hz).round() as u64,
+                        }
+                    })
+                    .collect()
+            }
+            Arrivals::Bursty { rate_rps, burst_factor, period_s } => {
+                let mut rng = XorShift64::new(self.seed);
+                let half = period_s / 2.0;
+                let mut t_s = 0.0f64;
+                let mut out = Vec::with_capacity(self.requests);
+                while out.len() < self.requests {
+                    let phase = t_s.rem_euclid(*period_s);
+                    let on = phase < half;
+                    let rate =
+                        if on { rate_rps * burst_factor } else { rate_rps / burst_factor };
+                    let gap = exp_gap(&mut rng, rate);
+                    let boundary =
+                        if on { t_s - phase + half } else { t_s - phase + period_s };
+                    if t_s + gap >= boundary {
+                        // crossed into the other phase: advance to the
+                        // boundary and resample (exact, by memorylessness)
+                        t_s = boundary;
+                    } else {
+                        t_s += gap;
+                        out.push(Request {
+                            id: out.len(),
+                            class: self.sample_class(class_rng),
+                            arrival: (t_s * freq_hz).round() as u64,
+                        });
+                    }
+                }
+                out
+            }
+            Arrivals::Trace(entries) => {
+                let mut sorted: Vec<(u64, usize)> = entries.clone();
+                sorted.sort_by_key(|&(t, _)| t);
+                sorted
+                    .into_iter()
+                    .enumerate()
+                    .map(|(id, (arrival, class))| Request { id, class, arrival })
+                    .collect()
+            }
+            Arrivals::ClosedLoop { clients, .. } => (0..(*clients).min(self.requests))
+                .map(|id| Request { id, class: self.sample_class(class_rng), arrival: 0 })
+                .collect(),
+        }
+    }
+}
+
+/// One exponential inter-arrival gap in seconds. `next_f64` is in
+/// [0, 1), so `1 - u` is in (0, 1] and the log is finite and <= 0.
+fn exp_gap(rng: &mut XorShift64, rate_rps: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / rate_rps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{DINOV2S, MOBILEBERT};
+
+    const FREQ: f64 = 425.0e6;
+
+    fn classes() -> Vec<RequestClass> {
+        vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&DINOV2S, 1)]
+    }
+
+    #[test]
+    fn poisson_is_deterministic_sorted_and_rate_shaped() {
+        let w = Workload::poisson(classes(), 100.0, 200, 7);
+        let a = w.seed_requests(FREQ, &mut w.class_rng());
+        let b = w.seed_requests(FREQ, &mut w.class_rng());
+        assert_eq!(a.len(), 200);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.arrival == y.arrival && x.class == y.class));
+        assert!(a.windows(2).all(|p| p[0].arrival <= p[1].arrival), "sorted");
+        // 200 arrivals at 100 req/s ~ 2 s of stream (loose CLT bounds)
+        let span_s = a.last().unwrap().arrival as f64 / FREQ;
+        assert!((1.0..4.0).contains(&span_s), "span {span_s} s");
+        // both classes appear
+        assert!(a.iter().any(|r| r.class == 0) && a.iter().any(|r| r.class == 1));
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_in_on_phases() {
+        let period = 0.02;
+        let w = Workload::bursty(classes(), 200.0, 8.0, period, 400, 11);
+        let a = w.seed_requests(FREQ, &mut w.class_rng());
+        assert_eq!(a.len(), 400);
+        assert!(a.windows(2).all(|p| p[0].arrival <= p[1].arrival));
+        let on = a
+            .iter()
+            .filter(|r| (r.arrival as f64 / FREQ).rem_euclid(period) < period / 2.0)
+            .count();
+        // on-phase rate is 64x the off-phase rate: the on half must
+        // carry the overwhelming majority of arrivals
+        assert!(on > a.len() * 8 / 10, "only {on}/{} arrivals in bursts", a.len());
+    }
+
+    #[test]
+    fn trace_sorts_and_validates_class_indices() {
+        let w = Workload::trace(classes(), vec![(500, 1), (0, 0), (250, 0)]);
+        assert!(w.validate().is_ok());
+        let a = w.seed_requests(FREQ, &mut w.class_rng());
+        assert_eq!(a.len(), 3);
+        assert_eq!((a[0].arrival, a[0].class), (0, 0));
+        assert_eq!((a[2].arrival, a[2].class), (500, 1));
+
+        let bad = Workload::trace(classes(), vec![(0, 9)]);
+        assert!(matches!(bad.validate(), Err(DeployError::Builder(_))));
+    }
+
+    #[test]
+    fn closed_loop_seeds_one_request_per_client() {
+        let w = Workload::closed_loop(classes(), 3, 1000, 10, 5);
+        let a = w.seed_requests(FREQ, &mut w.class_rng());
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|r| r.arrival == 0));
+        assert!(w.is_closed_loop());
+        assert_eq!(w.think_cycles(), 1000);
+        // never seed more than the offered total
+        let tiny = Workload::closed_loop(classes(), 8, 0, 2, 5);
+        assert_eq!(tiny.seed_requests(FREQ, &mut tiny.class_rng()).len(), 2);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_workloads() {
+        assert!(Workload::poisson(vec![], 10.0, 4, 0).validate().is_err());
+        assert!(Workload::poisson(classes(), 0.0, 4, 0).validate().is_err());
+        assert!(Workload::poisson(classes(), 10.0, 0, 0).validate().is_err());
+        assert!(Workload::bursty(classes(), 10.0, 0.5, 0.02, 4, 0).validate().is_err());
+        assert!(Workload::closed_loop(classes(), 0, 10, 4, 0).validate().is_err());
+        let zero_layers = Workload::poisson(
+            vec![RequestClass { model: MOBILEBERT.clone(), layers: 0 }],
+            10.0,
+            4,
+            0,
+        );
+        assert!(zero_layers.validate().is_err());
+    }
+
+    #[test]
+    fn single_is_the_degenerate_trace() {
+        let w = Workload::single(&MOBILEBERT, 1);
+        assert!(w.validate().is_ok());
+        assert_eq!(w.requests, 1);
+        let a = w.seed_requests(FREQ, &mut w.class_rng());
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].arrival, 0);
+        assert_eq!(w.classes[0].bucket(), MOBILEBERT.seq);
+    }
+}

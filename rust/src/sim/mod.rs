@@ -30,5 +30,5 @@ pub mod timing;
 pub mod trace;
 
 pub use cluster::ClusterConfig;
-pub use engine::{Cmd, CoreOp, Engine, Step};
-pub use trace::RunStats;
+pub use engine::{Cmd, CoreOp, Engine, Step, StepSpan};
+pub use trace::{Resource, RunStats};

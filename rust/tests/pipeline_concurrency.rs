@@ -1,0 +1,66 @@
+//! The compiled-deployment cache must build each key exactly once under
+//! concurrent compilation. This lives in its own integration binary (a
+//! separate process) so the process-wide `cache_stats()` counters are
+//! untouched by other tests and the assertions can be exact.
+
+use std::thread;
+
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::models::MOBILEBERT;
+use attn_tinyml::pipeline::{self, Pipeline};
+use attn_tinyml::sim::ClusterConfig;
+
+#[test]
+fn concurrent_compiles_of_one_key_miss_exactly_once() {
+    let before = pipeline::cache_stats();
+    assert_eq!(before.misses, 0, "fresh process must start with an empty cache");
+    assert_eq!(before.hits, 0);
+
+    const THREADS: usize = 8;
+    let cycles: Vec<u64> = thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                s.spawn(|| {
+                    let c = Pipeline::new(ClusterConfig::default())
+                        .model(&MOBILEBERT)
+                        .target(Target::MultiCoreIta)
+                        .layers(1)
+                        .compile()
+                        .unwrap();
+                    // exercise the memoized simulation too: every thread
+                    // must observe the same deterministic statistics
+                    c.stats().cycles
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    assert!(cycles.windows(2).all(|w| w[0] == w[1]), "shared stats must agree");
+
+    let after = pipeline::cache_stats();
+    assert_eq!(
+        after.misses, 1,
+        "the same key from {THREADS} threads must compile exactly once"
+    );
+    assert_eq!(after.hits, THREADS as u64 - 1);
+    assert_eq!(after.entries, 1);
+
+    // and the winners really share one deployment: a fresh compile is a
+    // hit that returns an Arc into the same entry
+    let a = Pipeline::new(ClusterConfig::default())
+        .model(&MOBILEBERT)
+        .target(Target::MultiCoreIta)
+        .layers(1)
+        .compile()
+        .unwrap();
+    assert!(a.was_cached());
+    let dep: *const _ = a.deployment();
+    let b = Pipeline::new(ClusterConfig::default())
+        .model(&MOBILEBERT)
+        .target(Target::MultiCoreIta)
+        .layers(1)
+        .compile()
+        .unwrap();
+    assert!(std::ptr::eq(dep, b.deployment()), "cache must share one deployment");
+}

@@ -1,0 +1,206 @@
+//! ServeReport invariants across schedulers, fleet sizes and arrival
+//! processes: percentile ordering, served-request conservation, and the
+//! degenerate one-request/one-cluster identity with `Compiled::stats()`.
+
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::energy;
+use attn_tinyml::models::{DINOV2S, MOBILEBERT, WHISPER_TINY_ENC};
+use attn_tinyml::pipeline::Pipeline;
+use attn_tinyml::serve::{
+    scheduler_by_name, DynamicBatch, Fifo, RequestClass, RoundRobin, ServeReport, Workload,
+};
+use attn_tinyml::sim::ClusterConfig;
+use attn_tinyml::util::propcheck::{check, Config};
+
+fn classes() -> Vec<RequestClass> {
+    vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&DINOV2S, 1)]
+}
+
+fn assert_invariants(r: &ServeReport, offered: usize, clusters: usize) {
+    assert_eq!(r.offered, offered);
+    assert_eq!(r.served, offered, "request conservation ({})", r.scheduler);
+    assert!(r.p50_cycles <= r.p90_cycles, "p50 {} > p90 {}", r.p50_cycles, r.p90_cycles);
+    assert!(r.p90_cycles <= r.p99_cycles, "p90 {} > p99 {}", r.p90_cycles, r.p99_cycles);
+    assert!(
+        r.p99_cycles <= r.makespan_cycles,
+        "p99 {} > makespan {}",
+        r.p99_cycles,
+        r.makespan_cycles
+    );
+    assert_eq!(r.cluster_utilization.len(), clusters);
+    for &u in &r.cluster_utilization {
+        assert!((0.0..=1.0).contains(&u), "utilization {u} out of range");
+    }
+    assert!(r.mean_queue_depth >= 0.0);
+    assert!(r.mean_queue_depth <= r.max_queue_depth as f64);
+    assert!(r.energy_j > 0.0 && r.req_per_s > 0.0 && r.gops > 0.0);
+    assert!(r.seconds > 0.0);
+}
+
+#[test]
+fn single_request_single_cluster_reproduces_compiled_stats() {
+    let compiled = Pipeline::new(ClusterConfig::default())
+        .model(&MOBILEBERT)
+        .target(Target::MultiCoreIta)
+        .layers(1)
+        .compile()
+        .unwrap();
+    let stats = compiled.stats();
+    let w = Workload::single(&MOBILEBERT, 1);
+    let r = Pipeline::new(ClusterConfig::default()).fleet(1).serve(&w).unwrap();
+    // cycle-for-cycle: serve() degenerates to one pass of the compiled
+    // command stream — no switch, no queueing, no batching
+    assert_eq!(r.makespan_cycles, stats.cycles);
+    assert_eq!(r.p50_cycles, stats.cycles);
+    assert_eq!(r.p90_cycles, stats.cycles);
+    assert_eq!(r.p99_cycles, stats.cycles);
+    assert_eq!(r.served, 1);
+    assert_eq!(r.batches, 1);
+    assert_eq!(r.class_switches, 0);
+    assert!((r.cluster_utilization[0] - 1.0).abs() < 1e-12);
+    // and the energy identity: active energy + idle floor over one
+    // cluster == the single-inference energy model evaluation
+    let e = energy::evaluate(stats, ClusterConfig::default().freq_hz);
+    let rel = (r.energy_j - e.total_j).abs() / e.total_j;
+    assert!(rel < 1e-9, "serve energy {} vs simulate {}", r.energy_j, e.total_j);
+}
+
+#[test]
+fn invariants_hold_across_random_open_loop_workloads() {
+    // property: any (requests, clusters, scheduler, rate, seed) combo
+    // conserves requests and keeps the percentile ordering
+    let gen = |rng: &mut attn_tinyml::util::prng::XorShift64| {
+        (
+            1 + rng.next_below(24) as usize,       // requests
+            1 + rng.next_below(4) as usize,        // clusters
+            rng.next_below(3) as usize,            // scheduler
+            50.0 * (1 + rng.next_below(20)) as f64, // rate req/s
+            rng.next_u64(),                        // workload seed
+        )
+    };
+    let shrink = |&(req, cl, s, rate, seed): &(usize, usize, usize, f64, u64)| {
+        let mut c = Vec::new();
+        if req > 1 {
+            c.push((req / 2, cl, s, rate, seed));
+        }
+        if cl > 1 {
+            c.push((req, cl / 2, s, rate, seed));
+        }
+        c
+    };
+    check(
+        Config { cases: 30, seed: 0x5EED_CAFE },
+        gen,
+        shrink,
+        |&(requests, clusters, sched_idx, rate, seed)| {
+            let name = ["fifo", "rr", "batch"][sched_idx];
+            let mut sched = scheduler_by_name(name).unwrap();
+            let w = Workload::poisson(classes(), rate, requests, seed);
+            let r = Pipeline::new(ClusterConfig::default())
+                .fleet(clusters)
+                .serve_with(&w, sched.as_mut())
+                .map_err(|e| format!("serve failed: {e}"))?;
+            if r.served != requests {
+                return Err(format!(
+                    "{name}: served {} of {requests} on {clusters} clusters",
+                    r.served
+                ));
+            }
+            if r.p50_cycles > r.p90_cycles || r.p90_cycles > r.p99_cycles {
+                return Err(format!(
+                    "{name}: percentiles out of order: {} {} {}",
+                    r.p50_cycles, r.p90_cycles, r.p99_cycles
+                ));
+            }
+            if r.p99_cycles > r.makespan_cycles {
+                return Err(format!(
+                    "{name}: p99 {} beyond makespan {}",
+                    r.p99_cycles, r.makespan_cycles
+                ));
+            }
+            if r.cluster_utilization.iter().any(|u| !(0.0..=1.0).contains(u)) {
+                return Err(format!("{name}: utilization out of [0,1]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bursty_workload_invariants_all_schedulers() {
+    let w = Workload::bursty(classes(), 300.0, 4.0, 0.02, 48, 0xB00);
+    for name in ["fifo", "rr", "batch"] {
+        let mut sched = scheduler_by_name(name).unwrap();
+        let r = Pipeline::new(ClusterConfig::default())
+            .fleet(2)
+            .serve_with(&w, sched.as_mut())
+            .unwrap();
+        assert_invariants(&r, 48, 2);
+    }
+}
+
+#[test]
+fn closed_loop_conserves_requests_and_orders_percentiles() {
+    let w = Workload::closed_loop(classes(), 3, 10_000, 12, 0xC10);
+    let r = Pipeline::new(ClusterConfig::default())
+        .fleet(2)
+        .serve_with(&w, &mut RoundRobin)
+        .unwrap();
+    assert_invariants(&r, 12, 2);
+    // closed loop never queues more than the client count
+    assert!(r.max_queue_depth <= 3, "depth {} > clients", r.max_queue_depth);
+}
+
+#[test]
+fn trace_replay_with_all_three_networks() {
+    let classes = vec![
+        RequestClass::new(&MOBILEBERT, 1),
+        RequestClass::new(&DINOV2S, 1),
+        RequestClass::new(&WHISPER_TINY_ENC, 1),
+    ];
+    let w = Workload::trace(
+        classes,
+        vec![(0, 0), (0, 1), (0, 2), (1_000_000, 0), (1_000_000, 1), (1_000_000, 2)],
+    );
+    let r = Pipeline::new(ClusterConfig::default())
+        .fleet(3)
+        .serve_with(&w, &mut DynamicBatch::default())
+        .unwrap();
+    assert_invariants(&r, 6, 3);
+}
+
+#[test]
+fn batching_never_loses_to_fifo_on_one_cluster() {
+    // on a single cluster the dynamic batcher is fifo + coalescing:
+    // coalescing only removes class switches and converts cold passes
+    // to steady-state increments, so throughput can only improve
+    let w = Workload::bursty(classes(), 400.0, 4.0, 0.02, 40, 0xAB);
+    let fifo = Pipeline::new(ClusterConfig::default()).fleet(1).serve(&w).unwrap();
+    let batch = Pipeline::new(ClusterConfig::default())
+        .fleet(1)
+        .serve_with(&w, &mut DynamicBatch::default())
+        .unwrap();
+    assert_eq!(fifo.served, batch.served);
+    assert!(
+        batch.makespan_cycles <= fifo.makespan_cycles,
+        "batch {} > fifo {}",
+        batch.makespan_cycles,
+        fifo.makespan_cycles
+    );
+}
+
+#[test]
+fn serve_is_deterministic() {
+    let w = Workload::poisson(classes(), 250.0, 20, 0xD0D0);
+    let a = Pipeline::new(ClusterConfig::default())
+        .fleet(2)
+        .serve_with(&w, &mut Fifo)
+        .unwrap();
+    let b = Pipeline::new(ClusterConfig::default())
+        .fleet(2)
+        .serve_with(&w, &mut Fifo)
+        .unwrap();
+    assert_eq!(a.makespan_cycles, b.makespan_cycles);
+    assert_eq!(a.p99_cycles, b.p99_cycles);
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+}
