@@ -5,6 +5,12 @@
 #   make bench       compile + run every bench target
 #   make serve-smoke multi-request serving smoke run (the CI guard that
 #                    keeps the serve subcommand from bitrotting)
+#   make perf-smoke  serve hot-path perf bench in assert mode on reduced
+#                    request counts (CI guard: optimized loop must stay
+#                    >= 3x ahead of the retained naive reference and the
+#                    reports must stay bit-identical)
+#   make perf-bench  the full perf bench (100k comparison at >= 10x,
+#                    1M-request sweep); regenerates BENCH_perf.json
 #   make artifacts   AOT-lower the JAX/Pallas models to HLO-text artifacts
 #                    (needs the python environment; the rust side works
 #                    without this — the reference backend is the default)
@@ -16,7 +22,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench serve-smoke artifacts check lint fmt clean
+.PHONY: build test bench serve-smoke perf-smoke perf-bench artifacts check lint fmt clean
 
 build:
 	$(CARGO) build --release
@@ -30,6 +36,12 @@ bench:
 
 serve-smoke: build
 	$(CARGO) run --release -- serve --requests 32 --clusters 2
+
+perf-smoke:
+	PERF_SERVE_SMOKE=1 $(CARGO) bench --bench perf_serve
+
+perf-bench:
+	$(CARGO) bench --bench perf_serve
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)

@@ -163,6 +163,23 @@ pub fn render_serve(r: &ServeReport) -> String {
     s
 }
 
+/// Render a serving run plus host-side simulation throughput: how long
+/// the (deterministic) serve run took in host wall time and how many
+/// simulated requests per host second that is. The wall time is *not*
+/// part of the [`ServeReport`] — reports stay pure functions of
+/// (workload, geometry, scheduler) — so the CLI and benches measure it
+/// around `serve()` and pass it in.
+pub fn render_serve_with_host(r: &ServeReport, host_seconds: f64) -> String {
+    let mut s = render_serve(r);
+    let sim_rps = r.served as f64 / host_seconds.max(1e-9);
+    s.push_str(&format!(
+        "host sim     : {:.3} s wall ({}req/s simulated)\n",
+        host_seconds,
+        crate::util::eng(sim_rps)
+    ));
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,5 +217,19 @@ mod tests {
             assert!(text.contains(needle), "missing {needle} in:\n{text}");
         }
         assert!(text.contains("1 served of 1 offered"), "{text}");
+    }
+
+    #[test]
+    fn render_serve_with_host_appends_sim_throughput() {
+        let r = Pipeline::new(ClusterConfig::default())
+            .fleet(1)
+            .serve(&Workload::single(&MOBILEBERT, 1))
+            .unwrap();
+        let text = render_serve_with_host(&r, 0.5);
+        assert!(text.contains("host sim"), "{text}");
+        // 1 request / 0.5 s = 2 simulated req/s
+        assert!(text.contains("2.000req/s simulated"), "{text}");
+        // the deterministic body is unchanged
+        assert!(text.starts_with(&render_serve(&r)), "{text}");
     }
 }

@@ -14,6 +14,8 @@
 //!   attn-tinyml simulate --model mobilebert --target ita
 //!   attn-tinyml simulate --model dinov2s --freq-mhz 500 --banks 64
 //!   attn-tinyml serve --requests 64 --arrival-rate 200 --clusters 4 --scheduler batch
+//!   attn-tinyml serve --requests 1000000 --arrival-rate 50000 --clusters 8 --scheduler batch --burst 8
+//!   attn-tinyml serve --help
 //!   attn-tinyml verify --artifacts artifacts
 //!   attn-tinyml deploy --model dinov2s
 
@@ -136,7 +138,41 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// --scheduler fifo|rr|batch (fifo), --model mix|<name> (mix = all three
 /// networks), --layers N (1), --seed S, --burst FACTOR (off; square-wave
 /// bursty Poisson with a 20 ms period), plus the usual geometry flags.
+/// `--requests` takes million-scale counts: arrivals stream lazily from
+/// the seeded PRNG (nothing is materialized upfront) and the report
+/// adds host-side simulation throughput. `--help` prints this.
+const SERVE_HELP: &str = "\
+usage: attn-tinyml serve [--flags]
+
+multi-request serving on a fleet of identical clusters
+
+  --requests N        requests to offer (default 64). Million-scale
+                      counts are fine: arrivals stream lazily from the
+                      seeded PRNG, nothing is materialized upfront, and
+                      queue memory stays proportional to the backlog
+  --arrival-rate RPS  open-loop Poisson arrival rate (default 200)
+  --burst FACTOR      square-wave bursty Poisson: on-half of each 20 ms
+                      period at rate*FACTOR, off-half at rate/FACTOR
+  --clusters N        fleet size (default 1)
+  --scheduler S       fifo | rr | batch (default fifo)
+  --model M           mix = all three evaluation networks (default),
+                      or one of mobilebert | dinov2s | whisper_tiny_enc
+  --layers N          encoder blocks per request class (default 1)
+  --seed S            workload seed (default 48879)
+  --freq-mhz F        cluster clock (default 425)
+  --banks N           TCDM banking (default 32)
+
+the report includes latency percentiles (exact up to 8192 served
+requests, log2-linear histogram with sub-1% relative error beyond),
+time-weighted queue depth, and host-side simulation throughput
+(simulated requests per host wall-clock second)
+";
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{SERVE_HELP}");
+        return Ok(());
+    }
     let cluster = cluster_flag(args)?;
     let target = target_flag(args);
     let requests = args.flag_usize("requests", 64);
@@ -171,11 +207,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => Workload::poisson(classes, rate, requests, seed),
     };
+    let t0 = std::time::Instant::now();
     let report = Pipeline::new(cluster)
         .target(target)
         .fleet(clusters)
         .serve_with(&workload, sched.as_mut())?;
-    print!("{}", coordinator::render_serve(&report));
+    let host_s = t0.elapsed().as_secs_f64();
+    print!("{}", coordinator::render_serve_with_host(&report, host_s));
     Ok(())
 }
 

@@ -47,13 +47,15 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::coordinator::forward;
 use crate::coordinator::report::ModelReport;
-use crate::deeploy::{self, ir::Graph, DeployError, Deployment, Target};
+use crate::deeploy::ir::{Graph, TensorKind};
+use crate::deeploy::{self, DeployError, Deployment, Target};
 use crate::energy;
 use crate::ita::engine::Mat;
 use crate::ita::ItaConfig;
 use crate::models::{self, ModelConfig};
 use crate::runtime::{Runtime, RuntimeError, TensorIn};
 use crate::serve::{Fifo, Fleet, RequestClass, Scheduler, ServeReport, Workload};
+use crate::sim::dma::DmaModel;
 use crate::sim::{ClusterConfig, Cmd, Engine, RunStats};
 
 // --- cache ------------------------------------------------------------------
@@ -182,19 +184,53 @@ struct CacheKey {
     geom: GeomKey,
 }
 
-/// One compiled deployment + its memoized (deterministic) simulation.
+/// Per-class serving constants, derived once from a compiled deployment
+/// and memoized in the cache entry alongside [`RunStats`]: repeated
+/// `serve()` / fleet runs of a cached class skip the engine re-simulation
+/// entirely (asserted by `serve::fleet` tests via
+/// [`Compiled::sim_runs`]). See `serve::fleet` module docs for the
+/// serving-time semantics of each constant.
+#[derive(Debug, Clone)]
+pub struct ServeConstants {
+    /// Cycles of one cold pass of the command stream.
+    pub first: u64,
+    /// Incremental cycles of one extra back-to-back pass in a batch.
+    pub steady: u64,
+    /// Weight re-staging cycles when a shard switches to this class.
+    pub switch_cycles: u64,
+    /// Active (non-idle) energy of one pass, joules.
+    pub active_j: f64,
+    /// Simulated ops of one pass.
+    pub ops: u64,
+}
+
+/// One compiled deployment + its memoized (deterministic) simulation
+/// and serving constants.
 struct Entry {
     deployment: Deployment,
     stats: OnceLock<RunStats>,
+    serve: OnceLock<ServeConstants>,
+    /// Engine invocations performed for this entry (stats + serving
+    /// constants) — observability for the zero-rework memoization
+    /// contract.
+    sim_runs: AtomicU64,
 }
 
 impl Entry {
     fn new(deployment: Deployment) -> Arc<Entry> {
-        Arc::new(Entry { deployment, stats: OnceLock::new() })
+        Arc::new(Entry {
+            deployment,
+            stats: OnceLock::new(),
+            serve: OnceLock::new(),
+            sim_runs: AtomicU64::new(0),
+        })
     }
 
     fn stats(&self, engine: &Engine) -> &RunStats {
-        self.stats.get_or_init(|| engine.run(&self.deployment.steps))
+        self.stats.get_or_init(|| {
+            self.sim_runs.fetch_add(1, Ordering::Relaxed);
+            engine.run(&self.deployment.steps)
+        })
     }
 }
 
@@ -536,6 +572,80 @@ impl Compiled {
     /// sharing the cache entry — reuse the first run).
     pub fn stats(&self) -> &RunStats {
         self.entry.stats(&self.engine)
+    }
+
+    /// Per-class serving constants (`first`/`steady`/`switch`/
+    /// `active_j`/`ops`), memoized with the cache entry: the per-step
+    /// span re-simulation (`Engine::run_spans`) and the weight-byte
+    /// walk run once per (model, target, layers, geometry, fusion) key
+    /// — every later `serve()` of the class does zero engine work.
+    ///
+    /// Semantics (see `serve::fleet` module docs for the full story):
+    /// `steady` is the solo span schedule's compute end minus the
+    /// hideable no-dep lead-in DMAs, floored at the busiest resource's
+    /// cycles and clamped to `[1, first]`; `switch_cycles` re-stages
+    /// the graph's weight bytes over the wide AXI.
+    pub fn serve_constants(&self) -> &ServeConstants {
+        self.entry.serve.get_or_init(|| {
+            let stats = self.stats();
+            let first = stats.cycles.max(1);
+            let e = energy::evaluate(stats, self.engine.cfg.freq_hz);
+            let active_j = (e.total_j - e.idle_j).max(0.0);
+            let ops = stats.total_ops();
+
+            // steady-state increment from the solo per-step schedule:
+            // lead-in staging and writeback tail hide under neighboring
+            // requests; the bottleneck resource floors it
+            let steps = &self.entry.deployment.steps;
+            self.entry.sim_runs.fetch_add(1, Ordering::Relaxed);
+            let (span_stats, spans) = self.engine.run_spans(steps);
+            debug_assert_eq!(
+                span_stats.cycles, first,
+                "{}: span/stats drift",
+                self.entry.deployment.graph.name
+            );
+            let lead_in_end = steps
+                .iter()
+                .zip(&spans)
+                .filter(|(s, _)| s.deps.is_empty() && matches!(s.cmd, Cmd::DmaIn { .. }))
+                .map(|(_, sp)| sp.end)
+                .max()
+                .unwrap_or(0);
+            let compute_end = steps
+                .iter()
+                .zip(&spans)
+                .filter(|(s, _)| !matches!(s.cmd, Cmd::DmaOut { .. }))
+                .map(|(_, sp)| sp.end)
+                .max()
+                .unwrap_or(first);
+            let bottleneck = stats.busy.values().copied().max().unwrap_or(first);
+            let steady =
+                compute_end.saturating_sub(lead_in_end).max(bottleneck).clamp(1, first);
+
+            // class switch: re-stage the network's weights into L2 over
+            // the wide AXI before the first request of a different bucket
+            let weight_bytes: u64 = self
+                .entry
+                .deployment
+                .graph
+                .tensors
+                .values()
+                .filter(|t| t.kind == TensorKind::Weight)
+                .map(|t| t.bytes() as u64)
+                .sum();
+            let switch_cycles =
+                DmaModel::new(self.engine.cfg.wide_axi_bytes).transfer_1d(weight_bytes);
+            ServeConstants { first, steady, switch_cycles, active_j, ops }
+        })
+    }
+
+    /// Engine invocations performed for this compilation's cache entry
+    /// so far (full-stream stats + serving-constant span runs). Shared
+    /// through the cache: once a class's stats and serve constants are
+    /// memoized this stops moving — the observable form of "a second
+    /// serve does zero engine work".
+    pub fn sim_runs(&self) -> u64 {
+        self.entry.sim_runs.load(Ordering::Relaxed)
     }
 
     /// Simulate and report the paper-style metrics, extrapolating the

@@ -36,15 +36,30 @@
 //! one cluster is the degenerate case: its makespan equals
 //! `Compiled::stats().cycles` cycle-for-cycle, making
 //! `Compiled::simulate()` a special case of `serve()`.
+//!
+//! **Million-request scale:** the serve hot path is engineered so the
+//! simulator never becomes the bottleneck — arrivals stream lazily from
+//! the seeded PRNG ([`workload::ArrivalStream`]), the waiting queue is
+//! the bucketed [`QueueView`] (O(1) head/count lookups, O(batch)
+//! takes), shard wake-ups pop from a min-heap, and latency percentiles
+//! come from the bounded [`metrics::LatencyStore`]. The pre-optimization
+//! loop survives in [`naive`] and `tests/serve_equivalence.rs` holds
+//! both paths to bit-identical [`ServeReport`]s; `benches/perf_serve`
+//! asserts the ≥10× wall-clock separation and records host-side
+//! throughput in `BENCH_perf.json`.
 
 pub mod fleet;
 pub mod metrics;
+pub mod naive;
+pub mod queue;
 pub mod scheduler;
 pub mod workload;
 
 pub use fleet::Fleet;
-pub use metrics::ServeReport;
+pub use metrics::{LatencyStore, ServeReport, EXACT_CAP};
+pub use queue::QueueView;
 pub use scheduler::{
     by_name as scheduler_by_name, DynamicBatch, Fifo, Queued, RoundRobin, Scheduler,
+    Selection,
 };
-pub use workload::{Arrivals, Request, RequestClass, Workload};
+pub use workload::{Arrivals, ArrivalStream, Request, RequestClass, Workload};

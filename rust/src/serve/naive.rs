@@ -1,0 +1,306 @@
+//! The retained pre-optimization serve loop — the O(n²) reference.
+//!
+//! This module preserves the original serving algorithm exactly as the
+//! optimized [`super::fleet`] replaced it, as a living reference for
+//! (a) the equivalence propcheck in `tests/serve_equivalence.rs` —
+//! proving the optimization changed no observable result — and (b) the
+//! `benches/perf_serve` wall-clock comparison that the tentpole's ≥10×
+//! speedup claim is asserted against. Its cost profile is the point:
+//!
+//! - **materializes every arrival upfront** (`Workload::seed_requests`
+//!   into a `BinaryHeap`) — O(requests) memory before the first event,
+//! - keeps the waiting queue as a **flat `Vec<Queued>`** and pays
+//!   `Vec::remove` per dispatched request — O(n) each, O(n²) under
+//!   backlog,
+//! - schedulers **scan the full slice** per free shard per event
+//!   (`position`/`filter` over the whole backlog), and the dispatch
+//!   retry loop **recounts the free shards** per shard per pass,
+//! - advances time by an **O(shards) min-scan** instead of a heap.
+//!
+//! The only deltas from the historical code are the metric definitions
+//! both loops now share (the bounded [`LatencyStore`] and the
+//! time-weighted `mean_queue_depth`), so a report from this loop is
+//! field-for-field bit-identical to the optimized loop's — the
+//! propcheck asserts exactly that.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::deeploy::DeployError;
+use crate::energy;
+
+use super::fleet::{class_runtimes, Fleet};
+use super::metrics::{LatencyStore, ServeReport};
+use super::scheduler::Queued;
+use super::workload::Workload;
+
+/// The pre-optimization dispatch policies, scanning a flat queue slice
+/// (the historical `Scheduler` trait shape). Same decisions as the
+/// [`super::scheduler`] implementations, expressed over `&[Queued]`.
+#[derive(Debug, Clone)]
+pub enum NaivePolicy {
+    Fifo,
+    RoundRobin,
+    DynamicBatch { max_batch: usize },
+}
+
+impl NaivePolicy {
+    /// CLI-style lookup, mirroring `scheduler::by_name`.
+    pub fn by_name(name: &str) -> Option<NaivePolicy> {
+        match name {
+            "fifo" => Some(NaivePolicy::Fifo),
+            "rr" | "round-robin" => Some(NaivePolicy::RoundRobin),
+            "batch" | "dynamic-batch" => Some(NaivePolicy::DynamicBatch { max_batch: 8 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NaivePolicy::Fifo => "fifo",
+            NaivePolicy::RoundRobin => "round-robin",
+            NaivePolicy::DynamicBatch { .. } => "dynamic-batch",
+        }
+    }
+
+    /// The historical full-slice selection: indices into `queue`.
+    fn select(&self, queue: &[Queued], cluster: usize, n_clusters: usize) -> Vec<usize> {
+        match *self {
+            NaivePolicy::Fifo => {
+                if queue.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![0]
+                }
+            }
+            NaivePolicy::RoundRobin => queue
+                .iter()
+                .position(|q| q.id % n_clusters.max(1) == cluster)
+                .map(|i| vec![i])
+                .unwrap_or_default(),
+            NaivePolicy::DynamicBatch { max_batch } => {
+                let Some(head) = queue.first() else {
+                    return Vec::new();
+                };
+                let idx: Vec<usize> = queue
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, q)| q.bucket == head.bucket && q.class == head.class)
+                    .map(|(i, _)| i)
+                    .collect();
+                let share = idx.len().div_ceil(n_clusters.max(1));
+                let k = share.min(max_batch).max(1);
+                idx[..k.min(idx.len())].to_vec()
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct Shard {
+    free_at: u64,
+    class: Option<usize>,
+    busy: u64,
+}
+
+/// Run the workload to completion with the pre-optimization loop.
+/// Same inputs, same [`ServeReport`], quadratic host cost.
+pub fn serve_naive(
+    fleet: &Fleet,
+    w: &Workload,
+    policy: &NaivePolicy,
+) -> Result<ServeReport, DeployError> {
+    if fleet.n == 0 {
+        return Err(DeployError::Builder("fleet size must be >= 1".into()));
+    }
+    w.validate()?;
+    let freq = fleet.cluster.freq_hz;
+    let classes = class_runtimes(fleet, w)?;
+
+    // upfront materialization: the whole arrival stream into one heap
+    let mut crng = w.class_rng();
+    let seeds = w.seed_requests(freq, &mut crng);
+    let mut heap: BinaryHeap<Reverse<(u64, usize, usize)>> =
+        seeds.iter().map(|r| Reverse((r.arrival, r.id, r.class))).collect();
+    let mut issued = seeds.len();
+    let closed = w.is_closed_loop();
+    let think = w.think_cycles();
+
+    let mut queue: Vec<Queued> = Vec::new();
+    let mut shards: Vec<Shard> = vec![Shard::default(); fleet.n];
+    let mut lat = LatencyStore::new();
+    let mut depth_cycles: u128 = 0;
+    let mut depth_max = 0usize;
+    let (mut switches, mut batches) = (0u64, 0u64);
+    let mut active_j = 0.0f64;
+    let mut ops_served = 0u64;
+    let mut makespan = 0u64;
+    let mut now = 0u64;
+
+    loop {
+        // admit everything due by now (heap pops in (cycle, id) order,
+        // so the queue stays in arrival order)
+        while let Some(&Reverse((t, id, class))) = heap.peek() {
+            if t > now {
+                break;
+            }
+            heap.pop();
+            queue.push(Queued {
+                id,
+                class,
+                bucket: w.classes[class].bucket(),
+                arrival: t,
+            });
+        }
+        depth_max = depth_max.max(queue.len());
+
+        // dispatch until no free shard selects anything
+        loop {
+            let mut dispatched = false;
+            for si in 0..fleet.n {
+                if shards[si].free_at > now || queue.is_empty() {
+                    continue;
+                }
+                // the historical O(shards) free recount, per shard
+                let _free = shards.iter().filter(|s| s.free_at <= now).count();
+                let mut sel = policy.select(&queue, si, fleet.n);
+                sel.retain(|&i| i < queue.len());
+                sel.sort_unstable();
+                sel.dedup();
+                if sel.is_empty() {
+                    continue;
+                }
+                // a batch is one class (one command stream)
+                let class = queue[sel[0]].class;
+                debug_assert!(
+                    sel.iter().all(|&i| queue[i].class == class),
+                    "{}: mixed-class batch",
+                    policy.name()
+                );
+                sel.retain(|&i| queue[i].class == class);
+
+                let rt = &classes[class];
+                let mut cost_switch = 0u64;
+                if let Some(cur) = shards[si].class {
+                    if cur != class {
+                        cost_switch = rt.switch_cycles;
+                        switches += 1;
+                    }
+                }
+                shards[si].class = Some(class);
+                let start = now;
+                let base = start + cost_switch + rt.first;
+                let mut completion = base;
+                for (j, &qi) in sel.iter().enumerate() {
+                    let done = base + j as u64 * rt.steady;
+                    completion = done;
+                    lat.record(done - queue[qi].arrival);
+                    if closed && issued < w.requests {
+                        let id = issued;
+                        issued += 1;
+                        let next_class = w.sample_class(&mut crng);
+                        heap.push(Reverse((done + think, id, next_class)));
+                    }
+                }
+                active_j += rt.active_j * sel.len() as f64;
+                ops_served += rt.ops * sel.len() as u64;
+                shards[si].free_at = completion;
+                shards[si].busy += completion - start;
+                batches += 1;
+                makespan = makespan.max(completion);
+                // the O(n²) heart of the old design: one O(n) memmove
+                // per dispatched request
+                for &qi in sel.iter().rev() {
+                    queue.remove(qi);
+                }
+                dispatched = true;
+            }
+            if !dispatched {
+                break;
+            }
+        }
+
+        // advance to the next event: O(shards) min-scan
+        let next_arrival = heap.peek().map(|&Reverse((t, _, _))| t);
+        let next_free = shards.iter().map(|s| s.free_at).filter(|&f| f > now).min();
+        let next = match (next_arrival, next_free) {
+            (None, None) => break,
+            (Some(a), None) => a,
+            (None, Some(f)) => f,
+            (Some(a), Some(f)) => a.min(f),
+        };
+        depth_cycles += queue.len() as u128 * (next - now) as u128;
+        now = next;
+    }
+
+    let served = lat.count() as usize;
+    let mean_latency_cycles = lat.mean();
+    let total_time = now.max(1);
+    let sec = makespan.max(1) as f64 / freq;
+    let energy_j = active_j + energy::P_IDLE_W * sec * fleet.n as f64;
+    Ok(ServeReport {
+        scheduler: policy.name().to_string(),
+        clusters: fleet.n,
+        offered: w.requests,
+        served,
+        makespan_cycles: makespan,
+        seconds: sec,
+        req_per_s: served as f64 / sec,
+        gops: ops_served as f64 / 1e9 / sec,
+        energy_j,
+        mj_per_req: energy_j * 1e3 / (served.max(1)) as f64,
+        gopj: ops_served as f64 / 1e9 / energy_j,
+        p50_cycles: lat.percentile(0.50),
+        p90_cycles: lat.percentile(0.90),
+        p99_cycles: lat.percentile(0.99),
+        mean_latency_cycles,
+        mean_queue_depth: depth_cycles as f64 / total_time as f64,
+        max_queue_depth: depth_max,
+        cluster_utilization: shards
+            .iter()
+            .map(|s| s.busy as f64 / makespan.max(1) as f64)
+            .collect(),
+        class_switches: switches,
+        batches,
+        freq_hz: freq,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deeploy::Target;
+    use crate::models::MOBILEBERT;
+    use crate::serve::scheduler::Fifo;
+    use crate::serve::workload::RequestClass;
+    use crate::sim::ClusterConfig;
+
+    #[test]
+    fn naive_matches_optimized_on_a_simple_trace() {
+        let classes = vec![RequestClass::new(&MOBILEBERT, 1)];
+        let w = Workload::trace(classes, vec![(0, 0), (0, 0), (1000, 0)]);
+        let f = Fleet::new(ClusterConfig::default(), Target::MultiCoreIta, 2);
+        let naive = serve_naive(&f, &w, &NaivePolicy::Fifo).unwrap();
+        let opt = f.serve(&w, &mut Fifo).unwrap();
+        assert_eq!(naive.makespan_cycles, opt.makespan_cycles);
+        assert_eq!(naive.served, opt.served);
+        assert_eq!(naive.batches, opt.batches);
+        assert_eq!(naive.p99_cycles, opt.p99_cycles);
+        assert_eq!(naive.energy_j.to_bits(), opt.energy_j.to_bits());
+        assert_eq!(
+            naive.mean_queue_depth.to_bits(),
+            opt.mean_queue_depth.to_bits(),
+            "time-weighted depth must agree"
+        );
+    }
+
+    #[test]
+    fn policy_lookup_mirrors_scheduler_names() {
+        for (arg, want) in
+            [("fifo", "fifo"), ("rr", "round-robin"), ("batch", "dynamic-batch")]
+        {
+            assert_eq!(NaivePolicy::by_name(arg).unwrap().name(), want);
+        }
+        assert!(NaivePolicy::by_name("lifo").is_none());
+    }
+}

@@ -1,10 +1,14 @@
 //! Dispatch policies: which queued requests a free cluster runs next.
 //!
-//! A [`Scheduler`] sees the waiting queue (always in arrival order) and
-//! returns the indices of the requests to dispatch as **one batch** on
-//! the free cluster — all of one class, because a batch executes a
-//! single compiled command stream back-to-back. An empty selection
-//! leaves the cluster idle until the next event.
+//! A [`Scheduler`] sees the waiting queue through a [`QueueView`] —
+//! O(1) head / per-class (= per-seq-len-bucket) count / pinned-shard
+//! lookups instead of the full-slice scans of the pre-optimization
+//! design — and answers with a [`Selection`]: which run of requests the
+//! fleet should take, in O(batch), preserving exact head-of-line
+//! arrival-order semantics. A batch is always **one class** (one
+//! compiled command stream executed back-to-back), which the selection
+//! vocabulary makes structurally impossible to violate: there is no way
+//! to express a mixed-class batch.
 //!
 //! Three built-in policies:
 //!
@@ -14,17 +18,19 @@
 //!   to that cluster. Perfectly fair, but a burst of one class can
 //!   strand work behind one shard while others idle.
 //! - [`DynamicBatch`] — head-of-line seq-len-bucket batching: take the
-//!   oldest waiter's bucket, narrowed to its class (a batch executes
-//!   one compiled command stream), and coalesce those requests into
-//!   one batch. Coalescing converts repeated cold dispatches into
-//!   pipelined steady-state iterations and removes class switches
-//!   (weight re-staging), which is where its throughput edge on bursty
-//!   multi-class traffic comes from. The batch is capped both by
-//!   `max_batch` and by an even share of the bucket over the whole
-//!   fleet, so a draining queue degrades to single fifo-like dispatches
-//!   instead of hoarding the last requests on one shard.
+//!   oldest waiter's class (each class is one seq-len bucket — the
+//!   padded sequence length its command stream is compiled for) and
+//!   coalesce its head run into one batch. Coalescing converts repeated
+//!   cold dispatches into pipelined steady-state iterations and removes
+//!   class switches (weight re-staging), which is where its throughput
+//!   edge on bursty multi-class traffic comes from. The batch is capped
+//!   both by `max_batch` and by an even fleet share of the bucket, so a
+//!   draining queue degrades to single fifo-like dispatches instead of
+//!   hoarding the last requests on one shard.
 
-/// One waiting request as schedulers see it.
+pub use super::queue::QueueView;
+
+/// One waiting request as the queue stores it.
 #[derive(Debug, Clone)]
 pub struct Queued {
     pub id: usize,
@@ -36,23 +42,36 @@ pub struct Queued {
     pub arrival: u64,
 }
 
-/// A dispatch policy. Implementations must return indices into `queue`
-/// that all share one class (the fleet debug-asserts and defensively
-/// filters mixed selections).
+/// What a scheduler asks the fleet to dispatch on one free cluster.
+/// The fleet performs the take (O(batch)); arrival order within the
+/// selected run is preserved by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    /// Leave this cluster idle until the next event.
+    Idle,
+    /// Dispatch the `take` oldest waiters of `class` as one batch
+    /// (clamped to the class's live count; `take == 0` is `Idle`).
+    Batch { class: usize, take: usize },
+    /// Dispatch the oldest waiter pinned to this cluster
+    /// (`id % n_clusters == cluster`), or nothing if none waits.
+    Pinned,
+}
+
+/// A dispatch policy over the [`QueueView`] read surface.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
     /// Pick the batch for `cluster`, which is free at `now`. `free` is
     /// the number of currently free clusters (including this one),
-    /// `n_clusters` the fleet size. Empty = leave this cluster idle.
+    /// `n_clusters` the fleet size.
     fn select(
         &mut self,
         now: u64,
-        queue: &[Queued],
+        queue: &QueueView,
         cluster: usize,
         free: usize,
         n_clusters: usize,
-    ) -> Vec<usize>;
+    ) -> Selection;
 }
 
 /// Strict arrival order, one request per dispatch.
@@ -66,15 +85,16 @@ impl Scheduler for Fifo {
     fn select(
         &mut self,
         _now: u64,
-        queue: &[Queued],
+        queue: &QueueView,
         _cluster: usize,
         _free: usize,
         _n_clusters: usize,
-    ) -> Vec<usize> {
-        if queue.is_empty() {
-            Vec::new()
-        } else {
-            vec![0]
+    ) -> Selection {
+        // the overall head is its class's head, so a take of one from
+        // that class is exactly the oldest waiter
+        match queue.head() {
+            Some(h) => Selection::Batch { class: h.class, take: 1 },
+            None => Selection::Idle,
         }
     }
 }
@@ -90,16 +110,16 @@ impl Scheduler for RoundRobin {
     fn select(
         &mut self,
         _now: u64,
-        queue: &[Queued],
+        queue: &QueueView,
         cluster: usize,
         _free: usize,
-        n_clusters: usize,
-    ) -> Vec<usize> {
-        queue
-            .iter()
-            .position(|q| q.id % n_clusters.max(1) == cluster)
-            .map(|i| vec![i])
-            .unwrap_or_default()
+        _n_clusters: usize,
+    ) -> Selection {
+        if queue.shard_head(cluster).is_some() {
+            Selection::Pinned
+        } else {
+            Selection::Idle
+        }
     }
 }
 
@@ -129,31 +149,25 @@ impl Scheduler for DynamicBatch {
     fn select(
         &mut self,
         _now: u64,
-        queue: &[Queued],
+        queue: &QueueView,
         _cluster: usize,
         _free: usize,
         n_clusters: usize,
-    ) -> Vec<usize> {
-        let Some(head) = queue.first() else {
-            return Vec::new();
+    ) -> Selection {
+        // the oldest waiter picks the bucket (head-of-line, Fifo-fair);
+        // its class's live count is an O(1) lookup, where the flat-queue
+        // design scanned and collected the whole backlog per dispatch
+        let Some(head) = queue.head() else {
+            return Selection::Idle;
         };
-        // the oldest waiter picks the seq-len bucket (head-of-line,
-        // Fifo-fair), narrowed to its class: a batch executes one
-        // command stream, so same-bucket requests of a different class
-        // (same padded seq, different network/depth) wait their turn
-        let idx: Vec<usize> = queue
-            .iter()
-            .enumerate()
-            .filter(|(_, q)| q.bucket == head.bucket && q.class == head.class)
-            .map(|(i, _)| i)
-            .collect();
+        let class = head.class;
         // spread over the whole fleet: take at most an even share of
         // the bucket so a draining queue degrades to single dispatches
         // (fifo-like tail) instead of hoarding the last requests on one
         // shard while the others idle
-        let share = idx.len().div_ceil(n_clusters.max(1));
-        let k = share.min(self.max_batch).max(1);
-        idx[..k.min(idx.len())].to_vec()
+        let share = queue.class_len(class).div_ceil(n_clusters.max(1));
+        let take = share.min(self.max_batch).max(1);
+        Selection::Batch { class, take }
     }
 }
 
@@ -175,36 +189,49 @@ mod tests {
         Queued { id, class, bucket: 128 * (class + 1), arrival: id as u64 }
     }
 
+    fn view(requests: &[(usize, usize)], n_shards: usize) -> QueueView {
+        let n_classes = requests.iter().map(|&(_, c)| c + 1).max().unwrap_or(1);
+        let mut v = QueueView::new(n_classes, n_shards);
+        for &(id, class) in requests {
+            v.push(q(id, class));
+        }
+        v
+    }
+
     #[test]
     fn fifo_takes_the_head() {
         let mut s = Fifo;
-        assert!(s.select(0, &[], 0, 1, 1).is_empty());
-        assert_eq!(s.select(0, &[q(0, 1), q(1, 0)], 0, 1, 1), vec![0]);
+        let empty = QueueView::new(2, 1);
+        assert_eq!(s.select(0, &empty, 0, 1, 1), Selection::Idle);
+        let v = view(&[(0, 1), (1, 0)], 1);
+        // head is id 0 (class 1): one request of that class
+        assert_eq!(s.select(0, &v, 0, 1, 1), Selection::Batch { class: 1, take: 1 });
     }
 
     #[test]
     fn round_robin_pins_requests_to_their_shard() {
         let mut s = RoundRobin;
-        let queue = [q(0, 0), q(1, 0), q(2, 0), q(5, 1)];
-        assert_eq!(s.select(0, &queue, 0, 2, 2), vec![0]);
-        assert_eq!(s.select(0, &queue, 1, 2, 2), vec![1]); // id 1 % 2 == 1
+        let v = view(&[(0, 0), (1, 0), (2, 0), (5, 1)], 2);
+        assert_eq!(s.select(0, &v, 0, 2, 2), Selection::Pinned);
+        assert_eq!(s.select(0, &v, 1, 2, 2), Selection::Pinned); // ids 1, 5
         // a shard with no assigned work stays idle
-        let only_even = [q(0, 0), q(2, 0)];
-        assert!(s.select(0, &only_even, 1, 2, 2).is_empty());
+        let only_even = view(&[(0, 0), (2, 0)], 2);
+        assert_eq!(only_even.shard_len(1), 0);
+        assert_eq!(s.select(0, &only_even, 1, 2, 2), Selection::Idle);
     }
 
     #[test]
     fn dynamic_batch_coalesces_the_head_bucket() {
         let mut s = DynamicBatch::new(8);
-        // head class 0; co-bucketed ids 0, 2, 3 coalesce past the class-1
-        // request at position 1
-        let queue = [q(0, 0), q(1, 1), q(2, 0), q(3, 0)];
-        assert_eq!(s.select(0, &queue, 0, 1, 1), vec![0, 2, 3]);
+        // head class 0; co-bucketed ids 0, 2, 3 coalesce past the
+        // class-1 request at position 1
+        let v = view(&[(0, 0), (1, 1), (2, 0), (3, 0)], 1);
+        assert_eq!(s.select(0, &v, 0, 1, 1), Selection::Batch { class: 0, take: 3 });
         // spread over a 2-cluster fleet: take only the even share
-        assert_eq!(s.select(0, &queue, 0, 2, 2), vec![0, 2]);
+        assert_eq!(s.select(0, &v, 0, 2, 2), Selection::Batch { class: 0, take: 2 });
         // max_batch caps the batch
         let mut tight = DynamicBatch::new(2);
-        assert_eq!(tight.select(0, &queue, 0, 1, 1), vec![0, 2]);
+        assert_eq!(tight.select(0, &v, 0, 1, 1), Selection::Batch { class: 0, take: 2 });
     }
 
     #[test]

@@ -224,65 +224,198 @@ impl Workload {
         rng.next_below(self.classes.len() as u64) as usize
     }
 
-    /// Materialize the pre-known arrivals, sorted by (cycle, id):
-    /// everything for open-loop processes, the first per-client wave for
-    /// closed loop (follow-ons are issued by the fleet on completions).
-    pub fn seed_requests(&self, freq_hz: f64, class_rng: &mut XorShift64) -> Vec<Request> {
+    /// Pre-known arrivals the stream will yield before any completion
+    /// feedback: the full request count for open-loop processes, the
+    /// first per-client wave for closed loop.
+    pub fn seed_count(&self) -> usize {
         match &self.arrivals {
-            Arrivals::Poisson { rate_rps } => {
-                let mut rng = XorShift64::new(self.seed);
-                let mut t_s = 0.0f64;
-                (0..self.requests)
-                    .map(|id| {
-                        t_s += exp_gap(&mut rng, *rate_rps);
-                        Request {
-                            id,
-                            class: self.sample_class(class_rng),
-                            arrival: (t_s * freq_hz).round() as u64,
-                        }
-                    })
-                    .collect()
-            }
+            Arrivals::ClosedLoop { clients, .. } => (*clients).min(self.requests),
+            _ => self.requests,
+        }
+    }
+
+    /// Lazy arrival stream (O(1) state, no materialization): yields the
+    /// pre-known arrivals in (cycle, id) order, drawing gap and class
+    /// randomness in exactly the order [`seed_requests`] does — the
+    /// streamed and materialized paths are bit-identical.
+    ///
+    /// [`seed_requests`]: Workload::seed_requests
+    pub fn stream(&self, freq_hz: f64) -> ArrivalStream {
+        let n_classes = self.classes.len();
+        match &self.arrivals {
+            Arrivals::Poisson { rate_rps } => ArrivalStream::Poisson {
+                rng: XorShift64::new(self.seed),
+                t_s: 0.0,
+                rate_rps: *rate_rps,
+                freq_hz,
+                n_classes,
+                next_id: 0,
+                total: self.requests,
+            },
             Arrivals::Bursty { rate_rps, burst_factor, period_s } => {
-                let mut rng = XorShift64::new(self.seed);
-                let half = period_s / 2.0;
-                let mut t_s = 0.0f64;
-                let mut out = Vec::with_capacity(self.requests);
-                while out.len() < self.requests {
+                ArrivalStream::Bursty {
+                    rng: XorShift64::new(self.seed),
+                    t_s: 0.0,
+                    rate_rps: *rate_rps,
+                    burst_factor: *burst_factor,
+                    period_s: *period_s,
+                    freq_hz,
+                    n_classes,
+                    next_id: 0,
+                    total: self.requests,
+                }
+            }
+            Arrivals::Trace(entries) => {
+                // traces are explicit data the caller already holds;
+                // the stream only normalizes the order (stable sort:
+                // equal cycles keep their written order, as before)
+                let mut sorted: Vec<(u64, usize)> = entries.clone();
+                sorted.sort_by_key(|&(t, _)| t);
+                ArrivalStream::Trace { entries: sorted.into_iter(), next_id: 0 }
+            }
+            Arrivals::ClosedLoop { .. } => ArrivalStream::ClosedLoop {
+                n_classes,
+                next_id: 0,
+                first_wave: self.seed_count(),
+            },
+        }
+    }
+
+    /// Materialize the pre-known arrivals, sorted by (cycle, id) — the
+    /// collected [`stream`](Workload::stream). Kept for tests and the
+    /// retained naive serve loop; the optimized fleet pulls the stream
+    /// lazily instead.
+    pub fn seed_requests(&self, freq_hz: f64, class_rng: &mut XorShift64) -> Vec<Request> {
+        let mut s = self.stream(freq_hz);
+        std::iter::from_fn(|| s.next(class_rng)).collect()
+    }
+}
+
+/// Lazy arrival generator (see [`Workload::stream`]): O(1) state per
+/// open-loop process, so million-request workloads never materialize.
+/// Class draws happen at pull time from the caller's class PRNG —
+/// requests are pulled in id order, so the draw sequence is identical
+/// to the materialized path.
+#[derive(Debug, Clone)]
+pub enum ArrivalStream {
+    Poisson {
+        rng: XorShift64,
+        t_s: f64,
+        rate_rps: f64,
+        freq_hz: f64,
+        n_classes: usize,
+        next_id: usize,
+        total: usize,
+    },
+    Bursty {
+        rng: XorShift64,
+        t_s: f64,
+        rate_rps: f64,
+        burst_factor: f64,
+        period_s: f64,
+        freq_hz: f64,
+        n_classes: usize,
+        next_id: usize,
+        total: usize,
+    },
+    Trace {
+        entries: std::vec::IntoIter<(u64, usize)>,
+        next_id: usize,
+    },
+    ClosedLoop {
+        n_classes: usize,
+        next_id: usize,
+        first_wave: usize,
+    },
+}
+
+impl ArrivalStream {
+    /// Next request in (arrival cycle, id) order, or `None` when the
+    /// pre-known arrivals are exhausted. `class_rng` is the workload's
+    /// class stream ([`Workload::class_rng`]) — the fleet holds it
+    /// across the run so closed-loop follow-ons continue the same
+    /// deterministic sequence.
+    pub fn next(&mut self, class_rng: &mut XorShift64) -> Option<Request> {
+        let draw = |rng: &mut XorShift64, n: usize| rng.next_below(n as u64) as usize;
+        match self {
+            ArrivalStream::Poisson {
+                rng,
+                t_s,
+                rate_rps,
+                freq_hz,
+                n_classes,
+                next_id,
+                total,
+            } => {
+                if *next_id >= *total {
+                    return None;
+                }
+                *t_s += exp_gap(rng, *rate_rps);
+                let id = *next_id;
+                *next_id += 1;
+                Some(Request {
+                    id,
+                    class: draw(class_rng, *n_classes),
+                    arrival: (*t_s * *freq_hz).round() as u64,
+                })
+            }
+            ArrivalStream::Bursty {
+                rng,
+                t_s,
+                rate_rps,
+                burst_factor,
+                period_s,
+                freq_hz,
+                n_classes,
+                next_id,
+                total,
+            } => {
+                if *next_id >= *total {
+                    return None;
+                }
+                let half = *period_s / 2.0;
+                loop {
                     let phase = t_s.rem_euclid(*period_s);
                     let on = phase < half;
-                    let rate =
-                        if on { rate_rps * burst_factor } else { rate_rps / burst_factor };
-                    let gap = exp_gap(&mut rng, rate);
+                    let rate = if on {
+                        *rate_rps * *burst_factor
+                    } else {
+                        *rate_rps / *burst_factor
+                    };
+                    let gap = exp_gap(rng, rate);
                     let boundary =
-                        if on { t_s - phase + half } else { t_s - phase + period_s };
-                    if t_s + gap >= boundary {
+                        if on { *t_s - phase + half } else { *t_s - phase + *period_s };
+                    if *t_s + gap >= boundary {
                         // crossed into the other phase: advance to the
                         // boundary and resample (exact, by memorylessness)
-                        t_s = boundary;
+                        *t_s = boundary;
                     } else {
-                        t_s += gap;
-                        out.push(Request {
-                            id: out.len(),
-                            class: self.sample_class(class_rng),
-                            arrival: (t_s * freq_hz).round() as u64,
+                        *t_s += gap;
+                        let id = *next_id;
+                        *next_id += 1;
+                        return Some(Request {
+                            id,
+                            class: draw(class_rng, *n_classes),
+                            arrival: (*t_s * *freq_hz).round() as u64,
                         });
                     }
                 }
-                out
             }
-            Arrivals::Trace(entries) => {
-                let mut sorted: Vec<(u64, usize)> = entries.clone();
-                sorted.sort_by_key(|&(t, _)| t);
-                sorted
-                    .into_iter()
-                    .enumerate()
-                    .map(|(id, (arrival, class))| Request { id, class, arrival })
-                    .collect()
+            ArrivalStream::Trace { entries, next_id } => {
+                entries.next().map(|(arrival, class)| {
+                    let id = *next_id;
+                    *next_id += 1;
+                    Request { id, class, arrival }
+                })
             }
-            Arrivals::ClosedLoop { clients, .. } => (0..(*clients).min(self.requests))
-                .map(|id| Request { id, class: self.sample_class(class_rng), arrival: 0 })
-                .collect(),
+            ArrivalStream::ClosedLoop { n_classes, next_id, first_wave } => {
+                if *next_id >= *first_wave {
+                    return None;
+                }
+                let id = *next_id;
+                *next_id += 1;
+                Some(Request { id, class: draw(class_rng, *n_classes), arrival: 0 })
+            }
         }
     }
 }
@@ -375,6 +508,46 @@ mod tests {
             0,
         );
         assert!(zero_layers.validate().is_err());
+    }
+
+    #[test]
+    fn stream_is_bit_identical_to_materialization() {
+        // the lazy stream must reproduce seed_requests exactly — same
+        // arrivals, same ids, same class draws — for every arrival kind
+        let workloads = vec![
+            Workload::poisson(classes(), 150.0, 100, 3),
+            Workload::bursty(classes(), 250.0, 6.0, 0.02, 100, 9),
+            Workload::trace(classes(), vec![(500, 1), (0, 0), (250, 0), (250, 1)]),
+            Workload::closed_loop(classes(), 5, 1000, 50, 17),
+        ];
+        for w in workloads {
+            let materialized = w.seed_requests(FREQ, &mut w.class_rng());
+            let mut crng = w.class_rng();
+            let mut s = w.stream(FREQ);
+            let mut streamed = Vec::new();
+            while let Some(r) = s.next(&mut crng) {
+                streamed.push(r);
+            }
+            assert_eq!(streamed.len(), materialized.len());
+            assert_eq!(streamed.len(), w.seed_count());
+            for (a, b) in streamed.iter().zip(&materialized) {
+                assert_eq!((a.id, a.class, a.arrival), (b.id, b.class, b.arrival));
+            }
+        }
+    }
+
+    #[test]
+    fn stream_state_is_constant_size() {
+        // a million-request open-loop stream is pulled lazily: the
+        // first pulls cost nothing proportional to the total
+        let w = Workload::poisson(classes(), 1000.0, 1_000_000, 1);
+        let mut crng = w.class_rng();
+        let mut s = w.stream(FREQ);
+        let first = s.next(&mut crng).unwrap();
+        assert_eq!(first.id, 0);
+        let second = s.next(&mut crng).unwrap();
+        assert_eq!(second.id, 1);
+        assert!(second.arrival >= first.arrival);
     }
 
     #[test]
