@@ -11,6 +11,11 @@
 #                    reports must stay bit-identical)
 #   make perf-bench  the full perf bench (100k comparison at >= 10x,
 #                    1M-request sweep); regenerates BENCH_perf.json
+#   make explore-smoke  design-space exploration smoke run: tiny grid,
+#                    2 operating points — the CLI errors out on an
+#                    empty frontier, so a green run asserts one exists
+#   make explore-bench  the full exploration bench (default-space grid +
+#                    halving determinism); regenerates BENCH_explore.json
 #   make artifacts   AOT-lower the JAX/Pallas models to HLO-text artifacts
 #                    (needs the python environment; the rust side works
 #                    without this — the reference backend is the default)
@@ -22,7 +27,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench serve-smoke perf-smoke perf-bench artifacts check lint fmt clean
+.PHONY: build test bench serve-smoke perf-smoke perf-bench explore-smoke explore-bench artifacts check lint fmt clean
 
 build:
 	$(CARGO) build --release
@@ -42,6 +47,12 @@ perf-smoke:
 
 perf-bench:
 	$(CARGO) bench --bench perf_serve
+
+explore-smoke: build
+	$(CARGO) run --release -- explore --space tiny --strategy grid --budget 8 --seed 7
+
+explore-bench:
+	$(CARGO) bench --bench explore_pareto
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)

@@ -1,0 +1,112 @@
+//! Design-space exploration bench: runs the explorer over the default
+//! space, proves the determinism contract (two same-seed halving runs
+//! serialize bit-identically), checks the paper's published silicon
+//! against its Table-I anchors on the frontier, and records the run in
+//! `BENCH_explore.json`.
+//!
+//!     cargo bench --bench explore_pareto
+
+use std::time::Instant;
+
+use attn_tinyml::coordinator;
+use attn_tinyml::explore::{
+    explore, explore_json, DesignSpace, ExploreConfig, Objective, Strategy,
+};
+use attn_tinyml::util::bench::section;
+
+const SEED: u64 = 0xA11CE;
+const BUDGET: usize = 16;
+
+fn config(strategy: Strategy) -> ExploreConfig {
+    ExploreConfig {
+        strategy,
+        budget: BUDGET,
+        seed: SEED,
+        objectives: Objective::ALL.to_vec(),
+        threads: 0,
+    }
+}
+
+fn main() {
+    let space = DesignSpace::default_space();
+
+    // --- exhaustive grid: the full default space, paper point on the
+    // frontier with its calibrated Table-I anchors -----------------------
+    section(&format!(
+        "exhaustive grid over the default space ({} candidates)",
+        space.len()
+    ));
+    let t0 = Instant::now();
+    let grid_cfg = ExploreConfig { budget: space.len(), ..config(Strategy::Grid) };
+    let grid = explore(&space, &grid_cfg).expect("grid explore");
+    let grid_s = t0.elapsed().as_secs_f64();
+    println!("{}", coordinator::render_explore(&grid));
+    println!("grid wall time: {grid_s:.3} s ({} full serving evaluations)", grid.evaluated);
+    assert!(!grid.truncated);
+    assert!(!grid.frontier.is_empty(), "grid frontier must not be empty");
+    assert!(
+        grid.frontier.iter().any(|e| e.candidate.is_paper_geometry()),
+        "the paper's 8-core / N=16 / 0.65 V silicon must sit on the default frontier"
+    );
+    // calibrated tolerances (DESIGN.md §6): 154 GOp/s ± 25%,
+    // 2960 GOp/J − 26% / + 35% on the screen-fidelity anchor
+    let anchor = grid.paper_screen.as_ref().expect("default space contains the paper point");
+    assert!(
+        anchor.gops > 115.0 && anchor.gops < 195.0,
+        "paper anchor GOp/s {} outside the calibrated tolerance",
+        anchor.gops
+    );
+    assert!(
+        anchor.gopj > 2200.0 && anchor.gopj < 4000.0,
+        "paper anchor GOp/J {} outside the calibrated tolerance",
+        anchor.gopj
+    );
+    assert!((anchor.mm2 - 0.991).abs() < 1e-9, "paper anchor mm² {}", anchor.mm2);
+
+    // --- successive halving: determinism is bit-for-bit -----------------
+    section(&format!(
+        "successive halving (budget {BUDGET}, seed {SEED:#x}) — determinism check"
+    ));
+    let t0 = Instant::now();
+    let a = explore(&space, &config(Strategy::Halving)).expect("halving explore");
+    let first_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let b = explore(&space, &config(Strategy::Halving)).expect("halving explore rerun");
+    let second_s = t0.elapsed().as_secs_f64();
+    let doc_a = explore_json(&space, &a).to_string_pretty();
+    let doc_b = explore_json(&space, &b).to_string_pretty();
+    assert_eq!(
+        doc_a, doc_b,
+        "two same-seed halving runs must serialize bit-identically"
+    );
+    assert!(!a.frontier.is_empty());
+    assert!(
+        a.frontier.iter().any(|e| e.candidate.is_paper_geometry()),
+        "the calibration anchor must survive to the halving frontier"
+    );
+    let anchors = space.paper_indices().len();
+    assert!(
+        a.evaluated <= BUDGET + anchors,
+        "budget (+{anchors} anchors) caps full evaluations at {}",
+        a.evaluated
+    );
+    assert!(a.screened >= a.evaluated, "halving screens at least what it serves");
+    println!("{}", coordinator::render_explore(&a));
+    println!(
+        "halving wall time: {first_s:.3} s cold, {second_s:.3} s warm \
+         (shared pipeline cache), {} screened -> {} served",
+        a.screened, a.evaluated
+    );
+
+    // --- seeded random sampling stays inside the same space --------------
+    let r = explore(&space, &config(Strategy::Random)).expect("random explore");
+    assert!(!r.frontier.is_empty());
+    assert!(r.evaluated <= BUDGET + anchors);
+
+    // record the halving run (the CLI writes the same shape)
+    let out = "BENCH_explore.json";
+    match std::fs::write(out, doc_a) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

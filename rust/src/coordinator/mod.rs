@@ -13,7 +13,9 @@ use crate::deeploy::Target;
 use crate::pipeline::Pipeline;
 use crate::sim::ClusterConfig;
 
-pub use report::{render_serve, render_serve_with_host, ModelReport, Table1};
+pub use report::{
+    render_explore, render_serve, render_serve_with_host, ModelReport, Table1,
+};
 
 // The 0.1.0 free functions `run_model{,_layers}` were deprecated shims
 // over the builder API through the 0.2.x series and are gone as of

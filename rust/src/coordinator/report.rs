@@ -1,7 +1,9 @@
-//! Paper-style reporting: Table I, the microbenchmark section, and the
-//! serving-side [`ServeReport`] rendering.
+//! Paper-style reporting: Table I, the microbenchmark section, the
+//! serving-side [`ServeReport`] rendering, and the design-space
+//! exploration frontier table ([`render_explore`]).
 
 use crate::deeploy::Target;
+use crate::explore::ExploreResult;
 use crate::serve::ServeReport;
 
 /// Metrics of one (model, target) simulation — one Table I cell group.
@@ -180,9 +182,70 @@ pub fn render_serve_with_host(r: &ServeReport, host_seconds: f64) -> String {
     s
 }
 
+/// Render a design-space exploration run: the configuration header and
+/// the Pareto frontier, one row per non-dominated point, flagging the
+/// paper's published silicon when it appears. The paper anchor's
+/// Table-I-comparable screening metrics close the table so the
+/// calibration is visible next to the frontier.
+pub fn render_explore(r: &ExploreResult) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "DESIGN-SPACE EXPLORATION  ({} space, {} strategy, seed {}, budget {})\n",
+        r.space, r.strategy, r.seed, r.budget
+    ));
+    let objs: Vec<String> = r
+        .objectives
+        .iter()
+        .map(|o| format!("{} {}", o.name(), o.direction()))
+        .collect();
+    s.push_str(&format!("objectives   : {}\n", objs.join(" · ")));
+    s.push_str(&format!(
+        "evaluated    : {} of {} candidates served in full ({} screened, {} infeasible{})\n",
+        r.evaluated,
+        r.space_len,
+        r.screened,
+        r.infeasible,
+        if r.truncated { ", grid truncated by budget" } else { "" }
+    ));
+    s.push_str(&format!("frontier     : {} non-dominated points\n\n", r.frontier.len()));
+    s.push_str(&format!(
+        "{:<22} {:>6} {:>8} {:>6} {:>6} {:>9} {:>9} {:>9} {:>8}\n",
+        "geometry", "Vdd", "MHz", "fleet", "sched", "GOp/s", "GOp/J", "p99 ms", "mm²"
+    ));
+    for e in &r.frontier {
+        let c = &e.candidate;
+        let op = c.operating_point();
+        s.push_str(&format!(
+            "{:<22} {:>6} {:>8.0} {:>6} {:>6} {:>9.1} {:>9.0} {:>9.3} {:>8.3}{}\n",
+            c.label(),
+            op.name,
+            op.freq_hz / 1e6,
+            c.fleet,
+            &c.scheduler[..c.scheduler.len().min(5)],
+            e.gops,
+            e.gopj,
+            e.p99_ms,
+            e.mm2,
+            if c.is_paper_geometry() { "  <- paper point" } else { "" }
+        ));
+    }
+    if let Some(p) = &r.paper_screen {
+        s.push_str(&format!(
+            "\npaper anchor : {:.1} GOp/s, {:.0} GOp/J, {:.3} mm² at {} (screen fidelity; \
+             paper: 154 GOp/s, 2960 GOp/J, 0.991 mm²)\n",
+            p.gops,
+            p.gopj,
+            p.mm2,
+            p.candidate.operating_point().name
+        ));
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::explore::{explore, DesignSpace, ExploreConfig, Strategy};
     use crate::models::MOBILEBERT;
     use crate::pipeline::Pipeline;
     use crate::serve::Workload;
@@ -217,6 +280,32 @@ mod tests {
             assert!(text.contains(needle), "missing {needle} in:\n{text}");
         }
         assert!(text.contains("1 served of 1 offered"), "{text}");
+    }
+
+    #[test]
+    fn render_explore_lists_frontier_and_flags_the_paper_point() {
+        let space = DesignSpace::tiny();
+        let cfg = ExploreConfig {
+            strategy: Strategy::Grid,
+            budget: 8,
+            threads: 1,
+            ..ExploreConfig::default()
+        };
+        let r = explore(&space, &cfg).unwrap();
+        let text = render_explore(&r);
+        for needle in [
+            "DESIGN-SPACE EXPLORATION",
+            "tiny space",
+            "grid strategy",
+            "objectives",
+            "frontier",
+            "GOp/J",
+            "mm²",
+            "<- paper point",
+            "paper anchor",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! I$ and the DMA. Used for reporting and for the area-efficiency
 //! figures of merit.
 
+use crate::sim::ClusterConfig;
+
 /// Gate equivalents of one Snitch core (paper Section III).
 pub const SNITCH_KGE: f64 = 22.0;
 /// Total cluster area, mm² (Section IV-C).
@@ -14,6 +16,10 @@ pub const CLUSTER_MM2: f64 = 0.991;
 pub const CLUSTER_MGE: f64 = 5.0;
 /// HWPE subsystem share of total area.
 pub const HWPE_FRACTION: f64 = 0.393;
+/// Per-TCDM-bank periphery cost (address decoder, arbiter leaf, wiring),
+/// kGE — what makes a 64-bank 128 KiB L1 strictly larger than a 32-bank
+/// one even at equal capacity.
+pub const BANK_PERIPHERY_KGE: f64 = 8.0;
 
 /// Component-level area breakdown (MGE).
 #[derive(Debug, Clone)]
@@ -39,6 +45,46 @@ pub fn gops_per_mm2(gops: f64) -> f64 {
     gops / CLUSTER_MM2
 }
 
+/// Parametric cluster complexity (MGE) for an arbitrary template
+/// geometry — the mm² axis of the design-space explorer:
+///
+/// - the HWPE subsystem scales linearly with the ITA datapath
+///   (`N·M` MACs, relative to the paper's 16×64),
+/// - cores scale with the worker count (+1 DMA core when present),
+/// - TCDM scales with capacity (1.5 GE/bit incl. periphery) plus a
+///   per-bank overhead ([`BANK_PERIPHERY_KGE`]),
+/// - the remainder (interconnect, I$, DMA, peripherals) is held at the
+///   paper geometry's residual,
+///
+/// so the paper's instantiation lands exactly on [`CLUSTER_MGE`] /
+/// [`CLUSTER_MM2`], and every axis (cores, banks, capacity, N·M) is
+/// strictly monotone — which is what protects the published point on
+/// the area-aware Pareto frontier.
+pub fn cluster_mge(c: &ClusterConfig) -> f64 {
+    let hwpe =
+        CLUSTER_MGE * HWPE_FRACTION * (c.ita.macs_per_cycle() as f64 / 1024.0);
+    let cores = (c.n_cores + c.dma_core as usize) as f64 * SNITCH_KGE / 1000.0;
+    let tcdm = c.l1_bytes() as f64 * 8.0 * 1.5 / 1.0e6
+        + c.tcdm_banks as f64 * BANK_PERIPHERY_KGE / 1000.0;
+    hwpe + cores + tcdm + other_fixed_mge()
+}
+
+/// The paper geometry's non-parametric remainder (interconnect, I$,
+/// DMA, peripherals), MGE.
+fn other_fixed_mge() -> f64 {
+    let hwpe = CLUSTER_MGE * HWPE_FRACTION;
+    let cores = 9.0 * SNITCH_KGE / 1000.0;
+    let tcdm =
+        (128.0 * 1024.0) * 8.0 * 1.5 / 1.0e6 + 32.0 * BANK_PERIPHERY_KGE / 1000.0;
+    CLUSTER_MGE - hwpe - cores - tcdm
+}
+
+/// Parametric cluster area in mm², converted at the paper's
+/// mm²-per-MGE density.
+pub fn cluster_mm2(c: &ClusterConfig) -> f64 {
+    cluster_mge(c) * (CLUSTER_MM2 / CLUSTER_MGE)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -60,5 +106,41 @@ mod tests {
         // 741 GOp/s peak in 0.991 mm² ~ 748 GOp/s/mm²
         let eff = gops_per_mm2(741.0);
         assert!((eff - 747.7).abs() < 1.0);
+    }
+
+    #[test]
+    fn parametric_area_lands_on_the_paper_point() {
+        let c = ClusterConfig::default();
+        assert!((cluster_mge(&c) - CLUSTER_MGE).abs() < 1e-9);
+        assert!((cluster_mm2(&c) - CLUSTER_MM2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parametric_area_is_monotone_in_every_axis() {
+        use crate::ita::ItaConfig;
+        let base = ClusterConfig::default();
+        let mm2 = cluster_mm2(&base);
+
+        let mut more_cores = base.clone();
+        more_cores.n_cores = 12;
+        assert!(cluster_mm2(&more_cores) > mm2);
+
+        // same 128 KiB capacity, finer banking: strictly larger
+        let mut more_banks = base.clone();
+        more_banks.tcdm_banks = 64;
+        more_banks.tcdm_bank_bytes = 2048;
+        assert!(cluster_mm2(&more_banks) > mm2);
+
+        let mut more_l1 = base.clone();
+        more_l1.tcdm_bank_bytes = 8192; // 256 KiB at 32 banks
+        assert!(cluster_mm2(&more_l1) > mm2);
+
+        let mut bigger_ita = base.clone();
+        bigger_ita.ita = ItaConfig { n_units: 32, ..ItaConfig::default() };
+        assert!(cluster_mm2(&bigger_ita) > mm2);
+
+        let mut smaller_ita = base.clone();
+        smaller_ita.ita = ItaConfig { n_units: 8, ..ItaConfig::default() };
+        assert!(cluster_mm2(&smaller_ita) < mm2);
     }
 }

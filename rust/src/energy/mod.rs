@@ -14,8 +14,16 @@
 //!
 //! Cross-checks (tests below): micro-GEMM implied power 136.7 mW; micro
 //! attention 104.4 mW; multi-core cluster 26 mW.
+//!
+//! The constants above are per-event energies *at the calibrated
+//! corner* (0.65 V / 425 MHz). [`operating_point`] generalizes the
+//! model across the FD-SOI voltage/frequency range (E ∝ V² scaling);
+//! [`evaluate`] remains the nominal-corner fast path and
+//! [`operating_point::evaluate_at`] reproduces it bit-for-bit at the
+//! nominal point.
 
 pub mod area;
+pub mod operating_point;
 
 use crate::sim::trace::Resource;
 use crate::sim::RunStats;
@@ -71,7 +79,7 @@ mod tests {
     use super::*;
     use crate::sim::{ClusterConfig, Cmd, Engine, Step};
 
-    const FREQ: f64 = 425.0e6;
+    const FREQ: f64 = operating_point::NOMINAL_FREQ_HZ;
 
     #[test]
     fn micro_gemm_efficiency_matches_paper() {

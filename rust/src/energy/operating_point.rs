@@ -1,0 +1,204 @@
+//! FD-SOI voltage/frequency operating points (GF22FDX, paper Section
+//! IV-C / Table I).
+//!
+//! The calibrated energy model (`energy::evaluate`) is fitted at the
+//! paper's energy-efficient corner — TT, **0.65 V, 425 MHz** — and the
+//! four constants (`P_IDLE`, `E_CORE_CY`, `E_ITA_OP`, `E_DMA_BYTE`) are
+//! per-event energies *at that voltage*. The silicon itself spans a
+//! voltage/frequency range; this module models the sweep the paper
+//! evaluates but the repo previously hardwired:
+//!
+//! - **Dynamic energy scales as E ∝ V²** (CMOS switching energy
+//!   `½·C·V²` per event): every per-event constant is multiplied by
+//!   `(V / 0.65)²`.
+//! - **Idle power scales as P ∝ V²·f** (the always-on clock tree is
+//!   itself switching): `P_IDLE · (V/0.65)² · (f/425 MHz)`. Because
+//!   run *time* scales as `1/f`, idle **energy** per run scales by the
+//!   same `(V/0.65)²` as the dynamic part — so a whole-run energy at
+//!   an operating point is exactly the nominal-frequency energy times
+//!   `(V/0.65)²`, and GOp/J is monotone decreasing in V while GOp/s is
+//!   monotone increasing in f. That V²-separable shape is what makes
+//!   the voltage axis a clean Pareto trade-off in `explore`.
+//! - **Timing in cycles is voltage-independent**: the cycle-level
+//!   simulator's output is reused unchanged; only the cycle→seconds
+//!   conversion uses the point's frequency.
+//!
+//! [`evaluate_at`] extends [`super::evaluate`]'s single hardwired
+//! corner; at the nominal point it reproduces `evaluate(stats,
+//! NOMINAL_FREQ_HZ)` **bit-for-bit** (every scale factor is exactly
+//! 1.0), so every existing calibration test and serving identity is
+//! untouched.
+//!
+//! [`NOMINAL_FREQ_HZ`] is the single source of truth for the repo's
+//! 425 MHz default: `sim::ClusterConfig::default()` and the CLI derive
+//! from it, so simulate/serve/explore cannot drift apart.
+
+use super::{EnergyReport, E_CORE_CYCLE_J, E_DMA_BYTE_J, E_ITA_OP_J, P_IDLE_W};
+use crate::sim::trace::Resource;
+use crate::sim::RunStats;
+
+/// Supply voltage of the calibrated corner (V).
+pub const NOMINAL_VDD: f64 = 0.65;
+/// Clock frequency of the calibrated corner (Hz) — the repo-wide
+/// 425 MHz default, referenced by `sim::ClusterConfig::default()`.
+pub const NOMINAL_FREQ_HZ: f64 = 425.0e6;
+
+/// One voltage/frequency operating point of the cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    pub name: &'static str,
+    /// Supply voltage, volts.
+    pub vdd: f64,
+    /// Clock frequency at this voltage, Hz.
+    pub freq_hz: f64,
+}
+
+/// The FD-SOI operating-point table, ordered by voltage. The 0.65 V
+/// entry is the paper's published energy-efficient corner; the others
+/// are representative GF22FDX corners bracketing it (low-voltage
+/// retention-adjacent operation up to the high-performance corner).
+/// A `static` (not `const`) so `&OPERATING_POINTS[i]` is a stable
+/// `&'static` the explorer can hand out.
+pub static OPERATING_POINTS: [OperatingPoint; 5] = [
+    OperatingPoint { name: "0.50V", vdd: 0.50, freq_hz: 190.0e6 },
+    OperatingPoint { name: "0.60V", vdd: 0.60, freq_hz: 330.0e6 },
+    OperatingPoint { name: "0.65V", vdd: NOMINAL_VDD, freq_hz: NOMINAL_FREQ_HZ },
+    OperatingPoint { name: "0.72V", vdd: 0.72, freq_hz: 520.0e6 },
+    OperatingPoint { name: "0.80V", vdd: 0.80, freq_hz: 640.0e6 },
+];
+
+/// Index of the paper's published corner in [`OPERATING_POINTS`].
+pub const NOMINAL_INDEX: usize = 2;
+
+/// The paper's published corner (0.65 V / 425 MHz).
+pub fn nominal() -> &'static OperatingPoint {
+    &OPERATING_POINTS[NOMINAL_INDEX]
+}
+
+/// Look an operating point up by name (case-insensitive), returning its
+/// table index alongside it.
+pub fn by_name(name: &str) -> Option<(usize, &'static OperatingPoint)> {
+    OPERATING_POINTS
+        .iter()
+        .enumerate()
+        .find(|(_, op)| op.name.eq_ignore_ascii_case(name))
+}
+
+impl OperatingPoint {
+    /// Per-event dynamic-energy scale relative to the calibrated corner:
+    /// E ∝ V², so `(vdd / 0.65)²`. Exactly 1.0 at the nominal point.
+    pub fn energy_scale(&self) -> f64 {
+        (self.vdd / NOMINAL_VDD).powi(2)
+    }
+
+    /// Always-on power at this point: `P_IDLE · (V/0.65)² · (f/f₀)`.
+    pub fn idle_power_w(&self) -> f64 {
+        P_IDLE_W * self.energy_scale() * (self.freq_hz / NOMINAL_FREQ_HZ)
+    }
+}
+
+/// Evaluate the energy model on simulator statistics at an arbitrary
+/// operating point. At [`nominal`] this reproduces
+/// `super::evaluate(stats, NOMINAL_FREQ_HZ)` bit-for-bit.
+pub fn evaluate_at(stats: &RunStats, op: &OperatingPoint) -> EnergyReport {
+    let s = op.energy_scale();
+    let seconds = stats.seconds(op.freq_hz);
+    let idle_j = op.idle_power_w() * seconds;
+    let cores_j = stats.busy_cycles(Resource::Cores) as f64 * (E_CORE_CYCLE_J * s);
+    let ita_j = stats.ita_ops as f64 * (E_ITA_OP_J * s);
+    let dma_j = stats.dma_bytes as f64 * (E_DMA_BYTE_J * s);
+    let total_j = idle_j + cores_j + ita_j + dma_j;
+    let gops = stats.gops(op.freq_hz);
+    let gopj = stats.total_ops() as f64 / total_j / 1e9;
+    EnergyReport {
+        idle_j,
+        cores_j,
+        ita_j,
+        dma_j,
+        total_j,
+        seconds,
+        avg_power_w: total_j / seconds.max(1e-12),
+        gops,
+        gopj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy;
+    use crate::sim::{ClusterConfig, Cmd, CoreOp, Engine, Step};
+
+    fn mixed_stats() -> RunStats {
+        let e = Engine::new(ClusterConfig::default());
+        let steps = vec![
+            Step::new(Cmd::DmaIn { rows: 64, row_bytes: 256 }, vec![]),
+            Step::new(Cmd::ItaGemm { m: 128, k: 128, n: 128 }, vec![0]),
+            Step::new(Cmd::Core { kind: CoreOp::Add, elems: 16384 }, vec![1]),
+        ];
+        e.run(&steps)
+    }
+
+    #[test]
+    fn table_is_voltage_and_frequency_monotone() {
+        for w in OPERATING_POINTS.windows(2) {
+            assert!(w[0].vdd < w[1].vdd, "{} !< {}", w[0].name, w[1].name);
+            assert!(w[0].freq_hz < w[1].freq_hz);
+        }
+        assert_eq!(nominal().name, "0.65V");
+        assert_eq!(nominal().vdd, NOMINAL_VDD);
+        assert_eq!(nominal().freq_hz, NOMINAL_FREQ_HZ);
+        assert_eq!(by_name("0.80v").unwrap().0, 4);
+        assert!(by_name("1.00V").is_none());
+    }
+
+    #[test]
+    fn nominal_point_reproduces_evaluate_bit_for_bit() {
+        let stats = mixed_stats();
+        let a = energy::evaluate(&stats, NOMINAL_FREQ_HZ);
+        let b = evaluate_at(&stats, nominal());
+        assert_eq!(a.idle_j.to_bits(), b.idle_j.to_bits());
+        assert_eq!(a.cores_j.to_bits(), b.cores_j.to_bits());
+        assert_eq!(a.ita_j.to_bits(), b.ita_j.to_bits());
+        assert_eq!(a.dma_j.to_bits(), b.dma_j.to_bits());
+        assert_eq!(a.total_j.to_bits(), b.total_j.to_bits());
+        assert_eq!(a.seconds.to_bits(), b.seconds.to_bits());
+        assert_eq!(a.gops.to_bits(), b.gops.to_bits());
+        assert_eq!(a.gopj.to_bits(), b.gopj.to_bits());
+    }
+
+    #[test]
+    fn dynamic_energy_scales_as_v_squared() {
+        let stats = mixed_stats();
+        let hi = &OPERATING_POINTS[4]; // 0.80 V
+        let a = evaluate_at(&stats, nominal());
+        let b = evaluate_at(&stats, hi);
+        let s = (hi.vdd / NOMINAL_VDD).powi(2);
+        // every component — idle energy included, because P ∝ V²f and
+        // t ∝ 1/f — scales by exactly (V/V0)²
+        for (x, y) in [
+            (a.cores_j, b.cores_j),
+            (a.ita_j, b.ita_j),
+            (a.dma_j, b.dma_j),
+            (a.idle_j, b.idle_j),
+            (a.total_j, b.total_j),
+        ] {
+            let rel = (y / x - s).abs() / s;
+            assert!(rel < 1e-12, "component ratio {} != {s}", y / x);
+        }
+        // efficiency/throughput move oppositely: the Pareto trade-off
+        assert!(b.gopj < a.gopj, "GOp/J must fall with voltage");
+        assert!(b.gops > a.gops, "GOp/s must rise with frequency");
+    }
+
+    #[test]
+    fn efficiency_is_monotone_down_the_voltage_axis() {
+        let stats = mixed_stats();
+        let reps: Vec<EnergyReport> =
+            OPERATING_POINTS.iter().map(|op| evaluate_at(&stats, op)).collect();
+        for w in reps.windows(2) {
+            assert!(w[0].gopj > w[1].gopj, "GOp/J not decreasing in V");
+            assert!(w[0].gops < w[1].gops, "GOp/s not increasing in f");
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Deterministic design-space exploration over the architectural
+//! template.
+//!
+//! The paper's headline numbers — 2960 GOp/J and 154 GOp/s at 0.65 V in
+//! 0.991 mm² — are **one instantiation** (8+1 cores, 32-bank 128 KiB
+//! TCDM, N=16/M=64 ITA) of a parametric template. The repo can compile
+//! (`pipeline`), simulate (`sim`/`energy`) and serve (`serve`) any
+//! geometry; this subsystem *searches* that space:
+//!
+//! ```text
+//! DesignSpace ──nth(i)──▶ Candidate ──screen──▶ Evaluation (cheap rung)
+//!  (axes × ServeSpec)        │                       │ Pareto-ranked
+//!                            │                       ▼ promotion
+//!                            └───serve_eval──▶ Evaluation (full rung)
+//!                                                    │
+//!                              Pareto (GOp/J · GOp/s · p99 · mm²)
+//!                                                    │
+//!                       render_explore / BENCH_explore.json
+//! ```
+//!
+//! - [`space`] — the cross-product [`DesignSpace`] (cluster geometry,
+//!   FD-SOI operating point, deployment knobs, serving config) with a
+//!   deterministic mixed-radix enumeration; [`Candidate`] is one point
+//!   and knows whether it is the paper's published silicon.
+//! - [`operating`] — candidate evaluation at its voltage/frequency
+//!   point (`energy::operating_point`, E ∝ V²): the cheap
+//!   single-stream [`operating::screen`] rung and the full
+//!   multi-request [`operating::serve_eval`] rung, both pure functions
+//!   fanned out across threads through the process-wide pipeline cache.
+//! - [`objective`] — pluggable [`Objective`]s (GOp/J, GOp/s, p99
+//!   latency, mm² via `energy::area::cluster_mm2`) with one canonical
+//!   dominance orientation.
+//! - [`pareto`] — the [`Pareto`] frontier type: incremental
+//!   non-dominated insertion, order-independent, deterministic output
+//!   ordering.
+//! - [`search`] — [`explore`]: exhaustive grid, seeded-random
+//!   sampling, and successive halving (screen → reduced serve → full
+//!   serve), seeded exclusively through `util::prng` — a fixed seed
+//!   reproduces `BENCH_explore.json` bit-for-bit. The paper's silicon
+//!   is always promoted to full evaluation as the calibration anchor.
+//! - [`report`] — the machine-readable JSON record.
+//!
+//! The CLI front end is `attn-tinyml explore` (`--space`, `--strategy`,
+//! `--budget`, `--objectives`, `--seed`); `coordinator::render_explore`
+//! renders the frontier table and flags the paper's point on it.
+
+pub mod objective;
+pub mod operating;
+pub mod pareto;
+pub mod report;
+pub mod search;
+pub mod space;
+
+pub use objective::Objective;
+pub use operating::{Evaluation, Fidelity};
+pub use pareto::Pareto;
+pub use report::explore_json;
+pub use search::{explore, ExploreConfig, ExploreResult, Strategy};
+pub use space::{Candidate, DesignSpace, ServeSpec};

@@ -1,0 +1,140 @@
+//! Pluggable objectives: what "better" means on the frontier.
+//!
+//! Each [`Objective`] reads one metric off an [`Evaluation`] and knows
+//! its direction. Dominance and ranking never touch raw metrics
+//! directly — they go through [`Objective::key`], the canonical
+//! bigger-is-better orientation (minimized objectives are negated), so
+//! [`super::pareto`] and the search ranking share one definition of
+//! dominance.
+
+use super::operating::Evaluation;
+
+/// One optimization objective over an [`Evaluation`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Energy efficiency, GOp/J — maximize.
+    GopJ,
+    /// Throughput, GOp/s — maximize.
+    GopS,
+    /// p99 latency, ms — minimize.
+    P99,
+    /// Silicon area, mm² — minimize.
+    Mm2,
+}
+
+impl Objective {
+    /// Every objective, in the canonical reporting order.
+    pub const ALL: [Objective; 4] =
+        [Objective::GopJ, Objective::GopS, Objective::P99, Objective::Mm2];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::GopJ => "gopj",
+            Objective::GopS => "gops",
+            Objective::P99 => "p99",
+            Objective::Mm2 => "mm2",
+        }
+    }
+
+    /// Human-readable direction tag for tables.
+    pub fn direction(&self) -> &'static str {
+        if self.maximize() {
+            "max"
+        } else {
+            "min"
+        }
+    }
+
+    pub fn maximize(&self) -> bool {
+        matches!(self, Objective::GopJ | Objective::GopS)
+    }
+
+    pub fn by_name(name: &str) -> Option<Objective> {
+        match name {
+            "gopj" | "gop/j" | "efficiency" => Some(Objective::GopJ),
+            "gops" | "gop/s" | "throughput" => Some(Objective::GopS),
+            "p99" | "p99_ms" | "latency" => Some(Objective::P99),
+            "mm2" | "area" => Some(Objective::Mm2),
+            _ => None,
+        }
+    }
+
+    /// Parse a comma-separated objective list (`gopj,gops,p99,mm2`),
+    /// deduplicating while preserving order.
+    pub fn parse_list(csv: &str) -> Result<Vec<Objective>, String> {
+        let mut out: Vec<Objective> = Vec::new();
+        for raw in csv.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            let o = Objective::by_name(&raw.to_ascii_lowercase()).ok_or_else(|| {
+                format!(
+                    "unknown objective {raw:?}; available: gopj, gops, p99, mm2"
+                )
+            })?;
+            if !out.contains(&o) {
+                out.push(o);
+            }
+        }
+        if out.is_empty() {
+            return Err("objective list is empty".to_string());
+        }
+        Ok(out)
+    }
+
+    /// The objective's raw value on an evaluation, in its natural unit.
+    pub fn value(&self, e: &Evaluation) -> f64 {
+        match self {
+            Objective::GopJ => e.gopj,
+            Objective::GopS => e.gops,
+            Objective::P99 => e.p99_ms,
+            Objective::Mm2 => e.mm2,
+        }
+    }
+
+    /// Canonical bigger-is-better dominance key (minimized objectives
+    /// are negated).
+    pub fn key(&self, e: &Evaluation) -> f64 {
+        if self.maximize() {
+            self.value(e)
+        } else {
+            -self.value(e)
+        }
+    }
+}
+
+/// The canonical key vector of an evaluation under a set of objectives.
+pub fn keys_of(objectives: &[Objective], e: &Evaluation) -> Vec<f64> {
+    objectives.iter().map(|o| o.key(e)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for o in Objective::ALL {
+            assert_eq!(Objective::by_name(o.name()), Some(o));
+        }
+        assert_eq!(Objective::by_name("area"), Some(Objective::Mm2));
+        assert!(Objective::by_name("qps").is_none());
+    }
+
+    #[test]
+    fn parse_list_dedupes_and_errors() {
+        let v = Objective::parse_list("gopj, gops,gopj,MM2").unwrap();
+        assert_eq!(v, vec![Objective::GopJ, Objective::GopS, Objective::Mm2]);
+        assert!(Objective::parse_list("gopj,warp").is_err());
+        assert!(Objective::parse_list(" , ").is_err());
+    }
+
+    #[test]
+    fn directions() {
+        assert!(Objective::GopJ.maximize() && Objective::GopS.maximize());
+        assert!(!Objective::P99.maximize() && !Objective::Mm2.maximize());
+        assert_eq!(Objective::P99.direction(), "min");
+        assert_eq!(Objective::GopJ.direction(), "max");
+    }
+}

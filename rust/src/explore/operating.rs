@@ -1,0 +1,240 @@
+//! Candidate evaluation at its FD-SOI operating point — the bridge
+//! from a [`Candidate`] to the numbers the objectives judge.
+//!
+//! Two fidelities, the successive-halving ladder's rungs:
+//!
+//! - [`screen`] — **cheap single-stream screening**: compile the spec's
+//!   first model through the (process-wide cached) pipeline, reuse the
+//!   memoized `Compiled::stats()`, evaluate the energy model at the
+//!   candidate's operating point (`energy::operating_point`, E ∝ V²),
+//!   and extrapolate the simulated blocks to the full network exactly
+//!   the way `Compiled::simulate()` does. The resulting GOp/s and
+//!   GOp/J are Table-I-comparable (the paper anchor's acceptance
+//!   tolerances are checked against these); `p99_ms` degenerates to
+//!   the single-inference latency and `mm2` is **one** cluster —
+//!   fleet/scheduler axes deliberately do not differentiate at this
+//!   fidelity, so serving variants of one silicon tie instead of
+//!   shadowing each other out of the pool.
+//! - [`serve_eval`] — **full multi-request serving**: the spec's
+//!   workload on the candidate's fleet under its scheduler, via
+//!   `Pipeline::serve_with` (same cached deployments and memoized
+//!   serving constants). Throughput/latency come from the
+//!   [`crate::serve::ServeReport`]; energy is re-based to the
+//!   operating point by splitting the report into active + idle parts
+//!   and applying the V² / V²·f scales; `mm2` is the whole fleet's
+//!   silicon.
+//!
+//! Both are pure functions of the candidate (plus spec, requests,
+//! seed): no wall clock, no global state beyond the deterministic
+//! pipeline cache — which is what lets the search fan them out across
+//! threads and still reproduce bit-for-bit.
+
+use crate::deeploy::{DeployError, Target};
+use crate::energy::{self, area, operating_point};
+use crate::pipeline::Pipeline;
+use crate::serve::{scheduler_by_name, RequestClass, Workload, DEFAULT_BURST_PERIOD_S};
+
+use super::space::{Candidate, ServeSpec};
+
+/// Which rung of the evaluation ladder produced an [`Evaluation`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Single-stream screening (Table-I-comparable extrapolation).
+    Screen,
+    /// Full multi-request serving.
+    Serve,
+}
+
+impl Fidelity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fidelity::Screen => "screen",
+            Fidelity::Serve => "serve",
+        }
+    }
+}
+
+/// One evaluated design point: the candidate plus the metric vector
+/// the objectives read. Semantics differ by fidelity (see the module
+/// docs): screen numbers are full-network single-inference
+/// extrapolations on one cluster; serve numbers are fleet-level
+/// workload measurements.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub candidate: Candidate,
+    pub fidelity: Fidelity,
+    /// Throughput, GOp/s.
+    pub gops: f64,
+    /// Energy efficiency, GOp/J, at the candidate's operating point.
+    pub gopj: f64,
+    /// p99 request latency (serve) / single-inference latency (screen),
+    /// milliseconds.
+    pub p99_ms: f64,
+    /// Silicon area: the fleet for serve, one cluster for screen, mm².
+    pub mm2: f64,
+    /// Served req/s (serve) / inferences per second (screen).
+    pub req_per_s: f64,
+    /// Energy per request (serve) / per inference (screen), mJ.
+    pub mj_per_req: f64,
+}
+
+impl Evaluation {
+    /// All metrics finite — non-finite evaluations never reach the
+    /// frontier.
+    pub fn is_finite(&self) -> bool {
+        self.gops.is_finite()
+            && self.gopj.is_finite()
+            && self.p99_ms.is_finite()
+            && self.mm2.is_finite()
+            && self.req_per_s.is_finite()
+            && self.mj_per_req.is_finite()
+    }
+}
+
+/// Cheap screening rung (see the module docs).
+pub fn screen(c: &Candidate, spec: &ServeSpec) -> Result<Evaluation, DeployError> {
+    let model = spec.models[0];
+    let compiled = Pipeline::new(c.cluster())
+        .model(model)
+        .target(Target::MultiCoreIta)
+        .layers(c.layers)
+        .fuse_mha(c.fuse)
+        .compile()?;
+    let op = c.operating_point();
+    let e = operating_point::evaluate_at(compiled.stats(), op);
+    // extrapolate the simulated blocks to the full network — the
+    // paper's own per-layer measurement strategy (conv stems are
+    // excluded at this fidelity, matching the serving layer's
+    // per-class command streams)
+    let scale = model.layers as f64 / c.layers as f64;
+    let seconds = e.seconds * scale;
+    let energy_j = e.total_j * scale;
+    let gop = model.gop_per_inference;
+    Ok(Evaluation {
+        candidate: c.clone(),
+        fidelity: Fidelity::Screen,
+        gops: gop / seconds,
+        gopj: gop / energy_j,
+        p99_ms: seconds * 1e3,
+        mm2: area::cluster_mm2(&c.cluster()),
+        req_per_s: 1.0 / seconds,
+        mj_per_req: energy_j * 1e3,
+    })
+}
+
+/// Full serving rung (see the module docs). `requests` overrides the
+/// spec's count so the halving ladder can run reduced-fidelity rungs;
+/// `seed` is the workload seed (the search passes its own through).
+pub fn serve_eval(
+    c: &Candidate,
+    spec: &ServeSpec,
+    requests: usize,
+    seed: u64,
+) -> Result<Evaluation, DeployError> {
+    let classes: Vec<RequestClass> =
+        spec.models.iter().map(|m| RequestClass::new(m, c.layers)).collect();
+    let w = match spec.burst_factor {
+        Some(b) => Workload::bursty(
+            classes,
+            spec.rate_rps,
+            b,
+            DEFAULT_BURST_PERIOD_S,
+            requests,
+            seed,
+        ),
+        None => Workload::poisson(classes, spec.rate_rps, requests, seed),
+    };
+    let mut sched = scheduler_by_name(c.scheduler).ok_or_else(|| {
+        DeployError::Builder(format!("unknown scheduler {}", c.scheduler))
+    })?;
+    let r = Pipeline::new(c.cluster())
+        .target(Target::MultiCoreIta)
+        .fuse_mha(c.fuse)
+        .fleet(c.fleet)
+        .serve_with(&w, sched.as_mut())?;
+
+    // re-base the report's energy to the candidate's operating point:
+    // split off the nominal idle floor the fleet charged, scale the
+    // active part by V² and the idle part by the point's V²·f power
+    let op = c.operating_point();
+    let fleet = c.fleet as f64;
+    let idle_ref = energy::P_IDLE_W * r.seconds * fleet;
+    let active_j = (r.energy_j - idle_ref).max(0.0);
+    let energy_j = active_j * op.energy_scale() + op.idle_power_w() * r.seconds * fleet;
+    let gop_served = r.gops * r.seconds;
+    Ok(Evaluation {
+        candidate: c.clone(),
+        fidelity: Fidelity::Serve,
+        gops: r.gops,
+        gopj: gop_served / energy_j,
+        p99_ms: r.p99_ms(),
+        mm2: area::cluster_mm2(&c.cluster()) * fleet,
+        req_per_s: r.req_per_s,
+        mj_per_req: energy_j * 1e3 / (r.served.max(1)) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::space::DesignSpace;
+
+    fn paper_candidate() -> Candidate {
+        let s = DesignSpace::default_space();
+        s.nth(s.paper_index().unwrap())
+    }
+
+    #[test]
+    fn paper_screen_matches_table1_anchors() {
+        // the acceptance anchor (DESIGN.md §6): the published silicon
+        // screens to 154 GOp/s and 2960 GOp/J within the calibrated
+        // tolerances (±25% throughput, −26%/+35% efficiency)
+        let e = screen(&paper_candidate(), &DesignSpace::default_space().serve).unwrap();
+        assert_eq!(e.fidelity, Fidelity::Screen);
+        assert!(e.gops > 115.0 && e.gops < 195.0, "GOp/s {}", e.gops);
+        assert!(e.gopj > 2200.0 && e.gopj < 4000.0, "GOp/J {}", e.gopj);
+        assert!((e.mm2 - 0.991).abs() < 1e-9, "mm² {}", e.mm2);
+        assert!(e.is_finite());
+    }
+
+    #[test]
+    fn lower_voltage_screens_more_efficient_but_slower() {
+        let spec = DesignSpace::default_space().serve;
+        let paper = paper_candidate();
+        let mut low = paper.clone();
+        low.op = 0; // 0.50 V
+        let a = screen(&paper, &spec).unwrap();
+        let b = screen(&low, &spec).unwrap();
+        assert!(b.gopj > a.gopj, "0.50 V must be more efficient");
+        assert!(b.gops < a.gops, "0.50 V must be slower");
+        assert_eq!(a.mm2.to_bits(), b.mm2.to_bits(), "voltage costs no area");
+    }
+
+    fn default_spec() -> ServeSpec {
+        DesignSpace::default_space().serve
+    }
+
+    #[test]
+    fn serve_eval_scales_area_with_the_fleet_and_stays_finite() {
+        let spec = default_spec();
+        let paper = paper_candidate();
+        let mut two = paper.clone();
+        two.fleet = 2;
+        two.scheduler = "batch";
+        let a = serve_eval(&paper, &spec, 16, 0xA5).unwrap();
+        let b = serve_eval(&two, &spec, 16, 0xA5).unwrap();
+        assert_eq!(a.fidelity, Fidelity::Serve);
+        assert!(a.is_finite() && b.is_finite());
+        assert!((b.mm2 - 2.0 * a.mm2).abs() < 1e-12);
+        assert!(b.gops >= a.gops, "two clusters cannot serve slower");
+    }
+
+    #[test]
+    fn serve_eval_at_nominal_stays_positive_and_finite() {
+        let spec = default_spec();
+        let paper = paper_candidate();
+        let e = serve_eval(&paper, &spec, 8, 0x5EED).unwrap();
+        assert!(e.gopj > 0.0 && e.mj_per_req > 0.0);
+        assert!(e.is_finite());
+    }
+}

@@ -1,0 +1,205 @@
+//! The Pareto frontier: incremental non-dominated insertion.
+//!
+//! A [`Pareto`] holds the maximal set of [`Evaluation`]s under a fixed
+//! objective list. Dominance is the standard weak form on the
+//! canonical bigger-is-better keys ([`Objective::key`]): `a` dominates
+//! `b` iff `a ≥ b` on every objective and `a > b` on at least one.
+//! Points with identical key vectors do not dominate each other, so
+//! genuine ties coexist on the frontier.
+//!
+//! Invariants (propchecked in `tests/explore_invariants.rs`):
+//!
+//! - **No dominated point survives**: inserting rejects dominated
+//!   newcomers and evicts every incumbent the newcomer dominates.
+//! - **Insertion-order independence**: the final frontier is exactly
+//!   the maximal-element set of everything ever offered — a set, not a
+//!   history.
+//! - **Determinism**: [`Pareto::sorted`] orders by the first
+//!   objective's key (descending, `total_cmp`) with the candidate
+//!   index as the tie-break, so rendering and JSON are stable.
+//! - Non-finite evaluations are rejected outright (a NaN never
+//!   dominates and would otherwise squat on the frontier forever).
+
+use super::objective::{keys_of, Objective};
+use super::operating::Evaluation;
+
+/// `a` dominates `b` on canonical (bigger-is-better) key vectors.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x < y {
+            return false;
+        }
+        if x > y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// An incrementally maintained non-dominated set (see module docs).
+#[derive(Debug, Clone)]
+pub struct Pareto {
+    objectives: Vec<Objective>,
+    points: Vec<Evaluation>,
+    keys: Vec<Vec<f64>>,
+}
+
+impl Pareto {
+    pub fn new(objectives: Vec<Objective>) -> Pareto {
+        assert!(!objectives.is_empty(), "a frontier needs at least one objective");
+        Pareto { objectives, points: Vec::new(), keys: Vec::new() }
+    }
+
+    pub fn objectives(&self) -> &[Objective] {
+        &self.objectives
+    }
+
+    /// The canonical key vector of an evaluation under this frontier's
+    /// objectives (exposed for the invariant tests).
+    pub fn score(&self, e: &Evaluation) -> Vec<f64> {
+        keys_of(&self.objectives, e)
+    }
+
+    /// Offer one evaluation. Returns `true` if it joined the frontier
+    /// (evicting whatever it dominates), `false` if it was dominated by
+    /// an incumbent or non-finite.
+    pub fn insert(&mut self, e: Evaluation) -> bool {
+        if !e.is_finite() {
+            return false;
+        }
+        let k = self.score(&e);
+        if self.keys.iter().any(|inc| dominates(inc, &k)) {
+            return false;
+        }
+        // evict everything the newcomer dominates (walk both vectors in
+        // lockstep so points/keys stay aligned)
+        let mut i = 0;
+        while i < self.points.len() {
+            if dominates(&k, &self.keys[i]) {
+                self.points.swap_remove(i);
+                self.keys.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        self.points.push(e);
+        self.keys.push(k);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Unordered view of the frontier.
+    pub fn points(&self) -> &[Evaluation] {
+        &self.points
+    }
+
+    /// Deterministically ordered frontier: first objective's key
+    /// descending (`total_cmp`), candidate index ascending as the
+    /// tie-break.
+    pub fn sorted(&self) -> Vec<Evaluation> {
+        let mut out = self.points.clone();
+        let first = self.objectives[0];
+        out.sort_by(|a, b| {
+            first
+                .key(b)
+                .total_cmp(&first.key(a))
+                .then_with(|| a.candidate.index.cmp(&b.candidate.index))
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::operating::Fidelity;
+    use crate::explore::space::Candidate;
+
+    fn eval(index: usize, gopj: f64, gops: f64, p99: f64, mm2: f64) -> Evaluation {
+        Evaluation {
+            candidate: Candidate {
+                index,
+                cores: 8,
+                banks: 32,
+                l1_kib: 128,
+                ita_n: 16,
+                ita_m: 64,
+                op: crate::energy::operating_point::NOMINAL_INDEX,
+                layers: 1,
+                fuse: true,
+                fleet: 1,
+                scheduler: "fifo",
+            },
+            fidelity: Fidelity::Screen,
+            gops,
+            gopj,
+            p99_ms: p99,
+            mm2,
+            req_per_s: 0.0,
+            mj_per_req: 0.0,
+        }
+    }
+
+    fn frontier() -> Pareto {
+        Pareto::new(Objective::ALL.to_vec())
+    }
+
+    #[test]
+    fn dominance_matches_hand_cases() {
+        assert!(dominates(&[2.0, 2.0], &[1.0, 2.0]));
+        assert!(!dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(!dominates(&[2.0, 1.0], &[1.0, 2.0]), "incomparable");
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal vectors tie");
+    }
+
+    #[test]
+    fn insert_evicts_dominated_and_rejects_dominated() {
+        let mut p = frontier();
+        assert!(p.insert(eval(0, 100.0, 10.0, 5.0, 1.0)));
+        // strictly better everywhere: evicts the incumbent
+        assert!(p.insert(eval(1, 200.0, 20.0, 4.0, 0.9)));
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.points()[0].candidate.index, 1);
+        // strictly worse everywhere: rejected
+        assert!(!p.insert(eval(2, 150.0, 15.0, 4.5, 0.95)));
+        // incomparable trade-off (more efficient, slower): joins
+        assert!(p.insert(eval(3, 400.0, 5.0, 8.0, 0.9)));
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn equal_points_coexist() {
+        let mut p = frontier();
+        assert!(p.insert(eval(0, 100.0, 10.0, 5.0, 1.0)));
+        assert!(p.insert(eval(1, 100.0, 10.0, 5.0, 1.0)));
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn non_finite_rejected() {
+        let mut p = frontier();
+        assert!(!p.insert(eval(0, f64::NAN, 10.0, 5.0, 1.0)));
+        assert!(!p.insert(eval(1, f64::INFINITY, 10.0, 5.0, 1.0)));
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn sorted_is_deterministic_and_key_ordered() {
+        let mut p = frontier();
+        p.insert(eval(5, 100.0, 30.0, 5.0, 1.0));
+        p.insert(eval(2, 300.0, 10.0, 5.0, 1.0));
+        p.insert(eval(9, 200.0, 20.0, 5.0, 1.0));
+        let s = p.sorted();
+        let idx: Vec<usize> = s.iter().map(|e| e.candidate.index).collect();
+        assert_eq!(idx, vec![2, 9, 5], "gopj-descending order");
+    }
+}

@@ -1,0 +1,109 @@
+//! Machine-readable exploration records (`BENCH_explore.json`).
+//!
+//! [`explore_json`] lowers an [`ExploreResult`] to the repo's
+//! deterministic JSON (`util::json`: BTreeMap objects, stable number
+//! formatting). Because the result itself is a pure function of
+//! (space, config) — no wall clock anywhere in the search — serializing
+//! two same-seed runs yields **bit-identical** documents; the
+//! `explore` CLI and `benches/explore_pareto` both write this shape
+//! and the bench asserts the reproduction.
+
+use crate::util::json::Json;
+
+use super::operating::Evaluation;
+use super::search::ExploreResult;
+use super::space::DesignSpace;
+
+/// One evaluated point as a JSON object.
+fn point_json(e: &Evaluation) -> Json {
+    let c = &e.candidate;
+    let op = c.operating_point();
+    Json::obj(vec![
+        ("index", Json::num(c.index as f64)),
+        ("label", Json::str(c.label())),
+        ("cores", Json::num(c.cores as f64)),
+        ("banks", Json::num(c.banks as f64)),
+        ("l1_kib", Json::num(c.l1_kib as f64)),
+        ("ita_n", Json::num(c.ita_n as f64)),
+        ("ita_m", Json::num(c.ita_m as f64)),
+        ("operating_point", Json::str(op.name)),
+        ("vdd", Json::num(op.vdd)),
+        ("freq_mhz", Json::num(op.freq_hz / 1e6)),
+        ("layers", Json::num(c.layers as f64)),
+        ("fuse", Json::Bool(c.fuse)),
+        ("fleet", Json::num(c.fleet as f64)),
+        ("scheduler", Json::str(c.scheduler)),
+        ("fidelity", Json::str(e.fidelity.name())),
+        ("gops", Json::num(e.gops)),
+        ("gopj", Json::num(e.gopj)),
+        ("p99_ms", Json::num(e.p99_ms)),
+        ("mm2", Json::num(e.mm2)),
+        ("req_per_s", Json::num(e.req_per_s)),
+        ("mj_per_req", Json::num(e.mj_per_req)),
+        ("paper_point", Json::Bool(c.is_paper_geometry())),
+    ])
+}
+
+/// The full exploration record: configuration echo, counts, the paper
+/// anchor's screening metrics, the frontier, and every full-fidelity
+/// evaluation.
+pub fn explore_json(space: &DesignSpace, r: &ExploreResult) -> Json {
+    let objectives: Vec<Json> = r.objectives.iter().map(|o| Json::str(o.name())).collect();
+    let models: Vec<Json> = space.serve.models.iter().map(|m| Json::str(m.name)).collect();
+    let burst = space.serve.burst_factor.map(Json::Num).unwrap_or(Json::Null);
+    let paper = r.paper_screen.as_ref().map(point_json).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("bench", Json::str("explore_pareto")),
+        ("space", Json::str(r.space)),
+        ("space_len", Json::num(r.space_len as f64)),
+        ("strategy", Json::str(r.strategy)),
+        // the seed is a full u64; JSON numbers are f64-backed, which
+        // would silently round seeds above 2^53 in the one file whose
+        // job is exact reproduction — record it as a string
+        ("seed", Json::str(r.seed.to_string())),
+        ("budget", Json::num(r.budget as f64)),
+        ("objectives", Json::Arr(objectives)),
+        ("requests", Json::num(space.serve.requests as f64)),
+        ("rate_rps", Json::num(space.serve.rate_rps)),
+        ("burst_factor", burst),
+        ("models", Json::Arr(models)),
+        ("screened", Json::num(r.screened as f64)),
+        ("evaluated", Json::num(r.evaluated as f64)),
+        ("infeasible", Json::num(r.infeasible as f64)),
+        ("truncated", Json::Bool(r.truncated)),
+        ("paper_screen", paper),
+        ("frontier", Json::Arr(r.frontier.iter().map(point_json).collect())),
+        ("evaluations", Json::Arr(r.evaluations.iter().map(point_json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::search::{explore, ExploreConfig, Strategy};
+
+    #[test]
+    fn json_echoes_the_run_and_reparses() {
+        let space = DesignSpace::tiny();
+        let cfg = ExploreConfig {
+            strategy: Strategy::Grid,
+            budget: 8,
+            threads: 1,
+            ..ExploreConfig::default()
+        };
+        let r = explore(&space, &cfg).unwrap();
+        let doc = explore_json(&space, &r);
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("space").unwrap().as_str(), Some("tiny"));
+        assert_eq!(back.get("strategy").unwrap().as_str(), Some("grid"));
+        assert_eq!(
+            back.get("frontier").unwrap().as_arr().unwrap().len(),
+            r.frontier.len()
+        );
+        let first = &back.get("frontier").unwrap().as_arr().unwrap()[0];
+        for key in ["gops", "gopj", "p99_ms", "mm2", "operating_point", "paper_point"] {
+            assert!(first.get(key).is_some(), "frontier point missing {key}");
+        }
+    }
+}

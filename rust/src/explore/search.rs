@@ -1,0 +1,481 @@
+//! Search strategies over a [`DesignSpace`]: exhaustive grid,
+//! seeded-random sampling, and successive halving.
+//!
+//! [`explore`] is the one entry point. It is a **pure function of
+//! (space, config)**: candidate identity comes from the space's
+//! deterministic enumeration, every random draw comes from
+//! `util::prng` seeded with the config's seed (never a wall clock),
+//! and evaluations are deterministic simulator/serving runs — so a
+//! fixed seed reproduces the whole [`ExploreResult`] (and the JSON
+//! `BENCH_explore.json` derived from it) bit-for-bit, including under
+//! thread fan-out: workers race only over *which* slot they compute,
+//! and every slot's value is order-independent.
+//!
+//! Strategies:
+//!
+//! - **grid** — full-fidelity serving evaluation of the first
+//!   `budget` candidates in enumeration order (`truncated` is set when
+//!   the budget clips the space).
+//! - **random** — full evaluation of `budget` distinct seeded-random
+//!   candidates.
+//! - **halving** — the multi-fidelity ladder: a pool of up to
+//!   `4×budget` candidates is screened through the cheap single-stream
+//!   rung (`operating::screen`, memoized stats through the pipeline
+//!   cache), the Pareto-ranked top `2×budget` are promoted to a
+//!   reduced-request serving rung, and the top `budget` of those get
+//!   the full workload. Ranking peels non-dominated fronts
+//!   ([`pareto::dominates`] on the objective keys) and breaks ties by
+//!   pool position, so promotion is deterministic.
+//!
+//! Whatever the strategy, if the space contains the paper's silicon,
+//! every candidate carrying it (one per serving overlay) is promoted
+//! to full evaluation (the **calibration anchors**): the published
+//! point must be measurable — under its best serving configuration —
+//! on every frontier the explorer reports, so `budget` can be exceeded
+//! by at most the anchor count. The lowest-index anchor's screening
+//! metrics are recorded in [`ExploreResult::paper_screen`] for the
+//! Table-I tolerance check.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::deeploy::DeployError;
+use crate::util::prng::XorShift64;
+
+use super::objective::{keys_of, Objective};
+use super::operating::{self, Evaluation};
+use super::pareto::{dominates, Pareto};
+use super::space::{Candidate, DesignSpace};
+
+/// Search strategy selector (CLI: `--strategy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Grid,
+    Random,
+    Halving,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Grid => "grid",
+            Strategy::Random => "random",
+            Strategy::Halving => "halving",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Strategy> {
+        match name {
+            "grid" | "exhaustive" => Some(Strategy::Grid),
+            "random" | "sample" => Some(Strategy::Random),
+            "halving" | "sha" => Some(Strategy::Halving),
+            _ => None,
+        }
+    }
+}
+
+/// Search configuration.
+#[derive(Debug, Clone)]
+pub struct ExploreConfig {
+    pub strategy: Strategy,
+    /// Candidates promoted to full-fidelity serving evaluation.
+    pub budget: usize,
+    /// Seeds both the sampling PRNG and the evaluation workloads.
+    pub seed: u64,
+    pub objectives: Vec<Objective>,
+    /// Worker threads for the evaluation fan-out; 0 = auto
+    /// (`available_parallelism`, capped at 8).
+    pub threads: usize,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            strategy: Strategy::Halving,
+            budget: 16,
+            seed: 48879,
+            objectives: Objective::ALL.to_vec(),
+            threads: 0,
+        }
+    }
+}
+
+/// Everything one search produced (see `explore::report` for the
+/// JSON rendering and `coordinator::render_explore` for the table).
+#[derive(Debug, Clone)]
+pub struct ExploreResult {
+    pub space: &'static str,
+    pub space_len: usize,
+    pub strategy: &'static str,
+    pub seed: u64,
+    pub budget: usize,
+    pub objectives: Vec<Objective>,
+    /// Cheap screening evaluations performed (halving only).
+    pub screened: usize,
+    /// Full-fidelity serving evaluations performed.
+    pub evaluated: usize,
+    /// Candidates whose compilation/serving failed (e.g. L1 budget or
+    /// ITA constraint violations on small geometries) — skipped, never
+    /// fatal.
+    pub infeasible: usize,
+    /// Grid only: the budget clipped the enumeration.
+    pub truncated: bool,
+    /// The non-dominated set, deterministically ordered
+    /// ([`Pareto::sorted`]).
+    pub frontier: Vec<Evaluation>,
+    /// Every full-fidelity evaluation, in pool order.
+    pub evaluations: Vec<Evaluation>,
+    /// Screening metrics of the paper's silicon (Table-I-comparable),
+    /// when the space contains it.
+    pub paper_screen: Option<Evaluation>,
+}
+
+/// Run one design-space search (see the module docs).
+pub fn explore(space: &DesignSpace, cfg: &ExploreConfig) -> Result<ExploreResult, DeployError> {
+    space.validate()?;
+    if cfg.budget == 0 {
+        return Err(DeployError::Builder("explore budget must be >= 1".into()));
+    }
+    if cfg.objectives.is_empty() {
+        return Err(DeployError::Builder("explore needs at least one objective".into()));
+    }
+    let len = space.len();
+    let threads = effective_threads(cfg.threads);
+    let paper = space.paper_indices();
+    let paper_screen = paper
+        .first()
+        .map(|&i| operating::screen(&space.nth(i), &space.serve))
+        .transpose()
+        .unwrap_or_default();
+
+    let mut screened = 0usize;
+    let mut infeasible = 0usize;
+    let mut truncated = false;
+
+    // --- pool selection + promotion ladder, per strategy -----------------
+    let pool: Vec<Candidate> = match cfg.strategy {
+        Strategy::Grid => {
+            truncated = len > cfg.budget;
+            let mut idx: Vec<usize> = (0..len.min(cfg.budget)).collect();
+            anchor(&mut idx, &paper);
+            idx.into_iter().map(|i| space.nth(i)).collect()
+        }
+        Strategy::Random => {
+            let mut rng = XorShift64::new(cfg.seed ^ 0x5A3C_E0DE);
+            let mut idx = sample_distinct(len, cfg.budget.min(len), &mut rng);
+            anchor(&mut idx, &paper);
+            idx.into_iter().map(|i| space.nth(i)).collect()
+        }
+        Strategy::Halving => {
+            let cap = cfg.budget.saturating_mul(4).max(cfg.budget);
+            let mut idx: Vec<usize> = if len <= cap {
+                (0..len).collect()
+            } else {
+                let mut rng = XorShift64::new(cfg.seed ^ 0x5A3C_E0DE);
+                sample_distinct(len, cap, &mut rng)
+            };
+            anchor(&mut idx, &paper);
+            let mut pool: Vec<Candidate> =
+                idx.into_iter().map(|i| space.nth(i)).collect();
+
+            // rung 0: cheap screening. When the workload is so small
+            // that a "reduced" serving rung would re-run the full
+            // request count (requests <= 8), the mid rung is pure
+            // duplication — cut straight to the budget on the screen
+            // ranking instead.
+            let reduced = (space.serve.requests / 4).max(8).min(space.serve.requests);
+            let has_mid_rung = reduced < space.serve.requests;
+            let first_cut = if has_mid_rung {
+                cfg.budget.saturating_mul(2)
+            } else {
+                cfg.budget
+            };
+            let evals = par_eval(&pool, threads, |c| operating::screen(c, &space.serve));
+            screened = pool.len();
+            let (kept, evals, dropped) = keep_feasible(pool, evals);
+            infeasible += dropped;
+            pool = select_top(kept, &evals, &cfg.objectives, first_cut, &paper);
+
+            // rung 1: reduced-request serving (skipped when the pool
+            // already fits the budget)
+            if has_mid_rung && pool.len() > cfg.budget {
+                let seed = cfg.seed;
+                let evals = par_eval(&pool, threads, |c| {
+                    operating::serve_eval(c, &space.serve, reduced, seed)
+                });
+                let (kept, evals, dropped) = keep_feasible(pool, evals);
+                infeasible += dropped;
+                pool = select_top(kept, &evals, &cfg.objectives, cfg.budget, &paper);
+            }
+            pool
+        }
+    };
+
+    // --- final full-fidelity evaluation ----------------------------------
+    let seed = cfg.seed;
+    let finals = par_eval(&pool, threads, |c| {
+        operating::serve_eval(c, &space.serve, space.serve.requests, seed)
+    });
+    let (_, evaluations, dropped) = keep_feasible(pool, finals);
+    infeasible += dropped;
+
+    let mut frontier = Pareto::new(cfg.objectives.clone());
+    for e in &evaluations {
+        frontier.insert(e.clone());
+    }
+
+    Ok(ExploreResult {
+        space: space.name,
+        space_len: len,
+        strategy: cfg.strategy.name(),
+        seed: cfg.seed,
+        budget: cfg.budget,
+        objectives: cfg.objectives.clone(),
+        screened,
+        evaluated: evaluations.len(),
+        infeasible,
+        truncated,
+        frontier: frontier.sorted(),
+        evaluations,
+        paper_screen,
+    })
+}
+
+/// Ensure every calibration-anchor candidate is in the index pool
+/// (sorted insert, dedup) — every strategy fully evaluates the paper's
+/// silicon, under each of its serving overlays, when the space
+/// contains it.
+fn anchor(idx: &mut Vec<usize>, paper: &[usize]) {
+    let mut added = false;
+    for &p in paper {
+        if !idx.contains(&p) {
+            idx.push(p);
+            added = true;
+        }
+    }
+    if added {
+        idx.sort_unstable();
+    }
+}
+
+/// `want` distinct indices in `[0, len)` by seeded rejection sampling
+/// (draw order defines pool order, so the sample is reproducible).
+fn sample_distinct(len: usize, want: usize, rng: &mut XorShift64) -> Vec<usize> {
+    if want >= len {
+        return (0..len).collect();
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    let mut out = Vec::with_capacity(want);
+    while out.len() < want {
+        let i = rng.next_below(len as u64) as usize;
+        if seen.insert(i) {
+            out.push(i);
+        }
+    }
+    out
+}
+
+/// Drop infeasible candidates, keeping pool and evaluations aligned.
+/// Returns (survivors, their evaluations, dropped count).
+fn keep_feasible(
+    pool: Vec<Candidate>,
+    evals: Vec<Result<Evaluation, DeployError>>,
+) -> (Vec<Candidate>, Vec<Evaluation>, usize) {
+    let mut kept = Vec::with_capacity(pool.len());
+    let mut out = Vec::with_capacity(pool.len());
+    let mut dropped = 0usize;
+    for (c, r) in pool.into_iter().zip(evals) {
+        match r {
+            Ok(e) if e.is_finite() => {
+                kept.push(c);
+                out.push(e);
+            }
+            _ => dropped += 1,
+        }
+    }
+    (kept, out, dropped)
+}
+
+/// Non-dominated-front ranking over aligned (pool, evals): peel fronts
+/// on the objective keys, order within a front by pool position, keep
+/// the top `k` — then restore pool order among the survivors. The
+/// paper anchor, when present in the pool, is always retained.
+fn select_top(
+    pool: Vec<Candidate>,
+    evals: &[Evaluation],
+    objectives: &[Objective],
+    k: usize,
+    paper: &[usize],
+) -> Vec<Candidate> {
+    if pool.len() <= k {
+        return pool;
+    }
+    let keys: Vec<Vec<f64>> = evals.iter().map(|e| keys_of(objectives, e)).collect();
+    let order = pareto_order(&keys);
+    let mut chosen: Vec<usize> = order.into_iter().take(k).collect();
+    for (pos, c) in pool.iter().enumerate() {
+        if paper.contains(&c.index) && !chosen.contains(&pos) {
+            chosen.push(pos);
+        }
+    }
+    chosen.sort_unstable();
+    let mut keep = vec![false; pool.len()];
+    for &pos in &chosen {
+        keep[pos] = true;
+    }
+    pool.into_iter()
+        .zip(keep)
+        .filter_map(|(c, keep)| keep.then_some(c))
+        .collect()
+}
+
+/// Positions `0..keys.len()` ordered by non-dominated front (front 0
+/// first), position-ascending within each front.
+pub(crate) fn pareto_order(keys: &[Vec<f64>]) -> Vec<usize> {
+    let n = keys.len();
+    let mut remaining: Vec<usize> = (0..n).collect();
+    let mut out = Vec::with_capacity(n);
+    while !remaining.is_empty() {
+        let mut front: Vec<usize> = remaining
+            .iter()
+            .copied()
+            .filter(|&i| {
+                !remaining.iter().any(|&j| j != i && dominates(&keys[j], &keys[i]))
+            })
+            .collect();
+        if front.is_empty() {
+            // unreachable for finite keys (strict partial orders have
+            // maximal elements); terminate defensively anyway
+            front = remaining.clone();
+        }
+        out.extend(front.iter().copied());
+        remaining.retain(|i| !front.contains(i));
+    }
+    out
+}
+
+fn effective_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
+}
+
+/// Evaluate every candidate, fanning out over `threads` workers through
+/// the process-wide pipeline cache. Results return slot-aligned, so the
+/// outcome is independent of which worker computed what.
+fn par_eval<F>(cands: &[Candidate], threads: usize, f: F) -> Vec<Result<Evaluation, DeployError>>
+where
+    F: Fn(&Candidate) -> Result<Evaluation, DeployError> + Sync,
+{
+    let n = cands.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return cands.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<(usize, Result<Evaluation, DeployError>)> = std::thread::scope(|s| {
+        let next = &next;
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(&cands[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("explore worker panicked"))
+            .collect()
+    });
+    slots.sort_by_key(|&(i, _)| i);
+    slots.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_names_resolve() {
+        for (n, s) in [
+            ("grid", Strategy::Grid),
+            ("random", Strategy::Random),
+            ("halving", Strategy::Halving),
+            ("sha", Strategy::Halving),
+        ] {
+            assert_eq!(Strategy::by_name(n), Some(s));
+        }
+        assert!(Strategy::by_name("anneal").is_none());
+        assert_eq!(Strategy::Halving.name(), "halving");
+    }
+
+    #[test]
+    fn sample_distinct_is_deterministic_and_distinct() {
+        let mut a = XorShift64::new(7);
+        let mut b = XorShift64::new(7);
+        let x = sample_distinct(100, 20, &mut a);
+        let y = sample_distinct(100, 20, &mut b);
+        assert_eq!(x, y);
+        let set: std::collections::BTreeSet<usize> = x.iter().copied().collect();
+        assert_eq!(set.len(), 20);
+        assert!(set.iter().all(|&i| i < 100));
+        // want >= len collapses to the identity
+        assert_eq!(sample_distinct(5, 9, &mut a), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pareto_order_peels_fronts_position_stable() {
+        // keys: 0 and 2 are maximal (incomparable); 1 is dominated by 0;
+        // 3 is dominated by everything
+        let keys = vec![
+            vec![3.0, 1.0],
+            vec![2.0, 0.5],
+            vec![1.0, 3.0],
+            vec![0.5, 0.25],
+        ];
+        assert_eq!(pareto_order(&keys), vec![0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn zero_budget_and_empty_objectives_error() {
+        let space = DesignSpace::tiny();
+        let mut cfg = ExploreConfig { budget: 0, ..ExploreConfig::default() };
+        assert!(explore(&space, &cfg).is_err());
+        cfg.budget = 1;
+        cfg.objectives = vec![];
+        assert!(explore(&space, &cfg).is_err());
+    }
+
+    #[test]
+    fn tiny_grid_explore_produces_a_frontier_with_the_paper_point() {
+        let space = DesignSpace::tiny();
+        let cfg = ExploreConfig {
+            strategy: Strategy::Grid,
+            budget: 16,
+            threads: 1,
+            ..ExploreConfig::default()
+        };
+        let r = explore(&space, &cfg).unwrap();
+        assert!(!r.truncated, "budget 16 covers the 4-candidate tiny space");
+        assert_eq!(r.evaluated, 4);
+        assert!(!r.frontier.is_empty());
+        assert!(r.frontier.iter().any(|e| e.candidate.is_paper_geometry()));
+        assert!(r.paper_screen.is_some());
+        // every frontier point is one of the evaluations
+        for e in &r.frontier {
+            assert!(r.evaluations.iter().any(|x| x.candidate.index == e.candidate.index));
+        }
+    }
+}

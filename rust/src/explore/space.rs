@@ -1,0 +1,471 @@
+//! The design space: what the explorer sweeps.
+//!
+//! A [`DesignSpace`] is a cross product of axis value lists over the
+//! architectural template — cluster geometry (worker cores, TCDM
+//! banks/capacity, ITA N/M), the FD-SOI operating point
+//! (`energy::operating_point`), deployment knobs (encoder blocks,
+//! MHA fusion) and serving configuration (fleet size, scheduler) —
+//! plus one [`ServeSpec`] describing the workload every candidate is
+//! judged against. A [`Candidate`] is one fully specified point; its
+//! `index` is its position in the deterministic mixed-radix
+//! enumeration, which doubles as the tie-break identity everywhere in
+//! the search (rankings, frontier ordering, reports).
+//!
+//! The enumeration is the determinism backbone: `nth(i)` is a pure
+//! mixed-radix decode, so grid order, seeded-random sampling
+//! (`nth(rng.next_below(len))`) and the paper-anchor lookup all agree
+//! on what candidate `i` *is* without materializing the space.
+
+use crate::deeploy::DeployError;
+use crate::energy::operating_point::{self, OperatingPoint, OPERATING_POINTS};
+use crate::ita::ItaConfig;
+use crate::models::{ModelConfig, DINOV2S, MOBILEBERT, WHISPER_TINY_ENC};
+use crate::serve::scheduler_by_name;
+use crate::sim::ClusterConfig;
+
+/// The workload every candidate's full-fidelity evaluation serves:
+/// request classes (one per model, at the candidate's layer count) and
+/// an open-loop arrival process. The workload seed comes from the
+/// search configuration, not from here — `explore --seed N` varies the
+/// draw the same way `serve --seed` does.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    /// Request-class models; `models[0]` is also the screening model
+    /// (the cheap single-stream fidelity evaluates it alone).
+    pub models: Vec<&'static ModelConfig>,
+    /// Requests offered per full-fidelity evaluation.
+    pub requests: usize,
+    /// Open-loop Poisson arrival rate, req/s.
+    pub rate_rps: f64,
+    /// Square-wave burst factor (bursty Poisson when set).
+    pub burst_factor: Option<f64>,
+}
+
+/// One fully specified design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    /// Position in the space's deterministic enumeration — the
+    /// candidate's identity for rankings and tie-breaks.
+    pub index: usize,
+    /// Worker Snitch cores (the +1 DMA core is always present).
+    pub cores: usize,
+    /// TCDM banks.
+    pub banks: usize,
+    /// Total L1 capacity, KiB.
+    pub l1_kib: usize,
+    /// ITA dot-product units (N).
+    pub ita_n: usize,
+    /// ITA vector length (M).
+    pub ita_m: usize,
+    /// Index into [`OPERATING_POINTS`].
+    pub op: usize,
+    /// Encoder blocks per compiled request class.
+    pub layers: usize,
+    /// MHA fusion pass on/off.
+    pub fuse: bool,
+    /// Fleet size for serving.
+    pub fleet: usize,
+    /// Scheduler name (`serve::scheduler_by_name`).
+    pub scheduler: &'static str,
+}
+
+impl Candidate {
+    pub fn operating_point(&self) -> &'static OperatingPoint {
+        &OPERATING_POINTS[self.op]
+    }
+
+    /// The cluster geometry this candidate instantiates. HWPE port
+    /// provisioning follows the datapath's "two M-byte operand vectors
+    /// per cycle" requirement (paper Section IV-B): `2·M / 8` ports —
+    /// 16 at M=64, so the paper candidate reproduces
+    /// `ClusterConfig::default()` field-for-field (and shares its cache
+    /// entries).
+    pub fn cluster(&self) -> ClusterConfig {
+        let ita = ItaConfig {
+            n_units: self.ita_n,
+            m_vec: self.ita_m,
+            ..ItaConfig::default()
+        };
+        let l1_bytes = self.l1_kib * 1024;
+        ClusterConfig {
+            n_cores: self.cores,
+            tcdm_banks: self.banks,
+            tcdm_bank_bytes: l1_bytes / self.banks.max(1),
+            hwpe_ports: (2 * self.ita_m).div_ceil(8).max(4),
+            freq_hz: self.operating_point().freq_hz,
+            ita,
+            ..ClusterConfig::default()
+        }
+    }
+
+    /// Whether this candidate is the paper's published silicon point:
+    /// the 8+1-core / 32-bank 128 KiB / N=16 M=64 cluster at the
+    /// 0.65 V / 425 MHz corner with MHA fusion on. Serving overlays
+    /// (fleet size, scheduler) are ours, not the paper's, so they do
+    /// not participate in the flag.
+    pub fn is_paper_geometry(&self) -> bool {
+        self.cores == 8
+            && self.banks == 32
+            && self.l1_kib == 128
+            && self.ita_n == 16
+            && self.ita_m == 64
+            && self.op == operating_point::NOMINAL_INDEX
+            && self.fuse
+    }
+
+    /// Compact geometry label for tables.
+    pub fn label(&self) -> String {
+        format!(
+            "{}c/{}b/{}KiB N{}M{}",
+            self.cores, self.banks, self.l1_kib, self.ita_n, self.ita_m
+        )
+    }
+}
+
+/// A cross-product design space (see the module docs).
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    pub name: &'static str,
+    pub cores: Vec<usize>,
+    pub banks: Vec<usize>,
+    pub l1_kib: Vec<usize>,
+    pub ita_n: Vec<usize>,
+    pub ita_m: Vec<usize>,
+    /// Indices into [`OPERATING_POINTS`].
+    pub ops: Vec<usize>,
+    pub layers: Vec<usize>,
+    pub fuse: Vec<bool>,
+    pub fleets: Vec<usize>,
+    pub schedulers: Vec<&'static str>,
+    pub serve: ServeSpec,
+}
+
+impl DesignSpace {
+    /// Number of candidates in the cross product.
+    pub fn len(&self) -> usize {
+        self.cores.len()
+            * self.banks.len()
+            * self.l1_kib.len()
+            * self.ita_n.len()
+            * self.ita_m.len()
+            * self.ops.len()
+            * self.layers.len()
+            * self.fuse.len()
+            * self.fleets.len()
+            * self.schedulers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deterministic mixed-radix decode of candidate `i` (0-based,
+    /// `i < len()`): the scheduler axis varies fastest, cores slowest.
+    pub fn nth(&self, index: usize) -> Candidate {
+        let mut i = index;
+        let mut pick = |len: usize| {
+            let k = i % len;
+            i /= len;
+            k
+        };
+        let scheduler = self.schedulers[pick(self.schedulers.len())];
+        let fleet = self.fleets[pick(self.fleets.len())];
+        let fuse = self.fuse[pick(self.fuse.len())];
+        let layers = self.layers[pick(self.layers.len())];
+        let op = self.ops[pick(self.ops.len())];
+        let ita_m = self.ita_m[pick(self.ita_m.len())];
+        let ita_n = self.ita_n[pick(self.ita_n.len())];
+        let l1_kib = self.l1_kib[pick(self.l1_kib.len())];
+        let banks = self.banks[pick(self.banks.len())];
+        let cores = self.cores[pick(self.cores.len())];
+        Candidate {
+            index,
+            cores,
+            banks,
+            l1_kib,
+            ita_n,
+            ita_m,
+            op,
+            layers,
+            fuse,
+            fleet,
+            scheduler,
+        }
+    }
+
+    /// Lowest-index candidate with the paper's silicon, if the space
+    /// contains one — the explorer's calibration anchor.
+    pub fn paper_index(&self) -> Option<usize> {
+        (0..self.len()).find(|&i| self.nth(i).is_paper_geometry())
+    }
+
+    /// Every candidate with the paper's silicon (one per serving
+    /// overlay — fleet × scheduler). The search promotes all of them to
+    /// full evaluation so the published point is measurable on every
+    /// frontier under its best serving configuration, not just the
+    /// enumeration-first one.
+    pub fn paper_indices(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.nth(i).is_paper_geometry()).collect()
+    }
+
+    /// Structural validation: every axis non-empty and in range, the
+    /// banking divides the capacity, schedulers resolve, and the serve
+    /// spec is a valid workload shape.
+    pub fn validate(&self) -> Result<(), DeployError> {
+        let err = |m: String| Err(DeployError::Builder(m));
+        if self.is_empty() {
+            return err(format!("design space {}: an axis is empty", self.name));
+        }
+        for &op in &self.ops {
+            if op >= OPERATING_POINTS.len() {
+                return err(format!(
+                    "design space {}: operating point {op} out of range (table has {})",
+                    self.name,
+                    OPERATING_POINTS.len()
+                ));
+            }
+        }
+        for &b in &self.banks {
+            if b == 0 {
+                return err(format!("design space {}: 0 TCDM banks", self.name));
+            }
+            for &kib in &self.l1_kib {
+                if (kib * 1024) % b != 0 {
+                    return err(format!(
+                        "design space {}: {kib} KiB L1 does not divide into {b} banks",
+                        self.name
+                    ));
+                }
+            }
+        }
+        if self.cores.contains(&0) || self.layers.contains(&0) || self.fleets.contains(&0) {
+            return err(format!(
+                "design space {}: cores, layers and fleets must be >= 1",
+                self.name
+            ));
+        }
+        if self.ita_n.contains(&0) || self.ita_m.contains(&0) {
+            return err(format!("design space {}: ITA N/M must be >= 1", self.name));
+        }
+        for s in &self.schedulers {
+            if scheduler_by_name(s).is_none() {
+                return err(format!("design space {}: unknown scheduler {s}", self.name));
+            }
+        }
+        if self.serve.models.is_empty() {
+            return err(format!("design space {}: serve spec has no models", self.name));
+        }
+        if self.serve.requests == 0 {
+            return err(format!("design space {}: serve spec offers 0 requests", self.name));
+        }
+        if !self.serve.rate_rps.is_finite() || self.serve.rate_rps <= 0.0 {
+            return err(format!(
+                "design space {}: arrival rate must be positive",
+                self.name
+            ));
+        }
+        if let Some(b) = self.serve.burst_factor {
+            if !b.is_finite() || b < 1.0 {
+                return err(format!(
+                    "design space {}: burst factor must be >= 1",
+                    self.name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Named presets for the CLI (`--space`).
+    pub fn preset(name: &str) -> Option<DesignSpace> {
+        match name {
+            "default" => Some(Self::default_space()),
+            "tiny" => Some(Self::tiny()),
+            "mix" => Some(Self::mix()),
+            "full" => Some(Self::full()),
+            _ => None,
+        }
+    }
+
+    /// The default exploration space: banks × ITA N × three operating
+    /// points × fleet × scheduler around the paper's silicon (108
+    /// candidates), judged on an overloaded single-class MobileBERT
+    /// stream so scheduling quality shows. Contains the paper point.
+    pub fn default_space() -> DesignSpace {
+        DesignSpace {
+            name: "default",
+            cores: vec![8],
+            banks: vec![16, 32, 64],
+            l1_kib: vec![128],
+            ita_n: vec![8, 16, 32],
+            ita_m: vec![64],
+            ops: vec![0, operating_point::NOMINAL_INDEX, 4],
+            layers: vec![1],
+            fuse: vec![true],
+            fleets: vec![1, 2],
+            schedulers: vec!["fifo", "batch"],
+            serve: ServeSpec {
+                models: vec![&MOBILEBERT],
+                requests: 64,
+                rate_rps: 2000.0,
+                burst_factor: None,
+            },
+        }
+    }
+
+    /// Smoke-test space: four candidates (ITA N ∈ {8,16} at two
+    /// operating points), a 16-request stream — `make explore-smoke`.
+    pub fn tiny() -> DesignSpace {
+        DesignSpace {
+            name: "tiny",
+            cores: vec![8],
+            banks: vec![32],
+            l1_kib: vec![128],
+            ita_n: vec![8, 16],
+            ita_m: vec![64],
+            ops: vec![0, operating_point::NOMINAL_INDEX],
+            layers: vec![1],
+            fuse: vec![true],
+            fleets: vec![1],
+            schedulers: vec!["fifo"],
+            serve: ServeSpec {
+                models: vec![&MOBILEBERT],
+                requests: 16,
+                rate_rps: 2000.0,
+                burst_factor: None,
+            },
+        }
+    }
+
+    /// Multi-model serving mix: all three evaluation networks as
+    /// request classes on a bursty stream, with all three schedulers in
+    /// the space — where dynamic batching earns its frontier seats.
+    pub fn mix() -> DesignSpace {
+        DesignSpace {
+            name: "mix",
+            cores: vec![8],
+            banks: vec![32],
+            l1_kib: vec![128],
+            ita_n: vec![8, 16, 32],
+            ita_m: vec![64],
+            ops: vec![0, operating_point::NOMINAL_INDEX, 4],
+            layers: vec![1],
+            fuse: vec![true],
+            fleets: vec![1, 4],
+            schedulers: vec!["fifo", "rr", "batch"],
+            serve: ServeSpec {
+                models: vec![&MOBILEBERT, &DINOV2S, &WHISPER_TINY_ENC],
+                requests: 96,
+                rate_rps: 2000.0,
+                burst_factor: Some(4.0),
+            },
+        }
+    }
+
+    /// The wide space for budgeted search (9720 candidates): every
+    /// template axis open, all five operating points — pair it with
+    /// `--strategy halving --budget N`.
+    pub fn full() -> DesignSpace {
+        DesignSpace {
+            name: "full",
+            cores: vec![4, 8, 12],
+            banks: vec![16, 32, 64],
+            l1_kib: vec![64, 128, 256],
+            ita_n: vec![8, 16, 32],
+            ita_m: vec![64],
+            ops: vec![0, 1, 2, 3, 4],
+            layers: vec![1],
+            fuse: vec![true, false],
+            fleets: vec![1, 2, 4, 8],
+            schedulers: vec!["fifo", "rr", "batch"],
+            serve: ServeSpec {
+                models: vec![&MOBILEBERT],
+                requests: 64,
+                rate_rps: 2000.0,
+                burst_factor: Some(4.0),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumeration_is_a_bijection() {
+        let s = DesignSpace::default_space();
+        assert_eq!(s.len(), 108);
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..s.len() {
+            let c = s.nth(i);
+            assert_eq!(c.index, i);
+            // the full tuple is unique across the enumeration
+            let key = (
+                c.cores, c.banks, c.l1_kib, c.ita_n, c.ita_m, c.op, c.layers, c.fuse,
+                c.fleet, c.scheduler,
+            );
+            assert!(seen.insert(key), "candidate {i} repeats {key:?}");
+        }
+    }
+
+    #[test]
+    fn every_preset_validates_and_names_resolve() {
+        for name in ["default", "tiny", "mix", "full"] {
+            let s = DesignSpace::preset(name).unwrap();
+            assert_eq!(s.name, name);
+            s.validate().unwrap();
+            assert!(!s.is_empty());
+        }
+        assert!(DesignSpace::preset("galactic").is_none());
+    }
+
+    #[test]
+    fn paper_candidate_reproduces_the_default_cluster() {
+        let s = DesignSpace::default_space();
+        let i = s.paper_index().expect("default space contains the paper silicon");
+        let c = s.nth(i);
+        assert!(c.is_paper_geometry());
+        let cluster = c.cluster();
+        let reference = ClusterConfig::default();
+        // field-for-field: the paper candidate must share the repo-wide
+        // default geometry (and therefore its pipeline cache entries)
+        assert_eq!(cluster.n_cores, reference.n_cores);
+        assert_eq!(cluster.tcdm_banks, reference.tcdm_banks);
+        assert_eq!(cluster.tcdm_bank_bytes, reference.tcdm_bank_bytes);
+        assert_eq!(cluster.hwpe_ports, reference.hwpe_ports);
+        assert_eq!(cluster.freq_hz, reference.freq_hz);
+        assert_eq!(cluster.ita, reference.ita);
+        assert_eq!(cluster.l1_bytes(), 128 * 1024);
+    }
+
+    #[test]
+    fn tiny_space_has_two_operating_points() {
+        let s = DesignSpace::tiny();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.ops.len(), 2);
+        assert!(s.paper_index().is_some());
+    }
+
+    #[test]
+    fn validation_rejects_broken_spaces() {
+        let mut s = DesignSpace::tiny();
+        s.banks = vec![48]; // 128 KiB does not divide into 48 banks
+        assert!(s.validate().is_err());
+
+        let mut s = DesignSpace::tiny();
+        s.ops = vec![99];
+        assert!(s.validate().is_err());
+
+        let mut s = DesignSpace::tiny();
+        s.schedulers = vec!["lifo"];
+        assert!(s.validate().is_err());
+
+        let mut s = DesignSpace::tiny();
+        s.fleets = vec![];
+        assert!(s.validate().is_err());
+
+        let mut s = DesignSpace::tiny();
+        s.serve.rate_rps = 0.0;
+        assert!(s.validate().is_err());
+    }
+}

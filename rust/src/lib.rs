@@ -14,10 +14,13 @@
 //!   by default, PJRT/XLA behind `--features pjrt`), the builder-style
 //!   [`Pipeline`] compile surface over the deploy→simulate→verify seam
 //!   (typed `DeployError`s, explicit cluster geometry,
-//!   compiled-deployment caching), and the multi-request [`serve`]
+//!   compiled-deployment caching), the multi-request [`serve`]
 //!   subsystem (workloads, schedulers, sharded cluster fleets) that
-//!   makes single-inference `simulate()` the degenerate serving case —
-//!   driven by the `coordinator` and CLI.
+//!   makes single-inference `simulate()` the degenerate serving case,
+//!   and the [`explore`] subsystem — deterministic design-space
+//!   exploration over the template (geometry × FD-SOI operating point ×
+//!   deployment × serving axes) with Pareto frontiers for GOp/J, GOp/s,
+//!   p99 latency and mm² — driven by the `coordinator` and CLI.
 //!
 //! See DESIGN.md for the full system inventory and experiment index,
 //! and README.md for build/run instructions.
@@ -28,6 +31,7 @@
 pub mod coordinator;
 pub mod deeploy;
 pub mod energy;
+pub mod explore;
 pub mod ita;
 pub mod models;
 pub mod pipeline;

@@ -4,6 +4,7 @@
 //!   table1              reproduce the paper's Table I (all networks)
 //!   simulate            one network/target: latency, energy, utilization
 //!   serve               multi-request serving on a cluster fleet
+//!   explore             design-space exploration: Pareto frontier over the template
 //!   micro               microbenchmarks (Section V-A): GEMM + attention
 //!   verify              golden-check the runtime backend vs the rust ITA model
 //!   deploy              show the deployment artifacts (tiling, memory)
@@ -16,22 +17,29 @@
 //!   attn-tinyml serve --requests 64 --arrival-rate 200 --clusters 4 --scheduler batch
 //!   attn-tinyml serve --requests 1000000 --arrival-rate 50000 --clusters 8 --scheduler batch --burst 8
 //!   attn-tinyml serve --help
+//!   attn-tinyml explore --space default --strategy halving --budget 16 --seed 7
+//!   attn-tinyml explore --space full --strategy halving --budget 24 --objectives gopj,mm2
 //!   attn-tinyml verify --artifacts artifacts
 //!   attn-tinyml deploy --model dinov2s
 
 use attn_tinyml::coordinator;
 use attn_tinyml::deeploy::Target;
+use attn_tinyml::explore::{
+    explore, explore_json, DesignSpace, ExploreConfig, Objective, Strategy,
+};
 use attn_tinyml::models;
 use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::runtime::{Runtime, RuntimeError, TensorIn};
-use attn_tinyml::serve::{scheduler_by_name, RequestClass, Workload};
+use attn_tinyml::serve::{
+    scheduler_by_name, RequestClass, Workload, DEFAULT_BURST_PERIOD_S,
+};
 use attn_tinyml::sim::{ClusterConfig, Cmd, Engine, Step};
 use attn_tinyml::util::cli::Args;
 
 type Result<T> = std::result::Result<T, RuntimeError>;
 
-const SUBCOMMANDS: [&str; 7] =
-    ["table1", "simulate", "serve", "micro", "verify", "deploy", "export"];
+const SUBCOMMANDS: [&str; 8] =
+    ["table1", "simulate", "serve", "explore", "micro", "verify", "deploy", "export"];
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -40,6 +48,7 @@ fn main() -> Result<()> {
         Some("table1") => cmd_table1(),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("explore") => cmd_explore(&args),
         Some("micro") => cmd_micro(),
         Some("verify") => cmd_verify(&args),
         Some("deploy") => cmd_deploy(&args),
@@ -49,6 +58,19 @@ fn main() -> Result<()> {
             eprintln!("       see README.md for details");
             Ok(())
         }
+    }
+}
+
+/// Strict `--seed` parsing: a malformed seed is a usage error, never a
+/// silent fall-back to the default draw.
+fn seed_flag(args: &Args, default: u64) -> Result<u64> {
+    match args.flag("seed") {
+        Some(raw) => raw.parse::<u64>().map_err(|_| {
+            RuntimeError::Usage(format!(
+                "--seed expects an unsigned integer, got {raw:?}"
+            ))
+        }),
+        None => Ok(default),
     }
 }
 
@@ -179,7 +201,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let clusters = args.flag_usize("clusters", 1);
     let rate = args.flag_f64("arrival-rate", 200.0);
     let layers = args.flag_usize("layers", 1);
-    let seed = args.flag_usize("seed", 48879) as u64;
+    let seed = seed_flag(args, 48879)?;
     let sched_name = args.flag_or("scheduler", "fifo");
     let mut sched = scheduler_by_name(&sched_name).ok_or_else(|| {
         RuntimeError::Usage(format!(
@@ -203,7 +225,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let factor: f64 = raw.parse().map_err(|_| {
                 RuntimeError::Usage(format!("--burst expects a number, got {raw:?}"))
             })?;
-            Workload::bursty(classes, rate, factor, 0.02, requests, seed)
+            Workload::bursty(classes, rate, factor, DEFAULT_BURST_PERIOD_S, requests, seed)
         }
         None => Workload::poisson(classes, rate, requests, seed),
     };
@@ -214,6 +236,84 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .serve_with(&workload, sched.as_mut())?;
     let host_s = t0.elapsed().as_secs_f64();
     print!("{}", coordinator::render_serve_with_host(&report, host_s));
+    Ok(())
+}
+
+/// Design-space exploration over the architectural template.
+const EXPLORE_HELP: &str = "\
+usage: attn-tinyml explore [--flags]
+
+deterministic design-space exploration: sweep the template (geometry,
+FD-SOI operating point, deployment and serving knobs), evaluate every
+candidate through the cached pipeline + serving layers, and report the
+Pareto frontier. A fixed --seed reproduces the run (and the JSON it
+writes) bit-for-bit.
+
+  --space S           default | tiny | mix | full (default: default)
+  --strategy S        grid | random | halving (default: halving)
+  --budget N          candidates promoted to full serving evaluation
+                      (default 16; halving screens up to 4x this)
+  --objectives CSV    any of gopj,gops,p99,mm2 (default: all four)
+  --seed N            sampling + workload seed (default 48879)
+  --requests N        override the space's per-evaluation request count
+  --arrival-rate RPS  override the space's arrival rate
+  --threads N         evaluation fan-out (default: host parallelism)
+  --out PATH          JSON record (default BENCH_explore.json)
+
+the frontier table flags the paper's published silicon (8+1 cores,
+32-bank 128 KiB, N=16/M=64 ITA at 0.65 V / 425 MHz) when it is
+non-dominated, and the paper-anchor line reports its screening metrics
+against the published 154 GOp/s / 2960 GOp/J / 0.991 mm2
+";
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{EXPLORE_HELP}");
+        return Ok(());
+    }
+    let space_name = args.flag_or("space", "default");
+    let mut space = DesignSpace::preset(&space_name).ok_or_else(|| {
+        RuntimeError::Usage(format!(
+            "unknown space {space_name}; available: default, tiny, mix, full"
+        ))
+    })?;
+    if args.has("requests") {
+        space.serve.requests = args.flag_usize("requests", space.serve.requests);
+    }
+    if args.has("arrival-rate") {
+        space.serve.rate_rps = args.flag_f64("arrival-rate", space.serve.rate_rps);
+    }
+    let strategy_name = args.flag_or("strategy", "halving");
+    let strategy = Strategy::by_name(&strategy_name).ok_or_else(|| {
+        RuntimeError::Usage(format!(
+            "unknown strategy {strategy_name}; available: grid, random, halving"
+        ))
+    })?;
+    let objectives = match args.flag("objectives") {
+        Some(csv) => Objective::parse_list(csv).map_err(RuntimeError::Usage)?,
+        None => Objective::ALL.to_vec(),
+    };
+    let cfg = ExploreConfig {
+        strategy,
+        budget: args.flag_usize("budget", 16),
+        seed: seed_flag(args, 48879)?,
+        objectives,
+        threads: args.flag_usize("threads", 0),
+    };
+    let result = explore(&space, &cfg)
+        .map_err(|e| RuntimeError::Usage(format!("explore failed: {e}")))?;
+    if result.frontier.is_empty() {
+        return Err(RuntimeError::Usage(
+            "explore produced an empty frontier: every candidate was infeasible \
+             for the workload (try a larger geometry axis or fewer layers)"
+                .to_string(),
+        ));
+    }
+    print!("{}", coordinator::render_explore(&result));
+    let out = args.flag_or("out", "BENCH_explore.json");
+    let doc = explore_json(&space, &result);
+    std::fs::write(&out, doc.to_string_pretty())?;
+    println!("\nwrote {out}");
     Ok(())
 }
 

@@ -62,4 +62,6 @@ pub use scheduler::{
     by_name as scheduler_by_name, DynamicBatch, Fifo, Queued, RoundRobin, Scheduler,
     Selection,
 };
-pub use workload::{Arrivals, ArrivalStream, Request, RequestClass, Workload};
+pub use workload::{
+    Arrivals, ArrivalStream, Request, RequestClass, Workload, DEFAULT_BURST_PERIOD_S,
+};

@@ -23,6 +23,11 @@ use crate::deeploy::DeployError;
 use crate::models::ModelConfig;
 use crate::util::prng::XorShift64;
 
+/// Default square-wave period of bursty workloads, seconds — the one
+/// value shared by the `serve` CLI and the explorer's serving rung, so
+/// both judge the same traffic shape.
+pub const DEFAULT_BURST_PERIOD_S: f64 = 0.02;
+
 /// One request kind: a network to infer, pre-compiled once per fleet.
 /// Classes are bucketed by their padded sequence length ([`bucket`]),
 /// the quantity the dynamic-batch scheduler groups on.
@@ -431,7 +436,7 @@ mod tests {
     use super::*;
     use crate::models::{DINOV2S, MOBILEBERT};
 
-    const FREQ: f64 = 425.0e6;
+    const FREQ: f64 = crate::energy::operating_point::NOMINAL_FREQ_HZ;
 
     fn classes() -> Vec<RequestClass> {
         vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&DINOV2S, 1)]

@@ -1,5 +1,6 @@
 //! The architecture template parameters (paper Fig. 1 / Section III-IV).
 
+use crate::energy::operating_point::NOMINAL_FREQ_HZ;
 use crate::ita::ItaConfig;
 
 /// Full cluster configuration. Defaults are the paper's instantiation.
@@ -23,7 +24,9 @@ pub struct ClusterConfig {
     pub narrow_axi_bytes: usize,
     /// Shared instruction cache size in bytes (8 KiB).
     pub icache_bytes: usize,
-    /// Clock frequency in Hz (energy-efficient corner: 425 MHz @ 0.65 V).
+    /// Clock frequency in Hz. The default is the paper's
+    /// energy-efficient corner (425 MHz @ 0.65 V), sourced from the
+    /// operating-point table so simulate/serve/explore share one value.
     pub freq_hz: f64,
     /// ITA geometry.
     pub ita: ItaConfig,
@@ -41,7 +44,7 @@ impl Default for ClusterConfig {
             wide_axi_bytes: 64,
             narrow_axi_bytes: 8,
             icache_bytes: 8192,
-            freq_hz: 425.0e6,
+            freq_hz: NOMINAL_FREQ_HZ,
             ita: ItaConfig::default(),
         }
     }

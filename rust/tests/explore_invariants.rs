@@ -1,0 +1,232 @@
+//! Pareto / exploration invariants (propchecked through `util`'s
+//! property harness):
+//!
+//! - the frontier never contains a dominated point, and everything it
+//!   rejected is dominated by some frontier point,
+//! - the frontier is insertion-order independent (a set, not a
+//!   history),
+//! - a fixed seed reproduces an exploration bit-for-bit (including the
+//!   serialized JSON record and under thread fan-out),
+//! - the paper's default-geometry point appears on the default-space
+//!   frontier.
+
+use attn_tinyml::energy::operating_point::NOMINAL_INDEX;
+use attn_tinyml::explore::{
+    explore, explore_json, Candidate, DesignSpace, Evaluation, ExploreConfig, Fidelity,
+    Objective, Pareto, Strategy,
+};
+use attn_tinyml::util::prng::XorShift64;
+use attn_tinyml::util::propcheck::{check, Config};
+
+/// Synthetic evaluation: small integer-valued metrics so random cases
+/// produce genuine ties and dominations.
+fn eval(index: usize, gopj: f64, gops: f64, p99: f64, mm2: f64) -> Evaluation {
+    Evaluation {
+        candidate: Candidate {
+            index,
+            cores: 8,
+            banks: 32,
+            l1_kib: 128,
+            ita_n: 16,
+            ita_m: 64,
+            op: NOMINAL_INDEX,
+            layers: 1,
+            fuse: true,
+            fleet: 1,
+            scheduler: "fifo",
+        },
+        fidelity: Fidelity::Screen,
+        gops,
+        gopj,
+        p99_ms: p99,
+        mm2,
+        req_per_s: 0.0,
+        mj_per_req: 0.0,
+    }
+}
+
+fn random_evals(rng: &mut XorShift64) -> Vec<Evaluation> {
+    let n = 1 + rng.next_below(24) as usize;
+    (0..n)
+        .map(|i| {
+            eval(
+                i,
+                rng.next_below(6) as f64,
+                rng.next_below(6) as f64,
+                rng.next_below(6) as f64,
+                rng.next_below(6) as f64,
+            )
+        })
+        .collect()
+}
+
+fn shrink_evals(evals: &[Evaluation]) -> Vec<Vec<Evaluation>> {
+    let mut out = Vec::new();
+    if evals.len() > 1 {
+        out.push(evals[..evals.len() / 2].to_vec());
+        out.push(evals[1..].to_vec());
+    }
+    out
+}
+
+#[test]
+fn frontier_never_contains_a_dominated_point() {
+    check(
+        Config { cases: 200, seed: 0xFA57 },
+        random_evals,
+        |evals| shrink_evals(evals),
+        |evals| {
+            let mut p = Pareto::new(Objective::ALL.to_vec());
+            for e in evals {
+                p.insert(e.clone());
+            }
+            if p.is_empty() {
+                return Err("frontier empty after finite insertions".into());
+            }
+            let keys: Vec<Vec<f64>> = p.points().iter().map(|e| p.score(e)).collect();
+            for (i, a) in keys.iter().enumerate() {
+                for (j, b) in keys.iter().enumerate() {
+                    if i != j && attn_tinyml::explore::pareto::dominates(a, b) {
+                        return Err(format!(
+                            "frontier point {j} is dominated by {i}: {b:?} < {a:?}"
+                        ));
+                    }
+                }
+            }
+            // completeness: every offered point is on the frontier or
+            // dominated by (or tied with) something on it
+            for e in evals {
+                let k = p.score(e);
+                let covered = keys
+                    .iter()
+                    .any(|f| f == &k || attn_tinyml::explore::pareto::dominates(f, &k));
+                if !covered {
+                    return Err(format!("point {k:?} neither kept nor dominated"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn frontier_is_insertion_order_independent() {
+    check(
+        Config { cases: 150, seed: 0x0DDE },
+        |rng| {
+            let evals = random_evals(rng);
+            (evals, rng.next_u64())
+        },
+        |(evals, seed)| shrink_evals(evals).into_iter().map(|e| (e, *seed)).collect(),
+        |(evals, seed)| {
+            let frontier_ids = |order: &[Evaluation]| -> Vec<usize> {
+                let mut p = Pareto::new(Objective::ALL.to_vec());
+                for e in order {
+                    p.insert(e.clone());
+                }
+                let mut ids: Vec<usize> =
+                    p.points().iter().map(|e| e.candidate.index).collect();
+                ids.sort_unstable();
+                ids
+            };
+            let forward = frontier_ids(evals);
+            // seeded Fisher-Yates shuffle
+            let mut shuffled = evals.clone();
+            let mut rng = XorShift64::new(*seed);
+            for i in (1..shuffled.len()).rev() {
+                let j = rng.next_below((i + 1) as u64) as usize;
+                shuffled.swap(i, j);
+            }
+            let permuted = frontier_ids(&shuffled);
+            if forward != permuted {
+                return Err(format!(
+                    "insertion order changed the frontier: {forward:?} vs {permuted:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fixed_seed_reproduces_an_exploration_bit_for_bit() {
+    let space = DesignSpace::tiny();
+    for strategy in [Strategy::Grid, Strategy::Random, Strategy::Halving] {
+        let cfg = ExploreConfig {
+            strategy,
+            budget: 3,
+            seed: 0xD5,
+            objectives: Objective::ALL.to_vec(),
+            threads: 0, // thread fan-out must not perturb the result
+        };
+        let a = explore(&space, &cfg).unwrap();
+        let b = explore(&space, &cfg).unwrap();
+        let ja = explore_json(&space, &a).to_string_pretty();
+        let jb = explore_json(&space, &b).to_string_pretty();
+        assert_eq!(ja, jb, "{} run is not reproducible", strategy.name());
+        // and single-threaded evaluation agrees with the fan-out
+        let serial = ExploreConfig { threads: 1, ..cfg };
+        let c = explore(&space, &serial).unwrap();
+        let jc = explore_json(&space, &c).to_string_pretty();
+        assert_eq!(ja, jc, "{} threading changed the result", strategy.name());
+    }
+}
+
+#[test]
+fn default_geometry_point_is_on_the_default_space_frontier() {
+    let space = DesignSpace::default_space();
+    let cfg = ExploreConfig {
+        strategy: Strategy::Grid,
+        budget: space.len(), // exhaustive: every candidate fully served
+        seed: 48879,
+        objectives: Objective::ALL.to_vec(),
+        threads: 0,
+    };
+    let r = explore(&space, &cfg).unwrap();
+    assert!(!r.truncated);
+    assert_eq!(r.evaluated + r.infeasible, space.len());
+    assert!(!r.frontier.is_empty());
+    assert!(
+        r.frontier.iter().any(|e| e.candidate.is_paper_geometry()),
+        "the paper's 8-core / 32-bank / N=16 / 0.65 V point must be non-dominated \
+         in the default space"
+    );
+    // frontier points are a subset of the evaluations, and none is
+    // dominated (cross-check against the Pareto type's own invariant)
+    let mut p = Pareto::new(Objective::ALL.to_vec());
+    for e in &r.evaluations {
+        p.insert(e.clone());
+    }
+    assert_eq!(p.len(), r.frontier.len());
+}
+
+#[test]
+fn halving_respects_the_budget_and_screens_first() {
+    let space = DesignSpace::default_space();
+    let cfg = ExploreConfig {
+        strategy: Strategy::Halving,
+        budget: 6,
+        seed: 7,
+        objectives: Objective::ALL.to_vec(),
+        threads: 0,
+    };
+    let r = explore(&space, &cfg).unwrap();
+    // every paper-silicon serving overlay is an always-promoted anchor
+    let anchors = space.paper_indices().len();
+    assert!(
+        r.evaluated <= 6 + anchors,
+        "halving served {} > budget + {anchors} anchors",
+        r.evaluated
+    );
+    assert!(r.screened >= r.evaluated, "halving must screen before serving");
+    assert!(!r.frontier.is_empty());
+    assert!(
+        r.frontier.iter().any(|e| e.candidate.is_paper_geometry()),
+        "the calibration anchor must reach the halving frontier"
+    );
+    assert!(r.paper_screen.is_some());
+    for e in &r.frontier {
+        assert_eq!(e.fidelity, Fidelity::Serve);
+        assert!(e.is_finite());
+    }
+}
