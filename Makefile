@@ -11,6 +11,12 @@
 #                    reports must stay bit-identical)
 #   make perf-bench  the full perf bench (100k comparison at >= 10x,
 #                    1M-request sweep); regenerates BENCH_perf.json
+#   make control-smoke  control-plane bench in assert mode on reduced
+#                    request counts (CI guard: static-nominal stays a
+#                    bit-identical no-op, slo-dvfs holds the p99 SLO and
+#                    strictly lowers J/request on the diurnal leg)
+#   make control-bench  the full control-plane bench (15k requests per
+#                    leg); regenerates BENCH_control.json
 #   make explore-smoke  design-space exploration smoke run: tiny grid,
 #                    2 operating points — the CLI errors out on an
 #                    empty frontier, so a green run asserts one exists
@@ -27,7 +33,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench serve-smoke perf-smoke perf-bench explore-smoke explore-bench artifacts check lint fmt clean
+.PHONY: build test bench serve-smoke perf-smoke perf-bench control-smoke control-bench explore-smoke explore-bench artifacts check lint fmt clean
 
 build:
 	$(CARGO) build --release
@@ -47,6 +53,12 @@ perf-smoke:
 
 perf-bench:
 	$(CARGO) bench --bench perf_serve
+
+control-smoke:
+	CONTROL_PLANE_SMOKE=1 $(CARGO) bench --bench control_plane
+
+control-bench:
+	$(CARGO) bench --bench control_plane
 
 explore-smoke: build
 	$(CARGO) run --release -- explore --space tiny --strategy grid --budget 8 --seed 7

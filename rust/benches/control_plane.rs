@@ -1,0 +1,285 @@
+//! The online control plane earns its keep: `SloDvfs` versus the
+//! `StaticNominal` baseline on the workloads it was designed for.
+//!
+//! Two legs, both on a 4-cluster fleet serving single-layer MobileBERT:
+//!
+//! 1. **diurnal** — a sinusoid-modulated Poisson stream whose trough
+//!    runs far below fleet capacity. The controller must hold the p99
+//!    SLO while riding the FD-SOI voltage/frequency ladder down (and
+//!    parking shards) through the lulls.
+//! 2. **bursty** — the adversarial arrival process: short dense bursts
+//!    over a quiet background. Hysteresis has much less room here; the
+//!    leg asserts the controller still never *loses* energy.
+//!
+//! Asserts, in both full and smoke mode:
+//!
+//! - `StaticNominal` is a **bit-identical no-op** against the
+//!   uncontrolled loop on the diurnal workload (the refactor contract),
+//! - `SloDvfs` **holds the p99 SLO** on the diurnal leg
+//!   (`slo_met == Some(true)` and report p99 <= SLO),
+//! - `SloDvfs` spends **strictly less energy per request** than the
+//!   static-nominal baseline on the diurnal leg, and no more on the
+//!   bursty leg,
+//! - a fixed seed reproduces every controlled run **bit-for-bit**.
+//!
+//! Full mode records the comparison into `BENCH_control.json`.
+//!
+//!     cargo bench --bench control_plane                   # full (15k req)
+//!     CONTROL_PLANE_SMOKE=1 cargo bench --bench control_plane   # CI smoke
+//!
+//! See DESIGN.md §9 for the step contract, the controller cadence, and
+//! the DVFS transition-cost model this bench exercises.
+
+use attn_tinyml::coordinator;
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::energy::operating_point::NOMINAL_INDEX;
+use attn_tinyml::models::MOBILEBERT;
+use attn_tinyml::serve::{
+    scheduler_by_name, Fleet, RequestClass, ServeReport, SloDvfs, StaticNominal, Workload,
+    DEFAULT_CONTROL_CADENCE_CYCLES,
+};
+use attn_tinyml::sim::ClusterConfig;
+use attn_tinyml::util::bench::section;
+use attn_tinyml::util::json::Json;
+
+const CLUSTERS: usize = 4;
+/// Mean arrival rate: ~10% of nominal 4-cluster capacity, so the
+/// diurnal trough leaves most of the fleet idle — the regime DVFS and
+/// shard parking are for.
+const RATE_RPS: f64 = 300.0;
+const DIURNAL_DEPTH: f64 = 0.65;
+const DIURNAL_PERIOD_S: f64 = 0.5;
+const BURST_FACTOR: f64 = 6.0;
+const BURST_PERIOD_S: f64 = 0.05;
+const SEED: u64 = 0xC7A1_5EED;
+/// SLO headroom over the measured static-nominal p99: generous enough
+/// that the ladder's slowest corner still clears it on a quiet window,
+/// tight enough that sleeping through a peak misses it.
+const SLO_HEADROOM: f64 = 20.0;
+
+fn classes() -> Vec<RequestClass> {
+    vec![RequestClass::new(&MOBILEBERT, 1)]
+}
+
+fn fleet() -> Fleet {
+    Fleet::new(ClusterConfig::default(), Target::MultiCoreIta, CLUSTERS)
+}
+
+fn serve_plain(w: &Workload) -> ServeReport {
+    let mut sched = scheduler_by_name("fifo").unwrap();
+    fleet().serve(w, sched.as_mut()).expect("uncontrolled serve")
+}
+
+fn serve_static(w: &Workload) -> ServeReport {
+    let mut sched = scheduler_by_name("fifo").unwrap();
+    let mut ctl = StaticNominal;
+    fleet()
+        .serve_controlled(w, sched.as_mut(), &mut ctl, DEFAULT_CONTROL_CADENCE_CYCLES, NOMINAL_INDEX)
+        .expect("static-nominal serve")
+}
+
+fn serve_dvfs(w: &Workload, slo_ms: f64) -> ServeReport {
+    let freq = ClusterConfig::default().freq_hz;
+    let mut sched = scheduler_by_name("fifo").unwrap();
+    let mut ctl = SloDvfs::from_ms(slo_ms, freq);
+    fleet()
+        .serve_controlled(w, sched.as_mut(), &mut ctl, DEFAULT_CONTROL_CADENCE_CYCLES, NOMINAL_INDEX)
+        .expect("slo-dvfs serve")
+}
+
+/// Core-field bit identity — the no-op contract and the determinism
+/// checks both refuse to pass on "close enough".
+fn assert_bit_identical(label: &str, a: &ServeReport, b: &ServeReport) {
+    assert_eq!(a.served, b.served, "{label}: served");
+    assert_eq!(a.makespan_cycles, b.makespan_cycles, "{label}: makespan");
+    assert_eq!(a.batches, b.batches, "{label}: batches");
+    assert_eq!(a.class_switches, b.class_switches, "{label}: switches");
+    assert_eq!(a.p50_cycles, b.p50_cycles, "{label}: p50");
+    assert_eq!(a.p99_cycles, b.p99_cycles, "{label}: p99");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{label}: energy");
+    assert_eq!(
+        a.mean_queue_depth.to_bits(),
+        b.mean_queue_depth.to_bits(),
+        "{label}: mean depth"
+    );
+}
+
+fn leg_json(name: &str, slo_ms: f64, stat: &ServeReport, dvfs: &ServeReport) -> Json {
+    let c = dvfs.control.as_ref().expect("controlled report carries a summary");
+    let saved_pct = if stat.energy_j > 0.0 {
+        (stat.energy_j - dvfs.energy_j) / stat.energy_j * 100.0
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("workload", Json::str(name)),
+        ("slo_p99_ms", Json::num(slo_ms)),
+        ("static_p99_ms", Json::num(stat.p99_ms())),
+        ("static_mj_per_req", Json::num(stat.mj_per_req)),
+        ("static_energy_j", Json::num(stat.energy_j)),
+        ("dvfs_p99_ms", Json::num(dvfs.p99_ms())),
+        ("dvfs_mj_per_req", Json::num(dvfs.mj_per_req)),
+        ("dvfs_energy_j", Json::num(dvfs.energy_j)),
+        ("energy_saved_pct", Json::num(saved_pct)),
+        ("slo_met", c.slo_met.map(Json::Bool).unwrap_or(Json::Null)),
+        ("dvfs_transitions", Json::num(c.dvfs_transitions as f64)),
+        ("parks", Json::num(c.parks as f64)),
+        ("wakes", Json::num(c.wakes as f64)),
+        ("windows", Json::num(c.windows.len() as f64)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::var("CONTROL_PLANE_SMOKE").is_ok();
+    let requests = if smoke { 2_000 } else { 15_000 };
+
+    // warm the compiled-deployment cache so nothing below pays the
+    // one-off deployment flow
+    let warm = Workload::poisson(classes(), RATE_RPS, 8, SEED);
+    serve_plain(&warm);
+
+    // --- leg 1: diurnal ---------------------------------------------------
+    section(&format!(
+        "control plane: diurnal {RATE_RPS} req/s (depth {DIURNAL_DEPTH}), {requests} requests on {CLUSTERS} clusters{}",
+        if smoke { " (smoke)" } else { "" }
+    ));
+    let diurnal = Workload::diurnal(
+        classes(),
+        RATE_RPS,
+        DIURNAL_DEPTH,
+        DIURNAL_PERIOD_S,
+        requests,
+        SEED,
+    );
+
+    let plain = serve_plain(&diurnal);
+    let stat = serve_static(&diurnal);
+    assert_bit_identical("static-nominal vs uncontrolled", &stat, &plain);
+    let s = stat.control.as_ref().expect("static summary");
+    assert_eq!(s.dvfs_transitions + s.parks + s.wakes, 0, "static-nominal actuated");
+
+    let slo_ms = SLO_HEADROOM * stat.p99_ms();
+    let dvfs = serve_dvfs(&diurnal, slo_ms);
+    let c = dvfs.control.as_ref().expect("dvfs summary");
+    assert_eq!(dvfs.served, plain.served, "slo-dvfs must serve everything");
+    assert_eq!(c.slo_met, Some(true), "slo-dvfs missed its own SLO");
+    assert!(
+        dvfs.p99_ms() <= slo_ms,
+        "p99 {:.3} ms exceeds the {slo_ms:.3} ms SLO",
+        dvfs.p99_ms()
+    );
+    assert!(
+        c.dvfs_transitions >= 1,
+        "the diurnal lull must trigger at least one DVFS transition"
+    );
+    assert!(
+        dvfs.energy_j < stat.energy_j,
+        "slo-dvfs must spend strictly less energy than static-nominal: {} vs {}",
+        dvfs.energy_j,
+        stat.energy_j
+    );
+    assert!(
+        dvfs.mj_per_req < stat.mj_per_req,
+        "slo-dvfs must lower J/request: {} vs {} mJ",
+        dvfs.mj_per_req,
+        stat.mj_per_req
+    );
+    // same seed, bit-identical rerun — the controller is inside the
+    // determinism contract, not outside it
+    assert_bit_identical("diurnal slo-dvfs rerun", &serve_dvfs(&diurnal, slo_ms), &dvfs);
+
+    let diurnal_saved = (stat.energy_j - dvfs.energy_j) / stat.energy_j * 100.0;
+    println!(
+        "{:>16} {:>12} {:>12} {:>12} {:>8}",
+        "run", "p99 ms", "mJ/req", "energy J", "saved"
+    );
+    println!(
+        "{:>16} {:>12.3} {:>12.3} {:>12.4} {:>8}",
+        "static-nominal",
+        stat.p99_ms(),
+        stat.mj_per_req,
+        stat.energy_j,
+        "-"
+    );
+    println!(
+        "{:>16} {:>12.3} {:>12.3} {:>12.4} {:>7.1}%",
+        "slo-dvfs",
+        dvfs.p99_ms(),
+        dvfs.mj_per_req,
+        dvfs.energy_j,
+        diurnal_saved
+    );
+
+    section("sample report (diurnal, slo-dvfs)");
+    print!("{}", coordinator::render_serve(&dvfs));
+    let diurnal_leg = leg_json("diurnal", slo_ms, &stat, &dvfs);
+
+    // --- leg 2: bursty ----------------------------------------------------
+    section(&format!(
+        "control plane: bursty {RATE_RPS} req/s (factor {BURST_FACTOR}), {requests} requests on {CLUSTERS} clusters"
+    ));
+    let bursty = Workload::bursty(
+        classes(),
+        RATE_RPS,
+        BURST_FACTOR,
+        BURST_PERIOD_S,
+        requests,
+        SEED,
+    );
+    let bstat = serve_static(&bursty);
+    assert_bit_identical("bursty static-nominal vs uncontrolled", &bstat, &serve_plain(&bursty));
+    let bslo_ms = SLO_HEADROOM * bstat.p99_ms();
+    let bdvfs = serve_dvfs(&bursty, bslo_ms);
+    assert_eq!(bdvfs.served, bstat.served, "bursty slo-dvfs must serve everything");
+    assert!(
+        bdvfs.energy_j <= bstat.energy_j,
+        "slo-dvfs must never lose energy to static-nominal: {} vs {}",
+        bdvfs.energy_j,
+        bstat.energy_j
+    );
+    assert_bit_identical("bursty slo-dvfs rerun", &serve_dvfs(&bursty, bslo_ms), &bdvfs);
+    let bursty_saved = (bstat.energy_j - bdvfs.energy_j) / bstat.energy_j * 100.0;
+    println!(
+        "{:>16} {:>12.3} {:>12.3} {:>12.4} {:>8}",
+        "static-nominal",
+        bstat.p99_ms(),
+        bstat.mj_per_req,
+        bstat.energy_j,
+        "-"
+    );
+    println!(
+        "{:>16} {:>12.3} {:>12.3} {:>12.4} {:>7.1}%",
+        "slo-dvfs",
+        bdvfs.p99_ms(),
+        bdvfs.mj_per_req,
+        bdvfs.energy_j,
+        bursty_saved
+    );
+    let bursty_leg = leg_json("bursty", bslo_ms, &bstat, &bdvfs);
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("control_plane")),
+        ("smoke", Json::Bool(smoke)),
+        ("clusters", Json::num(CLUSTERS as f64)),
+        ("rate_rps", Json::num(RATE_RPS)),
+        ("diurnal_depth", Json::num(DIURNAL_DEPTH)),
+        ("diurnal_period_s", Json::num(DIURNAL_PERIOD_S)),
+        ("burst_factor", Json::num(BURST_FACTOR)),
+        ("burst_period_s", Json::num(BURST_PERIOD_S)),
+        ("slo_headroom", Json::num(SLO_HEADROOM)),
+        ("seed", Json::num(SEED as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("legs", Json::Arr(vec![diurnal_leg, bursty_leg])),
+    ]);
+    // smoke runs only assert — they must not clobber the committed
+    // full-run record with reduced-count numbers
+    if smoke {
+        println!("\nsmoke mode: BENCH_control.json left untouched (run `make control-bench` to record)");
+        return;
+    }
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_control.json");
+    match std::fs::write(out, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

@@ -162,6 +162,56 @@ pub fn render_serve(r: &ServeReport) -> String {
         "dispatches   : {} batches, {} class switches\n",
         r.batches, r.class_switches
     ));
+    if let Some(c) = &r.control {
+        s.push_str(&format!(
+            "control      : {} every {:.1} ms ({} windows, {} DVFS transitions, \
+             {} parks, {} wakes)\n",
+            c.controller,
+            c.cadence_cycles as f64 / r.freq_hz * 1e3,
+            c.windows.len(),
+            c.dvfs_transitions,
+            c.parks,
+            c.wakes
+        ));
+        if let Some(slo) = c.slo_p99_cycles {
+            s.push_str(&format!(
+                "SLO          : p99 <= {:.2} ms -> {}\n",
+                slo as f64 / r.freq_hz * 1e3,
+                match c.slo_met {
+                    Some(true) => "met",
+                    Some(false) => "MISSED",
+                    None => "n/a",
+                }
+            ));
+        }
+        s.push_str(&format!(
+            "energy saved : {:.3} mJ vs static nominal ({:.3} mJ -> {:.3} mJ)\n",
+            c.energy_saved_j * 1e3,
+            c.energy_j_static * 1e3,
+            r.energy_j * 1e3
+        ));
+        // deterministic cap: the first windows show the ramp, the tail
+        // line keeps million-window runs printable
+        const SHOW: usize = 8;
+        s.push_str("window       :   idx  op park  util    p99ms  done\n");
+        for w in c.windows.iter().take(SHOW) {
+            s.push_str(&format!(
+                "               {:>5} {:>3} {:>4} {:>5.2} {:>8.3} {:>5}\n",
+                w.index,
+                w.op_index,
+                w.parked,
+                w.utilization,
+                r.latency_ms(w.p99_cycles),
+                w.completed
+            ));
+        }
+        if c.windows.len() > SHOW {
+            s.push_str(&format!(
+                "               ... {} more windows (see --metrics-out)\n",
+                c.windows.len() - SHOW
+            ));
+        }
+    }
     s
 }
 
@@ -280,6 +330,24 @@ mod tests {
             assert!(text.contains(needle), "missing {needle} in:\n{text}");
         }
         assert!(text.contains("1 served of 1 offered"), "{text}");
+    }
+
+    #[test]
+    fn render_serve_appends_the_control_timeline_only_when_present() {
+        use crate::serve::{RequestClass, StaticNominal};
+        let w = Workload::poisson(vec![RequestClass::new(&MOBILEBERT, 1)], 300.0, 8, 5);
+        let plain =
+            Pipeline::new(ClusterConfig::default()).fleet(1).serve(&w).unwrap();
+        assert!(!render_serve(&plain).contains("control"));
+        let ctl = Pipeline::new(ClusterConfig::default())
+            .fleet(1)
+            .controller(Box::new(StaticNominal))
+            .serve(&w)
+            .unwrap();
+        let text = render_serve(&ctl);
+        for needle in ["control      :", "static-nominal", "energy saved", "window"] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
     }
 
     #[test]

@@ -24,9 +24,12 @@
 //!   and knows whether it is the paper's published silicon.
 //! - [`operating`] — candidate evaluation at its voltage/frequency
 //!   point (`energy::operating_point`, E ∝ V²): the cheap
-//!   single-stream [`operating::screen`] rung and the full
-//!   multi-request [`operating::serve_eval`] rung, both pure functions
-//!   fanned out across threads through the process-wide pipeline cache.
+//!   single-stream [`operating::screen`] rung (aggregated over every
+//!   class of the serving mix) and the full multi-request
+//!   [`operating::serve_eval`] rung — with the online control plane
+//!   (`serve::SloDvfs`) attached when the candidate's `control` axis
+//!   is on — both pure functions fanned out across threads through the
+//!   process-wide pipeline cache.
 //! - [`objective`] — pluggable [`Objective`]s (GOp/J, GOp/s, p99
 //!   latency, mm² via `energy::area::cluster_mm2`) with one canonical
 //!   dominance orientation.

@@ -33,6 +33,7 @@ fn point_json(e: &Evaluation) -> Json {
         ("fuse", Json::Bool(c.fuse)),
         ("fleet", Json::num(c.fleet as f64)),
         ("scheduler", Json::str(c.scheduler)),
+        ("control", Json::Bool(c.control)),
         ("fidelity", Json::str(e.fidelity.name())),
         ("gops", Json::num(e.gops)),
         ("gopj", Json::num(e.gopj)),
@@ -66,6 +67,7 @@ pub fn explore_json(space: &DesignSpace, r: &ExploreResult) -> Json {
         ("requests", Json::num(space.serve.requests as f64)),
         ("rate_rps", Json::num(space.serve.rate_rps)),
         ("burst_factor", burst),
+        ("slo_p99_ms", Json::num(space.serve.slo_p99_ms)),
         ("models", Json::Arr(models)),
         ("screened", Json::num(r.screened as f64)),
         ("evaluated", Json::num(r.evaluated as f64)),
@@ -102,7 +104,15 @@ mod tests {
             r.frontier.len()
         );
         let first = &back.get("frontier").unwrap().as_arr().unwrap()[0];
-        for key in ["gops", "gopj", "p99_ms", "mm2", "operating_point", "paper_point"] {
+        for key in [
+            "gops",
+            "gopj",
+            "p99_ms",
+            "mm2",
+            "operating_point",
+            "paper_point",
+            "control",
+        ] {
             assert!(first.get(key).is_some(), "frontier point missing {key}");
         }
     }

@@ -30,8 +30,9 @@ use crate::sim::ClusterConfig;
 /// draw the same way `serve --seed` does.
 #[derive(Debug, Clone)]
 pub struct ServeSpec {
-    /// Request-class models; `models[0]` is also the screening model
-    /// (the cheap single-stream fidelity evaluates it alone).
+    /// Request-class models. The cheap screen rung evaluates every
+    /// class single-stream and aggregates (ops-weighted throughput and
+    /// efficiency, worst-case p99).
     pub models: Vec<&'static ModelConfig>,
     /// Requests offered per full-fidelity evaluation.
     pub requests: usize,
@@ -39,6 +40,10 @@ pub struct ServeSpec {
     pub rate_rps: f64,
     /// Square-wave burst factor (bursty Poisson when set).
     pub burst_factor: Option<f64>,
+    /// p99 latency SLO handed to the control plane when the candidate's
+    /// `control` knob is on (the `SloDvfs` controller holds it at
+    /// minimum J/request).
+    pub slo_p99_ms: f64,
 }
 
 /// One fully specified design point.
@@ -67,6 +72,9 @@ pub struct Candidate {
     pub fleet: usize,
     /// Scheduler name (`serve::scheduler_by_name`).
     pub scheduler: &'static str,
+    /// Online control plane on/off: when on, the serving evaluation
+    /// runs under the `SloDvfs` controller at the spec's p99 SLO.
+    pub control: bool,
 }
 
 impl Candidate {
@@ -137,6 +145,8 @@ pub struct DesignSpace {
     pub fuse: Vec<bool>,
     pub fleets: Vec<usize>,
     pub schedulers: Vec<&'static str>,
+    /// Control-plane knob values (`[false]` keeps the axis inert).
+    pub control: Vec<bool>,
     pub serve: ServeSpec,
 }
 
@@ -153,6 +163,7 @@ impl DesignSpace {
             * self.fuse.len()
             * self.fleets.len()
             * self.schedulers.len()
+            * self.control.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -160,7 +171,9 @@ impl DesignSpace {
     }
 
     /// Deterministic mixed-radix decode of candidate `i` (0-based,
-    /// `i < len()`): the scheduler axis varies fastest, cores slowest.
+    /// `i < len()`): the control axis varies fastest, cores slowest.
+    /// (A singleton `control: [false]` keeps index semantics identical
+    /// to the pre-control enumeration.)
     pub fn nth(&self, index: usize) -> Candidate {
         let mut i = index;
         let mut pick = |len: usize| {
@@ -168,6 +181,7 @@ impl DesignSpace {
             i /= len;
             k
         };
+        let control = self.control[pick(self.control.len())];
         let scheduler = self.schedulers[pick(self.schedulers.len())];
         let fleet = self.fleets[pick(self.fleets.len())];
         let fuse = self.fuse[pick(self.fuse.len())];
@@ -190,6 +204,7 @@ impl DesignSpace {
             fuse,
             fleet,
             scheduler,
+            control,
         }
     }
 
@@ -272,6 +287,12 @@ impl DesignSpace {
                 ));
             }
         }
+        if !self.serve.slo_p99_ms.is_finite() || self.serve.slo_p99_ms <= 0.0 {
+            return err(format!(
+                "design space {}: the p99 SLO must be a positive duration",
+                self.name
+            ));
+        }
         Ok(())
     }
 
@@ -303,11 +324,13 @@ impl DesignSpace {
             fuse: vec![true],
             fleets: vec![1, 2],
             schedulers: vec!["fifo", "batch"],
+            control: vec![false],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT],
                 requests: 64,
                 rate_rps: 2000.0,
                 burst_factor: None,
+                slo_p99_ms: 10.0,
             },
         }
     }
@@ -327,11 +350,13 @@ impl DesignSpace {
             fuse: vec![true],
             fleets: vec![1],
             schedulers: vec!["fifo"],
+            control: vec![false],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT],
                 requests: 16,
                 rate_rps: 2000.0,
                 burst_factor: None,
+                slo_p99_ms: 10.0,
             },
         }
     }
@@ -352,18 +377,20 @@ impl DesignSpace {
             fuse: vec![true],
             fleets: vec![1, 4],
             schedulers: vec!["fifo", "rr", "batch"],
+            control: vec![false, true],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT, &DINOV2S, &WHISPER_TINY_ENC],
                 requests: 96,
                 rate_rps: 2000.0,
                 burst_factor: Some(4.0),
+                slo_p99_ms: 10.0,
             },
         }
     }
 
-    /// The wide space for budgeted search (9720 candidates): every
-    /// template axis open, all five operating points — pair it with
-    /// `--strategy halving --budget N`.
+    /// The wide space for budgeted search (19440 candidates): every
+    /// template axis open, all five operating points, control plane on
+    /// and off — pair it with `--strategy halving --budget N`.
     pub fn full() -> DesignSpace {
         DesignSpace {
             name: "full",
@@ -377,11 +404,13 @@ impl DesignSpace {
             fuse: vec![true, false],
             fleets: vec![1, 2, 4, 8],
             schedulers: vec!["fifo", "rr", "batch"],
+            control: vec![false, true],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT],
                 requests: 64,
                 rate_rps: 2000.0,
                 burst_factor: Some(4.0),
+                slo_p99_ms: 10.0,
             },
         }
     }
@@ -402,10 +431,25 @@ mod tests {
             // the full tuple is unique across the enumeration
             let key = (
                 c.cores, c.banks, c.l1_kib, c.ita_n, c.ita_m, c.op, c.layers, c.fuse,
-                c.fleet, c.scheduler,
+                c.fleet, c.scheduler, c.control,
             );
             assert!(seen.insert(key), "candidate {i} repeats {key:?}");
         }
+    }
+
+    #[test]
+    fn control_axis_varies_fastest_and_stays_inert_when_singleton() {
+        // default space: singleton [false] — every candidate uncontrolled,
+        // size and index semantics unchanged from the pre-control space
+        let d = DesignSpace::default_space();
+        assert!((0..d.len()).all(|i| !d.nth(i).control));
+        // mix space: the control bit is the fastest mixed-radix digit
+        let m = DesignSpace::mix();
+        assert!(!m.nth(0).control);
+        assert!(m.nth(1).control);
+        let (c0, c1) = (m.nth(0), m.nth(1));
+        assert_eq!(c0.scheduler, c1.scheduler);
+        assert_eq!(c0.fleet, c1.fleet);
     }
 
     #[test]
@@ -466,6 +510,10 @@ mod tests {
 
         let mut s = DesignSpace::tiny();
         s.serve.rate_rps = 0.0;
+        assert!(s.validate().is_err());
+
+        let mut s = DesignSpace::tiny();
+        s.serve.slo_p99_ms = 0.0;
         assert!(s.validate().is_err());
     }
 }

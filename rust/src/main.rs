@@ -16,6 +16,7 @@
 //!   attn-tinyml simulate --model dinov2s --freq-mhz 500 --banks 64
 //!   attn-tinyml serve --requests 64 --arrival-rate 200 --clusters 4 --scheduler batch
 //!   attn-tinyml serve --requests 1000000 --arrival-rate 50000 --clusters 8 --scheduler batch --burst 8
+//!   attn-tinyml serve --arrival diurnal --requests 20000 --clusters 4 --control slo-dvfs --slo-p99-ms 10 --metrics-out windows.jsonl
 //!   attn-tinyml serve --help
 //!   attn-tinyml explore --space default --strategy halving --budget 16 --seed 7
 //!   attn-tinyml explore --space full --strategy halving --budget 24 --objectives gopj,mm2
@@ -31,10 +32,12 @@ use attn_tinyml::models;
 use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::runtime::{Runtime, RuntimeError, TensorIn};
 use attn_tinyml::serve::{
-    scheduler_by_name, RequestClass, Workload, DEFAULT_BURST_PERIOD_S,
+    control_by_name, scheduler_by_name, Controller, RequestClass, StaticNominal,
+    WindowSnapshot, Workload, DEFAULT_BURST_PERIOD_S, DEFAULT_DIURNAL_PERIOD_S,
 };
 use attn_tinyml::sim::{ClusterConfig, Cmd, Engine, Step};
 use attn_tinyml::util::cli::Args;
+use attn_tinyml::util::json::Json;
 
 type Result<T> = std::result::Result<T, RuntimeError>;
 
@@ -158,11 +161,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 ///
 /// Flags: --requests N (64), --arrival-rate RPS (200), --clusters N (1),
 /// --scheduler fifo|rr|batch (fifo), --model mix|<name> (mix = all three
-/// networks), --layers N (1), --seed S, --burst FACTOR (off; square-wave
-/// bursty Poisson with a 20 ms period), plus the usual geometry flags.
-/// `--requests` takes million-scale counts: arrivals stream lazily from
-/// the seeded PRNG (nothing is materialized upfront) and the report
-/// adds host-side simulation throughput. `--help` prints this.
+/// networks), --layers N (1), --seed S, --arrival poisson|bursty|diurnal,
+/// --burst FACTOR (implies bursty; square-wave bursty Poisson with a
+/// 20 ms period), --control static|slo-dvfs with --slo-p99-ms, and
+/// --metrics-out PATH (JSONL of per-window snapshots), plus the usual
+/// geometry flags. `--requests` takes million-scale counts: arrivals
+/// stream lazily from the seeded PRNG (nothing is materialized upfront)
+/// and the report adds host-side simulation throughput. `--help` prints
+/// this.
 const SERVE_HELP: &str = "\
 usage: attn-tinyml serve [--flags]
 
@@ -173,8 +179,13 @@ multi-request serving on a fleet of identical clusters
                       seeded PRNG, nothing is materialized upfront, and
                       queue memory stays proportional to the backlog
   --arrival-rate RPS  open-loop Poisson arrival rate (default 200)
+  --arrival KIND      poisson | bursty | diurnal (default poisson;
+                      diurnal modulates the rate by a slow sinusoid)
   --burst FACTOR      square-wave bursty Poisson: on-half of each 20 ms
                       period at rate*FACTOR, off-half at rate/FACTOR
+                      (implies --arrival bursty)
+  --depth D           diurnal modulation depth in [0, 1) (default 0.8)
+  --period-ms MS      diurnal sinusoid period (default 500)
   --clusters N        fleet size (default 1)
   --scheduler S       fifo | rr | batch (default fifo)
   --model M           mix = all three evaluation networks (default),
@@ -183,12 +194,43 @@ multi-request serving on a fleet of identical clusters
   --seed S            workload seed (default 48879)
   --freq-mhz F        cluster clock (default 425)
   --banks N           TCDM banking (default 32)
+  --control C         online control plane: static | slo-dvfs (off by
+                      default). slo-dvfs holds the p99 SLO at minimum
+                      J/request via DVFS over the FD-SOI operating
+                      points plus shard parking, deciding every 10 ms
+                      of simulated time
+  --slo-p99-ms MS     p99 latency SLO for slo-dvfs (default 10)
+  --metrics-out PATH  stream windowed metrics snapshots as JSON lines
+                      (attaches the static controller if --control is
+                      not given, so windows exist to record)
 
 the report includes latency percentiles (exact up to 8192 served
 requests, log2-linear histogram with sub-1% relative error beyond),
-time-weighted queue depth, and host-side simulation throughput
-(simulated requests per host wall-clock second)
+time-weighted queue depth, host-side simulation throughput, and — when
+a controller is attached — the per-window control timeline with the
+energy saved against the static-nominal baseline
 ";
+
+/// One metrics window as a compact JSON object (one `--metrics-out`
+/// line). Cycle quantities stay integral; f64 metrics serialize with
+/// Rust's shortest-roundtrip formatting, so the line is reproducible
+/// bit-for-bit from the seed.
+fn window_json(w: &WindowSnapshot) -> Json {
+    Json::obj(vec![
+        ("window", Json::num(w.index as f64)),
+        ("start_cycles", Json::num(w.start_cycles as f64)),
+        ("end_cycles", Json::num(w.end_cycles as f64)),
+        ("completed", Json::num(w.completed as f64)),
+        ("p50_cycles", Json::num(w.p50_cycles as f64)),
+        ("p99_cycles", Json::num(w.p99_cycles as f64)),
+        ("utilization", Json::num(w.utilization)),
+        ("mean_queue_depth", Json::num(w.mean_queue_depth)),
+        ("queue_depth", Json::num(w.queue_depth as f64)),
+        ("active_j", Json::num(w.active_j)),
+        ("op_index", Json::num(w.op_index as f64)),
+        ("parked", Json::num(w.parked as f64)),
+    ])
+}
 
 fn cmd_serve(args: &Args) -> Result<()> {
     if args.has("help") {
@@ -220,22 +262,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
             vec![RequestClass::new(cfg, layers)]
         }
     };
-    let workload = match args.flag("burst") {
-        Some(raw) => {
-            let factor: f64 = raw.parse().map_err(|_| {
-                RuntimeError::Usage(format!("--burst expects a number, got {raw:?}"))
-            })?;
+    let arrival_default = if args.has("burst") { "bursty" } else { "poisson" };
+    let workload = match args.flag_or("arrival", arrival_default).as_str() {
+        "poisson" => Workload::poisson(classes, rate, requests, seed),
+        "bursty" => {
+            let factor = match args.flag("burst") {
+                Some(raw) => raw.parse::<f64>().map_err(|_| {
+                    RuntimeError::Usage(format!("--burst expects a number, got {raw:?}"))
+                })?,
+                None => 8.0,
+            };
             Workload::bursty(classes, rate, factor, DEFAULT_BURST_PERIOD_S, requests, seed)
         }
-        None => Workload::poisson(classes, rate, requests, seed),
+        "diurnal" => {
+            let depth = args.flag_f64("depth", 0.8);
+            let period_s = args.flag_f64("period-ms", DEFAULT_DIURNAL_PERIOD_S * 1e3) / 1e3;
+            Workload::diurnal(classes, rate, depth, period_s, requests, seed)
+        }
+        other => {
+            return Err(RuntimeError::Usage(format!(
+                "unknown arrival kind {other}; available: poisson, bursty, diurnal"
+            )))
+        }
+    };
+    let slo_ms = args.flag_f64("slo-p99-ms", 10.0);
+    let slo_cycles = (slo_ms / 1e3 * cluster.freq_hz).round() as u64;
+    let metrics_out = args.flag("metrics-out").map(str::to_string);
+    let controller: Option<Box<dyn Controller>> = match args.flag("control") {
+        Some(name) => Some(control_by_name(name, slo_cycles).ok_or_else(|| {
+            RuntimeError::Usage(format!(
+                "unknown controller {name}; available: static, slo-dvfs"
+            ))
+        })?),
+        // --metrics-out alone still needs windows: attach the no-op
+        None if metrics_out.is_some() => Some(Box::new(StaticNominal)),
+        None => None,
     };
     let t0 = std::time::Instant::now();
-    let report = Pipeline::new(cluster)
-        .target(target)
-        .fleet(clusters)
-        .serve_with(&workload, sched.as_mut())?;
+    let mut pipe = Pipeline::new(cluster).target(target).fleet(clusters);
+    if let Some(c) = controller {
+        pipe = pipe.controller(c);
+    }
+    let report = pipe.serve_with(&workload, sched.as_mut())?;
     let host_s = t0.elapsed().as_secs_f64();
     print!("{}", coordinator::render_serve_with_host(&report, host_s));
+    if let Some(path) = metrics_out {
+        let summary = report.control.as_ref().expect("metrics-out attaches a controller");
+        let mut lines = String::new();
+        for w in &summary.windows {
+            lines.push_str(&window_json(w).to_string());
+            lines.push('\n');
+        }
+        std::fs::write(&path, lines)?;
+        println!("wrote {} window snapshots to {path}", summary.windows.len());
+    }
     Ok(())
 }
 

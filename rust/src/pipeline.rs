@@ -54,7 +54,11 @@ use crate::ita::engine::Mat;
 use crate::ita::ItaConfig;
 use crate::models::{self, ModelConfig};
 use crate::runtime::{Runtime, RuntimeError, TensorIn};
-use crate::serve::{Fifo, Fleet, RequestClass, Scheduler, ServeReport, Workload};
+use crate::energy::operating_point::NOMINAL_INDEX;
+use crate::serve::{
+    Controller, Fifo, Fleet, RequestClass, Scheduler, ServeReport, Workload,
+    DEFAULT_CONTROL_CADENCE_CYCLES,
+};
 use crate::sim::dma::DmaModel;
 use crate::sim::{ClusterConfig, Cmd, Engine, RunStats};
 
@@ -323,6 +327,8 @@ pub struct Pipeline {
     fuse: bool,
     use_cache: bool,
     fleet: usize,
+    controller: Option<Box<dyn Controller>>,
+    control_cadence: u64,
 }
 
 impl Default for Pipeline {
@@ -343,6 +349,8 @@ impl Pipeline {
             fuse: true,
             use_cache: true,
             fleet: 1,
+            controller: None,
+            control_cadence: DEFAULT_CONTROL_CADENCE_CYCLES,
         }
     }
 
@@ -393,6 +401,22 @@ impl Pipeline {
         self
     }
 
+    /// Attach an online [`Controller`] to the serve run: it observes
+    /// windowed metrics every control cadence of simulated time and may
+    /// switch the FD-SOI operating point or park/wake shards. Default:
+    /// none (the uncontrolled event loop).
+    pub fn controller(mut self, c: Box<dyn Controller>) -> Pipeline {
+        self.controller = Some(c);
+        self
+    }
+
+    /// Simulated-time control decision cadence, fleet-clock cycles.
+    /// Default: [`DEFAULT_CONTROL_CADENCE_CYCLES`] (10 ms at 425 MHz).
+    pub fn control_cadence(mut self, cycles: u64) -> Pipeline {
+        self.control_cadence = cycles;
+        self
+    }
+
     /// Serve a multi-request workload on the configured fleet under the
     /// FIFO scheduler. `Compiled::simulate()` is the degenerate case:
     /// a single-request workload on one cluster reproduces
@@ -410,7 +434,17 @@ impl Pipeline {
         w: &Workload,
         sched: &mut dyn Scheduler,
     ) -> Result<ServeReport, DeployError> {
-        let Pipeline { cluster, source, target, layers, fuse, use_cache, fleet } = self;
+        let Pipeline {
+            cluster,
+            source,
+            target,
+            layers,
+            fuse,
+            use_cache,
+            fleet,
+            mut controller,
+            control_cadence,
+        } = self;
         let filled: Option<Workload> = if w.classes.is_empty() {
             match source {
                 Source::Model(cfg) => {
@@ -433,12 +467,25 @@ impl Pipeline {
         if !use_cache {
             f = f.uncached();
         }
-        f.serve(w, sched)
+        match controller.as_deref_mut() {
+            Some(c) => f.serve_controlled(w, sched, c, control_cadence, NOMINAL_INDEX),
+            None => f.serve(w, sched),
+        }
     }
 
     /// Run the deployment flow (or fetch the memoized result).
     pub fn compile(self) -> Result<Compiled, DeployError> {
-        let Pipeline { cluster, source, target, layers, fuse, use_cache, fleet: _ } = self;
+        let Pipeline {
+            cluster,
+            source,
+            target,
+            layers,
+            fuse,
+            use_cache,
+            fleet: _,
+            controller: _,
+            control_cadence: _,
+        } = self;
         // MHA fusion only exists on the ITA path; canonicalize the flag
         // so MultiCore compilations share one cache entry regardless of
         // the toggle (deploy_graph_opts ignores it for MultiCore)
@@ -1002,6 +1049,23 @@ mod tests {
         assert_eq!(r.served, 3);
         assert_eq!(r.clusters, 2);
         assert_eq!(r.scheduler, "fifo");
+    }
+
+    #[test]
+    fn builder_controller_hook_attaches_a_summary_and_changes_nothing_else() {
+        use crate::serve::StaticNominal;
+        let w = Workload::poisson(vec![], 400.0, 16, 7);
+        let build = || {
+            Pipeline::new(ClusterConfig::default()).model(&MOBILEBERT).layers(1).fleet(2)
+        };
+        let plain = build().serve(&w).unwrap();
+        let controlled =
+            build().controller(Box::new(StaticNominal)).serve(&w).unwrap();
+        assert!(plain.control.is_none());
+        let summary = controlled.control.as_ref().unwrap();
+        assert_eq!(summary.controller, "static-nominal");
+        assert_eq!(plain.makespan_cycles, controlled.makespan_cycles);
+        assert_eq!(plain.energy_j.to_bits(), controlled.energy_j.to_bits());
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! The online control plane: deterministic mid-run policies over the
+//! serving fleet's FD-SOI operating point and shard pool.
+//!
+//! A [`Controller`] is invoked by the steppable serve engine
+//! ([`super::fleet::ServeEngine`]) on a fixed simulated-time cadence
+//! ([`DEFAULT_CONTROL_CADENCE_CYCLES`]). At each decision point the
+//! engine closes a metrics window ([`super::WindowSnapshot`]) and hands
+//! it to the controller together with the live [`ControlState`]; the
+//! controller answers with a [`ControlAction`] — the operating-point
+//! index it wants ([`energy::operating_point::OPERATING_POINTS`]) and
+//! how many shards should be parked. The engine applies the action at
+//! the window boundary:
+//!
+//! - **DVFS**: service time scales as `f_nominal / f_op` (timing in
+//!   *intrinsic* cycles is voltage-independent; the timeline stays in
+//!   nominal-clock cycles), active energy scales as `V²`
+//!   ([`OperatingPoint::energy_scale`]), idle power as `V²·f`. A
+//!   switch charges each unparked shard a one-off
+//!   [`DVFS_TRANSITION_CYCLES`] pipeline-refill penalty on its next
+//!   dispatch — in-flight batches finish at the point they started at.
+//! - **Autoscaling**: parked shards leave the dispatch pool and stop
+//!   burning idle power. Waking a shard re-stages its weights: the
+//!   next dispatch pays the class switch cost (the same
+//!   weight-staging constant `serve` already charges between buckets).
+//!   At least one shard always stays awake.
+//!
+//! Determinism: controllers see only window snapshots and engine state
+//! — quantities derived from the seeded workload — and the cadence is
+//! simulated time, so a controlled run is exactly as reproducible as an
+//! uncontrolled one. [`StaticNominal`] holds whatever state it finds
+//! (provably a no-op: the engine skips all controlled-path accounting
+//! when nothing ever deviates, keeping reports bit-identical to the
+//! uncontrolled loop). [`SloDvfs`] holds a p99 SLO at minimum
+//! J/request via hysteresis down the V/f table and over the parked
+//! count.
+
+use crate::energy::operating_point::{OperatingPoint, NOMINAL_INDEX, OPERATING_POINTS};
+
+use super::metrics::WindowSnapshot;
+
+/// Default decision cadence, fleet cycles: 10 ms at the nominal
+/// 425 MHz clock — long against service times (~1 ms per MobileBERT
+/// layer-1 inference), short against the diurnal period (0.5 s), so a
+/// window averages many requests yet the controller still tracks the
+/// swing.
+pub const DEFAULT_CONTROL_CADENCE_CYCLES: u64 = 4_250_000;
+
+/// One-off penalty per unparked shard on its first dispatch after an
+/// operating-point switch (~100 µs at 425 MHz): FLL re-lock plus
+/// pipeline refill while the voltage regulator settles.
+pub const DVFS_TRANSITION_CYCLES: u64 = 42_500;
+
+/// Live engine state handed to a controller next to the closed window.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlState {
+    /// Decision time, fleet cycles.
+    pub now_cycles: u64,
+    /// Current operating-point index into [`OPERATING_POINTS`].
+    pub op_index: usize,
+    /// Currently parked shards.
+    pub parked: usize,
+    /// Total shards in the fleet.
+    pub shards: usize,
+    /// Instantaneous queue depth.
+    pub queue_depth: usize,
+}
+
+/// What a controller wants the fleet to look like for the next window.
+/// The engine clamps: `op_index` into the table, `parked` to
+/// `shards - 1` (one shard always stays awake).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ControlAction {
+    pub op_index: usize,
+    pub parked: usize,
+}
+
+impl ControlAction {
+    /// The action that changes nothing relative to `state`.
+    pub fn hold(state: &ControlState) -> ControlAction {
+        ControlAction { op_index: state.op_index, parked: state.parked }
+    }
+}
+
+/// A deterministic mid-run policy (see the module docs). Implementors
+/// must derive every decision from the arguments alone — no wall
+/// clock, no interior randomness — or controlled runs stop being
+/// reproducible.
+pub trait Controller {
+    fn name(&self) -> &'static str;
+
+    /// The p99 SLO this policy holds, if any, in fleet cycles — echoed
+    /// into [`super::ControlSummary`] so reports and benches can check
+    /// it against the run-level p99.
+    fn slo_p99_cycles(&self) -> Option<u64> {
+        None
+    }
+
+    /// One decision: the just-closed window plus live state in, the
+    /// desired fleet configuration out.
+    fn decide(&mut self, window: &WindowSnapshot, state: &ControlState) -> ControlAction;
+}
+
+/// The baseline policy: hold whatever operating point and parked count
+/// the run started with. Attaching it must change nothing — the
+/// equivalence propcheck asserts a `StaticNominal` run is bit-identical
+/// to the uncontrolled loop.
+#[derive(Debug, Clone, Default)]
+pub struct StaticNominal;
+
+impl Controller for StaticNominal {
+    fn name(&self) -> &'static str {
+        "static-nominal"
+    }
+
+    fn decide(&mut self, _window: &WindowSnapshot, state: &ControlState) -> ControlAction {
+        ControlAction::hold(state)
+    }
+}
+
+/// Hysteresis thresholds of [`SloDvfs`], fractions of the SLO: react
+/// *up* (wake/boost) well before the SLO is actually violated, react
+/// *down* (slow/park) only when latencies sit far below it — the gap
+/// between the two is what prevents oscillation at the cadence.
+const HOT_FRACTION: f64 = 0.70;
+const COLD_FRACTION: f64 = 0.35;
+/// Consecutive calm windows required before any downward action.
+const CALM_WINDOWS: u32 = 2;
+/// Fleet busy fraction below which a calm fleet may park a shard.
+const PARK_UTILIZATION: f64 = 0.10;
+
+/// Hold a p99 SLO at minimum J/request: hysteresis over the V/f table
+/// and the parked-shard count.
+///
+/// - **Hot** (window p99 above [`HOT_FRACTION`]·SLO, or backlog more
+///   than twice the awake shards): wake a parked shard first; if the
+///   window actually breached the SLO, also step one operating point
+///   up. Reacting on the 70% line means the fleet speeds up while the
+///   p99 still has 30% headroom.
+/// - **Cold** (window p99 under [`COLD_FRACTION`]·SLO *and* the queue
+///   drained): after [`CALM_WINDOWS`] consecutive such windows, step
+///   one operating point down; once already at the floor, park a shard
+///   if fleet utilization fell under [`PARK_UTILIZATION`]. One action
+///   per window, and the calm streak restarts after each — downward
+///   moves are deliberately slow.
+/// - Otherwise: hold, and restart the calm streak.
+#[derive(Debug, Clone)]
+pub struct SloDvfs {
+    slo_p99_cycles: u64,
+    calm: u32,
+}
+
+impl SloDvfs {
+    pub fn new(slo_p99_cycles: u64) -> SloDvfs {
+        SloDvfs { slo_p99_cycles: slo_p99_cycles.max(1), calm: 0 }
+    }
+
+    /// SLO given in milliseconds, converted at the fleet clock.
+    pub fn from_ms(slo_p99_ms: f64, freq_hz: f64) -> SloDvfs {
+        SloDvfs::new((slo_p99_ms / 1e3 * freq_hz).round() as u64)
+    }
+}
+
+impl Controller for SloDvfs {
+    fn name(&self) -> &'static str {
+        "slo-dvfs"
+    }
+
+    fn slo_p99_cycles(&self) -> Option<u64> {
+        Some(self.slo_p99_cycles)
+    }
+
+    fn decide(&mut self, window: &WindowSnapshot, state: &ControlState) -> ControlAction {
+        let slo = self.slo_p99_cycles as f64;
+        let p99 = window.p99_cycles as f64;
+        let alive = state.shards - state.parked;
+        let hot = p99 > HOT_FRACTION * slo || state.queue_depth > 2 * alive;
+        let calm = p99 <= COLD_FRACTION * slo && state.queue_depth == 0;
+        let mut action = ControlAction::hold(state);
+        if hot {
+            self.calm = 0;
+            if state.parked > 0 {
+                action.parked = state.parked - 1;
+            }
+            if p99 > slo && state.op_index + 1 < OPERATING_POINTS.len() {
+                action.op_index = state.op_index + 1;
+            }
+            return action;
+        }
+        if !calm {
+            self.calm = 0;
+            return action;
+        }
+        self.calm += 1;
+        if self.calm < CALM_WINDOWS {
+            return action;
+        }
+        self.calm = 0;
+        if state.op_index > 0 {
+            action.op_index = state.op_index - 1;
+        } else if window.utilization < PARK_UTILIZATION && alive > 1 {
+            action.parked = state.parked + 1;
+        }
+        action
+    }
+}
+
+/// CLI-style policy lookup, mirroring `scheduler_by_name`. The SLO is
+/// only read by SLO-driven policies.
+pub fn control_by_name(name: &str, slo_p99_cycles: u64) -> Option<Box<dyn Controller>> {
+    match name {
+        "static" | "static-nominal" => Some(Box::new(StaticNominal)),
+        "slo-dvfs" | "dvfs" => Some(Box::new(SloDvfs::new(slo_p99_cycles))),
+        _ => None,
+    }
+}
+
+/// The operating point a controlled run executes at, by table index.
+pub fn op_at(index: usize) -> &'static OperatingPoint {
+    &OPERATING_POINTS[index.min(OPERATING_POINTS.len() - 1)]
+}
+
+/// Nominal table index re-exported for the serve layer.
+pub const BASE_OP_INDEX: usize = NOMINAL_INDEX;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(p99: u64, utilization: f64, queue_depth: usize) -> WindowSnapshot {
+        WindowSnapshot {
+            index: 0,
+            start_cycles: 0,
+            end_cycles: DEFAULT_CONTROL_CADENCE_CYCLES,
+            completed: 10,
+            p50_cycles: p99 / 2,
+            p99_cycles: p99,
+            utilization,
+            mean_queue_depth: queue_depth as f64,
+            queue_depth,
+            active_j: 0.0,
+            op_index: NOMINAL_INDEX,
+            parked: 0,
+        }
+    }
+
+    fn state(op_index: usize, parked: usize, shards: usize, depth: usize) -> ControlState {
+        ControlState {
+            now_cycles: DEFAULT_CONTROL_CADENCE_CYCLES,
+            op_index,
+            parked,
+            shards,
+            queue_depth: depth,
+        }
+    }
+
+    #[test]
+    fn static_nominal_holds_any_state_it_finds() {
+        let mut c = StaticNominal;
+        for (op, parked) in [(NOMINAL_INDEX, 0), (0, 3), (4, 1)] {
+            let s = state(op, parked, 4, 7);
+            let a = c.decide(&window(1_000_000, 0.5, 7), &s);
+            assert_eq!(a, ControlAction::hold(&s), "static policy must not act");
+        }
+        assert_eq!(c.slo_p99_cycles(), None);
+    }
+
+    #[test]
+    fn slo_dvfs_wakes_then_boosts_when_hot() {
+        let slo = 1_000_000u64;
+        let mut c = SloDvfs::new(slo);
+        // 70% line crossed but SLO not breached, shards parked: wake one
+        let a = c.decide(&window(800_000, 0.9, 0), &state(NOMINAL_INDEX, 2, 4, 0));
+        assert_eq!(a.parked, 1);
+        assert_eq!(a.op_index, NOMINAL_INDEX, "no breach, no boost");
+        // outright breach with nothing parked: step the V/f table up
+        let b = c.decide(&window(2_000_000, 1.0, 4), &state(NOMINAL_INDEX, 0, 4, 4));
+        assert_eq!(b.op_index, NOMINAL_INDEX + 1);
+        assert_eq!(b.parked, 0);
+        // breach at the top of the table: clamp
+        let t = c.decide(&window(2_000_000, 1.0, 4), &state(4, 0, 4, 4));
+        assert_eq!(t.op_index, 4);
+        // deep backlog alone counts as hot even with a tiny p99
+        let d = c.decide(&window(10, 1.0, 9), &state(NOMINAL_INDEX, 1, 4, 9));
+        assert_eq!(d.parked, 0);
+    }
+
+    #[test]
+    fn slo_dvfs_needs_consecutive_calm_windows_to_step_down() {
+        let mut c = SloDvfs::new(1_000_000);
+        let cold = window(100_000, 0.05, 0);
+        let s = state(NOMINAL_INDEX, 0, 4, 0);
+        // first calm window: hold
+        assert_eq!(c.decide(&cold, &s), ControlAction::hold(&s));
+        // second consecutive: step down
+        let a = c.decide(&cold, &s);
+        assert_eq!(a.op_index, NOMINAL_INDEX - 1);
+        // a hot window resets the streak
+        let _ = c.decide(&cold, &s);
+        let _ = c.decide(&window(999_999_999, 1.0, 20), &s);
+        assert_eq!(c.decide(&cold, &s), ControlAction::hold(&s), "streak must restart");
+    }
+
+    #[test]
+    fn slo_dvfs_parks_only_at_the_voltage_floor_and_never_the_last_shard() {
+        let mut c = SloDvfs::new(1_000_000);
+        let cold = window(100_000, 0.05, 0);
+        // at op 0 with idle fleet: park instead of stepping down
+        let s = state(0, 0, 4, 0);
+        let _ = c.decide(&cold, &s);
+        let a = c.decide(&cold, &s);
+        assert_eq!(a.parked, 1);
+        assert_eq!(a.op_index, 0);
+        // 3 of 4 already parked: the last awake shard stays awake
+        let last = state(0, 3, 4, 0);
+        let _ = c.decide(&cold, &last);
+        let b = c.decide(&cold, &last);
+        assert_eq!(b.parked, 3, "must never park the last shard");
+        // busy-but-calm fleet at the floor: no park either
+        let busy_calm = window(100_000, 0.8, 0);
+        let _ = c.decide(&busy_calm, &s);
+        let d = c.decide(&busy_calm, &s);
+        assert_eq!(d.parked, 0, "utilization gate must hold the shard");
+    }
+
+    #[test]
+    fn policy_lookup_mirrors_scheduler_names() {
+        assert_eq!(control_by_name("static", 1).unwrap().name(), "static-nominal");
+        assert_eq!(control_by_name("static-nominal", 1).unwrap().name(), "static-nominal");
+        let c = control_by_name("slo-dvfs", 42).unwrap();
+        assert_eq!(c.name(), "slo-dvfs");
+        assert_eq!(c.slo_p99_cycles(), Some(42));
+        assert!(control_by_name("pid", 1).is_none());
+    }
+
+    #[test]
+    fn from_ms_converts_at_the_fleet_clock() {
+        let c = SloDvfs::from_ms(10.0, 425.0e6);
+        assert_eq!(c.slo_p99_cycles(), Some(4_250_000));
+    }
+}

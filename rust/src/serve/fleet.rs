@@ -54,19 +54,56 @@
 //! is a pure function of (workload, geometry, scheduler), and the
 //! retained pre-optimization loop ([`super::naive`]) is propcheck-held
 //! to produce identical [`ServeReport`]s.
+//!
+//! ## The steppable engine
+//!
+//! The event loop lives in [`ServeEngine`]: one loop iteration is one
+//! [`ServeEngine::step`] (wake due shards → admit due arrivals →
+//! dispatch → advance to the next event), and [`Fleet::serve`] is a
+//! thin driver (`new` → [`drain`](ServeEngine::drain) →
+//! [`finish`](ServeEngine::finish)) that reproduces the pre-refactor
+//! monolith **bit-identically** — `tests/serve_equivalence.rs`
+//! propchecks the engine against the retained naive loop.
+//! [`ServeEngine::run_until`] pauses *between* events at an arbitrary
+//! simulated cycle: the time-weighted depth integral splits exactly
+//! (integer arithmetic), the extra scheduler probe at the pause point
+//! is a no-op for the time-invariant built-in schedulers, and nothing
+//! else observes the pause — which is what lets
+//! [`Fleet::serve_controlled`] interleave a
+//! [`Controller`](super::control::Controller) on a fixed cadence
+//! without perturbing the runs it leaves alone ([`StaticNominal`]
+//! included).
+//!
+//! Controlled runs add a DVFS + autoscaling model on top (see
+//! `serve/control.rs`): service cycles scale by the operating points'
+//! clock ratio (intrinsic cycles are voltage-independent; the timeline
+//! stays in base-clock cycles, `ceil`-scaled in exact integer math so
+//! the base point is the identity), active energy scales as V², idle
+//! power as V²·f integrated interval-by-interval over the *unparked*
+//! shards, an operating-point switch charges each awake shard a one-off
+//! [`DVFS_TRANSITION_CYCLES`] on its next dispatch, and a woken shard
+//! re-stages weights (the class switch cost) on its next dispatch.
+//! A run that never deviates from its base point with nothing parked
+//! keeps the uncontrolled closed-form energy, bit for bit.
+//!
+//! [`StaticNominal`]: super::control::StaticNominal
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::deeploy::{DeployError, Target};
 use crate::energy;
+use crate::energy::operating_point::{NOMINAL_INDEX, OPERATING_POINTS};
 use crate::pipeline::{Pipeline, ServeConstants};
 use crate::sim::ClusterConfig;
 
-use super::metrics::{LatencyStore, ServeReport};
+use super::control::{ControlAction, ControlState, Controller, DVFS_TRANSITION_CYCLES};
+use super::metrics::{
+    ControlSummary, LatencyStore, MetricsWindow, ServeReport, WindowSnapshot,
+};
 use super::queue::QueueView;
 use super::scheduler::{Queued, Scheduler, Selection};
-use super::workload::{Request, Workload};
+use super::workload::{ArrivalStream, Request, Workload};
 
 /// Compile every request class of a workload through the (cached)
 /// pipeline and return its serving constants. Shared with the retained
@@ -95,6 +132,50 @@ pub(crate) fn class_runtimes(
 struct Shard {
     class: Option<usize>,
     busy: u64,
+    /// Wake-up re-staging owed: the shard's next dispatch pays the
+    /// class switch cost whatever class runs (weights left the shard
+    /// while it was parked). Never set on uncontrolled runs.
+    restage: bool,
+    /// One-off DVFS transition penalty owed on the next dispatch.
+    /// Never set on uncontrolled runs.
+    dvfs_penalty: bool,
+}
+
+/// Scale intrinsic cycles onto the base-clock timeline for an
+/// operating point: `ceil(cycles * base_hz / op_hz)` in exact integer
+/// math — the identity when the frequencies match, more base-clock
+/// cycles when the point runs slower.
+fn scale_cycles(cycles: u64, base_hz: u64, op_hz: u64) -> u64 {
+    if base_hz == op_hz {
+        return cycles;
+    }
+    ((cycles as u128 * base_hz as u128).div_ceil(op_hz as u128)) as u64
+}
+
+/// Control-plane state of a controlled engine (absent on plain runs).
+struct ControlCtx {
+    cadence: u64,
+    next_decision: u64,
+    /// Operating point the timeline's clock corresponds to.
+    base_op: usize,
+    /// Operating point currently in force.
+    op_index: usize,
+    parked: Vec<bool>,
+    n_parked: usize,
+    window: MetricsWindow,
+    windows: Vec<WindowSnapshot>,
+    /// Idle energy integrated interval-by-interval at the in-force
+    /// point over the unparked shards, J.
+    idle_j: f64,
+    /// Active energy with each batch scaled by its dispatch-time V², J.
+    active_j_scaled: f64,
+    dvfs_transitions: u64,
+    parks: u64,
+    wakes: u64,
+    /// Whether the run ever left the base point or parked a shard —
+    /// while false (and the base point is nominal), `finish` keeps the
+    /// uncontrolled closed-form energy bit-for-bit.
+    deviated: bool,
 }
 
 /// N clusters of one geometry serving one workload.
@@ -131,217 +212,562 @@ impl Fleet {
         self.n
     }
 
-    /// Run the workload to completion under `sched` and report.
+    /// Run the workload to completion under `sched` and report — a
+    /// thin driver over [`ServeEngine`], bit-identical to the
+    /// pre-refactor monolithic loop.
     pub fn serve(
         &self,
         w: &Workload,
         sched: &mut dyn Scheduler,
     ) -> Result<ServeReport, DeployError> {
-        if self.n == 0 {
+        let mut engine = ServeEngine::new(self, w, sched)?;
+        engine.drain();
+        Ok(engine.finish())
+    }
+
+    /// Run the workload with `controller` deciding every
+    /// `cadence_cycles` of simulated time (see `serve/control.rs`).
+    /// `base_op` is the operating-point table index the fleet clock
+    /// corresponds to (the CLI's default geometry is the nominal
+    /// corner, [`NOMINAL_INDEX`]; explore candidates pass their own).
+    pub fn serve_controlled(
+        &self,
+        w: &Workload,
+        sched: &mut dyn Scheduler,
+        controller: &mut dyn Controller,
+        cadence_cycles: u64,
+        base_op: usize,
+    ) -> Result<ServeReport, DeployError> {
+        let mut engine = ServeEngine::new(self, w, sched)?;
+        engine.enable_control(base_op, cadence_cycles);
+        while let Some(t) = engine.next_decision() {
+            if !engine.run_until(t) {
+                break;
+            }
+            engine.control_decide(controller);
+        }
+        Ok(engine.finish_controlled(controller))
+    }
+}
+
+/// The steppable serve loop: all state of one run, advanced one event
+/// at a time. `step()` executes exactly one iteration of the original
+/// event loop — wake due shards, admit due arrivals, dispatch until no
+/// free shard selects anything, advance to the next event — so
+/// `new` + `drain` + `finish` is the pre-refactor `serve()`
+/// bit-for-bit. `run_until(t)` additionally pauses *between* events at
+/// cycle `t` (splitting the time-weighted integrals exactly), which is
+/// the control plane's hook.
+pub struct ServeEngine<'a> {
+    fleet: &'a Fleet,
+    w: &'a Workload,
+    sched: &'a mut dyn Scheduler,
+    classes: Vec<ServeConstants>,
+    freq: f64,
+    crng: crate::util::prng::XorShift64,
+    stream: ArrivalStream,
+    next_arrival: Option<Request>,
+    followups: BinaryHeap<Reverse<(u64, usize, usize)>>,
+    issued: usize,
+    closed: bool,
+    think: u64,
+    queue: QueueView,
+    shards: Vec<Shard>,
+    shard_free: Vec<bool>,
+    n_free: usize,
+    wake: BinaryHeap<Reverse<(u64, usize)>>,
+    lat: LatencyStore,
+    depth_cycles: u128,
+    depth_max: usize,
+    switches: u64,
+    batches: u64,
+    active_j: f64,
+    ops_served: u64,
+    makespan: u64,
+    now: u64,
+    batch_buf: Vec<Queued>,
+    done: bool,
+    control: Option<ControlCtx>,
+}
+
+impl<'a> ServeEngine<'a> {
+    /// Validate and set up a run (compiles every class through the
+    /// cached pipeline). No simulated time passes until `step()`.
+    pub fn new(
+        fleet: &'a Fleet,
+        w: &'a Workload,
+        sched: &'a mut dyn Scheduler,
+    ) -> Result<ServeEngine<'a>, DeployError> {
+        if fleet.n == 0 {
             return Err(DeployError::Builder("fleet size must be >= 1".into()));
         }
         w.validate()?;
-        let freq = self.cluster.freq_hz;
-        let classes = class_runtimes(self, w)?;
-
+        let freq = fleet.cluster.freq_hz;
+        let classes = class_runtimes(fleet, w)?;
         // the arrival side: pre-known arrivals stream lazily in
         // (cycle, id) order; closed-loop follow-ons (issued from
         // completions) merge in through a heap, keyed the same way
         let mut crng = w.class_rng();
         let mut stream = w.stream(freq);
-        let mut next_arrival: Option<Request> = stream.next(&mut crng);
-        let mut followups: BinaryHeap<Reverse<(u64, usize, usize)>> = BinaryHeap::new();
-        let mut issued = w.seed_count();
-        let closed = w.is_closed_loop();
-        let think = w.think_cycles();
+        let next_arrival = stream.next(&mut crng);
+        Ok(ServeEngine {
+            fleet,
+            classes,
+            freq,
+            crng,
+            stream,
+            next_arrival,
+            followups: BinaryHeap::new(),
+            issued: w.seed_count(),
+            closed: w.is_closed_loop(),
+            think: w.think_cycles(),
+            queue: QueueView::new(w.classes.len(), fleet.n),
+            shards: vec![Shard::default(); fleet.n],
+            shard_free: vec![true; fleet.n],
+            n_free: fleet.n,
+            wake: BinaryHeap::new(),
+            lat: LatencyStore::new(),
+            depth_cycles: 0,
+            depth_max: 0,
+            switches: 0,
+            batches: 0,
+            active_j: 0.0,
+            ops_served: 0,
+            makespan: 0,
+            now: 0,
+            batch_buf: Vec::new(),
+            done: false,
+            w,
+            control: None,
+        })
+    }
 
-        let mut queue = QueueView::new(w.classes.len(), self.n);
-        let mut shards: Vec<Shard> = vec![Shard::default(); self.n];
-        let mut shard_free: Vec<bool> = vec![true; self.n];
-        let mut n_free = self.n;
-        // busy shards wake through a min-heap of (completion, shard);
-        // each busy shard is in the heap exactly once
-        let mut wake: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    /// Attach control-plane bookkeeping (windowed metrics, DVFS and
+    /// parking state). Call before the first `step()`.
+    pub fn enable_control(&mut self, base_op: usize, cadence_cycles: u64) {
+        let base = base_op.min(OPERATING_POINTS.len() - 1);
+        let cadence = cadence_cycles.max(1);
+        self.control = Some(ControlCtx {
+            cadence,
+            next_decision: self.now + cadence,
+            base_op: base,
+            op_index: base,
+            parked: vec![false; self.fleet.n],
+            n_parked: 0,
+            window: MetricsWindow::new(self.now),
+            windows: Vec::new(),
+            idle_j: 0.0,
+            active_j_scaled: 0.0,
+            dvfs_transitions: 0,
+            parks: 0,
+            wakes: 0,
+            deviated: false,
+        });
+    }
 
-        let mut lat = LatencyStore::new();
-        let mut depth_cycles: u128 = 0;
-        let mut depth_max = 0usize;
-        let (mut switches, mut batches) = (0u64, 0u64);
-        let mut active_j = 0.0f64;
-        let mut ops_served = 0u64;
-        let mut makespan = 0u64;
-        let mut now = 0u64;
-        let mut batch_buf: Vec<Queued> = Vec::new();
+    /// Current simulated time, cycles.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
 
+    /// Whether every event has been processed.
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Next control decision point, when control is enabled.
+    pub fn next_decision(&self) -> Option<u64> {
+        self.control.as_ref().map(|c| c.next_decision)
+    }
+
+    /// One event-loop iteration. Returns `false` once the run is done.
+    pub fn step(&mut self) -> bool {
+        self.step_bounded(None)
+    }
+
+    /// Run every remaining event to completion.
+    pub fn drain(&mut self) {
+        while self.step() {}
+    }
+
+    /// Step until simulated time reaches `t` (pausing between events
+    /// exactly at `t`; events *at* `t` belong to the next window).
+    /// Returns `false` once the run is done.
+    pub fn run_until(&mut self, t: u64) -> bool {
+        while self.now < t {
+            if !self.step_bounded(Some(t)) {
+                return false;
+            }
+        }
+        !self.done
+    }
+
+    /// One iteration, advancing at most to `limit`: when the next
+    /// event lies beyond it, only the clock (and the time-weighted
+    /// integrals) move — state is otherwise untouched, and the resumed
+    /// iteration at `limit` re-probes the scheduler against an
+    /// unchanged queue (a no-op for the time-invariant built-ins).
+    fn step_bounded(&mut self, limit: Option<u64>) -> bool {
+        if self.done {
+            return false;
+        }
+        // wake every shard whose batch completed by now
+        while let Some(&Reverse((t, si))) = self.wake.peek() {
+            if t > self.now {
+                break;
+            }
+            self.wake.pop();
+            self.shard_free[si] = true;
+            self.n_free += 1;
+        }
+        self.admit_due();
+        self.depth_max = self.depth_max.max(self.queue.len());
+        if self.n_free > 0 && !self.queue.is_empty() {
+            self.dispatch();
+        }
+        // advance to the next event; every candidate is strictly in
+        // the future (everything due was admitted or woken above),
+        // so time always progresses
+        let next_arr = match (&self.next_arrival, self.followups.peek()) {
+            (Some(r), Some(&Reverse((t, _, _)))) => Some(r.arrival.min(t)),
+            (Some(r), None) => Some(r.arrival),
+            (None, Some(&Reverse((t, _, _)))) => Some(t),
+            (None, None) => None,
+        };
+        let next_wake = self.wake.peek().map(|&Reverse((t, _))| t);
+        let next = match (next_arr, next_wake) {
+            (None, None) => {
+                self.done = true;
+                return false;
+            }
+            (Some(a), None) => a,
+            (None, Some(f)) => f,
+            (Some(a), Some(f)) => a.min(f),
+        };
+        let target = match limit {
+            Some(l) if next > l => l,
+            _ => next,
+        };
+        self.advance_to(target);
+        true
+    }
+
+    /// Admit everything due by now, merging the lazy stream with
+    /// closed-loop follow-ons by (cycle, id) so the queue stays in
+    /// exact arrival order.
+    fn admit_due(&mut self) {
         loop {
-            // wake every shard whose batch completed by now
-            while let Some(&Reverse((t, si))) = wake.peek() {
-                if t > now {
+            let from_stream = match (&self.next_arrival, self.followups.peek()) {
+                (Some(r), Some(&Reverse((t, id, _)))) => (r.arrival, r.id) <= (t, id),
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            if from_stream {
+                let r = self.next_arrival.as_ref().unwrap();
+                if r.arrival > self.now {
                     break;
                 }
-                wake.pop();
-                shard_free[si] = true;
-                n_free += 1;
-            }
-
-            // admit everything due by now, merging the lazy stream with
-            // closed-loop follow-ons by (cycle, id) so the queue stays
-            // in exact arrival order
-            loop {
-                let from_stream = match (&next_arrival, followups.peek()) {
-                    (Some(r), Some(&Reverse((t, id, _)))) => (r.arrival, r.id) <= (t, id),
-                    (Some(_), None) => true,
-                    (None, Some(_)) => false,
-                    (None, None) => break,
-                };
-                if from_stream {
-                    let r = next_arrival.as_ref().unwrap();
-                    if r.arrival > now {
-                        break;
-                    }
-                    queue.push(Queued {
-                        id: r.id,
-                        class: r.class,
-                        bucket: w.classes[r.class].bucket(),
-                        arrival: r.arrival,
-                    });
-                    next_arrival = stream.next(&mut crng);
-                } else {
-                    let &Reverse((t, id, class)) = followups.peek().unwrap();
-                    if t > now {
-                        break;
-                    }
-                    followups.pop();
-                    queue.push(Queued {
-                        id,
-                        class,
-                        bucket: w.classes[class].bucket(),
-                        arrival: t,
-                    });
+                self.queue.push(Queued {
+                    id: r.id,
+                    class: r.class,
+                    bucket: self.w.classes[r.class].bucket(),
+                    arrival: r.arrival,
+                });
+                self.next_arrival = self.stream.next(&mut self.crng);
+            } else {
+                let &Reverse((t, id, class)) = self.followups.peek().unwrap();
+                if t > self.now {
+                    break;
                 }
+                self.followups.pop();
+                self.queue.push(Queued {
+                    id,
+                    class,
+                    bucket: self.w.classes[class].bucket(),
+                    arrival: t,
+                });
             }
-            depth_max = depth_max.max(queue.len());
-
-            // dispatch until no free shard selects anything
-            if n_free > 0 && !queue.is_empty() {
-                loop {
-                    let mut dispatched = false;
-                    for si in 0..self.n {
-                        if !shard_free[si] || queue.is_empty() {
-                            continue;
-                        }
-                        queue.tidy();
-                        let sel = sched.select(now, &queue, si, n_free, self.n);
-                        batch_buf.clear();
-                        match sel {
-                            Selection::Idle => {}
-                            Selection::Batch { class, take } => {
-                                queue.take_class(class, take, &mut batch_buf);
-                            }
-                            Selection::Pinned => {
-                                if let Some(q) = queue.take_shard(si) {
-                                    batch_buf.push(q);
-                                }
-                            }
-                        }
-                        if batch_buf.is_empty() {
-                            continue;
-                        }
-                        let class = batch_buf[0].class;
-                        let rt = &classes[class];
-                        let mut cost_switch = 0u64;
-                        if let Some(cur) = shards[si].class {
-                            if cur != class {
-                                cost_switch = rt.switch_cycles;
-                                switches += 1;
-                            }
-                        }
-                        // cold shard: weights staged at deploy time —
-                        // free, matching Compiled::simulate() semantics
-                        shards[si].class = Some(class);
-                        let start = now;
-                        let base = start + cost_switch + rt.first;
-                        let mut completion = base;
-                        for (j, q) in batch_buf.iter().enumerate() {
-                            let done = base + j as u64 * rt.steady;
-                            completion = done;
-                            lat.record(done - q.arrival);
-                            if closed && issued < w.requests {
-                                let id = issued;
-                                issued += 1;
-                                let next_class = w.sample_class(&mut crng);
-                                followups.push(Reverse((done + think, id, next_class)));
-                            }
-                        }
-                        active_j += rt.active_j * batch_buf.len() as f64;
-                        ops_served += rt.ops * batch_buf.len() as u64;
-                        shards[si].busy += completion - start;
-                        shard_free[si] = false;
-                        n_free -= 1;
-                        wake.push(Reverse((completion, si)));
-                        batches += 1;
-                        makespan = makespan.max(completion);
-                        dispatched = true;
-                    }
-                    if !dispatched || n_free == 0 {
-                        break;
-                    }
-                }
-            }
-
-            // advance to the next event; every candidate is strictly in
-            // the future (everything due was admitted or woken above),
-            // so time always progresses
-            let next_arr = match (&next_arrival, followups.peek()) {
-                (Some(r), Some(&Reverse((t, _, _)))) => Some(r.arrival.min(t)),
-                (Some(r), None) => Some(r.arrival),
-                (None, Some(&Reverse((t, _, _)))) => Some(t),
-                (None, None) => None,
-            };
-            let next_wake = wake.peek().map(|&Reverse((t, _))| t);
-            let next = match (next_arr, next_wake) {
-                (None, None) => break,
-                (Some(a), None) => a,
-                (None, Some(f)) => f,
-                (Some(a), Some(f)) => a.min(f),
-            };
-            // time-weighted depth: the queue holds len() requests for
-            // the whole [now, next) interval
-            depth_cycles += queue.len() as u128 * (next - now) as u128;
-            now = next;
         }
+    }
 
-        let served = lat.count() as usize;
-        let mean_latency_cycles = lat.mean();
-        let total_time = now.max(1);
-        let sec = makespan.max(1) as f64 / freq;
-        let energy_j = active_j + energy::P_IDLE_W * sec * self.n as f64;
-        Ok(ServeReport {
-            scheduler: sched.name().to_string(),
-            clusters: self.n,
-            offered: w.requests,
+    /// Dispatch until no free shard selects anything.
+    fn dispatch(&mut self) {
+        loop {
+            let mut dispatched = false;
+            for si in 0..self.fleet.n {
+                if !self.shard_free[si] || self.queue.is_empty() {
+                    continue;
+                }
+                self.queue.tidy();
+                let sel =
+                    self.sched.select(self.now, &self.queue, si, self.n_free, self.fleet.n);
+                self.batch_buf.clear();
+                match sel {
+                    Selection::Idle => {}
+                    Selection::Batch { class, take } => {
+                        self.queue.take_class(class, take, &mut self.batch_buf);
+                    }
+                    Selection::Pinned => {
+                        if let Some(q) = self.queue.take_shard(si) {
+                            self.batch_buf.push(q);
+                        }
+                    }
+                }
+                if self.batch_buf.is_empty() {
+                    continue;
+                }
+                let class = self.batch_buf[0].class;
+                let rt = &self.classes[class];
+                // DVFS: service cycles scale by the clock ratio
+                // (identity at the base point), energy by V²
+                let (first, steady, switch_cost, escale) = match &self.control {
+                    Some(c) => {
+                        let fb = OPERATING_POINTS[c.base_op].freq_hz as u64;
+                        let fo = OPERATING_POINTS[c.op_index].freq_hz as u64;
+                        (
+                            scale_cycles(rt.first, fb, fo),
+                            scale_cycles(rt.steady, fb, fo),
+                            scale_cycles(rt.switch_cycles, fb, fo),
+                            OPERATING_POINTS[c.op_index].energy_scale(),
+                        )
+                    }
+                    None => (rt.first, rt.steady, rt.switch_cycles, 1.0),
+                };
+                let mut cost_switch = 0u64;
+                if self.shards[si].restage {
+                    // waking re-staged the weights: pay the staging DMA
+                    // whatever class runs next (not a class switch)
+                    self.shards[si].restage = false;
+                    cost_switch = switch_cost;
+                } else if let Some(cur) = self.shards[si].class {
+                    if cur != class {
+                        cost_switch = switch_cost;
+                        self.switches += 1;
+                    }
+                }
+                let mut penalty = 0u64;
+                if self.shards[si].dvfs_penalty {
+                    self.shards[si].dvfs_penalty = false;
+                    penalty = DVFS_TRANSITION_CYCLES;
+                }
+                // cold shard: weights staged at deploy time —
+                // free, matching Compiled::simulate() semantics
+                self.shards[si].class = Some(class);
+                let start = self.now;
+                let base = start + penalty + cost_switch + first;
+                let mut completion = base;
+                for (j, q) in self.batch_buf.iter().enumerate() {
+                    let done = base + j as u64 * steady;
+                    completion = done;
+                    self.lat.record(done - q.arrival);
+                    if let Some(ctl) = &mut self.control {
+                        ctl.window.record(done - q.arrival);
+                    }
+                    if self.closed && self.issued < self.w.requests {
+                        let id = self.issued;
+                        self.issued += 1;
+                        let next_class = self.w.sample_class(&mut self.crng);
+                        self.followups.push(Reverse((done + self.think, id, next_class)));
+                    }
+                }
+                let batch_j = rt.active_j * self.batch_buf.len() as f64;
+                self.active_j += batch_j;
+                if let Some(ctl) = &mut self.control {
+                    ctl.active_j_scaled += batch_j * escale;
+                    ctl.window.add_active_j(batch_j * escale);
+                }
+                self.ops_served += rt.ops * self.batch_buf.len() as u64;
+                self.shards[si].busy += completion - start;
+                self.shard_free[si] = false;
+                self.n_free -= 1;
+                self.wake.push(Reverse((completion, si)));
+                self.batches += 1;
+                self.makespan = self.makespan.max(completion);
+                dispatched = true;
+            }
+            if !dispatched || self.n_free == 0 {
+                break;
+            }
+        }
+    }
+
+    /// Move the clock to `t`, integrating the time-weighted metrics
+    /// over `[now, t)`. Splitting one interval at a pause point is
+    /// exact: the integrals are integer-valued.
+    fn advance_to(&mut self, t: u64) {
+        let d = t - self.now;
+        self.depth_cycles += self.queue.len() as u128 * d as u128;
+        if let Some(ctl) = &mut self.control {
+            let busy = self.fleet.n - self.n_free - ctl.n_parked;
+            ctl.window.advance(d, busy, self.queue.len());
+            let alive = (self.fleet.n - ctl.n_parked) as f64;
+            ctl.idle_j += OPERATING_POINTS[ctl.op_index].idle_power_w()
+                * (d as f64 / self.freq)
+                * alive;
+        }
+        self.now = t;
+    }
+
+    /// Close the current metrics window, let `controller` decide, and
+    /// apply its action at this window boundary.
+    pub fn control_decide(&mut self, controller: &mut dyn Controller) {
+        let state = {
+            let Some(ctl) = &self.control else { return };
+            ControlState {
+                now_cycles: self.now,
+                op_index: ctl.op_index,
+                parked: ctl.n_parked,
+                shards: self.fleet.n,
+                queue_depth: self.queue.len(),
+            }
+        };
+        let action = {
+            let queue_depth = self.queue.len();
+            let n = self.fleet.n;
+            let ctl = self.control.as_mut().unwrap();
+            let alive = n - ctl.n_parked;
+            let snap =
+                ctl.window.close(state.now_cycles, alive, queue_depth, ctl.op_index, ctl.n_parked);
+            let action = controller.decide(&snap, &state);
+            ctl.windows.push(snap);
+            ctl.next_decision = ctl.next_decision.saturating_add(ctl.cadence);
+            action
+        };
+        self.apply(action);
+    }
+
+    /// Clamp and apply a control action: switch the operating point
+    /// (penalty on every awake shard's next dispatch) and park/wake
+    /// shards (park free shards only, highest index first; wake lowest
+    /// first, owing a weight re-stage; one shard always stays awake).
+    fn apply(&mut self, action: ControlAction) {
+        let n = self.fleet.n;
+        let Some(ctl) = &mut self.control else { return };
+        let op = action.op_index.min(OPERATING_POINTS.len() - 1);
+        if op != ctl.op_index {
+            ctl.op_index = op;
+            ctl.dvfs_transitions += 1;
+            ctl.deviated = true;
+            for si in 0..n {
+                if !ctl.parked[si] {
+                    self.shards[si].dvfs_penalty = true;
+                }
+            }
+        }
+        let want = action.parked.min(n.saturating_sub(1));
+        while ctl.n_parked < want {
+            // busy shards finish their batch and stay awake until a
+            // later decision finds them free
+            let found =
+                (0..n).rev().find(|&si| !ctl.parked[si] && self.shard_free[si]);
+            let Some(si) = found else { break };
+            ctl.parked[si] = true;
+            ctl.n_parked += 1;
+            self.shard_free[si] = false;
+            self.n_free -= 1;
+            ctl.parks += 1;
+            ctl.deviated = true;
+        }
+        while ctl.n_parked > want {
+            let si = (0..n).find(|&si| ctl.parked[si]).unwrap();
+            ctl.parked[si] = false;
+            ctl.n_parked -= 1;
+            self.shard_free[si] = true;
+            self.n_free += 1;
+            self.shards[si].restage = true;
+            ctl.wakes += 1;
+            ctl.deviated = true;
+        }
+    }
+
+    /// Finish an uncontrolled run: the report of the pre-refactor
+    /// loop, field for field.
+    pub fn finish(mut self) -> ServeReport {
+        self.build_report(None)
+    }
+
+    /// Finish a controlled run, attaching the [`ControlSummary`].
+    pub fn finish_controlled(mut self, controller: &dyn Controller) -> ServeReport {
+        self.build_report(Some((controller.name(), controller.slo_p99_cycles())))
+    }
+
+    fn build_report(&mut self, meta: Option<(&str, Option<u64>)>) -> ServeReport {
+        // close the trailing partial window
+        if let Some(ctl) = &mut self.control {
+            if self.now > ctl.window.start() {
+                let alive = self.fleet.n - ctl.n_parked;
+                let snap = ctl.window.close(
+                    self.now,
+                    alive,
+                    self.queue.len(),
+                    ctl.op_index,
+                    ctl.n_parked,
+                );
+                ctl.windows.push(snap);
+            }
+        }
+        let served = self.lat.count() as usize;
+        let mean_latency_cycles = self.lat.mean();
+        let total_time = self.now.max(1);
+        let sec = self.makespan.max(1) as f64 / self.freq;
+        let energy_static =
+            self.active_j + energy::P_IDLE_W * sec * self.fleet.n as f64;
+        // a run that never deviated from the nominal base keeps the
+        // uncontrolled closed form bit-for-bit; anything else uses the
+        // integrated per-interval accounting
+        let energy_j = match &self.control {
+            Some(ctl) if ctl.deviated || ctl.base_op != NOMINAL_INDEX => {
+                ctl.active_j_scaled + ctl.idle_j
+            }
+            _ => energy_static,
+        };
+        let p50_cycles = self.lat.percentile(0.50);
+        let p90_cycles = self.lat.percentile(0.90);
+        let p99_cycles = self.lat.percentile(0.99);
+        let control = match (&mut self.control, meta) {
+            (Some(ctl), Some((name, slo))) => Some(ControlSummary {
+                controller: name.to_string(),
+                cadence_cycles: ctl.cadence,
+                windows: std::mem::take(&mut ctl.windows),
+                dvfs_transitions: ctl.dvfs_transitions,
+                parks: ctl.parks,
+                wakes: ctl.wakes,
+                slo_p99_cycles: slo,
+                slo_met: slo.map(|s| p99_cycles <= s),
+                energy_j_static: energy_static,
+                energy_saved_j: energy_static - energy_j,
+            }),
+            _ => None,
+        };
+        ServeReport {
+            scheduler: self.sched.name().to_string(),
+            clusters: self.fleet.n,
+            offered: self.w.requests,
             served,
-            makespan_cycles: makespan,
+            makespan_cycles: self.makespan,
             seconds: sec,
             req_per_s: served as f64 / sec,
-            gops: ops_served as f64 / 1e9 / sec,
+            gops: self.ops_served as f64 / 1e9 / sec,
             energy_j,
             mj_per_req: energy_j * 1e3 / (served.max(1)) as f64,
-            gopj: ops_served as f64 / 1e9 / energy_j,
-            p50_cycles: lat.percentile(0.50),
-            p90_cycles: lat.percentile(0.90),
-            p99_cycles: lat.percentile(0.99),
+            gopj: self.ops_served as f64 / 1e9 / energy_j,
+            p50_cycles,
+            p90_cycles,
+            p99_cycles,
             mean_latency_cycles,
-            mean_queue_depth: depth_cycles as f64 / total_time as f64,
-            max_queue_depth: depth_max,
-            cluster_utilization: shards
+            mean_queue_depth: self.depth_cycles as f64 / total_time as f64,
+            max_queue_depth: self.depth_max,
+            cluster_utilization: self
+                .shards
                 .iter()
-                .map(|s| s.busy as f64 / makespan.max(1) as f64)
+                .map(|s| s.busy as f64 / self.makespan.max(1) as f64)
                 .collect(),
-            class_switches: switches,
-            batches,
-            freq_hz: freq,
-        })
+            class_switches: self.switches,
+            batches: self.batches,
+            freq_hz: self.freq,
+            control,
+        }
     }
 }
 
@@ -484,6 +910,129 @@ mod tests {
         );
         assert_eq!(a.makespan_cycles, b.makespan_cycles);
         assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+    }
+
+    #[test]
+    fn steppable_engine_matches_one_shot_serve() {
+        // drive the engine through many arbitrary pause points and
+        // check the report is bit-identical to the one-shot drain —
+        // pausing between events must be observationally free
+        let classes =
+            vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&DINOV2S, 1)];
+        let w = Workload::poisson(classes, 250.0, 600, 0xA11CE);
+        let f = fleet(2);
+        let whole = f.serve(&w, &mut DynamicBatch::default()).unwrap();
+
+        let mut sched = DynamicBatch::default();
+        let mut engine = ServeEngine::new(&f, &w, &mut sched).unwrap();
+        let mut t = 0u64;
+        loop {
+            t += 1_700_000; // ~4ms slices, deliberately unaligned
+            if !engine.run_until(t) {
+                break;
+            }
+        }
+        assert!(engine.is_done());
+        let stepped = engine.finish();
+
+        assert_eq!(whole.served, stepped.served);
+        assert_eq!(whole.makespan_cycles, stepped.makespan_cycles);
+        assert_eq!(whole.batches, stepped.batches);
+        assert_eq!(whole.class_switches, stepped.class_switches);
+        assert_eq!(whole.p50_cycles, stepped.p50_cycles);
+        assert_eq!(whole.p99_cycles, stepped.p99_cycles);
+        assert_eq!(whole.max_queue_depth, stepped.max_queue_depth);
+        assert_eq!(whole.energy_j.to_bits(), stepped.energy_j.to_bits());
+        assert_eq!(
+            whole.mean_queue_depth.to_bits(),
+            stepped.mean_queue_depth.to_bits(),
+            "pausing must split the depth integral exactly"
+        );
+        assert_eq!(
+            whole.mean_latency_cycles.to_bits(),
+            stepped.mean_latency_cycles.to_bits()
+        );
+        assert!(whole.control.is_none() && stepped.control.is_none());
+    }
+
+    #[test]
+    fn static_nominal_controller_is_a_provable_no_op() {
+        use crate::serve::control::{StaticNominal, DEFAULT_CONTROL_CADENCE_CYCLES};
+        let classes = vec![RequestClass::new(&MOBILEBERT, 1)];
+        let w = Workload::diurnal(classes, 300.0, 0.7, 0.5, 500, 0xD1A);
+        let f = fleet(2);
+        let plain = f.serve(&w, &mut Fifo).unwrap();
+        let ctl = f
+            .serve_controlled(
+                &w,
+                &mut Fifo,
+                &mut StaticNominal,
+                DEFAULT_CONTROL_CADENCE_CYCLES,
+                NOMINAL_INDEX,
+            )
+            .unwrap();
+        assert_eq!(plain.served, ctl.served);
+        assert_eq!(plain.makespan_cycles, ctl.makespan_cycles);
+        assert_eq!(plain.batches, ctl.batches);
+        assert_eq!(plain.class_switches, ctl.class_switches);
+        assert_eq!(plain.p99_cycles, ctl.p99_cycles);
+        assert_eq!(plain.energy_j.to_bits(), ctl.energy_j.to_bits());
+        assert_eq!(plain.mean_queue_depth.to_bits(), ctl.mean_queue_depth.to_bits());
+        let summary = ctl.control.expect("controlled run must attach a summary");
+        assert_eq!(summary.controller, "static-nominal");
+        assert_eq!(summary.dvfs_transitions, 0);
+        assert_eq!(summary.parks, 0);
+        assert_eq!(summary.wakes, 0);
+        assert_eq!(summary.energy_saved_j.to_bits(), 0.0f64.to_bits());
+        assert!(
+            !summary.windows.is_empty(),
+            "a multi-second run must close at least one 10ms window"
+        );
+        assert!(plain.control.is_none());
+    }
+
+    #[test]
+    fn slo_dvfs_saves_energy_on_a_diurnal_lull() {
+        use crate::serve::control::{SloDvfs, DEFAULT_CONTROL_CADENCE_CYCLES};
+        let classes = vec![RequestClass::new(&MOBILEBERT, 1)];
+        // ~200 rps average against ~1560 inf/s of nominal capacity:
+        // deep lulls the controller can spend at a lower corner
+        let w = Workload::diurnal(classes, 200.0, 0.8, 0.5, 400, 0x10AD);
+        let f = fleet(2);
+        let freq = ClusterConfig::default().freq_hz;
+        let run = |f: &Fleet| {
+            f.serve_controlled(
+                &w,
+                &mut Fifo,
+                &mut SloDvfs::from_ms(50.0, freq),
+                DEFAULT_CONTROL_CADENCE_CYCLES,
+                NOMINAL_INDEX,
+            )
+            .unwrap()
+        };
+        let r = run(&f);
+        let summary = r.control.as_ref().unwrap();
+        assert_eq!(summary.controller, "slo-dvfs");
+        assert!(summary.dvfs_transitions >= 1, "an underloaded run must downshift");
+        assert_eq!(summary.slo_met, Some(true), "p99 {} cycles", r.p99_cycles);
+        assert!(
+            r.energy_j < summary.energy_j_static,
+            "DVFS must beat static nominal: {} !< {}",
+            r.energy_j,
+            summary.energy_j_static
+        );
+        assert!(
+            (summary.energy_saved_j - (summary.energy_j_static - r.energy_j)).abs()
+                < 1e-12
+        );
+        // same seed, same decisions, bit for bit
+        let again = run(&f);
+        assert_eq!(r.energy_j.to_bits(), again.energy_j.to_bits());
+        assert_eq!(r.p99_cycles, again.p99_cycles);
+        assert_eq!(
+            summary.windows.len(),
+            again.control.as_ref().unwrap().windows.len()
+        );
     }
 
     #[test]

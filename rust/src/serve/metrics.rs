@@ -1,5 +1,7 @@
-//! Serving metrics: the [`ServeReport`], its percentile machinery, and
-//! the bounded-memory [`LatencyStore`].
+//! Serving metrics: the [`ServeReport`], its percentile machinery, the
+//! bounded-memory [`LatencyStore`], and the rolling
+//! [`MetricsWindow`] / [`WindowSnapshot`] pair the online control plane
+//! samples mid-run.
 //!
 //! The store is what lets a million-request serve run keep O(1) memory
 //! for latency accounting: up to [`EXACT_CAP`] samples it is a plain
@@ -168,6 +170,158 @@ impl LatencyStore {
     }
 }
 
+/// One closed metrics window: the cheap mid-run snapshot a
+/// [`super::control::Controller`] decides on, and the record streamed
+/// to `serve --metrics-out`. All quantities cover exactly
+/// `[start_cycles, end_cycles)` of simulated time.
+#[derive(Debug, Clone)]
+pub struct WindowSnapshot {
+    /// Window ordinal, 0-based.
+    pub index: usize,
+    /// Window bounds in fleet cycles (half-open).
+    pub start_cycles: u64,
+    pub end_cycles: u64,
+    /// Requests completed inside the window.
+    pub completed: u64,
+    /// Latency percentiles over the window's completions, cycles
+    /// (0 when nothing completed).
+    pub p50_cycles: u64,
+    pub p99_cycles: u64,
+    /// Busy shard-cycles / (unparked shards x window cycles): the
+    /// fleet's busy fraction over the window.
+    pub utilization: f64,
+    /// Time-weighted mean queue depth over the window.
+    pub mean_queue_depth: f64,
+    /// Instantaneous queue depth at window close.
+    pub queue_depth: usize,
+    /// Active (dispatch) energy charged inside the window, J.
+    pub active_j: f64,
+    /// FD-SOI operating-point index in force at window close.
+    pub op_index: usize,
+    /// Parked shards at window close.
+    pub parked: usize,
+}
+
+/// Rolling accumulator behind [`WindowSnapshot`]: a per-window
+/// [`LatencyStore`] plus exact integer busy/depth integrals. The serve
+/// engine feeds it at the same points it feeds the run-level metrics,
+/// so a window costs O(1) per event on top of the uncontrolled loop.
+#[derive(Debug, Clone)]
+pub struct MetricsWindow {
+    start: u64,
+    index: usize,
+    lat: LatencyStore,
+    busy_cycles: u128,
+    depth_cycles: u128,
+    active_j: f64,
+}
+
+impl MetricsWindow {
+    pub fn new(start: u64) -> MetricsWindow {
+        MetricsWindow {
+            start,
+            index: 0,
+            lat: LatencyStore::new(),
+            busy_cycles: 0,
+            depth_cycles: 0,
+            active_j: 0.0,
+        }
+    }
+
+    /// Start of the currently open window, cycles.
+    pub fn start(&self) -> u64 {
+        self.start
+    }
+
+    /// Record one completion latency into the current window.
+    pub fn record(&mut self, latency_cycles: u64) {
+        self.lat.record(latency_cycles);
+    }
+
+    /// Integrate `dcycles` of simulated time with `busy` busy shards
+    /// and `depth` queued requests.
+    pub fn advance(&mut self, dcycles: u64, busy: usize, depth: usize) {
+        self.busy_cycles += busy as u128 * dcycles as u128;
+        self.depth_cycles += depth as u128 * dcycles as u128;
+    }
+
+    /// Charge active dispatch energy to the current window.
+    pub fn add_active_j(&mut self, j: f64) {
+        self.active_j += j;
+    }
+
+    /// Close the window at `end`, emit its snapshot, and reset the
+    /// accumulator for the next window (which starts at `end`).
+    pub fn close(
+        &mut self,
+        end: u64,
+        alive_shards: usize,
+        queue_depth: usize,
+        op_index: usize,
+        parked: usize,
+    ) -> WindowSnapshot {
+        let span = end.saturating_sub(self.start);
+        let denom = alive_shards as u128 * span as u128;
+        let snap = WindowSnapshot {
+            index: self.index,
+            start_cycles: self.start,
+            end_cycles: end,
+            completed: self.lat.count(),
+            p50_cycles: self.lat.percentile(0.50),
+            p99_cycles: self.lat.percentile(0.99),
+            utilization: if denom == 0 {
+                0.0
+            } else {
+                self.busy_cycles as f64 / denom as f64
+            },
+            mean_queue_depth: if span == 0 {
+                0.0
+            } else {
+                self.depth_cycles as f64 / span as f64
+            },
+            queue_depth,
+            active_j: self.active_j,
+            op_index,
+            parked,
+        };
+        self.start = end;
+        self.index += 1;
+        self.lat = LatencyStore::new();
+        self.busy_cycles = 0;
+        self.depth_cycles = 0;
+        self.active_j = 0.0;
+        snap
+    }
+}
+
+/// Control-plane addendum to a [`ServeReport`]: what the controller
+/// did, window by window, and what it bought against the static-nominal
+/// baseline. `None` on uncontrolled runs.
+#[derive(Debug, Clone)]
+pub struct ControlSummary {
+    /// Controller that ran (`Controller::name`).
+    pub controller: String,
+    /// Decision cadence, fleet cycles.
+    pub cadence_cycles: u64,
+    /// Closed windows, in simulated-time order.
+    pub windows: Vec<WindowSnapshot>,
+    /// Operating-point switches the controller performed.
+    pub dvfs_transitions: u64,
+    /// Shard park / wake actions performed.
+    pub parks: u64,
+    pub wakes: u64,
+    /// The p99 SLO held, if the policy declares one, cycles.
+    pub slo_p99_cycles: Option<u64>,
+    /// Whether the run-level p99 met that SLO.
+    pub slo_met: Option<bool>,
+    /// Energy the identical run costs at static nominal with no
+    /// parking (the uncontrolled closed form), J.
+    pub energy_j_static: f64,
+    /// `energy_j_static - energy_j` — positive when the control plane
+    /// saved energy.
+    pub energy_saved_j: f64,
+}
+
 /// Aggregate result of one serve run — the serving-side analogue of
 /// `coordinator::report::ModelReport`. Rendered by
 /// `coordinator::report::render_serve`.
@@ -212,6 +366,9 @@ pub struct ServeReport {
     /// Dispatches issued (batches of >= 1 request).
     pub batches: u64,
     pub freq_hz: f64,
+    /// Control-plane timeline and savings summary; `None` when the run
+    /// had no controller attached.
+    pub control: Option<ControlSummary>,
 }
 
 impl ServeReport {
@@ -339,6 +496,90 @@ mod tests {
         let mut empty = LatencyStore::new();
         assert_eq!(empty.percentile(0.5), 0);
         assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn window_close_resets_every_accumulator() {
+        let mut w = MetricsWindow::new(0);
+        w.record(100);
+        w.record(300);
+        w.advance(50, 2, 4);
+        w.add_active_j(1.5);
+        let a = w.close(1000, 2, 3, 2, 0);
+        assert_eq!(a.index, 0);
+        assert_eq!((a.start_cycles, a.end_cycles), (0, 1000));
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.active_j, 1.5);
+        assert_eq!(a.queue_depth, 3);
+        // the next window starts where the last ended, fully cleared
+        let b = w.close(2000, 2, 0, 2, 0);
+        assert_eq!(b.index, 1);
+        assert_eq!((b.start_cycles, b.end_cycles), (1000, 2000));
+        assert_eq!(b.completed, 0);
+        assert_eq!(b.p50_cycles, 0);
+        assert_eq!(b.p99_cycles, 0);
+        assert_eq!(b.active_j, 0.0);
+        assert_eq!(b.utilization, 0.0);
+        assert_eq!(b.mean_queue_depth, 0.0);
+    }
+
+    #[test]
+    fn two_window_p99_trace_matches_hand_computation() {
+        // window 0: latencies 1..=100 -> nearest-rank p99 = 99, p50 = 50
+        // window 1: latencies {1000, 2000} -> p99 = 2000, p50 = 1000
+        let mut w = MetricsWindow::new(0);
+        for v in 1..=100u64 {
+            w.record(v);
+        }
+        // 400 of 1000 cycles busy on 1 of 2 shards, depth 3 throughout
+        w.advance(400, 1, 3);
+        w.advance(600, 0, 3);
+        let first = w.close(1000, 2, 0, 2, 0);
+        assert_eq!(first.p50_cycles, 50);
+        assert_eq!(first.p99_cycles, 99);
+        assert_eq!(first.utilization, 400.0 / 2000.0);
+        assert_eq!(first.mean_queue_depth, 3.0);
+        w.record(1000);
+        w.record(2000);
+        w.advance(500, 2, 0);
+        let second = w.close(1500, 2, 0, 2, 0);
+        assert_eq!(second.p50_cycles, 1000);
+        assert_eq!(second.p99_cycles, 2000);
+        assert_eq!(second.utilization, 1.0);
+        assert_eq!(second.completed, 2);
+    }
+
+    #[test]
+    fn window_snapshots_are_deterministic_across_thread_counts() {
+        // the same event feed must close to bit-identical snapshots no
+        // matter how many OS threads compute them — windows hold no
+        // global state, so fan-out (the explorer's) cannot perturb them
+        fn run() -> Vec<(u64, u64, u64, u64, u64)> {
+            let mut w = MetricsWindow::new(0);
+            let mut out = Vec::new();
+            for i in 0..5_000u64 {
+                w.record(1 + (i * 2_654_435_761) % 1_000_000);
+                w.advance(7, (i % 3) as usize, (i % 11) as usize);
+                if i % 500 == 499 {
+                    let s = w.close((i + 1) * 7, 3, (i % 11) as usize, 2, 0);
+                    out.push((
+                        s.p50_cycles,
+                        s.p99_cycles,
+                        s.completed,
+                        s.utilization.to_bits(),
+                        s.mean_queue_depth.to_bits(),
+                    ));
+                }
+            }
+            out
+        }
+        let serial = run();
+        for threads in [2usize, 4] {
+            let handles: Vec<_> = (0..threads).map(|_| std::thread::spawn(run)).collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), serial, "{threads}-thread run diverged");
+            }
+        }
     }
 
     #[test]

@@ -47,7 +47,19 @@
 //! both paths to bit-identical [`ServeReport`]s; `benches/perf_serve`
 //! asserts the ≥10× wall-clock separation and records host-side
 //! throughput in `BENCH_perf.json`.
+//!
+//! **Steppable engine + control plane:** the serve loop is the
+//! [`ServeEngine`] — explicit state advanced one event at a time
+//! (`step` / `run_until` / `drain`), with `serve()` as a thin driver.
+//! A [`Controller`] ([`StaticNominal`], [`SloDvfs`]) attached through
+//! [`Fleet::serve_controlled`] observes windowed [`WindowSnapshot`]
+//! metrics on a fixed simulated-time cadence and may switch the FD-SOI
+//! operating point (DVFS) or park/wake shards; the run stays a pure
+//! function of (workload, geometry, scheduler, controller, cadence).
+//! `benches/control_plane` records the SLO/energy outcome in
+//! `BENCH_control.json`.
 
+pub mod control;
 pub mod fleet;
 pub mod metrics;
 pub mod naive;
@@ -55,8 +67,14 @@ pub mod queue;
 pub mod scheduler;
 pub mod workload;
 
-pub use fleet::Fleet;
-pub use metrics::{LatencyStore, ServeReport, EXACT_CAP};
+pub use control::{
+    control_by_name, ControlAction, Controller, ControlState, SloDvfs, StaticNominal,
+    DEFAULT_CONTROL_CADENCE_CYCLES, DVFS_TRANSITION_CYCLES,
+};
+pub use fleet::{Fleet, ServeEngine};
+pub use metrics::{
+    ControlSummary, LatencyStore, MetricsWindow, ServeReport, WindowSnapshot, EXACT_CAP,
+};
 pub use queue::QueueView;
 pub use scheduler::{
     by_name as scheduler_by_name, DynamicBatch, Fifo, Queued, RoundRobin, Scheduler,
@@ -64,4 +82,5 @@ pub use scheduler::{
 };
 pub use workload::{
     Arrivals, ArrivalStream, Request, RequestClass, Workload, DEFAULT_BURST_PERIOD_S,
+    DEFAULT_DIURNAL_PERIOD_S,
 };

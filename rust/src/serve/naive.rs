@@ -263,6 +263,7 @@ pub fn serve_naive(
         class_switches: switches,
         batches,
         freq_hz: freq,
+        control: None,
     })
 }
 

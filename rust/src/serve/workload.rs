@@ -7,13 +7,18 @@
 //! pure function of (workload, geometry, scheduler) and two runs with
 //! the same inputs produce bit-identical [`super::ServeReport`]s.
 //!
-//! Three arrival shapes cover the classic serving scenarios:
+//! Four arrival shapes cover the classic serving scenarios:
 //!
 //! - [`Arrivals::Poisson`] / [`Arrivals::Bursty`] — open-loop traffic.
 //!   Inter-arrival gaps are exponential (`-ln(1-u)/rate`); the bursty
 //!   variant modulates the rate with a square wave (on-half of each
 //!   period at `rate x burst_factor`, off-half at `rate / burst_factor`),
 //!   which is what makes batching schedulers earn their keep.
+//! - [`Arrivals::Diurnal`] — sinusoid-modulated Poisson,
+//!   `rate x (1 + depth·sin(2πt/period))`: the slow day/night swing the
+//!   online control plane (DVFS + shard parking) is designed to ride.
+//!   Sampled by thinning at the peak rate, which keeps the process
+//!   exact and the stream state O(1).
 //! - [`Arrivals::Trace`] — explicit `(cycle, class)` replay.
 //! - [`Arrivals::ClosedLoop`] — N clients, each issuing its next request
 //!   `think_cycles` after its previous one completes (the fleet issues
@@ -27,6 +32,12 @@ use crate::util::prng::XorShift64;
 /// value shared by the `serve` CLI and the explorer's serving rung, so
 /// both judge the same traffic shape.
 pub const DEFAULT_BURST_PERIOD_S: f64 = 0.02;
+
+/// Default period of the diurnal sinusoid, seconds. Deliberately slow
+/// against the burst period (25x) so whole control windows sit inside
+/// one phase of the swing — the regime where DVFS/parking decisions
+/// have time to pay for their transition costs.
+pub const DEFAULT_DIURNAL_PERIOD_S: f64 = 0.5;
 
 /// One request kind: a network to infer, pre-compiled once per fleet.
 /// Classes are bucketed by their padded sequence length ([`bucket`]),
@@ -66,6 +77,11 @@ pub enum Arrivals {
     /// `rate_rps / burst_factor`. Exponential memorylessness makes
     /// advance-to-boundary-and-resample sampling exact.
     Bursty { rate_rps: f64, burst_factor: f64, period_s: f64 },
+    /// Sinusoid-modulated Poisson: instantaneous rate
+    /// `rate_rps * (1 + depth * sin(2πt / period_s))` with
+    /// `0 <= depth < 1` (the rate never reaches zero). Sampled by
+    /// thinning against the peak rate `rate_rps * (1 + depth)`.
+    Diurnal { rate_rps: f64, depth: f64, period_s: f64 },
     /// Explicit replay: (arrival cycle, class index) pairs.
     Trace(Vec<(u64, usize)>),
     /// `clients` closed-loop clients; each issues its next request
@@ -114,6 +130,22 @@ impl Workload {
         Workload {
             classes,
             arrivals: Arrivals::Bursty { rate_rps, burst_factor, period_s },
+            requests,
+            seed,
+        }
+    }
+
+    pub fn diurnal(
+        classes: Vec<RequestClass>,
+        rate_rps: f64,
+        depth: f64,
+        period_s: f64,
+        requests: usize,
+        seed: u64,
+    ) -> Workload {
+        Workload {
+            classes,
+            arrivals: Arrivals::Diurnal { rate_rps, depth, period_s },
             requests,
             seed,
         }
@@ -177,6 +209,17 @@ impl Workload {
                 }
                 if !period_s.is_finite() || *period_s <= 0.0 {
                     return err(format!("burst period must be positive, got {period_s}"));
+                }
+            }
+            Arrivals::Diurnal { rate_rps, depth, period_s } => {
+                if !rate_rps.is_finite() || *rate_rps <= 0.0 {
+                    return err(format!("arrival rate must be positive, got {rate_rps}"));
+                }
+                if !depth.is_finite() || !(0.0..1.0).contains(depth) {
+                    return err(format!("diurnal depth must be in [0, 1), got {depth}"));
+                }
+                if !period_s.is_finite() || *period_s <= 0.0 {
+                    return err(format!("diurnal period must be positive, got {period_s}"));
                 }
             }
             Arrivals::Trace(entries) => {
@@ -270,6 +313,17 @@ impl Workload {
                     total: self.requests,
                 }
             }
+            Arrivals::Diurnal { rate_rps, depth, period_s } => ArrivalStream::Diurnal {
+                rng: XorShift64::new(self.seed),
+                t_s: 0.0,
+                rate_rps: *rate_rps,
+                depth: *depth,
+                period_s: *period_s,
+                freq_hz,
+                n_classes,
+                next_id: 0,
+                total: self.requests,
+            },
             Arrivals::Trace(entries) => {
                 // traces are explicit data the caller already holds;
                 // the stream only normalizes the order (stable sort:
@@ -317,6 +371,17 @@ pub enum ArrivalStream {
         t_s: f64,
         rate_rps: f64,
         burst_factor: f64,
+        period_s: f64,
+        freq_hz: f64,
+        n_classes: usize,
+        next_id: usize,
+        total: usize,
+    },
+    Diurnal {
+        rng: XorShift64,
+        t_s: f64,
+        rate_rps: f64,
+        depth: f64,
         period_s: f64,
         freq_hz: f64,
         n_classes: usize,
@@ -406,6 +471,42 @@ impl ArrivalStream {
                     }
                 }
             }
+            ArrivalStream::Diurnal {
+                rng,
+                t_s,
+                rate_rps,
+                depth,
+                period_s,
+                freq_hz,
+                n_classes,
+                next_id,
+                total,
+            } => {
+                if *next_id >= *total {
+                    return None;
+                }
+                // thinning: draw candidate gaps at the peak rate
+                // rate*(1+depth), accept with probability λ(t)/λmax —
+                // exact for an inhomogeneous Poisson process, and every
+                // draw comes from the one workload PRNG stream
+                let peak = *rate_rps * (1.0 + *depth);
+                loop {
+                    *t_s += exp_gap(rng, peak);
+                    let lambda = *rate_rps
+                        * (1.0
+                            + *depth
+                                * (2.0 * std::f64::consts::PI * *t_s / *period_s).sin());
+                    if rng.next_f64() * peak <= lambda {
+                        let id = *next_id;
+                        *next_id += 1;
+                        return Some(Request {
+                            id,
+                            class: draw(class_rng, *n_classes),
+                            arrival: (*t_s * *freq_hz).round() as u64,
+                        });
+                    }
+                }
+            }
             ArrivalStream::Trace { entries, next_id } => {
                 entries.next().map(|(arrival, class)| {
                     let id = *next_id;
@@ -474,6 +575,27 @@ mod tests {
     }
 
     #[test]
+    fn diurnal_concentrates_arrivals_in_the_high_half_of_the_sinusoid() {
+        let period = DEFAULT_DIURNAL_PERIOD_S;
+        let w = Workload::diurnal(classes(), 400.0, 0.9, period, 800, 23);
+        let a = w.seed_requests(FREQ, &mut w.class_rng());
+        assert_eq!(a.len(), 800);
+        assert!(a.windows(2).all(|p| p[0].arrival <= p[1].arrival), "sorted");
+        // sin is positive over the first half of each period: with
+        // depth 0.9 the high half carries rate x(1..1.9) against
+        // x(0.1..1), so well over half of all arrivals land there
+        let high = a
+            .iter()
+            .filter(|r| (r.arrival as f64 / FREQ).rem_euclid(period) < period / 2.0)
+            .count();
+        assert!(high > a.len() * 6 / 10, "only {high}/{} arrivals in the peak", a.len());
+        // mean rate stays near the nominal rate (the sinusoid averages
+        // out): 800 arrivals at 400 req/s ~ 2 s of stream
+        let span_s = a.last().unwrap().arrival as f64 / FREQ;
+        assert!((1.0..4.0).contains(&span_s), "span {span_s} s");
+    }
+
+    #[test]
     fn trace_sorts_and_validates_class_indices() {
         let w = Workload::trace(classes(), vec![(500, 1), (0, 0), (250, 0)]);
         assert!(w.validate().is_ok());
@@ -506,6 +628,11 @@ mod tests {
         assert!(Workload::poisson(classes(), 10.0, 0, 0).validate().is_err());
         assert!(Workload::bursty(classes(), 10.0, 0.5, 0.02, 4, 0).validate().is_err());
         assert!(Workload::closed_loop(classes(), 0, 10, 4, 0).validate().is_err());
+        assert!(Workload::diurnal(classes(), 10.0, 1.0, 0.5, 4, 0).validate().is_err());
+        assert!(Workload::diurnal(classes(), 10.0, -0.1, 0.5, 4, 0).validate().is_err());
+        assert!(Workload::diurnal(classes(), 0.0, 0.5, 0.5, 4, 0).validate().is_err());
+        assert!(Workload::diurnal(classes(), 10.0, 0.5, 0.0, 4, 0).validate().is_err());
+        assert!(Workload::diurnal(classes(), 10.0, 0.5, 0.5, 4, 0).validate().is_ok());
         let zero_layers = Workload::poisson(
             vec![RequestClass { model: MOBILEBERT.clone(), layers: 0 }],
             10.0,
@@ -522,6 +649,7 @@ mod tests {
         let workloads = vec![
             Workload::poisson(classes(), 150.0, 100, 3),
             Workload::bursty(classes(), 250.0, 6.0, 0.02, 100, 9),
+            Workload::diurnal(classes(), 300.0, 0.7, 0.5, 100, 13),
             Workload::trace(classes(), vec![(500, 1), (0, 0), (250, 0), (250, 1)]),
             Workload::closed_loop(classes(), 5, 1000, 50, 17),
         ];

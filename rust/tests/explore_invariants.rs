@@ -34,6 +34,7 @@ fn eval(index: usize, gopj: f64, gops: f64, p99: f64, mm2: f64) -> Evaluation {
             fuse: true,
             fleet: 1,
             scheduler: "fifo",
+            control: false,
         },
         fidelity: Fidelity::Screen,
         gops,

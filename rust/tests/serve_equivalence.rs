@@ -1,14 +1,22 @@
-//! The optimization changed no observable result: the optimized serve
-//! loop (bucketed QueueView + streamed arrivals + wake heap + bounded
-//! LatencyStore) and the retained pre-optimization loop
-//! (`serve::naive`) produce **bit-identical** `ServeReport`s on
-//! randomized small workloads, across all three built-in schedulers,
-//! fleet sizes 1–4, and every arrival process.
+//! The refactors changed no observable result: the steppable engine
+//! (`ServeEngine` behind `Fleet::serve`, bucketed QueueView + streamed
+//! arrivals + wake heap + bounded LatencyStore) and the retained
+//! pre-optimization loop (`serve::naive`) produce **bit-identical**
+//! `ServeReport`s on randomized small workloads, across all three
+//! built-in schedulers, fleet sizes 1–4, and every arrival process
+//! (poisson, bursty, trace, closed-loop, diurnal). The same matrix
+//! also propchecks that attaching the `StaticNominal` controller is a
+//! provable no-op: every core report field stays bit-identical, only
+//! the `control` summary block appears.
 
 use attn_tinyml::deeploy::Target;
+use attn_tinyml::energy::operating_point::NOMINAL_INDEX;
 use attn_tinyml::models::{DINOV2S, MOBILEBERT};
 use attn_tinyml::serve::naive::{serve_naive, NaivePolicy};
-use attn_tinyml::serve::{scheduler_by_name, Fleet, RequestClass, ServeReport, Workload};
+use attn_tinyml::serve::{
+    scheduler_by_name, Fleet, RequestClass, ServeReport, StaticNominal, Workload,
+    DEFAULT_CONTROL_CADENCE_CYCLES,
+};
 use attn_tinyml::sim::ClusterConfig;
 use attn_tinyml::util::prng::XorShift64;
 use attn_tinyml::util::propcheck::{check, Config};
@@ -82,14 +90,49 @@ fn workload_for(kind: usize, rate: f64, requests: usize, seed: u64) -> Workload 
                 .collect();
             Workload::trace(classes(), entries)
         }
-        _ => Workload::closed_loop(
+        3 => Workload::closed_loop(
             classes(),
             1 + (seed % 5) as usize,
             (seed % 100_000).max(1),
             requests,
             seed,
         ),
+        _ => Workload::diurnal(classes(), rate, 0.8, 0.1, requests, seed),
     }
+}
+
+/// `StaticNominal` at the default cadence must be a provable no-op:
+/// every core field of the report stays bit-identical to the
+/// uncontrolled run; only the `control` summary block appears.
+fn static_nominal_is_noop(
+    fleet: &Fleet,
+    w: &Workload,
+    name: &str,
+    opt: &ServeReport,
+) -> Result<(), String> {
+    let mut sched = scheduler_by_name(name).unwrap();
+    let mut ctl = StaticNominal;
+    let controlled = fleet
+        .serve_controlled(w, sched.as_mut(), &mut ctl, DEFAULT_CONTROL_CADENCE_CYCLES, NOMINAL_INDEX)
+        .map_err(|e| format!("controlled serve failed: {e}"))?;
+    reports_identical(&controlled, opt).map_err(|e| format!("static-nominal deviated: {e}"))?;
+    if opt.control.is_some() {
+        return Err("uncontrolled run carries a control summary".into());
+    }
+    let summary = controlled
+        .control
+        .as_ref()
+        .ok_or("controlled run lost its control summary")?;
+    if summary.controller != "static-nominal" {
+        return Err(format!("wrong controller name: {}", summary.controller));
+    }
+    if summary.dvfs_transitions != 0 || summary.parks != 0 || summary.wakes != 0 {
+        return Err("static-nominal actuated something".into());
+    }
+    if summary.energy_saved_j.to_bits() != 0.0f64.to_bits() {
+        return Err(format!("phantom energy delta: {}", summary.energy_saved_j));
+    }
+    Ok(())
 }
 
 #[test]
@@ -99,7 +142,7 @@ fn optimized_and_naive_loops_are_bit_identical() {
             1 + rng.next_below(24) as usize,        // requests
             1 + rng.next_below(4) as usize,         // clusters 1..=4
             rng.next_below(3) as usize,             // scheduler
-            rng.next_below(4) as usize,             // arrival kind
+            rng.next_below(5) as usize,             // arrival kind
             50.0 * (1 + rng.next_below(20)) as f64, // rate req/s
             rng.next_u64(),                         // workload seed
         )
@@ -140,6 +183,8 @@ fn optimized_and_naive_loops_are_bit_identical() {
                 .serve(&w, sched.as_mut())
                 .map_err(|e| format!("optimized serve failed: {e}"))?;
             reports_identical(&opt, &naive)
+                .map_err(|e| format!("{name}/{kind} x{requests} on {clusters}: {e}"))?;
+            static_nominal_is_noop(&fleet, &w, name, &opt)
                 .map_err(|e| format!("{name}/{kind} x{requests} on {clusters}: {e}"))
         },
     );
@@ -157,6 +202,8 @@ fn equivalence_holds_under_sustained_backlog() {
         let mut sched = scheduler_by_name(name).unwrap();
         let opt = fleet.serve(&w, sched.as_mut()).unwrap();
         reports_identical(&opt, &naive).unwrap_or_else(|e| panic!("{name}: {e}"));
+        static_nominal_is_noop(&fleet, &w, name, &opt)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
         assert!(opt.max_queue_depth >= 8, "{name}: workload failed to backlog");
     }
 }
