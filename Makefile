@@ -17,6 +17,14 @@
 #                    strictly lowers J/request on the diurnal leg)
 #   make control-bench  the full control-plane bench (15k requests per
 #                    leg); regenerates BENCH_control.json
+#   make trace-smoke    trace-replay smoke run (CI guard): generate a
+#                    10k-row 9:1-skew trace with `trace gen`, serve it
+#                    under the wfq scheduler, then run the fairness
+#                    bench in assert mode (Wfq/Drf hold Jain >= 0.95 at
+#                    the overload horizon, Fifo collapses below 0.75)
+#   make trace-bench    the full fairness bench (20k-row horizon legs +
+#                    million-row streaming leg); regenerates
+#                    BENCH_trace.json
 #   make explore-smoke  design-space exploration smoke run: tiny grid,
 #                    2 operating points — the CLI errors out on an
 #                    empty frontier, so a green run asserts one exists
@@ -33,7 +41,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench serve-smoke perf-smoke perf-bench control-smoke control-bench explore-smoke explore-bench artifacts check lint fmt clean
+.PHONY: build test bench serve-smoke perf-smoke perf-bench control-smoke control-bench trace-smoke trace-bench explore-smoke explore-bench artifacts check lint fmt clean
 
 build:
 	$(CARGO) build --release
@@ -59,6 +67,14 @@ control-smoke:
 
 control-bench:
 	$(CARGO) bench --bench control_plane
+
+trace-smoke: build
+	$(CARGO) run --release -- trace gen --rows 10000 --skew --out target/trace-smoke.csv
+	$(CARGO) run --release -- serve --trace target/trace-smoke.csv --clusters 2 --scheduler wfq
+	TRACE_FAIRNESS_SMOKE=1 $(CARGO) bench --bench trace_fairness
+
+trace-bench:
+	$(CARGO) bench --bench trace_fairness
 
 explore-smoke: build
 	$(CARGO) run --release -- explore --space tiny --strategy grid --budget 8 --seed 7

@@ -1,0 +1,263 @@
+//! Multi-tenant fairness on the bundled datacenter-trace scenario:
+//! Fifo versus the fairness-aware schedulers (`Wfq`, `Drf`) on the 9:1
+//! two-tenant overload trace from `trace::skewed_two_tenant`.
+//!
+//! A drained run serves every offered request, so end-of-run counts
+//! always mirror the offered 9:1 mix regardless of scheduler. Fairness
+//! is therefore measured **mid-overload**: each run is frozen at a
+//! fixed simulated horizon with `ServeEngine::run_until` and judged on
+//! what was delivered by then. Asserts, in both full and smoke mode:
+//!
+//! - `Wfq` and `Drf` hold a Jain index **>= 0.95** over delivered
+//!   per-tenant throughput while both tenants are backlogged,
+//! - `Fifo` — arrival order mirrors the skew — scores **< 0.75**,
+//! - the minority tenant's p99 under the fair policies stays within
+//!   **2x the fair-share baseline** (its rows alone on half the fleet),
+//! - a fixed seed reproduces every run **bit-for-bit**.
+//!
+//! Full mode additionally streams a million-row generated trace from
+//! disk through the O(1) reader (wall-clock printed, not recorded) and
+//! writes the scenario record into `BENCH_trace.json`. The JSON holds
+//! simulated quantities only, so the file is byte-reproducible.
+//!
+//!     cargo bench --bench trace_fairness                   # full + record
+//!     TRACE_FAIRNESS_SMOKE=1 cargo bench --bench trace_fairness  # CI smoke
+//!
+//! See DESIGN.md §10 for the trace contract and the fairness model.
+
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::energy::operating_point::NOMINAL_FREQ_HZ;
+use attn_tinyml::models::MOBILEBERT;
+use attn_tinyml::serve::{
+    Drf, Fifo, Fleet, RequestClass, Scheduler, ServeEngine, ServeReport, Wfq, Workload,
+};
+use attn_tinyml::sim::ClusterConfig;
+use attn_tinyml::trace::{generate, skewed_two_tenant, symmetric, write_csv, TraceEntry};
+use attn_tinyml::util::bench::section;
+use attn_tinyml::util::json::Json;
+
+const CLUSTERS: usize = 2;
+/// Aggregate offered rate: ~8x the two-cluster capacity (~1560 inf/s of
+/// single-layer MobileBERT), so even the 10% minority tenant exceeds
+/// its fair half-share and both tenants stay backlogged at the horizon.
+const RATE_RPS: f64 = 12_000.0;
+const SEED: u64 = 0xFA1;
+
+fn classes() -> Vec<RequestClass> {
+    vec![RequestClass::new(&MOBILEBERT, 1)]
+}
+
+fn class_seq() -> Vec<usize> {
+    classes().iter().map(|c| c.bucket()).collect()
+}
+
+fn fleet(n: usize) -> Fleet {
+    Fleet::new(ClusterConfig::default(), Target::MultiCoreIta, n)
+}
+
+/// Freeze the run at `horizon` cycles and report what was delivered.
+fn report_at(
+    fleet: &Fleet,
+    w: &Workload,
+    sched: &mut dyn Scheduler,
+    horizon: u64,
+) -> ServeReport {
+    let mut engine = ServeEngine::new(fleet, w, sched).expect("engine builds");
+    engine.run_until(horizon);
+    engine.finish()
+}
+
+/// Bit identity of everything the fairness record is built from.
+fn assert_bit_identical(label: &str, a: &ServeReport, b: &ServeReport) {
+    assert_eq!(a.served, b.served, "{label}: served");
+    assert_eq!(a.makespan_cycles, b.makespan_cycles, "{label}: makespan");
+    assert_eq!(a.p99_cycles, b.p99_cycles, "{label}: p99");
+    assert_eq!(
+        a.fairness_jain.to_bits(),
+        b.fairness_jain.to_bits(),
+        "{label}: fairness_jain"
+    );
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{label}: tenant count");
+    for (x, y) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(x.served, y.served, "{label}: tenant {} served", x.tenant);
+        assert_eq!(x.p99_cycles, y.p99_cycles, "{label}: tenant {} p99", x.tenant);
+        assert_eq!(
+            x.dominant_share.to_bits(),
+            y.dominant_share.to_bits(),
+            "{label}: tenant {} dominant share",
+            x.tenant
+        );
+    }
+}
+
+fn leg_json(r: &ServeReport, base_p99_ms: f64) -> Json {
+    let t = &r.tenants;
+    Json::obj(vec![
+        ("scheduler", Json::str(&r.scheduler)),
+        ("served", Json::num(r.served as f64)),
+        ("fairness_jain", Json::num(r.fairness_jain)),
+        ("majority_served", Json::num(t[0].served as f64)),
+        ("minority_served", Json::num(t[1].served as f64)),
+        ("majority_p99_ms", Json::num(r.latency_ms(t[0].p99_cycles))),
+        ("minority_p99_ms", Json::num(r.latency_ms(t[1].p99_cycles))),
+        ("minority_p99_vs_fair_share", Json::num(r.latency_ms(t[1].p99_cycles) / base_p99_ms)),
+        ("majority_dominant_share", Json::num(t[0].dominant_share)),
+        ("minority_dominant_share", Json::num(t[1].dominant_share)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::var("TRACE_FAIRNESS_SMOKE").is_ok();
+    let rows = if smoke { 4_000 } else { 20_000 };
+    // late enough for hundreds (full mode: thousands) of completions,
+    // early enough that the trace is still arriving and backlogged
+    let horizon_s = if smoke { 0.2 } else { 1.0 };
+    let horizon = (horizon_s * NOMINAL_FREQ_HZ) as u64;
+
+    section(&format!(
+        "trace fairness: 9:1 skew, {rows} rows at {RATE_RPS} req/s on {CLUSTERS} clusters, horizon {horizon_s} s{}",
+        if smoke { " (smoke)" } else { "" }
+    ));
+
+    let entries = generate(skewed_two_tenant(rows, RATE_RPS, &class_seq(), SEED)).unwrap();
+    let w = Workload::trace_entries(classes(), entries.clone());
+    let f = fleet(CLUSTERS);
+
+    // warm the compiled-deployment cache
+    report_at(&f, &w, &mut Fifo, horizon / 64);
+
+    // fair-share baseline: the minority tenant's rows alone on 1 of the
+    // 2 clusters — the service a hard partition would give it
+    let minority: Vec<TraceEntry> =
+        entries.iter().copied().filter(|e| e.tenant == 1).collect();
+    let alone = Workload::trace_entries(classes(), minority);
+    let baseline = report_at(&fleet(1), &alone, &mut Fifo, horizon);
+    let base_p99 = baseline.tenants[1].p99_cycles;
+    let base_p99_ms = baseline.latency_ms(base_p99);
+    assert!(base_p99 > 0, "fair-share baseline served nothing by the horizon");
+
+    let fifo = report_at(&f, &w, &mut Fifo, horizon);
+    let wfq = report_at(&f, &w, &mut Wfq::default(), horizon);
+    let drf = report_at(&f, &w, &mut Drf::default(), horizon);
+
+    println!(
+        "{:>10} {:>8} {:>8} {:>10} {:>12} {:>12}",
+        "scheduler", "served", "jain", "min:maj", "min p99 ms", "vs fair"
+    );
+    for r in [&fifo, &wfq, &drf] {
+        println!(
+            "{:>10} {:>8} {:>8.4} {:>4}:{:<5} {:>12.3} {:>11.2}x",
+            r.scheduler,
+            r.served,
+            r.fairness_jain,
+            r.tenants[1].served,
+            r.tenants[0].served,
+            r.latency_ms(r.tenants[1].p99_cycles),
+            r.latency_ms(r.tenants[1].p99_cycles) / base_p99_ms,
+        );
+    }
+
+    // the acceptance bounds BENCH_trace.json documents
+    for r in [&fifo, &wfq, &drf] {
+        assert!(r.served > 100, "{}: only {} served by the horizon", r.scheduler, r.served);
+        assert!(r.served < r.offered, "{}: overload drained early", r.scheduler);
+    }
+    assert!(wfq.fairness_jain >= 0.95, "wfq jain {}", wfq.fairness_jain);
+    assert!(drf.fairness_jain >= 0.95, "drf jain {}", drf.fairness_jain);
+    assert!(fifo.fairness_jain < 0.75, "fifo jain {}", fifo.fairness_jain);
+    for r in [&wfq, &drf] {
+        assert!(
+            r.tenants[1].p99_cycles <= 2 * base_p99,
+            "{}: minority p99 {} vs fair-share baseline {base_p99}",
+            r.scheduler,
+            r.tenants[1].p99_cycles
+        );
+    }
+
+    // same seed, bit-identical rerun — fairness scheduling sits inside
+    // the determinism contract, not outside it
+    assert_bit_identical("fifo rerun", &report_at(&f, &w, &mut Fifo, horizon), &fifo);
+    assert_bit_identical("wfq rerun", &report_at(&f, &w, &mut Wfq::default(), horizon), &wfq);
+    assert_bit_identical("drf rerun", &report_at(&f, &w, &mut Drf::default(), horizon), &drf);
+
+    // --- streaming leg (full mode): a million rows from disk ---------------
+    let stream_leg = if smoke {
+        println!("\nsmoke mode: skipping the million-row streaming leg");
+        None
+    } else {
+        const STREAM_ROWS: usize = 1_000_000;
+        section(&format!(
+            "streaming: {STREAM_ROWS} generated rows from disk through the O(1) reader"
+        ));
+        let path = std::env::temp_dir().join("attn_tinyml_bench_trace.csv");
+        let mut buf = Vec::new();
+        write_csv(
+            &mut buf,
+            generate(symmetric(STREAM_ROWS, 2, 1_000.0, &class_seq(), SEED)).unwrap(),
+        )
+        .unwrap();
+        std::fs::write(&path, &buf).unwrap();
+        drop(buf);
+
+        let sw = Workload::trace_file(classes(), &path).unwrap();
+        let t0 = std::time::Instant::now();
+        let r = fleet(CLUSTERS).serve(&sw, &mut Wfq::default()).unwrap();
+        let host_s = t0.elapsed().as_secs_f64();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(r.served, STREAM_ROWS, "streaming run dropped rows");
+        assert!(
+            r.max_queue_depth < 1_024,
+            "under-capacity stream built a backlog: {}",
+            r.max_queue_depth
+        );
+        println!(
+            "served {} rows in {host_s:.2} s host time ({:.0} rows/s), max queue depth {}",
+            r.served,
+            r.served as f64 / host_s,
+            r.max_queue_depth
+        );
+        // wall-clock is printed, not recorded: the JSON stays
+        // byte-reproducible for a fixed seed
+        Some(Json::obj(vec![
+            ("rows", Json::num(STREAM_ROWS as f64)),
+            ("served", Json::num(r.served as f64)),
+            ("max_queue_depth", Json::num(r.max_queue_depth as f64)),
+            ("fairness_jain", Json::num(r.fairness_jain)),
+        ]))
+    };
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("trace_fairness")),
+        ("smoke", Json::Bool(smoke)),
+        ("clusters", Json::num(CLUSTERS as f64)),
+        ("rows", Json::num(rows as f64)),
+        ("rate_rps", Json::num(RATE_RPS)),
+        ("tenant_weights", Json::Arr(vec![Json::num(9.0), Json::num(1.0)])),
+        ("seed", Json::num(SEED as f64)),
+        ("horizon_s", Json::num(horizon_s)),
+        ("fair_share_baseline_p99_ms", Json::num(base_p99_ms)),
+        (
+            "legs",
+            Json::Arr(vec![
+                leg_json(&fifo, base_p99_ms),
+                leg_json(&wfq, base_p99_ms),
+                leg_json(&drf, base_p99_ms),
+            ]),
+        ),
+        (
+            "stream",
+            stream_leg.unwrap_or(Json::Null),
+        ),
+    ]);
+    // smoke runs only assert — they must not clobber the committed
+    // full-run record with reduced-count numbers
+    if smoke {
+        println!("\nsmoke mode: BENCH_trace.json left untouched (run `make trace-bench` to record)");
+        return;
+    }
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_trace.json");
+    match std::fs::write(out, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

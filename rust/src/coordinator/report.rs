@@ -162,6 +162,23 @@ pub fn render_serve(r: &ServeReport) -> String {
         "dispatches   : {} batches, {} class switches\n",
         r.batches, r.class_switches
     ));
+    // per-tenant fairness block — only multi-tenant (trace) runs carry
+    // more than one tenant, so single-tenant output is unchanged
+    if r.tenants.len() > 1 {
+        s.push_str(&format!("fairness     : Jain {:.4}\n", r.fairness_jain));
+        s.push_str("tenant       :   id   served    req/s    p50ms    p99ms  domshare\n");
+        for t in &r.tenants {
+            s.push_str(&format!(
+                "               {:>4} {:>8} {:>8.1} {:>8.2} {:>8.2} {:>9.3}\n",
+                t.tenant,
+                t.served,
+                t.req_per_s,
+                r.latency_ms(t.p50_cycles),
+                r.latency_ms(t.p99_cycles),
+                t.dominant_share
+            ));
+        }
+    }
     if let Some(c) = &r.control {
         s.push_str(&format!(
             "control      : {} every {:.1} ms ({} windows, {} DVFS transitions, \
@@ -330,6 +347,29 @@ mod tests {
             assert!(text.contains(needle), "missing {needle} in:\n{text}");
         }
         assert!(text.contains("1 served of 1 offered"), "{text}");
+        // single-tenant runs keep the pre-trace layout: no fairness block
+        assert!(!text.contains("fairness"), "{text}");
+        assert!(!text.contains("tenant"), "{text}");
+    }
+
+    #[test]
+    fn render_serve_adds_the_tenant_table_on_multi_tenant_runs() {
+        use crate::serve::{RequestClass, Wfq};
+        use crate::trace::TraceEntry;
+        let e = |cycle, tenant| TraceEntry { cycle, tenant, class: 0, seq_len: 128 };
+        let w = Workload::trace_entries(
+            vec![RequestClass::new(&MOBILEBERT, 1)],
+            vec![e(0, 0), e(0, 1), e(5, 0), e(9, 1)],
+        );
+        let r = Pipeline::new(ClusterConfig::default())
+            .fleet(1)
+            .serve_with(&w, &mut Wfq::default())
+            .unwrap();
+        let text = render_serve(&r);
+        for needle in ["wfq scheduler", "fairness     : Jain", "tenant       :", "domshare"]
+        {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
     }
 
     #[test]

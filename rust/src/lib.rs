@@ -17,7 +17,10 @@
 //!   compiled-deployment caching), the multi-request [`serve`]
 //!   subsystem (workloads, schedulers, sharded cluster fleets) that
 //!   makes single-inference `simulate()` the degenerate serving case,
-//!   and the [`explore`] subsystem — deterministic design-space
+//!   the [`trace`] subsystem — datacenter-trace replay (streaming
+//!   CSV/JSONL reader, seeded generator) feeding multi-tenant fair
+//!   serving with per-tenant SLO accounting — and the [`explore`]
+//!   subsystem — deterministic design-space
 //!   exploration over the template (geometry × FD-SOI operating point ×
 //!   deployment × serving axes) with Pareto frontiers for GOp/J, GOp/s,
 //!   p99 latency and mm² — driven by the `coordinator` and CLI.
@@ -38,6 +41,7 @@ pub mod pipeline;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 pub use pipeline::{Compiled, Pipeline};

@@ -4,6 +4,7 @@
 //!   table1              reproduce the paper's Table I (all networks)
 //!   simulate            one network/target: latency, energy, utilization
 //!   serve               multi-request serving on a cluster fleet
+//!   trace               generate seeded multi-tenant arrival traces (CSV/JSONL)
 //!   explore             design-space exploration: Pareto frontier over the template
 //!   micro               microbenchmarks (Section V-A): GEMM + attention
 //!   verify              golden-check the runtime backend vs the rust ITA model
@@ -17,6 +18,8 @@
 //!   attn-tinyml serve --requests 64 --arrival-rate 200 --clusters 4 --scheduler batch
 //!   attn-tinyml serve --requests 1000000 --arrival-rate 50000 --clusters 8 --scheduler batch --burst 8
 //!   attn-tinyml serve --arrival diurnal --requests 20000 --clusters 4 --control slo-dvfs --slo-p99-ms 10 --metrics-out windows.jsonl
+//!   attn-tinyml trace gen --rows 10000 --skew --out trace.csv
+//!   attn-tinyml serve --trace trace.csv --clusters 2 --scheduler wfq
 //!   attn-tinyml serve --help
 //!   attn-tinyml explore --space default --strategy halving --budget 16 --seed 7
 //!   attn-tinyml explore --space full --strategy halving --budget 24 --objectives gopj,mm2
@@ -36,13 +39,18 @@ use attn_tinyml::serve::{
     WindowSnapshot, Workload, DEFAULT_BURST_PERIOD_S, DEFAULT_DIURNAL_PERIOD_S,
 };
 use attn_tinyml::sim::{ClusterConfig, Cmd, Engine, Step};
+use attn_tinyml::trace::{
+    generate, skewed_two_tenant, symmetric, write_csv, write_jsonl, TraceFormat,
+};
 use attn_tinyml::util::cli::Args;
 use attn_tinyml::util::json::Json;
 
 type Result<T> = std::result::Result<T, RuntimeError>;
 
-const SUBCOMMANDS: [&str; 8] =
-    ["table1", "simulate", "serve", "explore", "micro", "verify", "deploy", "export"];
+const SUBCOMMANDS: [&str; 9] = [
+    "table1", "simulate", "serve", "trace", "explore", "micro", "verify", "deploy",
+    "export",
+];
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -51,6 +59,7 @@ fn main() -> Result<()> {
         Some("table1") => cmd_table1(),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
         Some("explore") => cmd_explore(&args),
         Some("micro") => cmd_micro(),
         Some("verify") => cmd_verify(&args),
@@ -91,6 +100,31 @@ fn target_flag(args: &Args) -> Target {
     match args.flag_or("target", "ita").as_str() {
         "multicore" | "mc" => Target::MultiCore,
         _ => Target::MultiCoreIta,
+    }
+}
+
+/// Request-class universe from `--model` / `--layers`: `mix` (the
+/// default) compiles all three evaluation networks as classes 0..2,
+/// a single model name compiles one class. Shared by `serve` (request
+/// pricing) and `trace gen` (per-class seq-len column).
+fn classes_flag(args: &Args, layers: usize) -> Result<Vec<RequestClass>> {
+    match args.flag_or("model", "mix").as_str() {
+        "mix" => {
+            Ok(models::ALL_MODELS.iter().map(|m| RequestClass::new(m, layers)).collect())
+        }
+        name => {
+            let cfg = models::by_name(name).ok_or_else(|| {
+                RuntimeError::Usage(format!(
+                    "unknown model {name}; available: mix, {}",
+                    models::ALL_MODELS
+                        .iter()
+                        .map(|m| m.name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })?;
+            Ok(vec![RequestClass::new(cfg, layers)])
+        }
     }
 }
 
@@ -186,8 +220,15 @@ multi-request serving on a fleet of identical clusters
                       (implies --arrival bursty)
   --depth D           diurnal modulation depth in [0, 1) (default 0.8)
   --period-ms MS      diurnal sinusoid period (default 500)
+  --trace PATH        replay a multi-tenant arrival trace (CSV or JSONL,
+                      see `attn-tinyml trace --help`) instead of a
+                      synthetic arrival shape; --requests/--arrival-rate
+                      are ignored, tenants come from the trace rows
   --clusters N        fleet size (default 1)
-  --scheduler S       fifo | rr | batch (default fifo)
+  --scheduler S       fifo | rr | batch | wfq | drf (default fifo;
+                      wfq = per-tenant weighted-fair queueing, drf =
+                      dominant-share fairness — both matter under
+                      multi-tenant traces)
   --model M           mix = all three evaluation networks (default),
                       or one of mobilebert | dinov2s | whisper_tiny_enc
   --layers N          encoder blocks per request class (default 1)
@@ -208,7 +249,9 @@ the report includes latency percentiles (exact up to 8192 served
 requests, log2-linear histogram with sub-1% relative error beyond),
 time-weighted queue depth, host-side simulation throughput, and — when
 a controller is attached — the per-window control timeline with the
-energy saved against the static-nominal baseline
+energy saved against the static-nominal baseline. multi-tenant runs
+add a per-tenant table (served, req/s, p50/p99, dominant share) and
+Jain's fairness index over delivered throughput
 ";
 
 /// One metrics window as a compact JSON object (one `--metrics-out`
@@ -229,6 +272,10 @@ fn window_json(w: &WindowSnapshot) -> Json {
         ("active_j", Json::num(w.active_j)),
         ("op_index", Json::num(w.op_index as f64)),
         ("parked", Json::num(w.parked as f64)),
+        (
+            "tenant_completed",
+            Json::Arr(w.tenant_completed.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
     ])
 }
 
@@ -247,42 +294,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sched_name = args.flag_or("scheduler", "fifo");
     let mut sched = scheduler_by_name(&sched_name).ok_or_else(|| {
         RuntimeError::Usage(format!(
-            "unknown scheduler {sched_name}; available: fifo, rr, batch"
+            "unknown scheduler {sched_name}; available: fifo, rr, batch, wfq, drf"
         ))
     })?;
-    let classes: Vec<RequestClass> = match args.flag_or("model", "mix").as_str() {
-        "mix" => models::ALL_MODELS.iter().map(|m| RequestClass::new(m, layers)).collect(),
-        name => {
-            let cfg = models::by_name(name).ok_or_else(|| {
-                RuntimeError::Usage(format!(
-                    "unknown model {name}; available: mix, {}",
-                    models::ALL_MODELS.iter().map(|m| m.name).collect::<Vec<_>>().join(", ")
-                ))
-            })?;
-            vec![RequestClass::new(cfg, layers)]
-        }
-    };
+    let classes = classes_flag(args, layers)?;
     let arrival_default = if args.has("burst") { "bursty" } else { "poisson" };
-    let workload = match args.flag_or("arrival", arrival_default).as_str() {
-        "poisson" => Workload::poisson(classes, rate, requests, seed),
-        "bursty" => {
-            let factor = match args.flag("burst") {
-                Some(raw) => raw.parse::<f64>().map_err(|_| {
-                    RuntimeError::Usage(format!("--burst expects a number, got {raw:?}"))
-                })?,
-                None => 8.0,
-            };
-            Workload::bursty(classes, rate, factor, DEFAULT_BURST_PERIOD_S, requests, seed)
-        }
-        "diurnal" => {
-            let depth = args.flag_f64("depth", 0.8);
-            let period_s = args.flag_f64("period-ms", DEFAULT_DIURNAL_PERIOD_S * 1e3) / 1e3;
-            Workload::diurnal(classes, rate, depth, period_s, requests, seed)
-        }
-        other => {
-            return Err(RuntimeError::Usage(format!(
-                "unknown arrival kind {other}; available: poisson, bursty, diurnal"
-            )))
+    let workload = if let Some(path) = args.flag("trace") {
+        Workload::trace_file(classes, std::path::PathBuf::from(path))?
+    } else {
+        match args.flag_or("arrival", arrival_default).as_str() {
+            "poisson" => Workload::poisson(classes, rate, requests, seed),
+            "bursty" => {
+                let factor = match args.flag("burst") {
+                    Some(raw) => raw.parse::<f64>().map_err(|_| {
+                        RuntimeError::Usage(format!(
+                            "--burst expects a number, got {raw:?}"
+                        ))
+                    })?,
+                    None => 8.0,
+                };
+                Workload::bursty(
+                    classes,
+                    rate,
+                    factor,
+                    DEFAULT_BURST_PERIOD_S,
+                    requests,
+                    seed,
+                )
+            }
+            "diurnal" => {
+                let depth = args.flag_f64("depth", 0.8);
+                let period_s =
+                    args.flag_f64("period-ms", DEFAULT_DIURNAL_PERIOD_S * 1e3) / 1e3;
+                Workload::diurnal(classes, rate, depth, period_s, requests, seed)
+            }
+            other => {
+                return Err(RuntimeError::Usage(format!(
+                    "unknown arrival kind {other}; available: poisson, bursty, diurnal"
+                )))
+            }
         }
     };
     let slo_ms = args.flag_f64("slo-p99-ms", 10.0);
@@ -316,6 +366,74 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::fs::write(&path, lines)?;
         println!("wrote {} window snapshots to {path}", summary.windows.len());
     }
+    Ok(())
+}
+
+/// Seeded multi-tenant trace generation.
+const TRACE_HELP: &str = "\
+usage: attn-tinyml trace gen [--flags]
+
+generate a seeded, deterministic multi-tenant arrival trace — serving
+runs and CI never need external datacenter data. rows are
+`cycle,tenant,class,seq_len`, non-decreasing in cycle; replay with
+`attn-tinyml serve --trace PATH --scheduler wfq`
+
+  --out PATH      output file (default trace.csv; a .jsonl/.ndjson/.json
+                  extension writes JSON lines, anything else CSV)
+  --rows N        rows to generate (default 10000)
+  --tenants N     symmetric tenants with equal arrival weights
+                  (default 2)
+  --skew          two tenants at 9:1 arrival weights instead of
+                  symmetric — the fairness benchmark's overload shape
+  --rate RPS      aggregate arrival rate across tenants (default 2000)
+  --model M       mix (default) or one model name: defines the class
+                  universe the rows draw from
+  --layers N      encoder blocks per request class (default 1)
+  --seed S        generator seed (default 48879)
+
+the same (flags, seed) always writes a byte-identical file
+";
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{TRACE_HELP}");
+        return Ok(());
+    }
+    if args.positional.first().map(String::as_str) != Some("gen") {
+        return Err(RuntimeError::Usage(
+            "trace expects the `gen` action; try \
+             `attn-tinyml trace gen --rows 10000 --skew --out trace.csv` \
+             (or trace --help)"
+                .to_string(),
+        ));
+    }
+    let rows = args.flag_usize("rows", 10_000);
+    let rate = args.flag_f64("rate", 2_000.0);
+    let seed = seed_flag(args, 48879)?;
+    let layers = args.flag_usize("layers", 1);
+    let classes = classes_flag(args, layers)?;
+    let class_seq: Vec<usize> = classes.iter().map(|c| c.bucket()).collect();
+    let spec = if args.has("skew") {
+        skewed_two_tenant(rows, rate, &class_seq, seed)
+    } else {
+        symmetric(rows, args.flag_usize("tenants", 2), rate, &class_seq, seed)
+    };
+    let tenants = spec.tenant_weights.len();
+    let entries = generate(spec)?;
+    let out = args.flag_or("out", "trace.csv");
+    let path = std::path::Path::new(&out);
+    let mut buf = Vec::new();
+    match TraceFormat::from_path(path) {
+        TraceFormat::Csv => write_csv(&mut buf, entries.iter().copied())?,
+        TraceFormat::Jsonl => write_jsonl(&mut buf, entries.iter().copied())?,
+    }
+    std::fs::write(path, &buf)?;
+    println!(
+        "wrote {} rows ({} tenants, {} classes) to {out}",
+        entries.len(),
+        tenants,
+        class_seq.len()
+    );
     Ok(())
 }
 

@@ -99,7 +99,8 @@ use crate::sim::ClusterConfig;
 
 use super::control::{ControlAction, ControlState, Controller, DVFS_TRANSITION_CYCLES};
 use super::metrics::{
-    ControlSummary, LatencyStore, MetricsWindow, ServeReport, WindowSnapshot,
+    jain, ControlSummary, LatencyStore, MetricsWindow, ServeReport, TenantSummary,
+    WindowSnapshot,
 };
 use super::queue::QueueView;
 use super::scheduler::{Queued, Scheduler, Selection};
@@ -277,6 +278,13 @@ pub struct ServeEngine<'a> {
     n_free: usize,
     wake: BinaryHeap<Reverse<(u64, usize)>>,
     lat: LatencyStore,
+    /// Per-tenant latency stores (index = tenant id), sized to the
+    /// workload's tenant universe and grown on demand — the stores are
+    /// order-independent, which keeps the per-tenant percentiles
+    /// bit-identical between this loop and the naive reference.
+    lat_by_tenant: Vec<LatencyStore>,
+    /// Per-tenant simulated ops served (the DRF work dimension).
+    ops_by_tenant: Vec<u64>,
     depth_cycles: u128,
     depth_max: usize,
     switches: u64,
@@ -321,12 +329,14 @@ impl<'a> ServeEngine<'a> {
             issued: w.seed_count(),
             closed: w.is_closed_loop(),
             think: w.think_cycles(),
-            queue: QueueView::new(w.classes.len(), fleet.n),
+            queue: QueueView::new(w.classes.len(), fleet.n, w.n_tenants()),
             shards: vec![Shard::default(); fleet.n],
             shard_free: vec![true; fleet.n],
             n_free: fleet.n,
             wake: BinaryHeap::new(),
             lat: LatencyStore::new(),
+            lat_by_tenant: vec![LatencyStore::new(); w.n_tenants()],
+            ops_by_tenant: vec![0; w.n_tenants()],
             depth_cycles: 0,
             depth_max: 0,
             switches: 0,
@@ -473,6 +483,7 @@ impl<'a> ServeEngine<'a> {
                     class: r.class,
                     bucket: self.w.classes[r.class].bucket(),
                     arrival: r.arrival,
+                    tenant: r.tenant,
                 });
                 self.next_arrival = self.stream.next(&mut self.crng);
             } else {
@@ -481,11 +492,14 @@ impl<'a> ServeEngine<'a> {
                     break;
                 }
                 self.followups.pop();
+                // closed-loop follow-ons are single-tenant by
+                // construction (traces are open-loop)
                 self.queue.push(Queued {
                     id,
                     class,
                     bucket: self.w.classes[class].bucket(),
                     arrival: t,
+                    tenant: 0,
                 });
             }
         }
@@ -507,6 +521,9 @@ impl<'a> ServeEngine<'a> {
                     Selection::Idle => {}
                     Selection::Batch { class, take } => {
                         self.queue.take_class(class, take, &mut self.batch_buf);
+                    }
+                    Selection::TenantBatch { tenant, class, take } => {
+                        self.queue.take_tenant_class(tenant, class, take, &mut self.batch_buf);
                     }
                     Selection::Pinned => {
                         if let Some(q) = self.queue.take_shard(si) {
@@ -561,8 +578,14 @@ impl<'a> ServeEngine<'a> {
                     let done = base + j as u64 * steady;
                     completion = done;
                     self.lat.record(done - q.arrival);
+                    if q.tenant >= self.lat_by_tenant.len() {
+                        self.lat_by_tenant.resize(q.tenant + 1, LatencyStore::new());
+                        self.ops_by_tenant.resize(q.tenant + 1, 0);
+                    }
+                    self.lat_by_tenant[q.tenant].record(done - q.arrival);
+                    self.ops_by_tenant[q.tenant] += rt.ops;
                     if let Some(ctl) = &mut self.control {
-                        ctl.window.record(done - q.arrival);
+                        ctl.window.record_tenant(done - q.arrival, q.tenant);
                     }
                     if self.closed && self.issued < self.w.requests {
                         let id = self.issued;
@@ -725,6 +748,8 @@ impl<'a> ServeEngine<'a> {
         let p50_cycles = self.lat.percentile(0.50);
         let p90_cycles = self.lat.percentile(0.90);
         let p99_cycles = self.lat.percentile(0.99);
+        let (tenants, fairness_jain) =
+            tenant_summaries(&mut self.lat_by_tenant, &self.ops_by_tenant, sec);
         let control = match (&mut self.control, meta) {
             (Some(ctl), Some((name, slo))) => Some(ControlSummary {
                 controller: name.to_string(),
@@ -765,10 +790,45 @@ impl<'a> ServeEngine<'a> {
                 .collect(),
             class_switches: self.switches,
             batches: self.batches,
+            tenants,
+            fairness_jain,
             freq_hz: self.freq,
             control,
         }
     }
+}
+
+/// Fold the per-tenant latency stores and op counters into the
+/// [`TenantSummary`] vec and Jain index of a [`ServeReport`]. Shared
+/// with the retained naive loop — identical arithmetic in identical
+/// order is what makes the per-tenant report bit-identical between the
+/// two paths.
+pub(crate) fn tenant_summaries(
+    stores: &mut [LatencyStore],
+    ops: &[u64],
+    seconds: f64,
+) -> (Vec<TenantSummary>, f64) {
+    let total_req: u64 = stores.iter().map(|s| s.count()).sum();
+    let total_ops: u64 = ops.iter().sum();
+    let mut tenants = Vec::with_capacity(stores.len());
+    for (t, store) in stores.iter_mut().enumerate() {
+        let served = store.count();
+        let req_share =
+            if total_req == 0 { 0.0 } else { served as f64 / total_req as f64 };
+        let ops_share =
+            if total_ops == 0 { 0.0 } else { ops[t] as f64 / total_ops as f64 };
+        tenants.push(TenantSummary {
+            tenant: t,
+            served: served as usize,
+            req_per_s: served as f64 / seconds,
+            p50_cycles: store.percentile(0.50),
+            p99_cycles: store.percentile(0.99),
+            mean_latency_cycles: store.mean(),
+            dominant_share: req_share.max(ops_share),
+        });
+    }
+    let delivered: Vec<f64> = tenants.iter().map(|t| t.served as f64).collect();
+    (tenants, jain(&delivered))
 }
 
 #[cfg(test)]
@@ -841,6 +901,43 @@ mod tests {
             r.makespan_cycles > sum_first,
             "switch DMA must add cycles: {} <= {sum_first}",
             r.makespan_cycles
+        );
+    }
+
+    #[test]
+    fn single_tenant_runs_report_one_summary_and_perfect_fairness() {
+        let classes = vec![RequestClass::new(&MOBILEBERT, 1)];
+        let w = Workload::poisson(classes, 100.0, 50, 0xFA1);
+        let r = fleet(1).serve(&w, &mut Fifo).unwrap();
+        assert_eq!(r.tenants.len(), 1);
+        assert_eq!(r.fairness_jain.to_bits(), 1.0f64.to_bits());
+        let t = &r.tenants[0];
+        assert_eq!(t.tenant, 0);
+        assert_eq!(t.served, r.served);
+        assert_eq!(t.p99_cycles, r.p99_cycles);
+        assert_eq!(t.req_per_s.to_bits(), r.req_per_s.to_bits());
+        assert_eq!(t.dominant_share.to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn tenant_tags_split_the_report_per_tenant() {
+        use crate::trace::TraceEntry;
+        let classes = vec![RequestClass::new(&MOBILEBERT, 1)];
+        let e = |cycle, tenant| TraceEntry { cycle, tenant, class: 0, seq_len: 128 };
+        let w = Workload::trace_entries(
+            classes,
+            vec![e(0, 0), e(0, 1), e(10, 0), e(20, 1)],
+        );
+        let r = fleet(1).serve(&w, &mut Fifo).unwrap();
+        assert_eq!(r.served, 4);
+        assert_eq!(r.tenants.len(), 2);
+        assert_eq!(r.tenants[0].served, 2);
+        assert_eq!(r.tenants[1].served, 2);
+        // even delivery -> perfect Jain, and equal dominant shares
+        assert_eq!(r.fairness_jain.to_bits(), 1.0f64.to_bits());
+        assert_eq!(
+            r.tenants[0].dominant_share.to_bits(),
+            r.tenants[1].dominant_share.to_bits()
         );
     }
 

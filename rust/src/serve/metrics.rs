@@ -3,6 +3,14 @@
 //! [`MetricsWindow`] / [`WindowSnapshot`] pair the online control plane
 //! samples mid-run.
 //!
+//! Multi-tenant runs (trace replay tags every request with a tenant id)
+//! additionally carry one [`TenantSummary`] per tenant — its own
+//! `LatencyStore` percentiles, delivered throughput, and dominant
+//! share — plus [`jain`]'s fairness index over delivered per-tenant
+//! throughput. Single-tenant runs report one summary and a Jain index
+//! of exactly 1.0, and every legacy arrival shape is single-tenant by
+//! construction, so the pre-trace reports are unchanged.
+//!
 //! The store is what lets a million-request serve run keep O(1) memory
 //! for latency accounting: up to [`EXACT_CAP`] samples it is a plain
 //! `Vec<u64>` (sorted once at query time — small runs, and every
@@ -170,6 +178,45 @@ impl LatencyStore {
     }
 }
 
+/// Jain's fairness index over per-tenant delivered throughput:
+/// `(Σx)² / (n · Σx²)`. 1.0 means perfectly even service, `1/n` means
+/// one tenant got everything. Degenerate inputs (no tenants, or nothing
+/// delivered at all) report 1.0 — an empty system is trivially fair.
+pub fn jain(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    sum * sum / (xs.len() as f64 * sq)
+}
+
+/// Per-tenant slice of a [`ServeReport`]: the same latency/throughput
+/// accounting the run-level report carries, restricted to one tenant's
+/// completions. Built from a per-tenant [`LatencyStore`], so the
+/// percentiles obey the same exact-below-[`EXACT_CAP`] /
+/// sub-1%-beyond contract.
+#[derive(Debug, Clone)]
+pub struct TenantSummary {
+    /// Tenant id (trace column `tenant`; 0 for every legacy workload).
+    pub tenant: usize,
+    /// Requests of this tenant served.
+    pub served: usize,
+    /// Served requests per second of makespan.
+    pub req_per_s: f64,
+    /// Latency percentiles over this tenant's completions, cycles.
+    pub p50_cycles: u64,
+    pub p99_cycles: u64,
+    pub mean_latency_cycles: f64,
+    /// DRF-style dominant share: the larger of this tenant's share of
+    /// served requests and its share of simulated ops. In `[0, 1]`;
+    /// 1.0 for the single-tenant degenerate case.
+    pub dominant_share: f64,
+}
+
 /// One closed metrics window: the cheap mid-run snapshot a
 /// [`super::control::Controller`] decides on, and the record streamed
 /// to `serve --metrics-out`. All quantities cover exactly
@@ -200,6 +247,12 @@ pub struct WindowSnapshot {
     pub op_index: usize,
     /// Parked shards at window close.
     pub parked: usize,
+    /// Completions inside the window split by tenant id (index =
+    /// tenant), grown on demand as tenants complete. Sums to
+    /// `completed` when every completion went through
+    /// [`MetricsWindow::record_tenant`]; empty when a window closed
+    /// with no completions.
+    pub tenant_completed: Vec<u64>,
 }
 
 /// Rolling accumulator behind [`WindowSnapshot`]: a per-window
@@ -214,6 +267,7 @@ pub struct MetricsWindow {
     busy_cycles: u128,
     depth_cycles: u128,
     active_j: f64,
+    tenant_completed: Vec<u64>,
 }
 
 impl MetricsWindow {
@@ -225,6 +279,7 @@ impl MetricsWindow {
             busy_cycles: 0,
             depth_cycles: 0,
             active_j: 0.0,
+            tenant_completed: Vec::new(),
         }
     }
 
@@ -236,6 +291,17 @@ impl MetricsWindow {
     /// Record one completion latency into the current window.
     pub fn record(&mut self, latency_cycles: u64) {
         self.lat.record(latency_cycles);
+    }
+
+    /// Record one completion latency, attributed to `tenant`. The
+    /// per-tenant counter grows on demand, so the window never needs to
+    /// know the tenant universe upfront.
+    pub fn record_tenant(&mut self, latency_cycles: u64, tenant: usize) {
+        self.lat.record(latency_cycles);
+        if tenant >= self.tenant_completed.len() {
+            self.tenant_completed.resize(tenant + 1, 0);
+        }
+        self.tenant_completed[tenant] += 1;
     }
 
     /// Integrate `dcycles` of simulated time with `busy` busy shards
@@ -283,6 +349,7 @@ impl MetricsWindow {
             active_j: self.active_j,
             op_index,
             parked,
+            tenant_completed: std::mem::take(&mut self.tenant_completed),
         };
         self.start = end;
         self.index += 1;
@@ -365,6 +432,13 @@ pub struct ServeReport {
     pub class_switches: u64,
     /// Dispatches issued (batches of >= 1 request).
     pub batches: u64,
+    /// Per-tenant slice of the run, one entry per tenant id in the
+    /// workload's tenant universe (a single entry for every legacy
+    /// single-tenant arrival shape).
+    pub tenants: Vec<TenantSummary>,
+    /// Jain's fairness index over per-tenant served counts
+    /// ([`jain`]); exactly 1.0 for single-tenant runs.
+    pub fairness_jain: f64,
     pub freq_hz: f64,
     /// Control-plane timeline and savings summary; `None` when the run
     /// had no controller attached.
@@ -496,6 +570,37 @@ mod tests {
         let mut empty = LatencyStore::new();
         assert_eq!(empty.percentile(0.5), 0);
         assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn jain_matches_hand_values() {
+        // perfectly even -> 1.0, bit for bit
+        assert_eq!(jain(&[5.0, 5.0, 5.0]).to_bits(), 1.0f64.to_bits());
+        assert_eq!(jain(&[42.0]).to_bits(), 1.0f64.to_bits());
+        // one tenant starved of n -> 1/n
+        let skew = jain(&[10.0, 0.0]);
+        assert!((skew - 0.5).abs() < 1e-12, "{skew}");
+        // 9:1 split -> (10)^2 / (2 * 82) ~ 0.6098
+        let nine_one = jain(&[9.0, 1.0]);
+        assert!((nine_one - 100.0 / 164.0).abs() < 1e-12, "{nine_one}");
+        // degenerate inputs are trivially fair
+        assert_eq!(jain(&[]).to_bits(), 1.0f64.to_bits());
+        assert_eq!(jain(&[0.0, 0.0]).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn record_tenant_splits_the_window_count() {
+        let mut w = MetricsWindow::new(0);
+        w.record_tenant(100, 0);
+        w.record_tenant(200, 2); // grows past the unseen tenant 1
+        w.record_tenant(300, 0);
+        let snap = w.close(1000, 1, 0, 2, 0);
+        assert_eq!(snap.completed, 3);
+        assert_eq!(snap.tenant_completed, vec![2, 0, 1]);
+        // the close reset the per-tenant counters with everything else
+        w.record_tenant(50, 1);
+        let next = w.close(2000, 1, 0, 2, 0);
+        assert_eq!(next.tenant_completed, vec![0, 1]);
     }
 
     #[test]

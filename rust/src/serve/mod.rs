@@ -58,6 +58,17 @@
 //! function of (workload, geometry, scheduler, controller, cadence).
 //! `benches/control_plane` records the SLO/energy outcome in
 //! `BENCH_control.json`.
+//!
+//! **Multi-tenant fairness:** trace replay ([`crate::trace`]) tags every
+//! request with a tenant id, the queue keeps per-(tenant, class) rings,
+//! and two fairness-aware schedulers — weighted-fair queueing ([`Wfq`],
+//! per-tenant virtual time) and a DRF-style dominant-share policy
+//! ([`Drf`]) — dispatch across tenants. Reports carry one
+//! [`TenantSummary`] per tenant plus [`metrics::jain`]'s fairness index
+//! over delivered throughput; every legacy arrival shape is
+//! single-tenant (tenant 0) and reports exactly as before.
+//! `benches/trace_fairness` records the fairness outcome in
+//! `BENCH_trace.json`.
 
 pub mod control;
 pub mod fleet;
@@ -73,12 +84,13 @@ pub use control::{
 };
 pub use fleet::{Fleet, ServeEngine};
 pub use metrics::{
-    ControlSummary, LatencyStore, MetricsWindow, ServeReport, WindowSnapshot, EXACT_CAP,
+    jain, ControlSummary, LatencyStore, MetricsWindow, ServeReport, TenantSummary,
+    WindowSnapshot, EXACT_CAP,
 };
 pub use queue::QueueView;
 pub use scheduler::{
-    by_name as scheduler_by_name, DynamicBatch, Fifo, Queued, RoundRobin, Scheduler,
-    Selection,
+    by_name as scheduler_by_name, Drf, DynamicBatch, Fifo, Queued, RoundRobin,
+    Scheduler, Selection, Wfq,
 };
 pub use workload::{
     Arrivals, ArrivalStream, Request, RequestClass, Workload, DEFAULT_BURST_PERIOD_S,

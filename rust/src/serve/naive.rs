@@ -29,7 +29,7 @@ use std::collections::BinaryHeap;
 use crate::deeploy::DeployError;
 use crate::energy;
 
-use super::fleet::{class_runtimes, Fleet};
+use super::fleet::{class_runtimes, tenant_summaries, Fleet};
 use super::metrics::{LatencyStore, ServeReport};
 use super::scheduler::Queued;
 use super::workload::Workload;
@@ -117,11 +117,12 @@ pub fn serve_naive(
     let freq = fleet.cluster.freq_hz;
     let classes = class_runtimes(fleet, w)?;
 
-    // upfront materialization: the whole arrival stream into one heap
+    // upfront materialization: the whole arrival stream into one heap.
+    // (arrival, id) is unique, so the trailing tenant never orders.
     let mut crng = w.class_rng();
     let seeds = w.seed_requests(freq, &mut crng);
-    let mut heap: BinaryHeap<Reverse<(u64, usize, usize)>> =
-        seeds.iter().map(|r| Reverse((r.arrival, r.id, r.class))).collect();
+    let mut heap: BinaryHeap<Reverse<(u64, usize, usize, usize)>> =
+        seeds.iter().map(|r| Reverse((r.arrival, r.id, r.class, r.tenant))).collect();
     let mut issued = seeds.len();
     let closed = w.is_closed_loop();
     let think = w.think_cycles();
@@ -129,6 +130,8 @@ pub fn serve_naive(
     let mut queue: Vec<Queued> = Vec::new();
     let mut shards: Vec<Shard> = vec![Shard::default(); fleet.n];
     let mut lat = LatencyStore::new();
+    let mut lat_by_tenant = vec![LatencyStore::new(); w.n_tenants()];
+    let mut ops_by_tenant = vec![0u64; w.n_tenants()];
     let mut depth_cycles: u128 = 0;
     let mut depth_max = 0usize;
     let (mut switches, mut batches) = (0u64, 0u64);
@@ -140,7 +143,7 @@ pub fn serve_naive(
     loop {
         // admit everything due by now (heap pops in (cycle, id) order,
         // so the queue stays in arrival order)
-        while let Some(&Reverse((t, id, class))) = heap.peek() {
+        while let Some(&Reverse((t, id, class, tenant))) = heap.peek() {
             if t > now {
                 break;
             }
@@ -150,6 +153,7 @@ pub fn serve_naive(
                 class,
                 bucket: w.classes[class].bucket(),
                 arrival: t,
+                tenant,
             });
         }
         depth_max = depth_max.max(queue.len());
@@ -195,11 +199,19 @@ pub fn serve_naive(
                     let done = base + j as u64 * rt.steady;
                     completion = done;
                     lat.record(done - queue[qi].arrival);
+                    let tenant = queue[qi].tenant;
+                    if tenant >= lat_by_tenant.len() {
+                        lat_by_tenant.resize(tenant + 1, LatencyStore::new());
+                        ops_by_tenant.resize(tenant + 1, 0);
+                    }
+                    lat_by_tenant[tenant].record(done - queue[qi].arrival);
+                    ops_by_tenant[tenant] += rt.ops;
                     if closed && issued < w.requests {
                         let id = issued;
                         issued += 1;
                         let next_class = w.sample_class(&mut crng);
-                        heap.push(Reverse((done + think, id, next_class)));
+                        // follow-ons stay tenant 0, as in the engine
+                        heap.push(Reverse((done + think, id, next_class, 0)));
                     }
                 }
                 active_j += rt.active_j * sel.len() as f64;
@@ -221,7 +233,7 @@ pub fn serve_naive(
         }
 
         // advance to the next event: O(shards) min-scan
-        let next_arrival = heap.peek().map(|&Reverse((t, _, _))| t);
+        let next_arrival = heap.peek().map(|&Reverse((t, _, _, _))| t);
         let next_free = shards.iter().map(|s| s.free_at).filter(|&f| f > now).min();
         let next = match (next_arrival, next_free) {
             (None, None) => break,
@@ -238,6 +250,8 @@ pub fn serve_naive(
     let total_time = now.max(1);
     let sec = makespan.max(1) as f64 / freq;
     let energy_j = active_j + energy::P_IDLE_W * sec * fleet.n as f64;
+    let (tenants, fairness_jain) =
+        tenant_summaries(&mut lat_by_tenant, &ops_by_tenant, sec);
     Ok(ServeReport {
         scheduler: policy.name().to_string(),
         clusters: fleet.n,
@@ -262,6 +276,8 @@ pub fn serve_naive(
             .collect(),
         class_switches: switches,
         batches,
+        tenants,
+        fairness_jain,
         freq_hz: freq,
         control: None,
     })

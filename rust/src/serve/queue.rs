@@ -14,16 +14,21 @@
 //!   its deployment is compiled for, so per-class *is* per-(class,
 //!   bucket)),
 //! - one arrival-ordered **ring deque per shard residue** (`id %
-//!   n_clusters`), serving the round-robin policy's pinned lookups.
+//!   n_clusters`), serving the round-robin policy's pinned lookups,
+//! - one arrival-ordered **ring deque per (tenant, class)** pair,
+//!   serving the fairness-aware policies' per-tenant head/count lookups
+//!   (single-tenant workloads pay one extra deque per class and nothing
+//!   else).
 //!
-//! A request lives in exactly one slot but is indexed by two deques;
-//! taking it through one leaves a stale `(slot, generation)` entry in
-//! the other, which is skipped lazily and reclaimed by [`tidy`]
+//! A request lives in exactly one slot but is indexed by three deques;
+//! taking it through one leaves stale `(slot, generation)` entries in
+//! the others, which are skipped lazily and reclaimed by [`tidy`]
 //! (front-popping plus amortized compaction once a deque is mostly
 //! dead). Every scheduler-facing lookup — overall head, class head and
-//! live count, shard head — is O(1) after a tidy; a take is O(batch).
-//! Head-of-line arrival-order semantics are exact: deques are pushed in
-//! admission order, and admission order is (arrival cycle, id) order.
+//! live count, shard head, tenant head — is O(1) after a tidy (tenant
+//! heads are O(n_classes)); a take is O(batch). Head-of-line
+//! arrival-order semantics are exact: deques are pushed in admission
+//! order, and admission order is (arrival cycle, id) order.
 //!
 //! [`tidy`]: QueueView::tidy
 
@@ -54,20 +59,28 @@ pub struct QueueView {
     free_slots: Vec<u32>,
     by_class: Vec<VecDeque<Entry>>,
     by_shard: Vec<VecDeque<Entry>>,
+    /// Indexed `tenant * n_classes + class`.
+    by_tenant_class: Vec<VecDeque<Entry>>,
     class_live: Vec<usize>,
     shard_live: Vec<usize>,
+    tenant_class_live: Vec<usize>,
+    tenant_live: Vec<usize>,
     live: usize,
 }
 
 impl QueueView {
-    pub(crate) fn new(n_classes: usize, n_shards: usize) -> QueueView {
+    pub(crate) fn new(n_classes: usize, n_shards: usize, n_tenants: usize) -> QueueView {
+        let n_tenants = n_tenants.max(1);
         QueueView {
             slots: Vec::new(),
             free_slots: Vec::new(),
             by_class: (0..n_classes).map(|_| VecDeque::new()).collect(),
             by_shard: (0..n_shards.max(1)).map(|_| VecDeque::new()).collect(),
+            by_tenant_class: (0..n_tenants * n_classes).map(|_| VecDeque::new()).collect(),
             class_live: vec![0; n_classes],
             shard_live: vec![0; n_shards.max(1)],
+            tenant_class_live: vec![0; n_tenants * n_classes],
+            tenant_live: vec![0; n_tenants],
             live: 0,
         }
     }
@@ -101,6 +114,27 @@ impl QueueView {
         self.shard_live.get(shard).copied().unwrap_or(0)
     }
 
+    /// Tenant universe this queue indexes (== the workload's tenants).
+    pub fn n_tenants(&self) -> usize {
+        self.tenant_live.len()
+    }
+
+    /// Live waiters of one tenant across all classes. O(1).
+    pub fn tenant_len(&self, tenant: usize) -> usize {
+        self.tenant_live.get(tenant).copied().unwrap_or(0)
+    }
+
+    /// Live waiters of one (tenant, class) pair. O(1).
+    pub fn tenant_class_len(&self, tenant: usize, class: usize) -> usize {
+        if class >= self.by_class.len() {
+            return 0;
+        }
+        self.tenant_class_live
+            .get(tenant * self.by_class.len() + class)
+            .copied()
+            .unwrap_or(0)
+    }
+
     fn entry_live(&self, e: Entry) -> bool {
         self.slots[e.slot as usize].gen == e.gen
     }
@@ -122,6 +156,24 @@ impl QueueView {
         self.by_shard.get(shard).and_then(|dq| self.front_of(dq))
     }
 
+    /// Oldest waiter of one (tenant, class) pair, in arrival order.
+    pub fn tenant_class_head(&self, tenant: usize, class: usize) -> Option<&Queued> {
+        if class >= self.by_class.len() {
+            return None;
+        }
+        self.by_tenant_class
+            .get(tenant * self.by_class.len() + class)
+            .and_then(|dq| self.front_of(dq))
+    }
+
+    /// Oldest waiter of one tenant: the minimum per-class head by
+    /// (arrival, id). O(n_classes), like [`head`](QueueView::head).
+    pub fn tenant_head(&self, tenant: usize) -> Option<&Queued> {
+        (0..self.by_class.len())
+            .filter_map(|c| self.tenant_class_head(tenant, c))
+            .min_by_key(|q| (q.arrival, q.id))
+    }
+
     /// Oldest waiter overall: the minimum class head by (arrival, id).
     /// O(n_classes) — classes are few and fixed, not O(queue).
     pub fn head(&self) -> Option<&Queued> {
@@ -135,6 +187,8 @@ impl QueueView {
     pub(crate) fn push(&mut self, q: Queued) {
         let class = q.class;
         let shard = q.id % self.by_shard.len();
+        let tenant = q.tenant;
+        let tc = tenant * self.by_class.len() + class;
         let slot = match self.free_slots.pop() {
             Some(s) => {
                 self.slots[s as usize].q = q;
@@ -149,8 +203,11 @@ impl QueueView {
         let e = Entry { slot, gen: self.slots[slot as usize].gen };
         self.by_class[class].push_back(e);
         self.by_shard[shard].push_back(e);
+        self.by_tenant_class[tc].push_back(e);
         self.class_live[class] += 1;
         self.shard_live[shard] += 1;
+        self.tenant_class_live[tc] += 1;
+        self.tenant_live[tenant] += 1;
         self.live += 1;
     }
 
@@ -163,6 +220,8 @@ impl QueueView {
         self.free_slots.push(slot);
         self.class_live[q.class] -= 1;
         self.shard_live[q.id % self.by_shard.len()] -= 1;
+        self.tenant_class_live[q.tenant * self.by_class.len() + q.class] -= 1;
+        self.tenant_live[q.tenant] -= 1;
         self.live -= 1;
         q
     }
@@ -187,6 +246,39 @@ impl QueueView {
         }
     }
 
+    /// Take the `n` oldest waiters of one (tenant, class) pair,
+    /// appending them to `out` in arrival order — the fairness-aware
+    /// policies' take path. O(n) plus reclaimed stale entries.
+    pub(crate) fn take_tenant_class(
+        &mut self,
+        tenant: usize,
+        class: usize,
+        n: usize,
+        out: &mut Vec<Queued>,
+    ) {
+        if class >= self.by_class.len() {
+            return;
+        }
+        let Some(tc) = tenant
+            .checked_mul(self.by_class.len())
+            .map(|b| b + class)
+            .filter(|&tc| tc < self.by_tenant_class.len())
+        else {
+            return;
+        };
+        let mut taken = 0;
+        while taken < n {
+            let Some(e) = self.by_tenant_class[tc].pop_front() else {
+                break;
+            };
+            if !self.entry_live(e) {
+                continue; // reclaim a stale twin left by another take path
+            }
+            out.push(self.kill(e.slot));
+            taken += 1;
+        }
+    }
+
     /// Take the oldest waiter pinned to `shard`, if any.
     pub(crate) fn take_shard(&mut self, shard: usize) -> Option<Queued> {
         if shard >= self.by_shard.len() {
@@ -205,11 +297,23 @@ impl QueueView {
     /// mostly dead in the middle (amortized O(1) per push — each entry
     /// is compacted away at most once per constant number of pushes).
     pub(crate) fn tidy(&mut self) {
-        let Self { slots, by_class, by_shard, class_live, shard_live, .. } = self;
+        let Self {
+            slots,
+            by_class,
+            by_shard,
+            by_tenant_class,
+            class_live,
+            shard_live,
+            tenant_class_live,
+            ..
+        } = self;
         for (dq, &live) in by_class.iter_mut().zip(class_live.iter()) {
             tidy_one(slots, dq, live);
         }
         for (dq, &live) in by_shard.iter_mut().zip(shard_live.iter()) {
+            tidy_one(slots, dq, live);
+        }
+        for (dq, &live) in by_tenant_class.iter_mut().zip(tenant_class_live.iter()) {
             tidy_one(slots, dq, live);
         }
     }
@@ -239,12 +343,16 @@ mod tests {
     use super::*;
 
     fn q(id: usize, class: usize, arrival: u64) -> Queued {
-        Queued { id, class, bucket: 128 * (class + 1), arrival }
+        qt(id, class, arrival, 0)
+    }
+
+    fn qt(id: usize, class: usize, arrival: u64, tenant: usize) -> Queued {
+        Queued { id, class, bucket: 128 * (class + 1), arrival, tenant }
     }
 
     #[test]
     fn arrival_order_is_preserved_per_class_and_overall() {
-        let mut v = QueueView::new(2, 2);
+        let mut v = QueueView::new(2, 2, 1);
         v.push(q(0, 1, 5));
         v.push(q(1, 0, 7));
         v.push(q(2, 1, 9));
@@ -261,7 +369,7 @@ mod tests {
 
     #[test]
     fn take_class_pops_the_head_run_in_order() {
-        let mut v = QueueView::new(2, 1);
+        let mut v = QueueView::new(2, 1, 1);
         for (id, class) in [(0, 0), (1, 1), (2, 0), (3, 0)] {
             v.push(q(id, class, id as u64));
         }
@@ -280,7 +388,7 @@ mod tests {
 
     #[test]
     fn shard_take_skips_entries_taken_through_the_class_deque() {
-        let mut v = QueueView::new(1, 2);
+        let mut v = QueueView::new(1, 2, 1);
         v.push(q(0, 0, 0));
         v.push(q(1, 0, 1));
         v.push(q(2, 0, 2));
@@ -297,7 +405,7 @@ mod tests {
 
     #[test]
     fn slots_are_recycled_and_generations_prevent_aliasing() {
-        let mut v = QueueView::new(1, 1);
+        let mut v = QueueView::new(1, 1, 1);
         let mut out = Vec::new();
         for round in 0..100usize {
             v.push(q(round, 0, round as u64));
@@ -313,7 +421,7 @@ mod tests {
 
     #[test]
     fn tidy_compacts_mostly_dead_deques() {
-        let mut v = QueueView::new(2, 1);
+        let mut v = QueueView::new(2, 1, 1);
         // one old class-1 waiter, then a long run of class-0 requests
         v.push(q(0, 1, 0));
         for id in 1..200usize {
@@ -334,7 +442,7 @@ mod tests {
 
     #[test]
     fn out_of_range_lookups_are_empty_not_panics() {
-        let mut v = QueueView::new(1, 1);
+        let mut v = QueueView::new(1, 1, 1);
         assert_eq!(v.class_len(5), 0);
         assert!(v.class_head(5).is_none());
         assert!(v.shard_head(5).is_none());
@@ -343,5 +451,60 @@ mod tests {
         v.take_class(5, 1, &mut out);
         assert!(out.is_empty());
         assert!(v.head().is_none());
+        // tenant lookups follow the same convention
+        assert_eq!(v.tenant_len(7), 0);
+        assert_eq!(v.tenant_class_len(7, 0), 0);
+        assert!(v.tenant_class_head(7, 0).is_none());
+        assert!(v.tenant_head(7).is_none());
+        v.take_tenant_class(7, 0, 1, &mut out);
+        v.take_tenant_class(0, 9, 1, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn tenant_rings_track_per_tenant_arrival_order() {
+        let mut v = QueueView::new(2, 1, 2);
+        v.push(qt(0, 0, 0, 1));
+        v.push(qt(1, 0, 1, 0));
+        v.push(qt(2, 1, 2, 1));
+        v.push(qt(3, 0, 3, 1));
+        assert_eq!(v.n_tenants(), 2);
+        assert_eq!(v.tenant_len(0), 1);
+        assert_eq!(v.tenant_len(1), 3);
+        assert_eq!(v.tenant_class_len(1, 0), 2);
+        assert_eq!(v.tenant_class_head(1, 0).unwrap().id, 0);
+        assert_eq!(v.tenant_head(1).unwrap().id, 0, "oldest across classes");
+        assert_eq!(v.tenant_head(0).unwrap().id, 1);
+        // the take path honors (tenant, class) head-of-line order
+        let mut out = Vec::new();
+        v.take_tenant_class(1, 0, 9, &mut out);
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3]);
+        assert_eq!(v.tenant_len(1), 1);
+        assert_eq!(v.tenant_head(1).unwrap().id, 2);
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn tenant_takes_stale_the_class_and_shard_twins() {
+        let mut v = QueueView::new(1, 2, 2);
+        v.push(qt(0, 0, 0, 0));
+        v.push(qt(1, 0, 1, 1));
+        v.push(qt(2, 0, 2, 0));
+        // take tenant 0's head through the tenant ring: its twins in
+        // the class and shard deques go stale and must be skipped
+        let mut out = Vec::new();
+        v.take_tenant_class(0, 0, 1, &mut out);
+        assert_eq!(out[0].id, 0);
+        assert_eq!(v.class_head(0).unwrap().id, 1);
+        assert_eq!(v.take_shard(0).unwrap().id, 2);
+        v.tidy();
+        assert_eq!(v.tenant_len(0), 0);
+        assert_eq!(v.tenant_len(1), 1);
+        // and the reverse: a class take stales the tenant twin
+        let mut out = Vec::new();
+        v.take_class(0, 1, &mut out);
+        assert_eq!(out[0].id, 1);
+        assert!(v.tenant_head(1).is_none());
+        assert!(v.is_empty());
     }
 }

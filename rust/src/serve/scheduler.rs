@@ -10,7 +10,7 @@
 //! vocabulary makes structurally impossible to violate: there is no way
 //! to express a mixed-class batch.
 //!
-//! Three built-in policies:
+//! Five built-in policies:
 //!
 //! - [`Fifo`] — strict arrival order, one request per dispatch. The
 //!   baseline every serving paper compares against.
@@ -27,6 +27,23 @@
 //!   both by `max_batch` and by an even fleet share of the bucket, so a
 //!   draining queue degrades to single fifo-like dispatches instead of
 //!   hoarding the last requests on one shard.
+//! - [`Wfq`] — weighted-fair queueing across tenants: every tenant owns
+//!   a virtual-time clock advanced by the (bucket-weighted) work it has
+//!   been served, and dispatch always goes to the backlogged tenant
+//!   whose clock trails furthest behind. A tenant that idles has its
+//!   clock floored at the system virtual time on return, so sleeping
+//!   never banks unbounded credit. All-integer, ties broken by tenant
+//!   index — fully deterministic.
+//! - [`Drf`] — dominant-resource fairness across tenants over two
+//!   delivered resources (request slots and bucket-weighted compute):
+//!   dispatch goes to the backlogged tenant whose *dominant* share —
+//!   the larger of its two resource shares — is smallest, the DRF rule
+//!   that degenerates to max-min fairness when everyone's mix matches.
+//!
+//! Both fairness policies batch within the chosen tenant exactly like
+//! [`DynamicBatch`] does within the whole queue (head class of that
+//! tenant, even fleet share, `max_batch` cap), so fairness costs
+//! throughput only when the tenant mix forces extra class switches.
 
 pub use super::queue::QueueView;
 
@@ -40,6 +57,8 @@ pub struct Queued {
     pub bucket: usize,
     /// Arrival cycle.
     pub arrival: u64,
+    /// Tenant the request belongs to (0 for synthetic workloads).
+    pub tenant: usize,
 }
 
 /// What a scheduler asks the fleet to dispatch on one free cluster.
@@ -55,6 +74,10 @@ pub enum Selection {
     /// Dispatch the oldest waiter pinned to this cluster
     /// (`id % n_clusters == cluster`), or nothing if none waits.
     Pinned,
+    /// Dispatch the `take` oldest waiters of `class` belonging to
+    /// `tenant` as one batch — the fairness-aware policies' selection
+    /// (head-of-line within the (tenant, class) ring).
+    TenantBatch { tenant: usize, class: usize, take: usize },
 }
 
 /// A dispatch policy over the [`QueueView`] read surface.
@@ -171,12 +194,181 @@ impl Scheduler for DynamicBatch {
     }
 }
 
-/// CLI lookup: `fifo`, `rr`/`round-robin`, `batch`/`dynamic-batch`.
+/// Batch within one tenant the way [`DynamicBatch`] batches within the
+/// whole queue: the tenant's oldest waiter picks the class, the take is
+/// capped by an even fleet share of that (tenant, class) backlog and by
+/// `max_batch`. Returns `(class, bucket, take)`.
+fn tenant_batch(
+    queue: &QueueView,
+    tenant: usize,
+    max_batch: usize,
+    n_clusters: usize,
+) -> Option<(usize, usize, usize)> {
+    let head = queue.tenant_head(tenant)?;
+    let class = head.class;
+    let bucket = head.bucket;
+    let share = queue.tenant_class_len(tenant, class).div_ceil(n_clusters.max(1));
+    Some((class, bucket, share.min(max_batch).max(1)))
+}
+
+/// Weighted-fair queueing across tenants (see the module docs): serve
+/// the backlogged tenant with the least virtual time, then advance its
+/// clock by the bucket-weighted work dispatched divided by its weight.
+pub struct Wfq {
+    /// Upper bound on one batch, as in [`DynamicBatch`].
+    pub max_batch: usize,
+    /// Per-tenant relative service weights; missing tenants default
+    /// to weight 1. A tenant with weight `w` receives a `w / Σw` share
+    /// of the fleet under sustained contention.
+    pub weights: Vec<u64>,
+    /// Per-tenant virtual time: weighted work served so far.
+    vtime: Vec<u64>,
+    /// System virtual time: the floor applied to a tenant returning
+    /// from idle, so idling never banks unbounded credit.
+    vnow: u64,
+}
+
+impl Wfq {
+    pub fn new(max_batch: usize) -> Wfq {
+        Wfq { max_batch: max_batch.max(1), weights: Vec::new(), vtime: Vec::new(), vnow: 0 }
+    }
+
+    /// Set per-tenant weights (index = tenant id).
+    pub fn with_weights(mut self, weights: Vec<u64>) -> Wfq {
+        self.weights = weights;
+        self
+    }
+
+    fn weight(&self, tenant: usize) -> u64 {
+        self.weights.get(tenant).copied().unwrap_or(1).max(1)
+    }
+}
+
+impl Default for Wfq {
+    fn default() -> Self {
+        Wfq::new(8)
+    }
+}
+
+impl Scheduler for Wfq {
+    fn name(&self) -> &'static str {
+        "wfq"
+    }
+
+    fn select(
+        &mut self,
+        _now: u64,
+        queue: &QueueView,
+        _cluster: usize,
+        _free: usize,
+        n_clusters: usize,
+    ) -> Selection {
+        if self.vtime.len() < queue.n_tenants() {
+            self.vtime.resize(queue.n_tenants(), 0);
+        }
+        // floor returning tenants at the system virtual time (the
+        // minimum clock among the backlogged set never moves backwards)
+        let backlogged: Vec<usize> =
+            (0..queue.n_tenants()).filter(|&t| queue.tenant_len(t) > 0).collect();
+        if let Some(&min_v) = backlogged.iter().map(|&t| &self.vtime[t]).min() {
+            self.vnow = self.vnow.max(min_v);
+        }
+        for &t in &backlogged {
+            self.vtime[t] = self.vtime[t].max(self.vnow);
+        }
+        // least virtual time wins; ties go to the lowest tenant index
+        let Some(&tenant) = backlogged.iter().min_by_key(|&&t| (self.vtime[t], t))
+        else {
+            return Selection::Idle;
+        };
+        let Some((class, bucket, take)) =
+            tenant_batch(queue, tenant, self.max_batch, n_clusters)
+        else {
+            return Selection::Idle;
+        };
+        // charge the dispatched work to the tenant's clock up front —
+        // deterministic, and the fleet takes exactly what we sized
+        self.vtime[tenant] += (take * bucket) as u64 / self.weight(tenant);
+        Selection::TenantBatch { tenant, class, take }
+    }
+}
+
+/// DRF-style dominant-share scheduling (see the module docs): serve the
+/// backlogged tenant whose dominant resource share is smallest.
+pub struct Drf {
+    /// Upper bound on one batch, as in [`DynamicBatch`].
+    pub max_batch: usize,
+    /// Request slots dispatched per tenant.
+    reqs: Vec<u64>,
+    /// Bucket-weighted compute dispatched per tenant.
+    work: Vec<u64>,
+}
+
+impl Drf {
+    pub fn new(max_batch: usize) -> Drf {
+        Drf { max_batch: max_batch.max(1), reqs: Vec::new(), work: Vec::new() }
+    }
+}
+
+impl Default for Drf {
+    fn default() -> Self {
+        Drf::new(8)
+    }
+}
+
+impl Scheduler for Drf {
+    fn name(&self) -> &'static str {
+        "drf"
+    }
+
+    fn select(
+        &mut self,
+        _now: u64,
+        queue: &QueueView,
+        _cluster: usize,
+        _free: usize,
+        n_clusters: usize,
+    ) -> Selection {
+        if self.reqs.len() < queue.n_tenants() {
+            self.reqs.resize(queue.n_tenants(), 0);
+            self.work.resize(queue.n_tenants(), 0);
+        }
+        // dominant share of tenant t = max(reqs[t]/ΣR, work[t]/ΣW).
+        // With the common denominator ΣR·ΣW the comparison reduces to
+        // integer cross-products — no floats, no ties from rounding.
+        let total_r: u64 = self.reqs.iter().sum();
+        let total_w: u64 = self.work.iter().sum();
+        let dominant = |t: usize| -> u128 {
+            let r = self.reqs[t] as u128 * total_w as u128;
+            let w = self.work[t] as u128 * total_r as u128;
+            r.max(w)
+        };
+        let Some(tenant) = (0..queue.n_tenants())
+            .filter(|&t| queue.tenant_len(t) > 0)
+            .min_by_key(|&t| (dominant(t), t))
+        else {
+            return Selection::Idle;
+        };
+        let Some((class, bucket, take)) =
+            tenant_batch(queue, tenant, self.max_batch, n_clusters)
+        else {
+            return Selection::Idle;
+        };
+        self.reqs[tenant] += take as u64;
+        self.work[tenant] += (take * bucket) as u64;
+        Selection::TenantBatch { tenant, class, take }
+    }
+}
+
+/// CLI lookup: `fifo`, `rr`/`round-robin`, `batch`/`dynamic-batch`,
+/// `wfq`, `drf`.
 pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
     match name {
         "fifo" => Some(Box::new(Fifo)),
         "rr" | "round-robin" => Some(Box::new(RoundRobin)),
         "batch" | "dynamic-batch" => Some(Box::new(DynamicBatch::default())),
+        "wfq" => Some(Box::new(Wfq::default())),
+        "drf" => Some(Box::new(Drf::default())),
         _ => None,
     }
 }
@@ -186,14 +378,30 @@ mod tests {
     use super::*;
 
     fn q(id: usize, class: usize) -> Queued {
-        Queued { id, class, bucket: 128 * (class + 1), arrival: id as u64 }
+        Queued { id, class, bucket: 128 * (class + 1), arrival: id as u64, tenant: 0 }
     }
 
     fn view(requests: &[(usize, usize)], n_shards: usize) -> QueueView {
         let n_classes = requests.iter().map(|&(_, c)| c + 1).max().unwrap_or(1);
-        let mut v = QueueView::new(n_classes, n_shards);
+        let mut v = QueueView::new(n_classes, n_shards, 1);
         for &(id, class) in requests {
             v.push(q(id, class));
+        }
+        v
+    }
+
+    /// Tenant-tagged view: (id, class, tenant) triples.
+    fn tenant_view(requests: &[(usize, usize, usize)], n_tenants: usize) -> QueueView {
+        let n_classes = requests.iter().map(|&(_, c, _)| c + 1).max().unwrap_or(1);
+        let mut v = QueueView::new(n_classes, 1, n_tenants);
+        for &(id, class, tenant) in requests {
+            v.push(Queued {
+                id,
+                class,
+                bucket: 128 * (class + 1),
+                arrival: id as u64,
+                tenant,
+            });
         }
         v
     }
@@ -201,7 +409,7 @@ mod tests {
     #[test]
     fn fifo_takes_the_head() {
         let mut s = Fifo;
-        let empty = QueueView::new(2, 1);
+        let empty = QueueView::new(2, 1, 1);
         assert_eq!(s.select(0, &empty, 0, 1, 1), Selection::Idle);
         let v = view(&[(0, 1), (1, 0)], 1);
         // head is id 0 (class 1): one request of that class
@@ -235,10 +443,86 @@ mod tests {
     }
 
     #[test]
+    fn wfq_alternates_between_equal_weight_tenants() {
+        let mut s = Wfq::new(1);
+        // tenant 0 floods the queue; tenant 1 has one waiter per round.
+        // with equal weights the clocks must alternate dispatch
+        let v = tenant_view(&[(0, 0, 0), (1, 0, 0), (2, 0, 0), (3, 0, 1)], 2);
+        let first = s.select(0, &v, 0, 1, 1);
+        let Selection::TenantBatch { tenant: t0, take: 1, .. } = first else {
+            panic!("expected a tenant batch, got {first:?}");
+        };
+        // whoever went first is now behind: the other tenant goes next
+        let second = s.select(0, &v, 0, 1, 1);
+        let Selection::TenantBatch { tenant: t1, .. } = second else {
+            panic!("expected a tenant batch, got {second:?}");
+        };
+        assert_ne!(t0, t1, "equal-weight tenants alternate under contention");
+        // empty queue is idle
+        let empty = QueueView::new(1, 1, 2);
+        assert_eq!(s.select(0, &empty, 0, 1, 1), Selection::Idle);
+    }
+
+    #[test]
+    fn wfq_weights_bias_the_service_ratio() {
+        // tenant 0 carries weight 3: over 4 single-request dispatches
+        // from a saturated queue it must win 3
+        let mut s = Wfq::new(1).with_weights(vec![3, 1]);
+        let reqs: Vec<(usize, usize, usize)> =
+            (0..16).map(|id| (id, 0, id % 2)).collect();
+        let v = tenant_view(&reqs, 2);
+        let mut wins = [0usize; 2];
+        for _ in 0..4 {
+            match s.select(0, &v, 0, 1, 1) {
+                Selection::TenantBatch { tenant, .. } => wins[tenant] += 1,
+                other => panic!("expected a tenant batch, got {other:?}"),
+            }
+        }
+        assert_eq!(wins, [3, 1], "weight-3 tenant wins 3 of 4 dispatches");
+    }
+
+    #[test]
+    fn drf_picks_the_smallest_dominant_share() {
+        let mut s = Drf::new(1);
+        let v = tenant_view(&[(0, 0, 0), (1, 0, 1), (2, 0, 0), (3, 0, 1)], 2);
+        // fresh state: everyone at zero share, tie broken by index
+        assert!(matches!(
+            s.select(0, &v, 0, 1, 1),
+            Selection::TenantBatch { tenant: 0, .. }
+        ));
+        // tenant 0 now holds all delivered resources: tenant 1 is next
+        assert!(matches!(
+            s.select(0, &v, 0, 1, 1),
+            Selection::TenantBatch { tenant: 1, .. }
+        ));
+        let empty = QueueView::new(1, 1, 2);
+        assert_eq!(s.select(0, &empty, 0, 1, 1), Selection::Idle);
+    }
+
+    #[test]
+    fn fairness_batches_stay_within_one_tenant_class_ring() {
+        // tenant 1's head class has a 3-deep backlog; a single-cluster
+        // fleet coalesces it like DynamicBatch but never crosses tenants
+        let mut s = Wfq::new(8);
+        let v = tenant_view(&[(0, 0, 1), (1, 0, 0), (2, 0, 1), (3, 0, 1)], 2);
+        let sel = s.select(0, &v, 0, 1, 1);
+        match sel {
+            Selection::TenantBatch { tenant, class: 0, take } => {
+                assert!(take <= v.tenant_class_len(tenant, 0));
+            }
+            other => panic!("expected a tenant batch, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn by_name_resolves_all_policies() {
-        for (name, want) in
-            [("fifo", "fifo"), ("rr", "round-robin"), ("batch", "dynamic-batch")]
-        {
+        for (name, want) in [
+            ("fifo", "fifo"),
+            ("rr", "round-robin"),
+            ("batch", "dynamic-batch"),
+            ("wfq", "wfq"),
+            ("drf", "drf"),
+        ] {
             assert_eq!(by_name(name).unwrap().name(), want);
         }
         assert!(by_name("lifo").is_none());

@@ -7,7 +7,7 @@
 //! pure function of (workload, geometry, scheduler) and two runs with
 //! the same inputs produce bit-identical [`super::ServeReport`]s.
 //!
-//! Four arrival shapes cover the classic serving scenarios:
+//! The arrival shapes cover the classic serving scenarios:
 //!
 //! - [`Arrivals::Poisson`] / [`Arrivals::Bursty`] — open-loop traffic.
 //!   Inter-arrival gaps are exponential (`-ln(1-u)/rate`); the bursty
@@ -19,13 +19,25 @@
 //!   online control plane (DVFS + shard parking) is designed to ride.
 //!   Sampled by thinning at the peak rate, which keeps the process
 //!   exact and the stream state O(1).
-//! - [`Arrivals::Trace`] — explicit `(cycle, class)` replay.
+//! - [`Arrivals::Trace`] — explicit tenant-tagged replay of
+//!   [`TraceEntry`] rows (the legacy `(cycle, class)` constructor
+//!   [`Workload::trace`] is a thin adapter that tags tenant 0).
+//! - [`Arrivals::TraceFile`] — streamed replay of a CSV/JSONL trace
+//!   file through `trace::TraceReader`: O(1) resident memory, validated
+//!   once at construction by a single `trace::scan` pass.
 //! - [`Arrivals::ClosedLoop`] — N clients, each issuing its next request
 //!   `think_cycles` after its previous one completes (the fleet issues
 //!   follow-ons from completions; only the first wave is pre-generated).
+//!
+//! Every request carries a tenant id (0 for the synthetic open/closed
+//! -loop kinds) — the hook the fairness-aware schedulers and per-tenant
+//! SLO accounting in `serve::metrics` key on.
+
+use std::path::PathBuf;
 
 use crate::deeploy::DeployError;
 use crate::models::ModelConfig;
+use crate::trace::{TraceEntry, TraceReader};
 use crate::util::prng::XorShift64;
 
 /// Default square-wave period of bursty workloads, seconds — the one
@@ -82,8 +94,12 @@ pub enum Arrivals {
     /// `0 <= depth < 1` (the rate never reaches zero). Sampled by
     /// thinning against the peak rate `rate_rps * (1 + depth)`.
     Diurnal { rate_rps: f64, depth: f64, period_s: f64 },
-    /// Explicit replay: (arrival cycle, class index) pairs.
-    Trace(Vec<(u64, usize)>),
+    /// Explicit in-memory replay of tenant-tagged trace rows.
+    Trace(Vec<TraceEntry>),
+    /// Streamed replay of an on-disk CSV/JSONL trace (timestamp-sorted;
+    /// `tenants` is the tenant universe the construction-time scan
+    /// derived). O(1) resident memory however long the trace is.
+    TraceFile { path: PathBuf, tenants: usize },
     /// `clients` closed-loop clients; each issues its next request
     /// `think_cycles` after its previous one completes.
     ClosedLoop { clients: usize, think_cycles: u64 },
@@ -107,6 +123,8 @@ pub struct Request {
     pub class: usize,
     /// Arrival time in cluster cycles.
     pub arrival: u64,
+    /// Tenant the request belongs to (0 for synthetic arrival kinds).
+    pub tenant: usize,
 }
 
 impl Workload {
@@ -151,10 +169,64 @@ impl Workload {
         }
     }
 
-    /// Replay an explicit (cycle, class) trace.
+    /// Replay an explicit (cycle, class) trace — the legacy PR-3 shape,
+    /// kept as a thin adapter over [`trace_entries`]: every pair is
+    /// tagged tenant 0 and flows through the same replay path as file
+    /// traces (one ingestion path, pinned by a draw-order unit test).
+    ///
+    /// [`trace_entries`]: Workload::trace_entries
     pub fn trace(classes: Vec<RequestClass>, entries: Vec<(u64, usize)>) -> Workload {
+        let entries = entries
+            .into_iter()
+            .map(|(cycle, class)| TraceEntry {
+                cycle,
+                tenant: 0,
+                class,
+                seq_len: classes.get(class).map_or(0, |c| c.bucket()),
+            })
+            .collect();
+        Workload::trace_entries(classes, entries)
+    }
+
+    /// Replay tenant-tagged trace rows held in memory (what
+    /// `trace::generate` produces).
+    pub fn trace_entries(classes: Vec<RequestClass>, entries: Vec<TraceEntry>) -> Workload {
         let requests = entries.len();
         Workload { classes, arrivals: Arrivals::Trace(entries), requests, seed: 0 }
+    }
+
+    /// Stream an on-disk CSV/JSONL trace. The file is validated here by
+    /// one O(1)-memory `trace::scan` pass (row count, tenant/class
+    /// universe, sorted-by-cycle contract); serving then re-streams it
+    /// lazily, so a million-row trace never materializes.
+    pub fn trace_file(
+        classes: Vec<RequestClass>,
+        path: impl Into<PathBuf>,
+    ) -> Result<Workload, DeployError> {
+        let path = path.into();
+        let summary = crate::trace::scan(&path).map_err(|e| {
+            DeployError::Builder(format!("trace {}: {e}", path.display()))
+        })?;
+        if summary.rows == 0 {
+            return Err(DeployError::Builder(format!(
+                "trace {} has no rows",
+                path.display()
+            )));
+        }
+        if summary.classes > classes.len() {
+            return Err(DeployError::Builder(format!(
+                "trace {} references class {} but only {} classes exist",
+                path.display(),
+                summary.classes - 1,
+                classes.len()
+            )));
+        }
+        Ok(Workload {
+            classes,
+            arrivals: Arrivals::TraceFile { path, tenants: summary.tenants },
+            requests: summary.rows,
+            seed: 0,
+        })
     }
 
     pub fn closed_loop(
@@ -233,10 +305,21 @@ impl Workload {
                         self.requests
                     ));
                 }
-                if let Some((_, c)) = entries.iter().find(|(_, c)| *c >= self.classes.len()) {
+                if let Some(e) = entries.iter().find(|e| e.class >= self.classes.len()) {
                     return err(format!(
-                        "trace references class {c} but only {} classes exist",
+                        "trace references class {} but only {} classes exist",
+                        e.class,
                         self.classes.len()
+                    ));
+                }
+            }
+            Arrivals::TraceFile { path, tenants } => {
+                // the heavy validation (scan) ran at construction; keep
+                // the structural invariants the constructor established
+                if *tenants == 0 {
+                    return err(format!(
+                        "trace {} resolved to zero tenants",
+                        path.display()
                     ));
                 }
             }
@@ -251,6 +334,18 @@ impl Workload {
 
     pub fn is_closed_loop(&self) -> bool {
         matches!(self.arrivals, Arrivals::ClosedLoop { .. })
+    }
+
+    /// Tenant universe of the workload (>= 1). Synthetic arrival kinds
+    /// are single-tenant; replayed traces carry their own tenant tags.
+    pub fn n_tenants(&self) -> usize {
+        match &self.arrivals {
+            Arrivals::Trace(entries) => {
+                entries.iter().map(|e| e.tenant + 1).max().unwrap_or(1)
+            }
+            Arrivals::TraceFile { tenants, .. } => (*tenants).max(1),
+            _ => 1,
+        }
     }
 
     pub fn think_cycles(&self) -> u64 {
@@ -328,9 +423,20 @@ impl Workload {
                 // traces are explicit data the caller already holds;
                 // the stream only normalizes the order (stable sort:
                 // equal cycles keep their written order, as before)
-                let mut sorted: Vec<(u64, usize)> = entries.clone();
-                sorted.sort_by_key(|&(t, _)| t);
-                ArrivalStream::Trace { entries: sorted.into_iter(), next_id: 0 }
+                let mut sorted: Vec<TraceEntry> = entries.clone();
+                sorted.sort_by_key(|e| e.cycle);
+                ArrivalStream::Replay {
+                    cursor: ReplayCursor::Mem(sorted.into_iter()),
+                    next_id: 0,
+                }
+            }
+            Arrivals::TraceFile { path, .. } => {
+                // the constructor's scan validated the file; a file that
+                // vanishes or mutates between then and now fails loudly
+                let reader = TraceReader::open(path).unwrap_or_else(|e| {
+                    panic!("trace {} unreadable after validation: {e}", path.display())
+                });
+                ArrivalStream::Replay { cursor: ReplayCursor::File(reader), next_id: 0 }
             }
             Arrivals::ClosedLoop { .. } => ArrivalStream::ClosedLoop {
                 n_classes,
@@ -350,12 +456,35 @@ impl Workload {
     }
 }
 
+/// Replay source behind [`ArrivalStream::Replay`]: an in-memory row
+/// list or a streaming file reader (O(1) resident memory either way —
+/// the file arm never materializes the trace).
+#[derive(Debug)]
+pub enum ReplayCursor {
+    Mem(std::vec::IntoIter<TraceEntry>),
+    File(TraceReader<std::io::BufReader<std::fs::File>>),
+}
+
+impl ReplayCursor {
+    fn next_entry(&mut self) -> Option<TraceEntry> {
+        match self {
+            ReplayCursor::Mem(it) => it.next(),
+            ReplayCursor::File(reader) => reader.next_entry().map(|r| {
+                // parse errors here mean the file changed after the
+                // construction-time scan accepted it — fail loudly
+                r.unwrap_or_else(|e| panic!("trace mutated after validation: {e}"))
+            }),
+        }
+    }
+}
+
 /// Lazy arrival generator (see [`Workload::stream`]): O(1) state per
 /// open-loop process, so million-request workloads never materialize.
 /// Class draws happen at pull time from the caller's class PRNG —
 /// requests are pulled in id order, so the draw sequence is identical
-/// to the materialized path.
-#[derive(Debug, Clone)]
+/// to the materialized path. (Replayed traces draw no randomness at
+/// all: class and tenant are explicit per row.)
+#[derive(Debug)]
 pub enum ArrivalStream {
     Poisson {
         rng: XorShift64,
@@ -388,8 +517,8 @@ pub enum ArrivalStream {
         next_id: usize,
         total: usize,
     },
-    Trace {
-        entries: std::vec::IntoIter<(u64, usize)>,
+    Replay {
+        cursor: ReplayCursor,
         next_id: usize,
     },
     ClosedLoop {
@@ -427,6 +556,7 @@ impl ArrivalStream {
                     id,
                     class: draw(class_rng, *n_classes),
                     arrival: (*t_s * *freq_hz).round() as u64,
+                    tenant: 0,
                 })
             }
             ArrivalStream::Bursty {
@@ -467,6 +597,7 @@ impl ArrivalStream {
                             id,
                             class: draw(class_rng, *n_classes),
                             arrival: (*t_s * *freq_hz).round() as u64,
+                            tenant: 0,
                         });
                     }
                 }
@@ -503,15 +634,16 @@ impl ArrivalStream {
                             id,
                             class: draw(class_rng, *n_classes),
                             arrival: (*t_s * *freq_hz).round() as u64,
+                            tenant: 0,
                         });
                     }
                 }
             }
-            ArrivalStream::Trace { entries, next_id } => {
-                entries.next().map(|(arrival, class)| {
+            ArrivalStream::Replay { cursor, next_id } => {
+                cursor.next_entry().map(|e| {
                     let id = *next_id;
                     *next_id += 1;
-                    Request { id, class, arrival }
+                    Request { id, class: e.class, arrival: e.cycle, tenant: e.tenant }
                 })
             }
             ArrivalStream::ClosedLoop { n_classes, next_id, first_wave } => {
@@ -520,7 +652,12 @@ impl ArrivalStream {
                 }
                 let id = *next_id;
                 *next_id += 1;
-                Some(Request { id, class: draw(class_rng, *n_classes), arrival: 0 })
+                Some(Request {
+                    id,
+                    class: draw(class_rng, *n_classes),
+                    arrival: 0,
+                    tenant: 0,
+                })
             }
         }
     }
@@ -681,6 +818,96 @@ mod tests {
         let second = s.next(&mut crng).unwrap();
         assert_eq!(second.id, 1);
         assert!(second.arrival >= first.arrival);
+    }
+
+    #[test]
+    fn legacy_pair_trace_is_a_thin_adapter_over_trace_entries() {
+        // satellite contract: the PR-3 (cycle, class) constructor must
+        // route through the trace-entry replay path with tenant 0 and
+        // the exact draw order it always had (no PRNG perturbation —
+        // replay draws no class randomness at all)
+        let pairs = vec![(500u64, 1usize), (0, 0), (250, 0), (250, 1)];
+        let legacy = Workload::trace(classes(), pairs.clone());
+        let explicit = Workload::trace_entries(
+            classes(),
+            pairs
+                .iter()
+                .map(|&(cycle, class)| TraceEntry {
+                    cycle,
+                    tenant: 0,
+                    class,
+                    seq_len: classes()[class].bucket(),
+                })
+                .collect(),
+        );
+        let mut crng = legacy.class_rng();
+        let a = legacy.seed_requests(FREQ, &mut crng);
+        let state_after = crng.next_u64();
+        let b = explicit.seed_requests(FREQ, &mut explicit.class_rng());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                (x.id, x.class, x.arrival, x.tenant),
+                (y.id, y.class, y.arrival, y.tenant)
+            );
+            assert_eq!(x.tenant, 0);
+        }
+        // the class PRNG was never advanced by the replay
+        assert_eq!(state_after, legacy.class_rng().next_u64());
+        assert_eq!(legacy.n_tenants(), 1);
+    }
+
+    #[test]
+    fn tenant_tags_flow_from_trace_entries_to_requests() {
+        let entries = vec![
+            TraceEntry { cycle: 0, tenant: 1, class: 0, seq_len: 0 },
+            TraceEntry { cycle: 10, tenant: 0, class: 1, seq_len: 0 },
+            TraceEntry { cycle: 20, tenant: 2, class: 0, seq_len: 0 },
+        ];
+        let w = Workload::trace_entries(classes(), entries);
+        assert!(w.validate().is_ok());
+        assert_eq!(w.n_tenants(), 3);
+        let a = w.seed_requests(FREQ, &mut w.class_rng());
+        assert_eq!(
+            a.iter().map(|r| r.tenant).collect::<Vec<_>>(),
+            vec![1, 0, 2],
+            "tenant tags survive replay in cycle order"
+        );
+        // open-loop kinds are single-tenant by construction
+        let p = Workload::poisson(classes(), 100.0, 20, 3);
+        assert_eq!(p.n_tenants(), 1);
+        assert!(p
+            .seed_requests(FREQ, &mut p.class_rng())
+            .iter()
+            .all(|r| r.tenant == 0));
+    }
+
+    #[test]
+    fn trace_file_streams_bit_identically_to_in_memory_replay() {
+        let spec = crate::trace::skewed_two_tenant(300, 5_000.0, &[128, 197], 21);
+        let entries = crate::trace::generate(spec).unwrap();
+        let path = std::env::temp_dir().join("attn_tinyml_workload_trace.csv");
+        let mut buf = Vec::new();
+        crate::trace::write_csv(&mut buf, entries.iter().copied()).unwrap();
+        std::fs::write(&path, &buf).unwrap();
+
+        let mem = Workload::trace_entries(classes(), entries);
+        let file = Workload::trace_file(classes(), &path).unwrap();
+        assert_eq!(file.requests, mem.requests);
+        assert_eq!(file.n_tenants(), mem.n_tenants());
+        let a = mem.seed_requests(FREQ, &mut mem.class_rng());
+        let b = file.seed_requests(FREQ, &mut file.class_rng());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                (x.id, x.class, x.arrival, x.tenant),
+                (y.id, y.class, y.arrival, y.tenant)
+            );
+        }
+        // a trace naming classes the workload lacks is rejected
+        let few = vec![RequestClass::new(&MOBILEBERT, 1)];
+        assert!(Workload::trace_file(few, &path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Seeded deterministic trace generation (`attn-tinyml trace gen`).
+//!
+//! [`TraceGen`] is a lazy iterator with O(1) state — the CLI streams a
+//! million rows straight to disk without ever holding the trace in
+//! memory — and every draw comes from one [`XorShift64`] stream, so the
+//! same [`TraceSpec`] always produces the same rows (and, through
+//! [`write_csv`] / [`write_jsonl`], the same file byte-for-byte).
+//!
+//! Arrivals are Poisson at `rate_rps` (the same exponential-gap idiom as
+//! `serve::workload`), tenants are drawn by integer weight, classes
+//! uniformly. The bundled fairness scenario the bench and tests replay
+//! is [`skewed_two_tenant`]: tenant 0 offers 9× the load of tenant 1, the
+//! regime where Fifo starves the minority and fair queueing must not.
+
+use std::io::{self, Write};
+
+use crate::deeploy::DeployError;
+use crate::util::prng::XorShift64;
+
+use super::{TraceEntry, CSV_HEADER};
+
+/// What to generate: row count, aggregate rate, tenant weights, class
+/// sequence lengths, and the seed. See [`TraceGen`].
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Rows to emit.
+    pub rows: usize,
+    /// Aggregate arrival rate across all tenants, requests/second.
+    pub rate_rps: f64,
+    /// Clock that converts arrival seconds to cycles.
+    pub freq_hz: f64,
+    /// Per-tenant integer arrival weights; tenant `t` receives a
+    /// `weights[t] / Σweights` share of the arrivals in expectation.
+    pub tenant_weights: Vec<u64>,
+    /// Per-class padded sequence length (the class draw is uniform over
+    /// this list; the value is written to the `seq_len` column).
+    pub class_seq: Vec<usize>,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// Structural validation, mirroring `Workload::validate`.
+    pub fn validate(&self) -> Result<(), DeployError> {
+        let err = |m: String| Err(DeployError::Builder(m));
+        if self.rows == 0 {
+            return err("trace spec must emit at least one row".into());
+        }
+        if !self.rate_rps.is_finite() || self.rate_rps <= 0.0 {
+            return err(format!("arrival rate must be positive, got {}", self.rate_rps));
+        }
+        if !self.freq_hz.is_finite() || self.freq_hz <= 0.0 {
+            return err(format!("clock must be positive, got {}", self.freq_hz));
+        }
+        if self.tenant_weights.is_empty() {
+            return err("trace spec needs at least one tenant weight".into());
+        }
+        if self.tenant_weights.iter().all(|&w| w == 0) {
+            return err("tenant weights must not all be zero".into());
+        }
+        if self.class_seq.is_empty() {
+            return err("trace spec needs at least one class".into());
+        }
+        Ok(())
+    }
+}
+
+/// The bundled 9:1-skew two-tenant overload scenario: tenant 0 is the
+/// majority (weight 9), tenant 1 the minority (weight 1). Pick
+/// `rate_rps` above the serving fleet's capacity to reproduce the
+/// overload regime `BENCH_trace.json` documents.
+pub fn skewed_two_tenant(
+    rows: usize,
+    rate_rps: f64,
+    class_seq: &[usize],
+    seed: u64,
+) -> TraceSpec {
+    TraceSpec {
+        rows,
+        rate_rps,
+        freq_hz: crate::energy::operating_point::NOMINAL_FREQ_HZ,
+        tenant_weights: vec![9, 1],
+        class_seq: class_seq.to_vec(),
+        seed,
+    }
+}
+
+/// Equal-weight tenants — the symmetric baseline whose delivered
+/// throughput must score a Jain index of 1.0 under any fair policy.
+pub fn symmetric(
+    rows: usize,
+    tenants: usize,
+    rate_rps: f64,
+    class_seq: &[usize],
+    seed: u64,
+) -> TraceSpec {
+    TraceSpec {
+        rows,
+        rate_rps,
+        freq_hz: crate::energy::operating_point::NOMINAL_FREQ_HZ,
+        tenant_weights: vec![1; tenants.max(1)],
+        class_seq: class_seq.to_vec(),
+        seed,
+    }
+}
+
+/// Lazy seeded row generator (O(1) state; see the module docs).
+#[derive(Debug, Clone)]
+pub struct TraceGen {
+    spec: TraceSpec,
+    rng: XorShift64,
+    weight_total: u64,
+    t_s: f64,
+    emitted: usize,
+}
+
+impl TraceGen {
+    pub fn new(spec: TraceSpec) -> Result<TraceGen, DeployError> {
+        spec.validate()?;
+        let weight_total = spec.tenant_weights.iter().sum();
+        let rng = XorShift64::new(spec.seed);
+        Ok(TraceGen { spec, rng, weight_total, t_s: 0.0, emitted: 0 })
+    }
+
+    /// Weighted tenant pick: one uniform draw walked through the
+    /// cumulative weights (deterministic, integer).
+    fn draw_tenant(&mut self) -> usize {
+        let mut r = self.rng.next_below(self.weight_total);
+        for (t, &w) in self.spec.tenant_weights.iter().enumerate() {
+            if r < w {
+                return t;
+            }
+            r -= w;
+        }
+        self.spec.tenant_weights.len() - 1
+    }
+}
+
+impl Iterator for TraceGen {
+    type Item = TraceEntry;
+
+    fn next(&mut self) -> Option<TraceEntry> {
+        if self.emitted >= self.spec.rows {
+            return None;
+        }
+        self.emitted += 1;
+        // exponential inter-arrival gap: next_f64 is in [0, 1), so the
+        // log argument is in (0, 1] and the gap is finite and >= 0
+        self.t_s += -(1.0 - self.rng.next_f64()).ln() / self.spec.rate_rps;
+        let tenant = self.draw_tenant();
+        let class = self.rng.next_below(self.spec.class_seq.len() as u64) as usize;
+        Some(TraceEntry {
+            cycle: (self.t_s * self.spec.freq_hz).round() as u64,
+            tenant,
+            class,
+            seq_len: self.spec.class_seq[class],
+        })
+    }
+}
+
+/// Materialize a whole trace (tests and in-memory replay; the CLI
+/// streams [`TraceGen`] to disk instead).
+pub fn generate(spec: TraceSpec) -> Result<Vec<TraceEntry>, DeployError> {
+    Ok(TraceGen::new(spec)?.collect())
+}
+
+/// Stream rows to CSV (fixed header; one row per line).
+pub fn write_csv(
+    out: &mut dyn Write,
+    entries: impl IntoIterator<Item = TraceEntry>,
+) -> io::Result<()> {
+    writeln!(out, "{CSV_HEADER}")?;
+    for e in entries {
+        writeln!(out, "{},{},{},{}", e.cycle, e.tenant, e.class, e.seq_len)?;
+    }
+    Ok(())
+}
+
+/// Stream rows to JSONL (one flat object per line, fixed key order so
+/// the output is byte-reproducible).
+pub fn write_jsonl(
+    out: &mut dyn Write,
+    entries: impl IntoIterator<Item = TraceEntry>,
+) -> io::Result<()> {
+    for e in entries {
+        writeln!(
+            out,
+            "{{\"cycle\":{},\"tenant\":{},\"class\":{},\"seq_len\":{}}}",
+            e.cycle, e.tenant, e.class, e.seq_len
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TraceSpec {
+        skewed_two_tenant(1_000, 2_000.0, &[128, 197], 7)
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sorted() {
+        let a = generate(spec()).unwrap();
+        let b = generate(spec()).unwrap();
+        assert_eq!(a.len(), 1_000);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|p| p[0].cycle <= p[1].cycle), "sorted by cycle");
+        // a different seed produces a different trace
+        let mut other = spec();
+        other.seed = 8;
+        assert_ne!(generate(other).unwrap(), a);
+    }
+
+    #[test]
+    fn tenant_weights_shape_the_arrival_mix() {
+        let a = generate(spec()).unwrap();
+        let majority = a.iter().filter(|e| e.tenant == 0).count();
+        // 9:1 weights: the majority share is ~90%, loosely bounded
+        assert!(
+            (820..=980).contains(&majority),
+            "majority tenant got {majority}/1000 rows"
+        );
+        // both classes appear and carry their declared seq_len
+        assert!(a.iter().any(|e| e.class == 0 && e.seq_len == 128));
+        assert!(a.iter().any(|e| e.class == 1 && e.seq_len == 197));
+    }
+
+    #[test]
+    fn symmetric_splits_evenly() {
+        let a = generate(symmetric(2_000, 4, 1_000.0, &[128], 3)).unwrap();
+        for t in 0..4 {
+            let n = a.iter().filter(|e| e.tenant == t).count();
+            assert!((380..=620).contains(&n), "tenant {t} got {n}/2000 rows");
+        }
+    }
+
+    #[test]
+    fn writers_are_byte_reproducible() {
+        let entries = generate(spec()).unwrap();
+        let mut csv_a = Vec::new();
+        let mut csv_b = Vec::new();
+        write_csv(&mut csv_a, entries.iter().copied()).unwrap();
+        write_csv(&mut csv_b, entries.iter().copied()).unwrap();
+        assert_eq!(csv_a, csv_b);
+        assert!(csv_a.starts_with(CSV_HEADER.as_bytes()));
+        let mut jsonl = Vec::new();
+        write_jsonl(&mut jsonl, entries.iter().copied()).unwrap();
+        let first = std::str::from_utf8(&jsonl).unwrap().lines().next().unwrap();
+        assert!(first.starts_with("{\"cycle\":"), "jsonl line {first}");
+    }
+
+    #[test]
+    fn spec_validation_rejects_degenerate_inputs() {
+        let ok = spec();
+        assert!(ok.validate().is_ok());
+        let mut bad = spec();
+        bad.rows = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = spec();
+        bad.rate_rps = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = spec();
+        bad.tenant_weights = vec![0, 0];
+        assert!(bad.validate().is_err());
+        let mut bad = spec();
+        bad.class_seq.clear();
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Datacenter-trace replay: the file format, the seeded generator, and
+//! the streaming reader behind `serve --trace` and `Workload::trace_file`.
+//!
+//! A trace is a timestamp-sorted list of request rows — `(cycle, tenant,
+//! class, seq_len)` — in either CSV (with a fixed header) or JSONL (one
+//! flat object per line). The contract is deliberately minimal:
+//!
+//! - **cycle** — arrival time in fleet cycles (no wall clock anywhere);
+//!   rows must be non-decreasing in `cycle`, which is what lets the
+//!   reader feed the serve engine's admission path without sorting (and
+//!   therefore without materializing the trace).
+//! - **tenant** — dense 0-based tenant id; carried onto the request and
+//!   through the queue so fairness-aware schedulers and per-tenant SLO
+//!   accounting can see it.
+//! - **class** — index into the serving workload's request-class list.
+//! - **seq_len** — the class's padded sequence length. Informational:
+//!   the compiled class is authoritative, the column exists so traces
+//!   are self-describing when inspected outside this crate.
+//!
+//! [`reader`] streams rows with O(1) resident memory (one reused line
+//! buffer), so a million-row trace costs the same memory as a ten-row
+//! one. [`generate`] is the seeded deterministic generator behind
+//! `attn-tinyml trace gen` — CI never needs external trace data, and the
+//! same seed always reproduces the same file byte-for-byte.
+
+pub mod generate;
+pub mod reader;
+
+pub use generate::{
+    generate, skewed_two_tenant, symmetric, write_csv, write_jsonl, TraceGen, TraceSpec,
+};
+pub use reader::{scan, TraceFormat, TraceReader, TraceSummary};
+
+/// Header line of the CSV flavor (column order is fixed).
+pub const CSV_HEADER: &str = "cycle,tenant,class,seq_len";
+
+/// One trace row (see the module docs for the field contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEntry {
+    /// Arrival time, fleet cycles.
+    pub cycle: u64,
+    /// Dense 0-based tenant id.
+    pub tenant: usize,
+    /// Index into the serving workload's class list.
+    pub class: usize,
+    /// Padded sequence length of the class (informational).
+    pub seq_len: usize,
+}

@@ -1,0 +1,289 @@
+//! Streaming trace ingestion: O(1) resident memory, no wall clock.
+//!
+//! [`TraceReader`] pulls one row at a time through a single reused line
+//! buffer — a million-row file costs the same memory as a ten-row one —
+//! and feeds `serve::workload::ArrivalStream` replay without ever
+//! materializing the trace. Both on-disk flavors parse with zero
+//! dependencies: CSV rows against the fixed [`CSV_HEADER`], JSONL as
+//! flat one-line objects whose keys may appear in any order.
+//!
+//! [`scan`] is the one-pass validator `Workload::trace_file` runs at
+//! construction: it counts rows, derives the tenant/class universe, and
+//! enforces the non-decreasing-`cycle` contract that lets replay skip
+//! sorting. After a successful scan the serve path treats the file as
+//! immutable; a file that changes mid-run fails loudly, never silently.
+
+use std::fs::File;
+use std::io::{self, BufRead, BufReader};
+use std::path::Path;
+
+use super::{TraceEntry, CSV_HEADER};
+
+/// On-disk flavor of a trace file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    Csv,
+    Jsonl,
+}
+
+impl TraceFormat {
+    /// Pick the flavor by file extension: `.jsonl` / `.ndjson` /
+    /// `.json` parse as JSONL, everything else as CSV.
+    pub fn from_path(path: &Path) -> TraceFormat {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("jsonl") | Some("ndjson") | Some("json") => TraceFormat::Jsonl,
+            _ => TraceFormat::Csv,
+        }
+    }
+}
+
+/// Streaming row reader (see the module docs).
+#[derive(Debug)]
+pub struct TraceReader<R: BufRead> {
+    input: R,
+    format: TraceFormat,
+    /// Reused line buffer — the whole O(1)-memory claim lives here.
+    line: String,
+    line_no: usize,
+    header_seen: bool,
+}
+
+impl TraceReader<BufReader<File>> {
+    /// Open a trace file, picking the format from the extension.
+    pub fn open(path: &Path) -> io::Result<TraceReader<BufReader<File>>> {
+        let file = File::open(path)?;
+        Ok(TraceReader::new(BufReader::new(file), TraceFormat::from_path(path)))
+    }
+}
+
+impl<R: BufRead> TraceReader<R> {
+    pub fn new(input: R, format: TraceFormat) -> TraceReader<R> {
+        TraceReader { input, format, line: String::new(), line_no: 0, header_seen: false }
+    }
+
+    /// Next row, or `None` at end of input. Blank lines and the CSV
+    /// header are skipped; anything else that fails to parse is an
+    /// `InvalidData` error naming the line.
+    pub fn next_entry(&mut self) -> Option<io::Result<TraceEntry>> {
+        loop {
+            self.line.clear();
+            match self.input.read_line(&mut self.line) {
+                Err(e) => return Some(Err(e)),
+                Ok(0) => return None,
+                Ok(_) => {}
+            }
+            self.line_no += 1;
+            let line = self.line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if self.format == TraceFormat::Csv && !self.header_seen {
+                self.header_seen = true;
+                if line == CSV_HEADER {
+                    continue; // header row, not data
+                }
+            }
+            let parsed = match self.format {
+                TraceFormat::Csv => parse_csv(line),
+                TraceFormat::Jsonl => parse_jsonl(line),
+            };
+            return Some(parsed.map_err(|m| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("trace line {}: {m}", self.line_no),
+                )
+            }));
+        }
+    }
+
+    /// Drain the reader into a `Vec` (tests and small tools; the serve
+    /// path streams instead).
+    pub fn read_all(mut self) -> io::Result<Vec<TraceEntry>> {
+        let mut out = Vec::new();
+        while let Some(e) = self.next_entry() {
+            out.push(e?);
+        }
+        Ok(out)
+    }
+}
+
+/// One CSV data row in [`CSV_HEADER`] column order.
+fn parse_csv(line: &str) -> Result<TraceEntry, String> {
+    let mut cols = line.split(',');
+    let mut field = |name: &str| {
+        cols.next()
+            .ok_or_else(|| format!("missing column `{name}`"))?
+            .trim()
+            .parse::<u64>()
+            .map_err(|_| format!("column `{name}` is not an integer"))
+    };
+    let e = TraceEntry {
+        cycle: field("cycle")?,
+        tenant: field("tenant")? as usize,
+        class: field("class")? as usize,
+        seq_len: field("seq_len")? as usize,
+    };
+    if cols.next().is_some() {
+        return Err("too many columns (expected 4)".into());
+    }
+    Ok(e)
+}
+
+/// One flat JSONL object; keys in any order, all four required.
+fn parse_jsonl(line: &str) -> Result<TraceEntry, String> {
+    let body = line
+        .strip_prefix('{')
+        .and_then(|s| s.strip_suffix('}'))
+        .ok_or("not a JSON object")?;
+    Ok(TraceEntry {
+        cycle: json_field(body, "cycle")?,
+        tenant: json_field(body, "tenant")? as usize,
+        class: json_field(body, "class")? as usize,
+        seq_len: json_field(body, "seq_len")? as usize,
+    })
+}
+
+/// Extract an unsigned integer field from a flat one-line JSON body —
+/// the four trace keys are distinct and none is a suffix of another, so
+/// a quoted-key search is unambiguous.
+fn json_field(body: &str, key: &str) -> Result<u64, String> {
+    let needle = format!("\"{key}\"");
+    let at = body.find(&needle).ok_or_else(|| format!("missing key `{key}`"))?;
+    let rest = body[at + needle.len()..]
+        .trim_start()
+        .strip_prefix(':')
+        .ok_or_else(|| format!("key `{key}` has no value"))?
+        .trim_start();
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse::<u64>().map_err(|_| format!("key `{key}` is not an unsigned integer"))
+}
+
+/// What one validation pass over a trace file learned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Data rows in the file.
+    pub rows: usize,
+    /// Tenant universe size (`max tenant + 1`).
+    pub tenants: usize,
+    /// Class universe size (`max class + 1`) — the serving workload
+    /// must compile at least this many classes.
+    pub classes: usize,
+}
+
+/// Stream the whole file once with O(1) memory: count rows, derive the
+/// tenant/class universe, and enforce the sorted-by-`cycle` contract.
+pub fn scan(path: &Path) -> io::Result<TraceSummary> {
+    let mut reader = TraceReader::open(path)?;
+    let mut summary = TraceSummary { rows: 0, tenants: 0, classes: 0 };
+    let mut last_cycle = 0u64;
+    while let Some(entry) = reader.next_entry() {
+        let e = entry?;
+        if e.cycle < last_cycle {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "trace is not sorted: cycle {} after {} (row {})",
+                    e.cycle,
+                    last_cycle,
+                    summary.rows + 1
+                ),
+            ));
+        }
+        last_cycle = e.cycle;
+        summary.rows += 1;
+        summary.tenants = summary.tenants.max(e.tenant + 1);
+        summary.classes = summary.classes.max(e.class + 1);
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generate::{generate, skewed_two_tenant, write_csv, write_jsonl};
+
+    fn entries() -> Vec<TraceEntry> {
+        generate(skewed_two_tenant(200, 5_000.0, &[128, 197], 11)).unwrap()
+    }
+
+    #[test]
+    fn csv_round_trips_bit_identically() {
+        let original = entries();
+        let mut buf = Vec::new();
+        write_csv(&mut buf, original.iter().copied()).unwrap();
+        let back = TraceReader::new(buf.as_slice(), TraceFormat::Csv).read_all().unwrap();
+        assert_eq!(back, original);
+    }
+
+    #[test]
+    fn jsonl_round_trips_bit_identically() {
+        let original = entries();
+        let mut buf = Vec::new();
+        write_jsonl(&mut buf, original.iter().copied()).unwrap();
+        let back =
+            TraceReader::new(buf.as_slice(), TraceFormat::Jsonl).read_all().unwrap();
+        assert_eq!(back, original);
+    }
+
+    #[test]
+    fn jsonl_accepts_any_key_order_and_whitespace() {
+        let line = "{\"seq_len\": 197, \"class\":1, \"cycle\": 42, \"tenant\": 3}\n";
+        let back =
+            TraceReader::new(line.as_bytes(), TraceFormat::Jsonl).read_all().unwrap();
+        assert_eq!(
+            back,
+            vec![TraceEntry { cycle: 42, tenant: 3, class: 1, seq_len: 197 }]
+        );
+    }
+
+    #[test]
+    fn blank_lines_and_header_are_skipped() {
+        let text = format!("{CSV_HEADER}\n\n10,0,0,128\n\n20,1,1,197\n");
+        let back =
+            TraceReader::new(text.as_bytes(), TraceFormat::Csv).read_all().unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1], TraceEntry { cycle: 20, tenant: 1, class: 1, seq_len: 197 });
+    }
+
+    #[test]
+    fn malformed_rows_error_with_the_line_number() {
+        let text = format!("{CSV_HEADER}\n10,0,0,128\nnot,a,row\n");
+        let mut r = TraceReader::new(text.as_bytes(), TraceFormat::Csv);
+        assert!(r.next_entry().unwrap().is_ok());
+        let err = r.next_entry().unwrap().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("line 3"), "{err}");
+        let missing = "{\"cycle\":1,\"tenant\":0}";
+        let err = TraceReader::new(missing.as_bytes(), TraceFormat::Jsonl)
+            .read_all()
+            .unwrap_err();
+        assert!(err.to_string().contains("class"), "{err}");
+    }
+
+    #[test]
+    fn format_is_picked_by_extension() {
+        assert_eq!(TraceFormat::from_path(Path::new("t.csv")), TraceFormat::Csv);
+        assert_eq!(TraceFormat::from_path(Path::new("t.jsonl")), TraceFormat::Jsonl);
+        assert_eq!(TraceFormat::from_path(Path::new("t.ndjson")), TraceFormat::Jsonl);
+        assert_eq!(TraceFormat::from_path(Path::new("t")), TraceFormat::Csv);
+    }
+
+    #[test]
+    fn scan_summarizes_and_enforces_sortedness() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("attn_tinyml_scan_test.csv");
+        let mut buf = Vec::new();
+        write_csv(&mut buf, entries().iter().copied()).unwrap();
+        std::fs::write(&path, &buf).unwrap();
+        let s = scan(&path).unwrap();
+        assert_eq!(s.rows, 200);
+        assert_eq!(s.tenants, 2);
+        assert_eq!(s.classes, 2);
+        // an out-of-order row is rejected with its position
+        let unsorted = format!("{CSV_HEADER}\n100,0,0,128\n50,0,0,128\n");
+        std::fs::write(&path, unsorted).unwrap();
+        let err = scan(&path).unwrap_err();
+        assert!(err.to_string().contains("not sorted"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -4,7 +4,9 @@
 //! pre-optimization loop (`serve::naive`) produce **bit-identical**
 //! `ServeReport`s on randomized small workloads, across all three
 //! built-in schedulers, fleet sizes 1–4, and every arrival process
-//! (poisson, bursty, trace, closed-loop, diurnal). The same matrix
+//! (poisson, bursty, trace, closed-loop, diurnal, and multi-tenant
+//! trace replay through `trace::generate` — per-tenant summaries and
+//! the Jain index included in the bit-for-bit check). The same matrix
 //! also propchecks that attaching the `StaticNominal` controller is a
 //! provable no-op: every core report field stays bit-identical, only
 //! the `control` summary block appears.
@@ -67,6 +69,21 @@ fn reports_identical(a: &ServeReport, b: &ServeReport) -> Result<(), String> {
     );
     chk("class_switches", a.class_switches == b.class_switches);
     chk("batches", a.batches == b.batches);
+    chk("fairness_jain", a.fairness_jain.to_bits() == b.fairness_jain.to_bits());
+    chk(
+        "tenants",
+        a.tenants.len() == b.tenants.len()
+            && a.tenants.iter().zip(&b.tenants).all(|(x, y)| {
+                x.tenant == y.tenant
+                    && x.served == y.served
+                    && x.req_per_s.to_bits() == y.req_per_s.to_bits()
+                    && x.p50_cycles == y.p50_cycles
+                    && x.p99_cycles == y.p99_cycles
+                    && x.mean_latency_cycles.to_bits()
+                        == y.mean_latency_cycles.to_bits()
+                    && x.dominant_share.to_bits() == y.dominant_share.to_bits()
+            }),
+    );
     chk("freq_hz", a.freq_hz.to_bits() == b.freq_hz.to_bits());
     if errs.is_empty() {
         Ok(())
@@ -97,7 +114,22 @@ fn workload_for(kind: usize, rate: f64, requests: usize, seed: u64) -> Workload 
             requests,
             seed,
         ),
-        _ => Workload::diurnal(classes(), rate, 0.8, 0.1, requests, seed),
+        4 => Workload::diurnal(classes(), rate, 0.8, 0.1, requests, seed),
+        _ => {
+            // multi-tenant trace replay through trace::generate — the
+            // 9:1 tenant skew and tied cycles must flow through both
+            // loops (and the per-tenant summaries) identically
+            let cls = classes();
+            let class_seq: Vec<usize> = cls.iter().map(|c| c.bucket()).collect();
+            let spec = attn_tinyml::trace::skewed_two_tenant(
+                requests,
+                rate * 10.0,
+                &class_seq,
+                seed,
+            );
+            let entries = attn_tinyml::trace::generate(spec).expect("valid spec");
+            Workload::trace_entries(cls, entries)
+        }
     }
 }
 
@@ -142,7 +174,7 @@ fn optimized_and_naive_loops_are_bit_identical() {
             1 + rng.next_below(24) as usize,        // requests
             1 + rng.next_below(4) as usize,         // clusters 1..=4
             rng.next_below(3) as usize,             // scheduler
-            rng.next_below(5) as usize,             // arrival kind
+            rng.next_below(6) as usize,             // arrival kind
             50.0 * (1 + rng.next_below(20)) as f64, // rate req/s
             rng.next_u64(),                         // workload seed
         )
