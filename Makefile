@@ -25,6 +25,14 @@
 #   make trace-bench    the full fairness bench (20k-row horizon legs +
 #                    million-row streaming leg); regenerates
 #                    BENCH_trace.json
+#   make fleet-smoke    topology/locality smoke run (CI guard): a small
+#                    pod-topology serve with --locality through the CLI,
+#                    then the fleet-scaling bench in assert mode (links
+#                    carry real traffic, locality never thrashes more
+#                    weight DMA than blind placement, bit-identical
+#                    same-seed rerun)
+#   make fleet-bench    the full fleet-scaling bench (1 -> 10k shards,
+#                    blind vs locality legs); regenerates BENCH_fleet.json
 #   make explore-smoke  design-space exploration smoke run: tiny grid,
 #                    2 operating points — the CLI errors out on an
 #                    empty frontier, so a green run asserts one exists
@@ -41,7 +49,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench serve-smoke perf-smoke perf-bench control-smoke control-bench trace-smoke trace-bench explore-smoke explore-bench artifacts check lint fmt clean
+.PHONY: build test bench serve-smoke perf-smoke perf-bench control-smoke control-bench trace-smoke trace-bench fleet-smoke fleet-bench explore-smoke explore-bench artifacts check lint fmt clean
 
 build:
 	$(CARGO) build --release
@@ -75,6 +83,13 @@ trace-smoke: build
 
 trace-bench:
 	$(CARGO) bench --bench trace_fairness
+
+fleet-smoke: build
+	$(CARGO) run --release -- serve --requests 48 --clusters 8 --topology pod:2x2x2 --locality --scheduler batch
+	FLEET_SCALING_SMOKE=1 $(CARGO) bench --bench fleet_scaling
+
+fleet-bench:
+	$(CARGO) bench --bench fleet_scaling
 
 explore-smoke: build
 	$(CARGO) run --release -- explore --space tiny --strategy grid --budget 8 --seed 7

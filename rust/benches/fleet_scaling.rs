@@ -1,0 +1,251 @@
+//! Fleet scaling 1 → 10k shards over the hierarchical interconnect:
+//! locality-blind versus locality-aware dispatch on a pod topology that
+//! grows with the fleet (8 shards per board, 16 boards per pod).
+//!
+//! Every size runs the same two-class Poisson mix (MobileBERT +
+//! DINOv2-S at ~half per-shard capacity, so the free pool stays
+//! populated and *placement* quality — not raw capacity — separates the
+//! legs) twice: `Fifo` with the topology attached (blind), and `Fifo`
+//! wrapped in `LocalityAware` (steered). Asserts, in both modes:
+//!
+//! - every leg drains and the interconnect actually carried traffic
+//!   (some link level with nonzero busy cycles and utilization),
+//! - the locality wrapper never thrashes **more** weight traffic than
+//!   blind placement (class switches and re-staging fetch cycles, `<=`
+//!   at every size), and **strictly less** of both — with a strictly
+//!   higher locality hit rate — from 1024 shards up (full mode),
+//! - a fixed seed reproduces the largest run **bit-for-bit**, the
+//!   `NetSummary` block included.
+//!
+//! Host wall-clock per leg is printed (the event core must stay
+//! O(log n) per event at 10k shards to finish at all) but never
+//! recorded: `BENCH_fleet.json` holds simulated quantities only, so the
+//! file is byte-reproducible.
+//!
+//!     cargo bench --bench fleet_scaling                    # full + record
+//!     FLEET_SCALING_SMOKE=1 cargo bench --bench fleet_scaling  # CI smoke
+//!
+//! See DESIGN.md §11 for the topology contract and the link-cost model.
+
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::models::{DINOV2S, MOBILEBERT};
+use attn_tinyml::net::Topology;
+use attn_tinyml::serve::{
+    Fifo, Fleet, LocalityAware, RequestClass, ServeReport, Workload,
+};
+use attn_tinyml::sim::ClusterConfig;
+use attn_tinyml::util::bench::section;
+use attn_tinyml::util::json::Json;
+
+const SEED: u64 = 0xF1EE7;
+/// Offered load per shard, req/s — roughly half of one cluster's
+/// two-class mix capacity, keeping several shards free at every
+/// dispatch so placement has genuine choices (an all-busy fleet gives
+/// any scheduler exactly one shard to pick).
+const RATE_PER_SHARD_RPS: f64 = 250.0;
+/// Fleet size from which the locality win must be strict.
+const ASSERT_SHARDS: usize = 1024;
+
+fn classes() -> Vec<RequestClass> {
+    vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&DINOV2S, 1)]
+}
+
+/// Smallest pod count that fits the fleet at 16 boards of 8 clusters
+/// per pod — the spine grows with the fleet, the leaf shape stays.
+fn topology_for(shards: usize) -> Topology {
+    let pods = shards.div_ceil(128).max(1);
+    Topology::parse(&format!("pod:{pods}x16x8")).expect("well-formed pod label")
+}
+
+fn fleet(shards: usize) -> Fleet {
+    Fleet::new(ClusterConfig::default(), Target::MultiCoreIta, shards)
+        .with_topology(topology_for(shards))
+}
+
+fn workload_for(shards: usize) -> Workload {
+    let requests = (shards * 8).clamp(64, 40_000);
+    Workload::poisson(classes(), RATE_PER_SHARD_RPS * shards as f64, requests, SEED)
+}
+
+fn blind(shards: usize, w: &Workload) -> ServeReport {
+    fleet(shards).serve(w, &mut Fifo).expect("blind leg serves")
+}
+
+fn steered(shards: usize, w: &Workload) -> ServeReport {
+    let mut inner = Fifo;
+    let mut sched = LocalityAware::new(&mut inner, topology_for(shards), classes().len());
+    fleet(shards).serve(w, &mut sched).expect("locality leg serves")
+}
+
+/// Bit identity of everything the scaling record is built from, the
+/// interconnect block included (`NetSummary` derives `PartialEq`; its
+/// floats come from identical integer cycle counts).
+fn assert_bit_identical(label: &str, a: &ServeReport, b: &ServeReport) {
+    assert_eq!(a.served, b.served, "{label}: served");
+    assert_eq!(a.makespan_cycles, b.makespan_cycles, "{label}: makespan");
+    assert_eq!(a.p99_cycles, b.p99_cycles, "{label}: p99");
+    assert_eq!(a.class_switches, b.class_switches, "{label}: class switches");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{label}: energy");
+    assert_eq!(a.net, b.net, "{label}: net summary");
+}
+
+fn leg_json(r: &ServeReport) -> Json {
+    let net = r.net.as_ref().expect("topology run carries a net block");
+    Json::obj(vec![
+        ("scheduler", Json::str(&r.scheduler)),
+        ("served", Json::num(r.served as f64)),
+        ("req_per_s", Json::num(r.req_per_s)),
+        ("p99_ms", Json::num(r.p99_ms())),
+        ("class_switches", Json::num(r.class_switches as f64)),
+        ("restages", Json::num(net.restages as f64)),
+        ("restage_fetch_cycles", Json::num(net.restage_fetch_cycles as f64)),
+        ("locality_rate", Json::num(net.locality_rate)),
+        (
+            "net_util",
+            Json::Arr(
+                net.levels
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("level", Json::str(l.level)),
+                            ("links", Json::num(l.links as f64)),
+                            ("transfers", Json::num(l.transfers as f64)),
+                            ("utilization", Json::num(l.utilization)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::var("FLEET_SCALING_SMOKE").is_ok();
+    let sizes: &[usize] =
+        if smoke { &[1, 8, 64] } else { &[1, 8, 64, 512, 1024, 4096, 10_000] };
+
+    section(&format!(
+        "fleet scaling: {} -> {} shards on pod:Px16x8, {} req/s per shard{}",
+        sizes[0],
+        sizes[sizes.len() - 1],
+        RATE_PER_SHARD_RPS,
+        if smoke { " (smoke)" } else { "" }
+    ));
+
+    // warm the compiled-deployment cache so host timings measure the
+    // serve loop, not the first compile
+    blind(1, &Workload::poisson(classes(), 100.0, 4, SEED));
+
+    println!(
+        "{:>7} {:>10} {:>9} {:>9} {:>9} {:>9} {:>8} {:>8}",
+        "shards", "topology", "blindSW", "localSW", "blindHit", "localHit", "host(b)", "host(l)"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in sizes {
+        let w = workload_for(n);
+        let t0 = std::time::Instant::now();
+        let b = blind(n, &w);
+        let host_b = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let l = steered(n, &w);
+        let host_l = t1.elapsed().as_secs_f64();
+        let (bn, ln) = (b.net.as_ref().unwrap(), l.net.as_ref().unwrap());
+
+        println!(
+            "{:>7} {:>10} {:>9} {:>9} {:>8.1}% {:>8.1}% {:>7.2}s {:>7.2}s",
+            n,
+            topology_for(n).label(),
+            b.class_switches,
+            l.class_switches,
+            bn.locality_rate * 100.0,
+            ln.locality_rate * 100.0,
+            host_b,
+            host_l
+        );
+
+        // both legs drained the same offered stream
+        assert_eq!(b.served, b.offered, "{n} shards: blind leg dropped requests");
+        assert_eq!(l.served, l.offered, "{n} shards: locality leg dropped requests");
+        // the interconnect carried real traffic on every leg
+        for (tag, net) in [("blind", bn), ("locality", ln)] {
+            let busy: u64 = net.levels.iter().map(|lv| lv.busy_cycles).sum();
+            assert!(busy > 0, "{n} shards/{tag}: links never went busy");
+            assert!(
+                net.levels.iter().any(|lv| lv.utilization > 0.0),
+                "{n} shards/{tag}: zero interconnect utilization"
+            );
+        }
+        // locality never thrashes more weight traffic than blind…
+        assert!(
+            l.class_switches <= b.class_switches,
+            "{n} shards: locality switched more ({} > {})",
+            l.class_switches,
+            b.class_switches
+        );
+        assert!(
+            ln.restage_fetch_cycles <= bn.restage_fetch_cycles,
+            "{n} shards: locality fetched more ({} > {})",
+            ln.restage_fetch_cycles,
+            bn.restage_fetch_cycles
+        );
+        // …and wins strictly once the fleet is large enough to choose
+        if n >= ASSERT_SHARDS {
+            assert!(
+                l.class_switches < b.class_switches,
+                "{n} shards: no strict switch win ({} vs {})",
+                l.class_switches,
+                b.class_switches
+            );
+            assert!(
+                ln.restage_fetch_cycles < bn.restage_fetch_cycles,
+                "{n} shards: no strict fetch win ({} vs {})",
+                ln.restage_fetch_cycles,
+                bn.restage_fetch_cycles
+            );
+            assert!(
+                ln.locality_rate > bn.locality_rate,
+                "{n} shards: hit rate did not improve ({} vs {})",
+                ln.locality_rate,
+                bn.locality_rate
+            );
+        }
+
+        rows.push(Json::obj(vec![
+            ("shards", Json::num(n as f64)),
+            ("topology", Json::str(topology_for(n).label())),
+            ("requests", Json::num(w.requests as f64)),
+            ("rate_rps", Json::num(RATE_PER_SHARD_RPS * n as f64)),
+            ("blind", leg_json(&b)),
+            ("locality", leg_json(&l)),
+        ]));
+    }
+
+    // same seed, bit-identical rerun at the largest size — topology
+    // pricing and locality steering sit inside the determinism contract
+    let n = sizes[sizes.len() - 1];
+    let w = workload_for(n);
+    assert_bit_identical("blind rerun", &blind(n, &w), &blind(n, &w));
+    assert_bit_identical("locality rerun", &steered(n, &w), &steered(n, &w));
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fleet_scaling")),
+        ("smoke", Json::Bool(smoke)),
+        ("rate_per_shard_rps", Json::num(RATE_PER_SHARD_RPS)),
+        ("seed", Json::num(SEED as f64)),
+        ("classes", Json::Arr(vec![Json::str("mobilebert"), Json::str("dinov2s")])),
+        ("sizes", Json::Arr(rows)),
+    ]);
+    // smoke runs only assert — they must not clobber the committed
+    // full-run record with reduced-size numbers
+    if smoke {
+        println!(
+            "\nsmoke mode: BENCH_fleet.json left untouched (run `make fleet-bench` to record)"
+        );
+        return;
+    }
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fleet.json");
+    match std::fs::write(out, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

@@ -162,6 +162,31 @@ pub fn render_serve(r: &ServeReport) -> String {
         "dispatches   : {} batches, {} class switches\n",
         r.batches, r.class_switches
     ));
+    // interconnect block — only topology-attached runs carry one, so
+    // linkless output is byte-identical to the historical rendering
+    if let Some(n) = &r.net {
+        s.push_str(&format!(
+            "interconnect : {} topology  {} restages  locality {:.1}%\n",
+            n.topology,
+            n.restages,
+            n.locality_rate * 100.0
+        ));
+        for l in &n.levels {
+            s.push_str(&format!(
+                "  {:<11}: {} links  {} transfers  util {:.1}%\n",
+                l.level,
+                l.links,
+                l.transfers,
+                l.utilization * 100.0
+            ));
+        }
+        if n.restage_fetch_cycles > 0 {
+            s.push_str(&format!(
+                "  weight DMA : {} cycles of re-staging fetch\n",
+                n.restage_fetch_cycles
+            ));
+        }
+    }
     // per-tenant fairness block — only multi-tenant (trace) runs carry
     // more than one tenant, so single-tenant output is unchanged
     if r.tenants.len() > 1 {
@@ -367,6 +392,27 @@ mod tests {
             .unwrap();
         let text = render_serve(&r);
         for needle in ["wfq scheduler", "fairness     : Jain", "tenant       :", "domshare"]
+        {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn render_serve_appends_the_interconnect_block_only_with_a_topology() {
+        use crate::net::Topology;
+        use crate::serve::RequestClass;
+        let w = Workload::poisson(vec![RequestClass::new(&MOBILEBERT, 1)], 300.0, 8, 5);
+        let plain =
+            Pipeline::new(ClusterConfig::default()).fleet(2).serve(&w).unwrap();
+        assert!(!render_serve(&plain).contains("interconnect"));
+        let pod = Pipeline::new(ClusterConfig::default())
+            .fleet(2)
+            .topology(Topology::parse("pod:1x1x2").unwrap())
+            .serve(&w)
+            .unwrap();
+        let text = render_serve(&pod);
+        for needle in
+            ["interconnect : pod:1x1x2 topology", "locality", "board", "links"]
         {
             assert!(text.contains(needle), "missing {needle} in:\n{text}");
         }

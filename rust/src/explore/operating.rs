@@ -39,6 +39,7 @@
 
 use crate::deeploy::{DeployError, Target};
 use crate::energy::{self, area, operating_point};
+use crate::net::Topology;
 use crate::pipeline::Pipeline;
 use crate::serve::{
     scheduler_by_name, Fleet, RequestClass, SloDvfs, Workload, DEFAULT_BURST_PERIOD_S,
@@ -169,6 +170,15 @@ pub fn serve_eval(
     })?;
     let op = c.operating_point();
     let fleet = c.fleet as f64;
+    // "flat" attaches nothing — the axis is strictly inert there, so a
+    // singleton ["flat"] space reproduces the pre-topology numbers
+    // bit-for-bit. Any other label prices serving over net/ links.
+    let topology = match c.topology {
+        "flat" => None,
+        label => Some(Topology::parse(label).ok_or_else(|| {
+            DeployError::Builder(format!("unknown topology {label}"))
+        })?),
+    };
     let (r, energy_j) = if c.control {
         // control-plane candidate: run under SloDvfs with the
         // candidate's corner as the base operating point. The engine
@@ -176,7 +186,11 @@ pub fn serve_eval(
         // at the live corner per interval — exactly what the static
         // re-basing below computes for an uncontrolled run — so the
         // report's energy is already on the comparable scale
-        let f = Fleet::new(c.cluster(), Target::MultiCoreIta, c.fleet).fuse_mha(c.fuse);
+        let mut f =
+            Fleet::new(c.cluster(), Target::MultiCoreIta, c.fleet).fuse_mha(c.fuse);
+        if let Some(t) = topology {
+            f = f.with_topology(t);
+        }
         let mut ctl = SloDvfs::from_ms(spec.slo_p99_ms, c.cluster().freq_hz);
         let r = f.serve_controlled(
             &w,
@@ -188,11 +202,14 @@ pub fn serve_eval(
         let energy_j = r.energy_j;
         (r, energy_j)
     } else {
-        let r = Pipeline::new(c.cluster())
+        let mut pipe = Pipeline::new(c.cluster())
             .target(Target::MultiCoreIta)
             .fuse_mha(c.fuse)
-            .fleet(c.fleet)
-            .serve_with(&w, sched.as_mut())?;
+            .fleet(c.fleet);
+        if let Some(t) = topology {
+            pipe = pipe.topology(t);
+        }
+        let r = pipe.serve_with(&w, sched.as_mut())?;
         // re-base the report's energy to the candidate's operating
         // point: split off the nominal idle floor the fleet charged,
         // scale the active part by V² and the idle part by the point's
@@ -309,6 +326,27 @@ mod tests {
         let old = screen(&c, &first_only).unwrap();
         assert!(agg.gopj != old.gopj, "mix aggregate cannot equal models[0] alone");
         assert!(agg.p99_ms > old.p99_ms, "worst-class p99 must dominate");
+    }
+
+    #[test]
+    fn pod_topology_candidate_prices_the_interconnect() {
+        // a non-flat label threads a net/ topology through serving:
+        // dispatch DMA rides real links, so latency can only grow
+        // against the flat twin, and the evaluation stays deterministic
+        let spec = default_spec();
+        let mut c = paper_candidate();
+        c.fleet = 2;
+        c.scheduler = "batch";
+        c.topology = "pod:1x1x2";
+        let pod = serve_eval(&c, &spec, 16, 0xA5).unwrap();
+        assert!(pod.is_finite());
+        let mut flat = c.clone();
+        flat.topology = "flat";
+        let free = serve_eval(&flat, &spec, 16, 0xA5).unwrap();
+        assert!(pod.p99_ms >= free.p99_ms, "links cannot make serving faster");
+        let pod2 = serve_eval(&c, &spec, 16, 0xA5).unwrap();
+        assert_eq!(pod.p99_ms.to_bits(), pod2.p99_ms.to_bits());
+        assert_eq!(pod.gopj.to_bits(), pod2.gopj.to_bits());
     }
 
     #[test]

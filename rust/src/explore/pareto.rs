@@ -138,6 +138,8 @@ mod tests {
                 fuse: true,
                 fleet: 1,
                 scheduler: "fifo",
+                control: false,
+                topology: "flat",
             },
             fidelity: Fidelity::Screen,
             gops,

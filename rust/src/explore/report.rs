@@ -34,6 +34,7 @@ fn point_json(e: &Evaluation) -> Json {
         ("fleet", Json::num(c.fleet as f64)),
         ("scheduler", Json::str(c.scheduler)),
         ("control", Json::Bool(c.control)),
+        ("topology", Json::str(c.topology)),
         ("fidelity", Json::str(e.fidelity.name())),
         ("gops", Json::num(e.gops)),
         ("gopj", Json::num(e.gopj)),
@@ -112,6 +113,7 @@ mod tests {
             "operating_point",
             "paper_point",
             "control",
+            "topology",
         ] {
             assert!(first.get(key).is_some(), "frontier point missing {key}");
         }

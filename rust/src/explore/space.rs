@@ -20,6 +20,7 @@ use crate::deeploy::DeployError;
 use crate::energy::operating_point::{self, OperatingPoint, OPERATING_POINTS};
 use crate::ita::ItaConfig;
 use crate::models::{ModelConfig, DINOV2S, MOBILEBERT, WHISPER_TINY_ENC};
+use crate::net::Topology;
 use crate::serve::scheduler_by_name;
 use crate::sim::ClusterConfig;
 
@@ -75,6 +76,10 @@ pub struct Candidate {
     /// Online control plane on/off: when on, the serving evaluation
     /// runs under the `SloDvfs` controller at the spec's p99 SLO.
     pub control: bool,
+    /// Interconnect topology label (`Topology::parse` shape): `"flat"`
+    /// attaches nothing — the historical free interconnect — while a
+    /// `"pod:PxBxC"` label prices serving over `crate::net` links.
+    pub topology: &'static str,
 }
 
 impl Candidate {
@@ -147,6 +152,9 @@ pub struct DesignSpace {
     pub schedulers: Vec<&'static str>,
     /// Control-plane knob values (`[false]` keeps the axis inert).
     pub control: Vec<bool>,
+    /// Interconnect topology labels (`["flat"]` keeps the axis inert —
+    /// radix 1, no serving-path change, index semantics preserved).
+    pub topologies: Vec<&'static str>,
     pub serve: ServeSpec,
 }
 
@@ -164,6 +172,7 @@ impl DesignSpace {
             * self.fleets.len()
             * self.schedulers.len()
             * self.control.len()
+            * self.topologies.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -171,9 +180,10 @@ impl DesignSpace {
     }
 
     /// Deterministic mixed-radix decode of candidate `i` (0-based,
-    /// `i < len()`): the control axis varies fastest, cores slowest.
-    /// (A singleton `control: [false]` keeps index semantics identical
-    /// to the pre-control enumeration.)
+    /// `i < len()`): the topology axis varies fastest, cores slowest.
+    /// (Singleton `control: [false]` / `topologies: ["flat"]` axes are
+    /// radix 1 and keep index semantics identical to the enumerations
+    /// that predate them.)
     pub fn nth(&self, index: usize) -> Candidate {
         let mut i = index;
         let mut pick = |len: usize| {
@@ -181,6 +191,7 @@ impl DesignSpace {
             i /= len;
             k
         };
+        let topology = self.topologies[pick(self.topologies.len())];
         let control = self.control[pick(self.control.len())];
         let scheduler = self.schedulers[pick(self.schedulers.len())];
         let fleet = self.fleets[pick(self.fleets.len())];
@@ -205,6 +216,7 @@ impl DesignSpace {
             fleet,
             scheduler,
             control,
+            topology,
         }
     }
 
@@ -267,6 +279,22 @@ impl DesignSpace {
                 return err(format!("design space {}: unknown scheduler {s}", self.name));
             }
         }
+        for t in &self.topologies {
+            let Some(topo) = Topology::parse(t) else {
+                return err(format!("design space {}: unknown topology {t}", self.name));
+            };
+            if let Some(cap) = topo.capacity() {
+                for &fleet in &self.fleets {
+                    if fleet > cap {
+                        return err(format!(
+                            "design space {}: fleet {fleet} exceeds topology {t} \
+                             capacity {cap}",
+                            self.name
+                        ));
+                    }
+                }
+            }
+        }
         if self.serve.models.is_empty() {
             return err(format!("design space {}: serve spec has no models", self.name));
         }
@@ -325,6 +353,7 @@ impl DesignSpace {
             fleets: vec![1, 2],
             schedulers: vec!["fifo", "batch"],
             control: vec![false],
+            topologies: vec!["flat"],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT],
                 requests: 64,
@@ -351,6 +380,7 @@ impl DesignSpace {
             fleets: vec![1],
             schedulers: vec!["fifo"],
             control: vec![false],
+            topologies: vec!["flat"],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT],
                 requests: 16,
@@ -378,6 +408,7 @@ impl DesignSpace {
             fleets: vec![1, 4],
             schedulers: vec!["fifo", "rr", "batch"],
             control: vec![false, true],
+            topologies: vec!["flat"],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT, &DINOV2S, &WHISPER_TINY_ENC],
                 requests: 96,
@@ -405,6 +436,7 @@ impl DesignSpace {
             fleets: vec![1, 2, 4, 8],
             schedulers: vec!["fifo", "rr", "batch"],
             control: vec![false, true],
+            topologies: vec!["flat"],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT],
                 requests: 64,
@@ -431,7 +463,7 @@ mod tests {
             // the full tuple is unique across the enumeration
             let key = (
                 c.cores, c.banks, c.l1_kib, c.ita_n, c.ita_m, c.op, c.layers, c.fuse,
-                c.fleet, c.scheduler, c.control,
+                c.fleet, c.scheduler, c.control, c.topology,
             );
             assert!(seen.insert(key), "candidate {i} repeats {key:?}");
         }
@@ -515,5 +547,29 @@ mod tests {
         let mut s = DesignSpace::tiny();
         s.serve.slo_p99_ms = 0.0;
         assert!(s.validate().is_err());
+
+        let mut s = DesignSpace::tiny();
+        s.topologies = vec!["mesh"];
+        assert!(s.validate().is_err());
+
+        // a topology too small for the fleet axis is structural, caught
+        // at validation rather than per-candidate evaluation
+        let mut s = DesignSpace::tiny();
+        s.topologies = vec!["pod:1x1x1"];
+        s.fleets = vec![2];
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn singleton_flat_topology_axis_is_inert() {
+        // every preset keeps the historical index semantics: the
+        // topology digit has radix 1 and every candidate decodes "flat"
+        for name in ["default", "tiny", "mix", "full"] {
+            let s = DesignSpace::preset(name).unwrap();
+            assert_eq!(s.topologies, vec!["flat"]);
+            assert!((0..s.len()).all(|i| s.nth(i).topology == "flat"));
+        }
+        // and the default space's size is unchanged by the new axis
+        assert_eq!(DesignSpace::default_space().len(), 108);
     }
 }

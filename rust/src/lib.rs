@@ -17,7 +17,10 @@
 //!   compiled-deployment caching), the multi-request [`serve`]
 //!   subsystem (workloads, schedulers, sharded cluster fleets) that
 //!   makes single-inference `simulate()` the degenerate serving case,
-//!   the [`trace`] subsystem — datacenter-trace replay (streaming
+//!   the [`net`] subsystem — hierarchical fleet topology
+//!   (cluster → board → pod) with a deterministic link-contention
+//!   model and locality-aware routing, scaling fleets to 10k
+//!   clusters — the [`trace`] subsystem — datacenter-trace replay (streaming
 //!   CSV/JSONL reader, seeded generator) feeding multi-tenant fair
 //!   serving with per-tenant SLO accounting — and the [`explore`]
 //!   subsystem — deterministic design-space
@@ -37,6 +40,7 @@ pub mod energy;
 pub mod explore;
 pub mod ita;
 pub mod models;
+pub mod net;
 pub mod pipeline;
 pub mod runtime;
 pub mod serve;

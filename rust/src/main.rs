@@ -32,6 +32,7 @@ use attn_tinyml::explore::{
     explore, explore_json, DesignSpace, ExploreConfig, Objective, Strategy,
 };
 use attn_tinyml::models;
+use attn_tinyml::net::Topology;
 use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::runtime::{Runtime, RuntimeError, TensorIn};
 use attn_tinyml::serve::{
@@ -197,9 +198,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// --scheduler fifo|rr|batch (fifo), --model mix|<name> (mix = all three
 /// networks), --layers N (1), --seed S, --arrival poisson|bursty|diurnal,
 /// --burst FACTOR (implies bursty; square-wave bursty Poisson with a
-/// 20 ms period), --control static|slo-dvfs with --slo-p99-ms, and
-/// --metrics-out PATH (JSONL of per-window snapshots), plus the usual
-/// geometry flags. `--requests` takes million-scale counts: arrivals
+/// 20 ms period), --control static|slo-dvfs with --slo-p99-ms,
+/// --metrics-out PATH (JSONL of per-window snapshots), --topology
+/// flat|pod:PxBxC (price dispatch + weight re-staging over the
+/// interconnect), and --locality (steer batches at weight-holding
+/// shards), plus the usual geometry flags. `--requests` takes million-scale counts: arrivals
 /// stream lazily from the seeded PRNG (nothing is materialized upfront)
 /// and the report adds host-side simulation throughput. `--help` prints
 /// this.
@@ -244,6 +247,17 @@ multi-request serving on a fleet of identical clusters
   --metrics-out PATH  stream windowed metrics snapshots as JSON lines
                       (attaches the static controller if --control is
                       not given, so windows exist to record)
+  --topology T        flat, or pod:PxBxC — place the fleet in a
+                      cluster -> board -> pod hierarchy and price
+                      request dispatch and weight re-staging DMA over
+                      per-level links with deterministic contention.
+                      flat keeps today's free interconnect but adds the
+                      net block to the report; the fleet must fit
+                      P*B*C shards
+  --locality          wrap the scheduler in locality-aware steering:
+                      each batch prefers a free shard already holding
+                      its class's weights, falling back by hierarchy
+                      distance (board, then pod, then anywhere)
 
 the report includes latency percentiles (exact up to 8192 served
 requests, log2-linear histogram with sub-1% relative error beyond),
@@ -251,7 +265,9 @@ time-weighted queue depth, host-side simulation throughput, and — when
 a controller is attached — the per-window control timeline with the
 energy saved against the static-nominal baseline. multi-tenant runs
 add a per-tenant table (served, req/s, p50/p99, dominant share) and
-Jain's fairness index over delivered throughput
+Jain's fairness index over delivered throughput; topology runs add the
+interconnect block (per-level utilization, re-staging traffic and the
+locality hit rate)
 ";
 
 /// One metrics window as a compact JSON object (one `--metrics-out`
@@ -275,6 +291,10 @@ fn window_json(w: &WindowSnapshot) -> Json {
         (
             "tenant_completed",
             Json::Arr(w.tenant_completed.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+        (
+            "net_util",
+            Json::Arr(w.net_util.iter().map(|&u| Json::num(u)).collect()),
         ),
     ])
 }
@@ -353,6 +373,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(c) = controller {
         pipe = pipe.controller(c);
     }
+    if let Some(raw) = args.flag("topology") {
+        let topo = Topology::parse(raw).ok_or_else(|| {
+            RuntimeError::Usage(format!(
+                "--topology expects flat or pod:PxBxC (nonzero dims), got {raw:?}"
+            ))
+        })?;
+        pipe = pipe.topology(topo);
+    }
+    if args.has("locality") {
+        pipe = pipe.locality(true);
+    }
     let report = pipe.serve_with(&workload, sched.as_mut())?;
     let host_s = t0.elapsed().as_secs_f64();
     print!("{}", coordinator::render_serve_with_host(&report, host_s));
@@ -382,10 +413,11 @@ runs and CI never need external datacenter data. rows are
                   extension writes JSON lines, anything else CSV)
   --rows N        rows to generate (default 10000)
   --tenants N     symmetric tenants with equal arrival weights
-                  (default 2)
+                  (default 2; must be >= 1)
   --skew          two tenants at 9:1 arrival weights instead of
                   symmetric — the fairness benchmark's overload shape
-  --rate RPS      aggregate arrival rate across tenants (default 2000)
+  --rate RPS      aggregate arrival rate across tenants (default 2000;
+                  must be a positive finite rate)
   --model M       mix (default) or one model name: defines the class
                   universe the rows draw from
   --layers N      encoder blocks per request class (default 1)
@@ -409,6 +441,22 @@ fn cmd_trace(args: &Args) -> Result<()> {
     }
     let rows = args.flag_usize("rows", 10_000);
     let rate = args.flag_f64("rate", 2_000.0);
+    // a zero/negative rate would put every row at cycle 0 (or hang the
+    // inter-arrival draw); zero tenants would generate an empty weight
+    // vector. Both are usage errors, never silent defaults.
+    if rate <= 0.0 || !rate.is_finite() {
+        return Err(RuntimeError::Usage(format!(
+            "--rate must be a positive finite arrival rate, got {rate}"
+        )));
+    }
+    let n_tenants = args.flag_usize("tenants", 2);
+    if n_tenants == 0 {
+        return Err(RuntimeError::Usage(
+            "--tenants must be >= 1: a trace needs at least one tenant issuing \
+             requests"
+                .to_string(),
+        ));
+    }
     let seed = seed_flag(args, 48879)?;
     let layers = args.flag_usize("layers", 1);
     let classes = classes_flag(args, layers)?;
@@ -416,7 +464,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let spec = if args.has("skew") {
         skewed_two_tenant(rows, rate, &class_seq, seed)
     } else {
-        symmetric(rows, args.flag_usize("tenants", 2), rate, &class_seq, seed)
+        symmetric(rows, n_tenants, rate, &class_seq, seed)
     };
     let tenants = spec.tenant_weights.len();
     let entries = generate(spec)?;

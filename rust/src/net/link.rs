@@ -1,0 +1,197 @@
+//! Deterministic link-contention model: per-link busy-until cycle
+//! tracking, no wall clock.
+//!
+//! A [`Topology::Pod`] hierarchy has three link levels, each derived
+//! from the cluster's wide AXI port width (`ClusterConfig::
+//! wide_axi_bytes`, the same constant `ServeConstants::switch_cycles`
+//! prices weight re-staging DMA with):
+//!
+//! | level   | one link per    | bandwidth        | latency  |
+//! |---------|-----------------|------------------|----------|
+//! | `Board` | board (bus)     | `wide_axi` B/cy  |   8 cy   |
+//! | `Pod`   | board (uplink)  | `wide_axi/4`     |  64 cy   |
+//! | `Root`  | pod (uplink)    | `wide_axi/16`    | 512 cy   |
+//!
+//! A transfer of `bytes` over a link serializes for
+//! `ceil(bytes / bw)` cycles starting at `max(at, busy_until)`, then
+//! lands `latency` cycles later; multi-hop paths are store-and-forward
+//! (each hop starts when the previous one lands). Everything is
+//! integer cycle arithmetic on state owned by the router, so identical
+//! transfer sequences always price identically — the network sits
+//! inside the serve determinism contract.
+//!
+//! [`Topology::Pod`]: super::Topology
+
+use super::topology::Topology;
+
+/// Link levels, leaf to spine. `LEVELS[i].0` names index `i` in every
+/// per-level metrics vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Intra-board bus: shard ↔ shard on one board, and the last hop
+    /// of every inbound path.
+    Board = 0,
+    /// Board ↔ pod-switch uplink.
+    Pod = 1,
+    /// Pod ↔ spine uplink (the front door requests arrive through).
+    Root = 2,
+}
+
+/// Level names in index order (`Level as usize`).
+pub const LEVEL_NAMES: [&str; 3] = ["board", "pod", "root"];
+
+/// Bandwidth/latency of one link level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkSpec {
+    /// Bytes moved per cycle once serialization starts.
+    pub bw_bytes_per_cycle: u64,
+    /// Propagation latency added after serialization completes.
+    pub latency_cycles: u64,
+}
+
+/// Per-level propagation latencies (cycles).
+const LATENCY_CYCLES: [u64; 3] = [8, 64, 512];
+/// Per-level bandwidth divisors applied to `wide_axi_bytes`.
+const BW_DIVISOR: [u64; 3] = [1, 4, 16];
+
+/// Derive the three level specs from the cluster's wide AXI width.
+pub fn level_specs(wide_axi_bytes: usize) -> [LinkSpec; 3] {
+    let base = wide_axi_bytes.max(1) as u64;
+    let mut specs = [LinkSpec { bw_bytes_per_cycle: 1, latency_cycles: 0 }; 3];
+    for (i, spec) in specs.iter_mut().enumerate() {
+        *spec = LinkSpec {
+            bw_bytes_per_cycle: (base / BW_DIVISOR[i]).max(1),
+            latency_cycles: LATENCY_CYCLES[i],
+        };
+    }
+    specs
+}
+
+/// All links of one topology: a busy-until cycle per link, plus
+/// cumulative per-level traffic counters.
+#[derive(Debug, Clone)]
+pub struct Links {
+    specs: [LinkSpec; 3],
+    /// Busy-until per board bus (`n_boards` entries; empty for Flat).
+    board: Vec<u64>,
+    /// Busy-until per board→pod uplink (`n_boards` entries).
+    pod: Vec<u64>,
+    /// Busy-until per pod→spine uplink (`n_pods` entries).
+    root: Vec<u64>,
+    /// Cycles each level spent serializing, cumulative.
+    busy_cycles: [u64; 3],
+    /// Transfers per level, cumulative.
+    transfers: [u64; 3],
+}
+
+impl Links {
+    /// Build the link set for a topology. `Flat` has no links.
+    pub fn new(topo: &Topology, wide_axi_bytes: usize) -> Links {
+        let (n_boards, n_pods) = match topo {
+            Topology::Flat => (0, 0),
+            Topology::Pod { .. } => (topo.n_boards(), topo.n_pods()),
+        };
+        Links {
+            specs: level_specs(wide_axi_bytes),
+            board: vec![0; n_boards],
+            pod: vec![0; n_boards],
+            root: vec![0; n_pods],
+            busy_cycles: [0; 3],
+            transfers: [0; 3],
+        }
+    }
+
+    /// Whether the topology has any links at all (false for `Flat`).
+    pub fn any(&self) -> bool {
+        !self.board.is_empty()
+    }
+
+    /// Links per level (`[boards, boards, pods]`; zeros for `Flat`).
+    pub fn counts(&self) -> [u64; 3] {
+        [self.board.len() as u64, self.pod.len() as u64, self.root.len() as u64]
+    }
+
+    /// Cumulative serialization cycles per level.
+    pub fn busy_cycles(&self) -> [u64; 3] {
+        self.busy_cycles
+    }
+
+    /// Cumulative transfers per level.
+    pub fn transfers(&self) -> [u64; 3] {
+        self.transfers
+    }
+
+    /// Spec of one level.
+    pub fn spec(&self, level: Level) -> LinkSpec {
+        self.specs[level as usize]
+    }
+
+    /// Move `bytes` over link `idx` of `level`, earliest start `at`.
+    /// Returns the arrival cycle and advances the link's busy-until.
+    pub fn transfer(&mut self, level: Level, idx: usize, bytes: u64, at: u64) -> u64 {
+        let spec = self.specs[level as usize];
+        let ser = bytes.div_ceil(spec.bw_bytes_per_cycle).max(1);
+        let busy = match level {
+            Level::Board => &mut self.board[idx],
+            Level::Pod => &mut self.pod[idx],
+            Level::Root => &mut self.root[idx],
+        };
+        let start = at.max(*busy);
+        *busy = start + ser;
+        self.busy_cycles[level as usize] += ser;
+        self.transfers[level as usize] += 1;
+        start + ser + spec.latency_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pod_links() -> Links {
+        Links::new(&Topology::Pod { pods: 2, boards: 2, clusters: 4 }, 64)
+    }
+
+    #[test]
+    fn specs_derive_from_wide_axi() {
+        let s = level_specs(64);
+        assert_eq!(s[Level::Board as usize].bw_bytes_per_cycle, 64);
+        assert_eq!(s[Level::Pod as usize].bw_bytes_per_cycle, 16);
+        assert_eq!(s[Level::Root as usize].bw_bytes_per_cycle, 4);
+        assert!(s[0].latency_cycles < s[1].latency_cycles);
+        assert!(s[1].latency_cycles < s[2].latency_cycles);
+        // degenerate widths still give a usable (1 B/cy) link
+        assert_eq!(level_specs(0)[Level::Root as usize].bw_bytes_per_cycle, 1);
+    }
+
+    #[test]
+    fn transfer_serializes_and_adds_latency() {
+        let mut l = pod_links();
+        // 128 B over a 64 B/cy board bus: 2 cycles + 8 latency
+        assert_eq!(l.transfer(Level::Board, 0, 128, 100), 110);
+        assert_eq!(l.busy_cycles()[0], 2);
+        assert_eq!(l.transfers()[0], 1);
+        // zero-byte transfers still occupy one cycle (header beat)
+        assert_eq!(l.transfer(Level::Board, 1, 0, 0), 9);
+    }
+
+    #[test]
+    fn contention_queues_on_busy_until() {
+        let mut l = pod_links();
+        // first transfer holds the bus until cycle 102
+        assert_eq!(l.transfer(Level::Board, 0, 128, 100), 110);
+        // a second transfer asking for cycle 100 waits for the bus:
+        // starts at 102, serializes 2, lands at 112
+        assert_eq!(l.transfer(Level::Board, 0, 128, 100), 112);
+        // a different board's bus is free
+        assert_eq!(l.transfer(Level::Board, 1, 128, 100), 110);
+        assert_eq!(l.busy_cycles()[0], 6);
+    }
+
+    #[test]
+    fn flat_has_no_links() {
+        let l = Links::new(&Topology::Flat, 64);
+        assert!(!l.any());
+        assert_eq!(l.counts(), [0, 0, 0]);
+    }
+}

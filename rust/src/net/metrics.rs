@@ -1,0 +1,40 @@
+//! Interconnect summaries attached to serve reports.
+
+/// One link level's traffic over a run (or window).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelSummary {
+    /// Level name: `"board"`, `"pod"` or `"root"`.
+    pub level: &'static str,
+    /// Links at this level (board buses / board uplinks / pod uplinks).
+    pub links: u64,
+    /// Transfers that crossed this level.
+    pub transfers: u64,
+    /// Total serialization cycles across the level's links.
+    pub busy_cycles: u64,
+    /// `busy_cycles / (links · makespan)` — mean level occupancy.
+    pub utilization: f64,
+}
+
+/// Interconnect block of a [`ServeReport`]: per-level utilization plus
+/// routing/locality counters. Present whenever the fleet has a
+/// topology attached; `Flat` runs carry an empty `levels` list and
+/// zero fetch cycles (the bit-identity contract).
+///
+/// [`ServeReport`]: crate::serve::ServeReport
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetSummary {
+    /// Topology spec label (`"flat"`, `"pod:2x4x8"`).
+    pub topology: String,
+    /// Per-level traffic, leaf to spine; empty for `Flat`.
+    pub levels: Vec<LevelSummary>,
+    /// Dispatched batches priced through the router.
+    pub dispatches: u64,
+    /// Weight re-stagings (class switches + post-wake restages).
+    pub restages: u64,
+    /// Total cycles dispatches waited on weight-fetch DMA.
+    pub restage_fetch_cycles: u64,
+    /// Dispatches that landed on a shard already holding the class.
+    pub locality_hits: u64,
+    /// `locality_hits / dispatches` (0.0 when nothing dispatched).
+    pub locality_rate: f64,
+}

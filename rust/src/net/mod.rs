@@ -1,0 +1,38 @@
+//! Hierarchical fleet topology + deterministic interconnect model.
+//!
+//! Today's `serve::Fleet` is N shards with a free interconnect; this
+//! module makes the network a first-class costed layer so fleets can
+//! scale to the tinyML-swarm sizes (10k clusters) the paper's template
+//! implies:
+//!
+//! - [`Topology`] — cluster → board → pod hierarchy (plus the
+//!   degenerate [`Topology::Flat`]) with a contiguous shard → position
+//!   mapping that keeps every locality query O(log n).
+//! - [`Links`] / [`Level`] — per-level bandwidth/latency constants
+//!   derived from the cluster's wide AXI width, with deterministic
+//!   per-link busy-until contention (integer cycles, no wall clock).
+//! - [`Router`] — prices request dispatch (spine → shard) and weight
+//!   re-staging DMA (nearest holder → shard) over real links, and
+//!   tracks per-class weight residency for locality queries.
+//! - [`NetSummary`] / [`LevelSummary`] — the per-level interconnect
+//!   metrics attached to `ServeReport` (and, per window, to
+//!   `WindowSnapshot.net_util`).
+//!
+//! Attach a topology with `Fleet::with_topology` (CLI:
+//! `serve --topology pod:PxBxC`); pair it with the locality-aware
+//! scheduler wrapper (`serve::LocalityAware`, CLI `--locality`) to
+//! route dispatches at shards that already hold the class's weights.
+//! A `Flat` topology prices every path to zero and is propchecked
+//! bit-identical to a fleet with no topology at all
+//! (`tests/serve_equivalence.rs`); see DESIGN.md §11 for the link
+//! model and the determinism contract.
+
+pub mod link;
+pub mod metrics;
+pub mod router;
+pub mod topology;
+
+pub use link::{level_specs, Level, LinkSpec, Links, LEVEL_NAMES};
+pub use metrics::{LevelSummary, NetSummary};
+pub use router::Router;
+pub use topology::Topology;

@@ -1,0 +1,294 @@
+//! The [`Router`]: prices request dispatch and weight re-staging DMA
+//! over the topology's links, and tracks which shard holds which
+//! request class's weights.
+//!
+//! Two priced paths:
+//!
+//! - **Dispatch** — a request batch's token payload travels from the
+//!   front door on the spine down to the chosen shard:
+//!   `Root(pod) → Pod(board) → Board(board)`. Payloads are token ids
+//!   (a few hundred bytes), so dispatch traffic is light.
+//! - **Re-staging** — when a shard must switch request classes it
+//!   fetches the class's weights from the **nearest holder**: a shard
+//!   on the same board (board bus only), else one in the same pod
+//!   (up and down the board uplinks), else any holder (through the
+//!   spine), else the root weight store. Weights are megabytes, so
+//!   re-staging dominates interconnect traffic — which is exactly the
+//!   traffic locality-aware scheduling avoids.
+//!
+//! Holder lookups are `BTreeSet::range` probes over the contiguous
+//! board/pod shard spans — O(log n) at 10k shards. The router never
+//! draws randomness and owns all link state, so it sits inside the
+//! serve determinism contract. With a `Flat` topology every path
+//! prices to zero delay and no link is touched: the core serve report
+//! stays bit-identical to an un-networked fleet.
+
+use std::collections::BTreeSet;
+
+use super::link::{Level, Links};
+use super::metrics::{LevelSummary, NetSummary};
+use super::topology::Topology;
+
+/// Per-fleet routing state: link occupancy + weight-residency map.
+#[derive(Debug, Clone)]
+pub struct Router {
+    topo: Topology,
+    links: Links,
+    /// Per class: shards currently holding that class's weights
+    /// (busy shards included — their L2 copy is still fetchable).
+    holders: Vec<BTreeSet<usize>>,
+    /// Per shard: the class its staged weights belong to.
+    resident: Vec<Option<usize>>,
+    dispatches: u64,
+    restages: u64,
+    /// Total extra cycles requests waited on re-staging fetch DMA.
+    restage_fetch_cycles: u64,
+    /// Dispatches that landed on a shard already holding the class.
+    locality_hits: u64,
+}
+
+impl Router {
+    pub fn new(topo: Topology, n_shards: usize, n_classes: usize, wide_axi_bytes: usize) -> Router {
+        let links = Links::new(&topo, wide_axi_bytes);
+        Router {
+            topo,
+            links,
+            holders: vec![BTreeSet::new(); n_classes],
+            resident: vec![None; n_shards],
+            dispatches: 0,
+            restages: 0,
+            restage_fetch_cycles: 0,
+            locality_hits: 0,
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Links per level — the denominators of window utilization.
+    pub fn link_counts(&self) -> [u64; 3] {
+        self.links.counts()
+    }
+
+    /// Cumulative per-level serialization cycles (window metrics diff
+    /// consecutive readings).
+    pub fn cum_busy(&self) -> [u64; 3] {
+        self.links.busy_cycles()
+    }
+
+    /// Price a request batch's trip from the spine front door to shard
+    /// `dst`, earliest start `at`. Returns the arrival cycle.
+    pub fn dispatch_arrival(&mut self, dst: usize, bytes: u64, at: u64) -> u64 {
+        if !self.links.any() {
+            return at;
+        }
+        let (pod, board) = (self.topo.pod_of(dst), self.topo.board_of(dst));
+        let t = self.links.transfer(Level::Root, pod, bytes, at);
+        let t = self.links.transfer(Level::Pod, board, bytes, t);
+        self.links.transfer(Level::Board, board, bytes, t)
+    }
+
+    /// Nearest shard holding `class`'s weights, by hierarchy distance
+    /// from `dst` (same board, then same pod, then anywhere). `None`
+    /// means no shard holds them — fetch from the root weight store.
+    pub fn nearest_holder(&self, class: usize, dst: usize) -> Option<usize> {
+        let h = &self.holders[class];
+        if let Some(&s) = h.range(self.topo.board_span(self.topo.board_of(dst))).next() {
+            return Some(s);
+        }
+        if let Some(&s) = h.range(self.topo.pod_span(self.topo.pod_of(dst))).next() {
+            return Some(s);
+        }
+        h.iter().next().copied()
+    }
+
+    /// Price re-staging `class`'s weights (`bytes` of DMA) into shard
+    /// `dst` from the nearest holder, earliest start `at`. Returns the
+    /// cycle the weights land; the shard's local staging cost
+    /// (`ServeConstants::switch_cycles`) is charged by the engine on
+    /// top, exactly as without a topology.
+    pub fn restage_arrival(&mut self, dst: usize, class: usize, bytes: u64, at: u64) -> u64 {
+        self.restages += 1;
+        if !self.links.any() {
+            return at;
+        }
+        let (pd, bd) = (self.topo.pod_of(dst), self.topo.board_of(dst));
+        let arrival = match self.nearest_holder(class, dst) {
+            Some(src) => match self.topo.level_between(src, dst) {
+                0 => self.links.transfer(Level::Board, bd, bytes, at),
+                1 => {
+                    let bs = self.topo.board_of(src);
+                    let t = self.links.transfer(Level::Board, bs, bytes, at);
+                    let t = self.links.transfer(Level::Pod, bs, bytes, t);
+                    let t = self.links.transfer(Level::Pod, bd, bytes, t);
+                    self.links.transfer(Level::Board, bd, bytes, t)
+                }
+                _ => {
+                    let (ps, bs) = (self.topo.pod_of(src), self.topo.board_of(src));
+                    let t = self.links.transfer(Level::Board, bs, bytes, at);
+                    let t = self.links.transfer(Level::Pod, bs, bytes, t);
+                    let t = self.links.transfer(Level::Root, ps, bytes, t);
+                    let t = self.links.transfer(Level::Root, pd, bytes, t);
+                    let t = self.links.transfer(Level::Pod, bd, bytes, t);
+                    self.links.transfer(Level::Board, bd, bytes, t)
+                }
+            },
+            // cold start: nobody holds the class — root weight store
+            None => {
+                let t = self.links.transfer(Level::Root, pd, bytes, at);
+                let t = self.links.transfer(Level::Pod, bd, bytes, t);
+                self.links.transfer(Level::Board, bd, bytes, t)
+            }
+        };
+        self.restage_fetch_cycles += arrival - at;
+        arrival
+    }
+
+    /// Count one dispatched batch; `hit` = the shard already held the
+    /// batch's class (no re-staging needed).
+    pub fn record_dispatch(&mut self, hit: bool) {
+        self.dispatches += 1;
+        if hit {
+            self.locality_hits += 1;
+        }
+    }
+
+    /// Residency change: shard `shard` now holds `class`'s weights
+    /// (`None` evicts, e.g. a parked shard powering down its copy).
+    pub fn note_staged(&mut self, shard: usize, class: Option<usize>) {
+        if let Some(old) = self.resident[shard] {
+            self.holders[old].remove(&shard);
+        }
+        self.resident[shard] = class;
+        if let Some(new) = class {
+            self.holders[new].insert(shard);
+        }
+    }
+
+    /// Fold the run's routing activity into a report summary.
+    pub fn summary(&self, makespan_cycles: u64) -> NetSummary {
+        let counts = self.links.counts();
+        let busy = self.links.busy_cycles();
+        let transfers = self.links.transfers();
+        let levels = (0..3)
+            .filter(|&i| counts[i] > 0)
+            .map(|i| LevelSummary {
+                level: super::link::LEVEL_NAMES[i],
+                links: counts[i],
+                transfers: transfers[i],
+                busy_cycles: busy[i],
+                utilization: if makespan_cycles > 0 {
+                    busy[i] as f64 / (counts[i] * makespan_cycles) as f64
+                } else {
+                    0.0
+                },
+            })
+            .collect();
+        NetSummary {
+            topology: self.topo.label(),
+            levels,
+            dispatches: self.dispatches,
+            restages: self.restages,
+            restage_fetch_cycles: self.restage_fetch_cycles,
+            locality_hits: self.locality_hits,
+            locality_rate: if self.dispatches > 0 {
+                self.locality_hits as f64 / self.dispatches as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        // 2 pods × 2 boards × 4 clusters = 16 shards, 64 B/cy AXI
+        Router::new(Topology::Pod { pods: 2, boards: 2, clusters: 4 }, 16, 2, 64)
+    }
+
+    #[test]
+    fn flat_routing_is_free_and_linkless() {
+        let mut r = Router::new(Topology::Flat, 4, 2, 64);
+        assert_eq!(r.dispatch_arrival(3, 512, 1000), 1000);
+        assert_eq!(r.restage_arrival(3, 0, 1 << 20, 1000), 1000);
+        assert_eq!(r.restage_fetch_cycles, 0);
+        assert_eq!(r.restages, 1);
+        let s = r.summary(10_000);
+        assert_eq!(s.topology, "flat");
+        assert!(s.levels.is_empty());
+    }
+
+    #[test]
+    fn dispatch_descends_root_pod_board() {
+        let mut r = router();
+        // 512 B: root 512/4=128 cy + 512 lat, pod 32 + 64, board 8 + 8
+        let t = r.dispatch_arrival(0, 512, 0);
+        assert_eq!(t, (128 + 512) + (32 + 64) + (8 + 8));
+        let busy = r.cum_busy();
+        assert_eq!(busy, [8, 32, 128]);
+    }
+
+    #[test]
+    fn nearest_holder_prefers_board_then_pod() {
+        let mut r = router();
+        r.note_staged(1, Some(0)); // board 0, pod 0
+        r.note_staged(5, Some(0)); // board 1, pod 0
+        r.note_staged(9, Some(0)); // board 2, pod 1
+        assert_eq!(r.nearest_holder(0, 2), Some(1)); // same board wins
+        assert_eq!(r.nearest_holder(0, 6), Some(5)); // its own board's holder
+        r.note_staged(5, Some(1)); // retag shard 5: class 0 leaves board 1
+        assert_eq!(r.nearest_holder(0, 6), Some(1)); // same pod, other board
+        assert_eq!(r.nearest_holder(0, 12), Some(9)); // pod 1 holder
+        assert_eq!(r.nearest_holder(1, 12), Some(5)); // cross-pod fallback
+        r.note_staged(5, None);
+        r.note_staged(1, None);
+        r.note_staged(9, None);
+        assert_eq!(r.nearest_holder(0, 6), None); // root store
+    }
+
+    #[test]
+    fn restage_cost_grows_with_hierarchy_distance() {
+        let bytes = 1 << 16; // 64 KiB of weights
+        // same board: board bus only
+        let mut a = router();
+        a.note_staged(1, Some(0));
+        let near = a.restage_arrival(2, 0, bytes, 0);
+        // same pod: up and down the board uplinks
+        let mut b = router();
+        b.note_staged(5, Some(0));
+        let mid = b.restage_arrival(2, 0, bytes, 0);
+        // cross pod: through the spine
+        let mut c = router();
+        c.note_staged(9, Some(0));
+        let far = c.restage_arrival(2, 0, bytes, 0);
+        // cold: root weight store (descend-only path)
+        let mut d = router();
+        let cold = d.restage_arrival(2, 0, bytes, 0);
+        assert!(near < mid, "board {near} !< pod {mid}");
+        assert!(mid < far, "pod {mid} !< cross-pod {far}");
+        assert!(cold < far, "root store {cold} !< cross-pod {far}");
+        assert_eq!(a.restage_fetch_cycles, near);
+    }
+
+    #[test]
+    fn summary_counts_and_rates() {
+        let mut r = router();
+        r.record_dispatch(false);
+        r.record_dispatch(true);
+        r.record_dispatch(true);
+        r.dispatch_arrival(0, 512, 0);
+        let s = r.summary(100_000);
+        assert_eq!(s.dispatches, 3);
+        assert_eq!(s.locality_hits, 2);
+        assert!((s.locality_rate - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.levels.len(), 3);
+        assert_eq!(s.levels[0].level, "board");
+        assert_eq!(s.levels[0].links, 4);
+        assert_eq!(s.levels[2].links, 2);
+        assert!(s.levels.iter().all(|l| l.utilization > 0.0 && l.utilization < 1.0));
+    }
+}

@@ -1,0 +1,192 @@
+//! Fleet topology: where each shard sits in the interconnect hierarchy.
+//!
+//! A [`Topology`] assigns every shard (cluster) a position in a
+//! cluster → board → pod tree. Shard ids map **contiguously**:
+//! shard `s` lives on board `s / clusters_per_board` (global board
+//! index) inside pod `s / (boards_per_pod · clusters_per_board)`.
+//! Contiguity is what keeps every locality query O(log n): the shards
+//! of one board (or pod) form a contiguous id range, so "is there a
+//! weight holder on this board?" is a single `BTreeSet::range` probe.
+//!
+//! `Flat` is the degenerate single-board topology: every shard is
+//! local to every other and no links exist, so a `Flat` fleet is
+//! bit-identical to a fleet with no topology attached at all
+//! (propchecked in `tests/serve_equivalence.rs`).
+
+use std::ops::Range;
+
+/// Hierarchy position of a fleet's shards. See the module docs for the
+/// contiguous shard → (board, pod) mapping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Topology {
+    /// One board holding every shard; no links, zero network cost.
+    Flat,
+    /// `pods` pods × `boards` boards/pod × `clusters` clusters/board.
+    Pod { pods: usize, boards: usize, clusters: usize },
+}
+
+impl Topology {
+    /// Parse a CLI/explore topology spec: `flat` or `pod:PxBxC`
+    /// (e.g. `pod:2x4x8` = 2 pods of 4 boards of 8 clusters).
+    pub fn parse(s: &str) -> Option<Topology> {
+        if s == "flat" {
+            return Some(Topology::Flat);
+        }
+        let spec = s.strip_prefix("pod:")?;
+        let mut it = spec.split('x');
+        let pods: usize = it.next()?.parse().ok()?;
+        let boards: usize = it.next()?.parse().ok()?;
+        let clusters: usize = it.next()?.parse().ok()?;
+        if it.next().is_some() || pods == 0 || boards == 0 || clusters == 0 {
+            return None;
+        }
+        Some(Topology::Pod { pods, boards, clusters })
+    }
+
+    /// Maximum shard count the hierarchy can seat (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        match self {
+            Topology::Flat => None,
+            Topology::Pod { pods, boards, clusters } => Some(pods * boards * clusters),
+        }
+    }
+
+    /// Canonical spec string (`parse(label())` round-trips).
+    pub fn label(&self) -> String {
+        match self {
+            Topology::Flat => "flat".to_string(),
+            Topology::Pod { pods, boards, clusters } => {
+                format!("pod:{pods}x{boards}x{clusters}")
+            }
+        }
+    }
+
+    /// Shards per board (usize::MAX for `Flat`: one all-holding board).
+    fn board_width(&self) -> usize {
+        match self {
+            Topology::Flat => usize::MAX,
+            Topology::Pod { clusters, .. } => *clusters,
+        }
+    }
+
+    /// Shards per pod.
+    fn pod_width(&self) -> usize {
+        match self {
+            Topology::Flat => usize::MAX,
+            Topology::Pod { boards, clusters, .. } => boards * clusters,
+        }
+    }
+
+    /// Global board index of a shard.
+    pub fn board_of(&self, shard: usize) -> usize {
+        match self {
+            Topology::Flat => 0,
+            Topology::Pod { .. } => shard / self.board_width(),
+        }
+    }
+
+    /// Pod index of a shard.
+    pub fn pod_of(&self, shard: usize) -> usize {
+        match self {
+            Topology::Flat => 0,
+            Topology::Pod { .. } => shard / self.pod_width(),
+        }
+    }
+
+    /// Contiguous shard-id range of a global board index.
+    pub fn board_span(&self, board: usize) -> Range<usize> {
+        match self {
+            Topology::Flat => 0..usize::MAX,
+            Topology::Pod { .. } => {
+                let w = self.board_width();
+                board * w..(board + 1) * w
+            }
+        }
+    }
+
+    /// Contiguous shard-id range of a pod.
+    pub fn pod_span(&self, pod: usize) -> Range<usize> {
+        match self {
+            Topology::Flat => 0..usize::MAX,
+            Topology::Pod { .. } => {
+                let w = self.pod_width();
+                pod * w..(pod + 1) * w
+            }
+        }
+    }
+
+    /// Total boards in the hierarchy (1 for `Flat`).
+    pub fn n_boards(&self) -> usize {
+        match self {
+            Topology::Flat => 1,
+            Topology::Pod { pods, boards, .. } => pods * boards,
+        }
+    }
+
+    /// Total pods in the hierarchy (1 for `Flat`).
+    pub fn n_pods(&self) -> usize {
+        match self {
+            Topology::Flat => 1,
+            Topology::Pod { pods, .. } => *pods,
+        }
+    }
+
+    /// Hierarchy distance between two shards: 0 = same board,
+    /// 1 = same pod (board-to-board hop), 2 = cross-pod.
+    pub fn level_between(&self, a: usize, b: usize) -> usize {
+        if self.board_of(a) == self.board_of(b) {
+            0
+        } else if self.pod_of(a) == self.pod_of(b) {
+            1
+        } else {
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        assert_eq!(Topology::parse("flat"), Some(Topology::Flat));
+        let t = Topology::parse("pod:2x4x8").unwrap();
+        assert_eq!(t, Topology::Pod { pods: 2, boards: 4, clusters: 8 });
+        assert_eq!(Topology::parse(&t.label()), Some(t));
+        assert_eq!(Topology::parse(&Topology::Flat.label()), Some(Topology::Flat));
+        for bad in ["pod:0x4x8", "pod:2x4", "pod:2x4x8x1", "ring:4", "pod:ax2x2", ""] {
+            assert!(Topology::parse(bad).is_none(), "{bad} parsed");
+        }
+    }
+
+    #[test]
+    fn contiguous_shard_mapping() {
+        let t = Topology::Pod { pods: 2, boards: 4, clusters: 8 };
+        assert_eq!(t.capacity(), Some(64));
+        assert_eq!(t.n_boards(), 8);
+        assert_eq!(t.n_pods(), 2);
+        // shard 0..8 on board 0 / pod 0; shard 32 opens pod 1
+        assert_eq!(t.board_of(0), 0);
+        assert_eq!(t.board_of(7), 0);
+        assert_eq!(t.board_of(8), 1);
+        assert_eq!(t.pod_of(31), 0);
+        assert_eq!(t.pod_of(32), 1);
+        assert_eq!(t.board_span(1), 8..16);
+        assert_eq!(t.pod_span(1), 32..64);
+        // distances
+        assert_eq!(t.level_between(0, 7), 0);
+        assert_eq!(t.level_between(0, 8), 1);
+        assert_eq!(t.level_between(0, 32), 2);
+    }
+
+    #[test]
+    fn flat_is_one_all_holding_board() {
+        let t = Topology::Flat;
+        assert_eq!(t.capacity(), None);
+        assert_eq!(t.board_of(123_456), 0);
+        assert_eq!(t.pod_of(123_456), 0);
+        assert_eq!(t.level_between(0, 123_456), 0);
+        assert!(t.board_span(0).contains(&123_456));
+    }
+}

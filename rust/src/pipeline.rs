@@ -55,9 +55,10 @@ use crate::ita::ItaConfig;
 use crate::models::{self, ModelConfig};
 use crate::runtime::{Runtime, RuntimeError, TensorIn};
 use crate::energy::operating_point::NOMINAL_INDEX;
+use crate::net::Topology;
 use crate::serve::{
-    Controller, Fifo, Fleet, RequestClass, Scheduler, ServeReport, Workload,
-    DEFAULT_CONTROL_CADENCE_CYCLES,
+    Controller, Fifo, Fleet, LocalityAware, RequestClass, Scheduler, ServeReport,
+    Workload, DEFAULT_CONTROL_CADENCE_CYCLES,
 };
 use crate::sim::dma::DmaModel;
 use crate::sim::{ClusterConfig, Cmd, Engine, RunStats};
@@ -329,6 +330,8 @@ pub struct Pipeline {
     fleet: usize,
     controller: Option<Box<dyn Controller>>,
     control_cadence: u64,
+    topology: Option<Topology>,
+    locality: bool,
 }
 
 impl Default for Pipeline {
@@ -351,6 +354,8 @@ impl Pipeline {
             fleet: 1,
             controller: None,
             control_cadence: DEFAULT_CONTROL_CADENCE_CYCLES,
+            topology: None,
+            locality: false,
         }
     }
 
@@ -417,6 +422,25 @@ impl Pipeline {
         self
     }
 
+    /// Place the serve fleet in an interconnect [`Topology`]
+    /// (cluster → board → pod, see [`crate::net`]): dispatch and weight
+    /// re-staging are priced over its links and the report carries a
+    /// `net` block. Default: none — the historical free interconnect.
+    pub fn topology(mut self, topo: Topology) -> Pipeline {
+        self.topology = Some(topo);
+        self
+    }
+
+    /// Wrap the serve scheduler in [`LocalityAware`]: batches are
+    /// steered at the shard already holding their class's weights,
+    /// falling back by hierarchy distance. Meaningful with
+    /// [`topology`](Pipeline::topology); without one, placement falls
+    /// back to [`Topology::Flat`] (free-holder steering only).
+    pub fn locality(mut self, on: bool) -> Pipeline {
+        self.locality = on;
+        self
+    }
+
     /// Serve a multi-request workload on the configured fleet under the
     /// FIFO scheduler. `Compiled::simulate()` is the degenerate case:
     /// a single-request workload on one cluster reproduces
@@ -444,6 +468,8 @@ impl Pipeline {
             fleet,
             mut controller,
             control_cadence,
+            topology,
+            locality,
         } = self;
         let filled: Option<Workload> = if w.classes.is_empty() {
             match source {
@@ -467,6 +493,17 @@ impl Pipeline {
         if !use_cache {
             f = f.uncached();
         }
+        if let Some(t) = &topology {
+            f = f.with_topology(t.clone());
+        }
+        let mut wrapped;
+        let sched: &mut dyn Scheduler = if locality {
+            let topo = topology.unwrap_or(Topology::Flat);
+            wrapped = LocalityAware::new(sched, topo, w.classes.len());
+            &mut wrapped
+        } else {
+            sched
+        };
         match controller.as_deref_mut() {
             Some(c) => f.serve_controlled(w, sched, c, control_cadence, NOMINAL_INDEX),
             None => f.serve(w, sched),
@@ -485,6 +522,8 @@ impl Pipeline {
             fleet: _,
             controller: _,
             control_cadence: _,
+            topology: _,
+            locality: _,
         } = self;
         // MHA fusion only exists on the ITA path; canonicalize the flag
         // so MultiCore compilations share one cache entry regardless of

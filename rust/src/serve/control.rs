@@ -240,6 +240,8 @@ mod tests {
             active_j: 0.0,
             op_index: NOMINAL_INDEX,
             parked: 0,
+            tenant_completed: Vec::new(),
+            net_util: Vec::new(),
         }
     }
 

@@ -89,11 +89,12 @@
 //! [`StaticNominal`]: super::control::StaticNominal
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeSet, BinaryHeap};
 
 use crate::deeploy::{DeployError, Target};
 use crate::energy;
 use crate::energy::operating_point::{NOMINAL_INDEX, OPERATING_POINTS};
+use crate::net::{Router, Topology};
 use crate::pipeline::{Pipeline, ServeConstants};
 use crate::sim::ClusterConfig;
 
@@ -186,13 +187,25 @@ pub struct Fleet {
     pub(crate) n: usize,
     pub(crate) fuse: bool,
     pub(crate) use_cache: bool,
+    pub(crate) topology: Option<Topology>,
 }
 
 impl Fleet {
     /// A fleet of `n` identical clusters (geometry is first-class, as
     /// everywhere in the pipeline).
     pub fn new(cluster: ClusterConfig, target: Target, n: usize) -> Fleet {
-        Fleet { cluster, target, n, fuse: true, use_cache: true }
+        Fleet { cluster, target, n, fuse: true, use_cache: true, topology: None }
+    }
+
+    /// Place the shards in an interconnect hierarchy (see `net`):
+    /// request dispatch and weight re-staging DMA are then priced over
+    /// the topology's links, and the report carries a `net` block.
+    /// [`Topology::Flat`] attaches a linkless router whose paths cost
+    /// nothing — the core report stays bit-identical to a fleet with no
+    /// topology at all (propchecked in `tests/serve_equivalence.rs`).
+    pub fn with_topology(mut self, topo: Topology) -> Fleet {
+        self.topology = Some(topo);
+        self
     }
 
     /// Toggle the MHA fusion pass for every class compilation.
@@ -275,6 +288,10 @@ pub struct ServeEngine<'a> {
     queue: QueueView,
     shards: Vec<Shard>,
     shard_free: Vec<bool>,
+    /// Free shard ids, ordered — `dispatch` walks it with a range
+    /// cursor, reproducing the original ascending `0..n` offer scan at
+    /// O(log n) per offer (the 10k-shard scaling requirement).
+    free_set: BTreeSet<usize>,
     n_free: usize,
     wake: BinaryHeap<Reverse<(u64, usize)>>,
     lat: LatencyStore,
@@ -296,6 +313,9 @@ pub struct ServeEngine<'a> {
     batch_buf: Vec<Queued>,
     done: bool,
     control: Option<ControlCtx>,
+    /// Interconnect pricing + weight residency; `None` when the fleet
+    /// has no topology attached (every path free, exactly as before).
+    net: Option<Router>,
 }
 
 impl<'a> ServeEngine<'a> {
@@ -309,9 +329,24 @@ impl<'a> ServeEngine<'a> {
         if fleet.n == 0 {
             return Err(DeployError::Builder("fleet size must be >= 1".into()));
         }
+        if let Some(topo) = &fleet.topology {
+            if let Some(cap) = topo.capacity() {
+                if fleet.n > cap {
+                    return Err(DeployError::Builder(format!(
+                        "fleet of {} shards exceeds topology {} capacity {cap}",
+                        fleet.n,
+                        topo.label(),
+                    )));
+                }
+            }
+        }
         w.validate()?;
         let freq = fleet.cluster.freq_hz;
         let classes = class_runtimes(fleet, w)?;
+        let net = fleet.topology.clone().map(|t| {
+            Router::new(t, fleet.n, w.classes.len(), fleet.cluster.wide_axi_bytes)
+        });
+        sched.on_attach(fleet.n);
         // the arrival side: pre-known arrivals stream lazily in
         // (cycle, id) order; closed-loop follow-ons (issued from
         // completions) merge in through a heap, keyed the same way
@@ -332,6 +367,7 @@ impl<'a> ServeEngine<'a> {
             queue: QueueView::new(w.classes.len(), fleet.n, w.n_tenants()),
             shards: vec![Shard::default(); fleet.n],
             shard_free: vec![true; fleet.n],
+            free_set: (0..fleet.n).collect(),
             n_free: fleet.n,
             wake: BinaryHeap::new(),
             lat: LatencyStore::new(),
@@ -349,6 +385,7 @@ impl<'a> ServeEngine<'a> {
             done: false,
             w,
             control: None,
+            net,
         })
     }
 
@@ -357,6 +394,10 @@ impl<'a> ServeEngine<'a> {
     pub fn enable_control(&mut self, base_op: usize, cadence_cycles: u64) {
         let base = base_op.min(OPERATING_POINTS.len() - 1);
         let cadence = cadence_cycles.max(1);
+        let mut window = MetricsWindow::new(self.now);
+        if let Some(r) = &self.net {
+            window.configure_net(&r.link_counts());
+        }
         self.control = Some(ControlCtx {
             cadence,
             next_decision: self.now + cadence,
@@ -364,7 +405,7 @@ impl<'a> ServeEngine<'a> {
             op_index: base,
             parked: vec![false; self.fleet.n],
             n_parked: 0,
-            window: MetricsWindow::new(self.now),
+            window,
             windows: Vec::new(),
             idle_j: 0.0,
             active_j_scaled: 0.0,
@@ -428,7 +469,9 @@ impl<'a> ServeEngine<'a> {
             }
             self.wake.pop();
             self.shard_free[si] = true;
+            self.free_set.insert(si);
             self.n_free += 1;
+            self.sched.note_free(si, true);
         }
         self.admit_due();
         self.depth_max = self.depth_max.max(self.queue.len());
@@ -505,13 +548,21 @@ impl<'a> ServeEngine<'a> {
         }
     }
 
-    /// Dispatch until no free shard selects anything.
+    /// Dispatch until no free shard selects anything. Free shards are
+    /// offered in ascending id order through a `BTreeSet` range cursor:
+    /// the exact offer sequence of the original `for si in 0..n` scan
+    /// over free shards (the queue only shrinks inside a pass, so the
+    /// original's empty-queue `continue` is this loop's `break`), at
+    /// O(log n) per offer instead of O(n) — the event core stays
+    /// O(log n) at 10k shards.
     fn dispatch(&mut self) {
         loop {
             let mut dispatched = false;
-            for si in 0..self.fleet.n {
-                if !self.shard_free[si] || self.queue.is_empty() {
-                    continue;
+            let mut cursor = 0usize;
+            while let Some(&si) = self.free_set.range(cursor..).next() {
+                cursor = si + 1;
+                if self.queue.is_empty() {
+                    break;
                 }
                 self.queue.tidy();
                 let sel =
@@ -536,6 +587,10 @@ impl<'a> ServeEngine<'a> {
                 }
                 let class = self.batch_buf[0].class;
                 let rt = &self.classes[class];
+                // locality hit iff the shard already holds the class's
+                // weights and owes no wake-up re-stage (read before the
+                // flags mutate below)
+                let hit = self.shards[si].class == Some(class) && !self.shards[si].restage;
                 // DVFS: service cycles scale by the clock ratio
                 // (identity at the base point), energy by V²
                 let (first, steady, switch_cost, escale) = match &self.control {
@@ -572,7 +627,28 @@ impl<'a> ServeEngine<'a> {
                 // free, matching Compiled::simulate() semantics
                 self.shards[si].class = Some(class);
                 let start = self.now;
-                let base = start + penalty + cost_switch + first;
+                // interconnect: the batch's token ids ride the dispatch
+                // path, and a re-stage fetches the weights from the
+                // nearest holder — the dispatch starts once both have
+                // landed. Links update dispatch-then-restage, a fixed
+                // order, so contention is deterministic. `Flat` prices
+                // both paths to `start` and touches no link.
+                let mut net_delay = 0u64;
+                if let Some(router) = &mut self.net {
+                    let tokens =
+                        (self.batch_buf.len() * self.batch_buf[0].bucket * 4) as u64;
+                    let t_req = router.dispatch_arrival(si, tokens, start);
+                    let t_weights = if cost_switch > 0 {
+                        let bytes = cost_switch * self.fleet.cluster.wide_axi_bytes as u64;
+                        router.restage_arrival(si, class, bytes, start)
+                    } else {
+                        start
+                    };
+                    net_delay = t_req.max(t_weights) - start;
+                    router.record_dispatch(hit);
+                    router.note_staged(si, Some(class));
+                }
+                let base = start + net_delay + penalty + cost_switch + first;
                 let mut completion = base;
                 for (j, q) in self.batch_buf.iter().enumerate() {
                     let done = base + j as u64 * steady;
@@ -603,7 +679,10 @@ impl<'a> ServeEngine<'a> {
                 self.ops_served += rt.ops * self.batch_buf.len() as u64;
                 self.shards[si].busy += completion - start;
                 self.shard_free[si] = false;
+                self.free_set.remove(&si);
                 self.n_free -= 1;
+                self.sched.note_free(si, false);
+                self.sched.note_staged(si, Some(class));
                 self.wake.push(Reverse((completion, si)));
                 self.batches += 1;
                 self.makespan = self.makespan.max(completion);
@@ -648,7 +727,11 @@ impl<'a> ServeEngine<'a> {
         let action = {
             let queue_depth = self.queue.len();
             let n = self.fleet.n;
+            let net_busy = self.net.as_ref().map(|r| r.cum_busy());
             let ctl = self.control.as_mut().unwrap();
+            if let Some(b) = &net_busy {
+                ctl.window.note_net_busy(b);
+            }
             let alive = n - ctl.n_parked;
             let snap =
                 ctl.window.close(state.now_cycles, alive, queue_depth, ctl.op_index, ctl.n_parked);
@@ -688,7 +771,16 @@ impl<'a> ServeEngine<'a> {
             ctl.parked[si] = true;
             ctl.n_parked += 1;
             self.shard_free[si] = false;
+            self.free_set.remove(&si);
             self.n_free -= 1;
+            self.sched.note_free(si, false);
+            // a parked shard powers down its weight copy: evict it from
+            // the residency maps (the wake re-stage pays to bring the
+            // weights back, whatever class runs next)
+            if let Some(r) = &mut self.net {
+                r.note_staged(si, None);
+            }
+            self.sched.note_staged(si, None);
             ctl.parks += 1;
             ctl.deviated = true;
         }
@@ -697,7 +789,9 @@ impl<'a> ServeEngine<'a> {
             ctl.parked[si] = false;
             ctl.n_parked -= 1;
             self.shard_free[si] = true;
+            self.free_set.insert(si);
             self.n_free += 1;
+            self.sched.note_free(si, true);
             self.shards[si].restage = true;
             ctl.wakes += 1;
             ctl.deviated = true;
@@ -717,8 +811,12 @@ impl<'a> ServeEngine<'a> {
 
     fn build_report(&mut self, meta: Option<(&str, Option<u64>)>) -> ServeReport {
         // close the trailing partial window
+        let net_busy = self.net.as_ref().map(|r| r.cum_busy());
         if let Some(ctl) = &mut self.control {
             if self.now > ctl.window.start() {
+                if let Some(b) = &net_busy {
+                    ctl.window.note_net_busy(b);
+                }
                 let alive = self.fleet.n - ctl.n_parked;
                 let snap = ctl.window.close(
                     self.now,
@@ -794,6 +892,7 @@ impl<'a> ServeEngine<'a> {
             fairness_jain,
             freq_hz: self.freq,
             control,
+            net: self.net.as_ref().map(|r| r.summary(self.makespan)),
         }
     }
 }
@@ -1130,6 +1229,119 @@ mod tests {
             summary.windows.len(),
             again.control.as_ref().unwrap().windows.len()
         );
+    }
+
+    #[test]
+    fn flat_topology_serves_bit_identically_with_an_empty_net_block() {
+        let classes =
+            vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&DINOV2S, 1)];
+        let w = Workload::poisson(classes, 400.0, 300, 0xF1A7);
+        let plain = fleet(2).serve(&w, &mut Fifo).unwrap();
+        let flat = fleet(2).with_topology(Topology::Flat).serve(&w, &mut Fifo).unwrap();
+        assert_eq!(plain.makespan_cycles, flat.makespan_cycles);
+        assert_eq!(plain.class_switches, flat.class_switches);
+        assert_eq!(plain.p99_cycles, flat.p99_cycles);
+        assert_eq!(plain.energy_j.to_bits(), flat.energy_j.to_bits());
+        assert!(plain.net.is_none());
+        let net = flat.net.expect("topology-attached run must carry a net block");
+        assert_eq!(net.topology, "flat");
+        assert!(net.levels.is_empty(), "flat has no links");
+        assert_eq!(net.restage_fetch_cycles, 0);
+        assert_eq!(net.dispatches, flat.batches);
+    }
+
+    #[test]
+    fn pod_topology_prices_dispatch_and_restaging() {
+        let classes =
+            vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&DINOV2S, 1)];
+        let w = Workload::trace(classes, vec![(0, 0), (0, 1)]);
+        let plain = fleet(1).serve(&w, &mut Fifo).unwrap();
+        let run = || {
+            fleet(1)
+                .with_topology(Topology::parse("pod:1x1x1").unwrap())
+                .serve(&w, &mut Fifo)
+                .unwrap()
+        };
+        let pod = run();
+        let net = pod.net.as_ref().unwrap();
+        assert_eq!(net.topology, "pod:1x1x1");
+        assert_eq!(net.dispatches, pod.batches);
+        assert_eq!(net.restages, 1, "the class switch re-stages once");
+        assert!(net.restage_fetch_cycles > 0, "weights crossed real links");
+        assert_eq!(net.locality_hits, 0, "cold then switched: never resident");
+        assert!(
+            pod.makespan_cycles > plain.makespan_cycles,
+            "link latency must lengthen the run: {} <= {}",
+            pod.makespan_cycles,
+            plain.makespan_cycles
+        );
+        assert!(net.levels.iter().all(|l| l.links >= 1 && l.transfers > 0));
+        // same seed, same topology: bit-identical, net block included
+        let again = run();
+        assert_eq!(pod.makespan_cycles, again.makespan_cycles);
+        assert_eq!(pod.energy_j.to_bits(), again.energy_j.to_bits());
+        assert_eq!(net, again.net.as_ref().unwrap());
+    }
+
+    #[test]
+    fn locality_wrapper_cuts_switches_and_restage_traffic() {
+        use crate::serve::scheduler::LocalityAware;
+        // two classes with identical service time (same model, same
+        // layers) and one shard per pod, so the dispatch paths are
+        // link-disjoint and both shards free simultaneously every
+        // round. The trace's head class alternates per pair: a
+        // locality-blind fifo re-tags both shards every round (paying
+        // cross-pod weight fetches), while the wrapper defers each
+        // offer to the shard already holding the class
+        let classes =
+            vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&MOBILEBERT, 1)];
+        let mut arrivals = Vec::new();
+        for pair in 0..20 {
+            let (a, b) = if pair % 2 == 0 { (0, 1) } else { (1, 0) };
+            arrivals.push((0, a));
+            arrivals.push((0, b));
+        }
+        let w = Workload::trace(classes, arrivals);
+        let topo = || Topology::parse("pod:2x1x1").unwrap();
+        let blind = fleet(2).with_topology(topo()).serve(&w, &mut Fifo).unwrap();
+        let mut inner = Fifo;
+        let mut wrapped = LocalityAware::new(&mut inner, topo(), 2);
+        let smart = fleet(2).with_topology(topo()).serve(&w, &mut wrapped).unwrap();
+        assert_eq!(smart.served, blind.served);
+        assert_eq!(smart.scheduler, "locality");
+        assert!(
+            smart.class_switches < blind.class_switches,
+            "locality must cut switches: {} !< {}",
+            smart.class_switches,
+            blind.class_switches
+        );
+        let (bn, sn) = (blind.net.unwrap(), smart.net.unwrap());
+        assert!(
+            sn.restage_fetch_cycles < bn.restage_fetch_cycles,
+            "locality must cut restage DMA: {} !< {}",
+            sn.restage_fetch_cycles,
+            bn.restage_fetch_cycles
+        );
+        assert!(
+            sn.locality_rate > bn.locality_rate,
+            "locality rate {} !> {}",
+            sn.locality_rate,
+            bn.locality_rate
+        );
+    }
+
+    #[test]
+    fn fleet_exceeding_topology_capacity_is_a_builder_error() {
+        let w = Workload::single(&MOBILEBERT, 1);
+        let r = fleet(9)
+            .with_topology(Topology::parse("pod:1x2x4").unwrap())
+            .serve(&w, &mut Fifo);
+        assert!(matches!(r, Err(DeployError::Builder(_))));
+        // exactly at capacity is fine
+        let ok = fleet(8)
+            .with_topology(Topology::parse("pod:1x2x4").unwrap())
+            .serve(&w, &mut Fifo);
+        assert!(ok.is_ok());
     }
 
     #[test]

@@ -253,6 +253,11 @@ pub struct WindowSnapshot {
     /// [`MetricsWindow::record_tenant`]; empty when a window closed
     /// with no completions.
     pub tenant_completed: Vec<u64>,
+    /// Per-level interconnect utilization over the window (index
+    /// order: board, pod, root — `net::LEVEL_NAMES`). Empty when the
+    /// fleet has no topology attached (including `Flat`, which has no
+    /// links to occupy).
+    pub net_util: Vec<f64>,
 }
 
 /// Rolling accumulator behind [`WindowSnapshot`]: a per-window
@@ -268,6 +273,12 @@ pub struct MetricsWindow {
     depth_cycles: u128,
     active_j: f64,
     tenant_completed: Vec<u64>,
+    /// Links per interconnect level (empty = no topology attached).
+    net_links: Vec<u64>,
+    /// Cumulative per-level link busy cycles at the window's start.
+    net_busy_start: Vec<u64>,
+    /// Latest cumulative per-level link busy cycles observed.
+    net_busy_now: Vec<u64>,
 }
 
 impl MetricsWindow {
@@ -280,7 +291,28 @@ impl MetricsWindow {
             depth_cycles: 0,
             active_j: 0.0,
             tenant_completed: Vec::new(),
+            net_links: Vec::new(),
+            net_busy_start: Vec::new(),
+            net_busy_now: Vec::new(),
         }
+    }
+
+    /// Declare the interconnect shape: links per level. Windows closed
+    /// after this carry a `net_util` entry per level with at least one
+    /// link (levels with zero links are skipped, mirroring
+    /// `NetSummary::levels`).
+    pub fn configure_net(&mut self, links: &[u64]) {
+        self.net_links = links.to_vec();
+        self.net_busy_start = vec![0; links.len()];
+        self.net_busy_now = vec![0; links.len()];
+    }
+
+    /// Note the router's cumulative per-level busy cycles. The engine
+    /// calls this right before every window close; utilization diffs
+    /// consecutive readings, so the counters never reset.
+    pub fn note_net_busy(&mut self, cum_busy: &[u64]) {
+        self.net_busy_now.clear();
+        self.net_busy_now.extend_from_slice(cum_busy);
     }
 
     /// Start of the currently open window, cycles.
@@ -328,6 +360,20 @@ impl MetricsWindow {
     ) -> WindowSnapshot {
         let span = end.saturating_sub(self.start);
         let denom = alive_shards as u128 * span as u128;
+        let net_util: Vec<f64> = self
+            .net_links
+            .iter()
+            .zip(self.net_busy_now.iter().zip(self.net_busy_start.iter()))
+            .filter(|&(&links, _)| links > 0)
+            .map(|(&links, (&now, &at_start))| {
+                let d = links as u128 * span as u128;
+                if d == 0 {
+                    0.0
+                } else {
+                    now.saturating_sub(at_start) as f64 / d as f64
+                }
+            })
+            .collect();
         let snap = WindowSnapshot {
             index: self.index,
             start_cycles: self.start,
@@ -350,6 +396,7 @@ impl MetricsWindow {
             op_index,
             parked,
             tenant_completed: std::mem::take(&mut self.tenant_completed),
+            net_util,
         };
         self.start = end;
         self.index += 1;
@@ -357,6 +404,7 @@ impl MetricsWindow {
         self.busy_cycles = 0;
         self.depth_cycles = 0;
         self.active_j = 0.0;
+        self.net_busy_start.clone_from(&self.net_busy_now);
         snap
     }
 }
@@ -443,6 +491,11 @@ pub struct ServeReport {
     /// Control-plane timeline and savings summary; `None` when the run
     /// had no controller attached.
     pub control: Option<ControlSummary>,
+    /// Interconnect block: per-level utilization plus routing/locality
+    /// counters. `None` when the fleet has no topology attached; a
+    /// `Flat` topology yields a summary with no levels and zero fetch
+    /// cycles (the bit-identity contract, `tests/serve_equivalence.rs`).
+    pub net: Option<crate::net::NetSummary>,
 }
 
 impl ServeReport {
@@ -601,6 +654,28 @@ mod tests {
         w.record_tenant(50, 1);
         let next = w.close(2000, 1, 0, 2, 0);
         assert_eq!(next.tenant_completed, vec![0, 1]);
+    }
+
+    #[test]
+    fn window_net_util_diffs_cumulative_busy() {
+        let mut w = MetricsWindow::new(0);
+        w.configure_net(&[4, 4, 2]); // boards, board uplinks, pod uplinks
+        w.note_net_busy(&[400, 100, 0]);
+        let a = w.close(1000, 1, 0, 2, 0);
+        assert_eq!(a.net_util.len(), 3);
+        assert_eq!(a.net_util[0], 400.0 / 4000.0);
+        assert_eq!(a.net_util[1], 100.0 / 4000.0);
+        assert_eq!(a.net_util[2], 0.0);
+        // the counters are cumulative: the next window diffs against
+        // the reading taken at its open
+        w.note_net_busy(&[400, 100, 50]);
+        let b = w.close(2000, 1, 0, 2, 0);
+        assert_eq!(b.net_util[0], 0.0);
+        assert_eq!(b.net_util[2], 50.0 / 2000.0);
+        // no topology configured -> no entries at all
+        let mut plain = MetricsWindow::new(0);
+        let c = plain.close(1000, 1, 0, 2, 0);
+        assert!(c.net_util.is_empty());
     }
 
     #[test]

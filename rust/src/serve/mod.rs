@@ -69,6 +69,20 @@
 //! single-tenant (tenant 0) and reports exactly as before.
 //! `benches/trace_fairness` records the fairness outcome in
 //! `BENCH_trace.json`.
+//!
+//! **Topology + locality (10k-shard fleets):** attaching a
+//! [`crate::net::Topology`] via [`Fleet::with_topology`] places the
+//! shards in a cluster → board → pod hierarchy and prices request
+//! dispatch and weight re-staging DMA over per-level links with
+//! deterministic busy-until contention (see [`crate::net`]). Reports
+//! gain a [`crate::net::NetSummary`] block and windows a per-level
+//! `net_util` vector; the [`LocalityAware`] scheduler wrapper steers
+//! each batch at the shard already holding its class's weights,
+//! falling back by hierarchy distance. The event core stays O(log n)
+//! per event at 10k shards (`BTreeSet` free-scan + span range-probes);
+//! a `Flat` topology is propcheck-held bit-identical to no topology at
+//! all, and `benches/fleet_scaling` sweeps 1 → 10k shards into
+//! `BENCH_fleet.json`.
 
 pub mod control;
 pub mod fleet;
@@ -89,8 +103,8 @@ pub use metrics::{
 };
 pub use queue::QueueView;
 pub use scheduler::{
-    by_name as scheduler_by_name, Drf, DynamicBatch, Fifo, Queued, RoundRobin,
-    Scheduler, Selection, Wfq,
+    by_name as scheduler_by_name, Drf, DynamicBatch, Fifo, LocalityAware, Queued,
+    RoundRobin, Scheduler, Selection, Wfq,
 };
 pub use workload::{
     Arrivals, ArrivalStream, Request, RequestClass, Workload, DEFAULT_BURST_PERIOD_S,

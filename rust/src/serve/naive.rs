@@ -280,6 +280,7 @@ pub fn serve_naive(
         fairness_jain,
         freq_hz: freq,
         control: None,
+        net: None,
     })
 }
 

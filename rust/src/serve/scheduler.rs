@@ -45,6 +45,10 @@
 //! tenant, even fleet share, `max_batch` cap), so fairness costs
 //! throughput only when the tenant mix forces extra class switches.
 
+use std::collections::BTreeSet;
+
+use crate::net::Topology;
+
 pub use super::queue::QueueView;
 
 /// One waiting request as the queue stores it.
@@ -81,6 +85,13 @@ pub enum Selection {
 }
 
 /// A dispatch policy over the [`QueueView`] read surface.
+///
+/// Beyond `select`, the engine feeds placement-aware policies three
+/// defaulted no-op hooks — fleet attach, shard free/busy transitions,
+/// and weight-residency changes — plus a *pure* `peek_class` probe.
+/// The built-in policies ignore the hooks (they are placement-blind);
+/// [`LocalityAware`] consumes all four to steer batches at the shards
+/// already holding their weights.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
@@ -95,6 +106,33 @@ pub trait Scheduler {
         free: usize,
         n_clusters: usize,
     ) -> Selection;
+
+    /// Called once by the engine before the first event, with the
+    /// fleet size — stateful policies size their tracking here.
+    fn on_attach(&mut self, n_shards: usize) {
+        let _ = n_shards;
+    }
+
+    /// Shard `shard` became free (`true`) or busy/parked (`false`).
+    fn note_free(&mut self, shard: usize, free: bool) {
+        let _ = (shard, free);
+    }
+
+    /// Shard `shard` now holds `class`'s staged weights (`None` =
+    /// evicted, e.g. a parked shard powering down its copy).
+    fn note_staged(&mut self, shard: usize, class: Option<usize>) {
+        let _ = (shard, class);
+    }
+
+    /// The class this policy would dispatch next, **without mutating
+    /// any accounting** — a pure replica of `select`'s choice, used by
+    /// [`LocalityAware`] to plan placement before committing. `None`
+    /// means the choice is not class-shaped (e.g. [`RoundRobin`]'s
+    /// pinning) and the wrapper must pass offers straight through.
+    fn peek_class(&self, queue: &QueueView) -> Option<usize> {
+        let _ = queue;
+        None
+    }
 }
 
 /// Strict arrival order, one request per dispatch.
@@ -119,6 +157,10 @@ impl Scheduler for Fifo {
             Some(h) => Selection::Batch { class: h.class, take: 1 },
             None => Selection::Idle,
         }
+    }
+
+    fn peek_class(&self, queue: &QueueView) -> Option<usize> {
+        queue.head().map(|h| h.class)
     }
 }
 
@@ -191,6 +233,10 @@ impl Scheduler for DynamicBatch {
         let share = queue.class_len(class).div_ceil(n_clusters.max(1));
         let take = share.min(self.max_batch).max(1);
         Selection::Batch { class, take }
+    }
+
+    fn peek_class(&self, queue: &QueueView) -> Option<usize> {
+        queue.head().map(|h| h.class)
     }
 }
 
@@ -291,13 +337,35 @@ impl Scheduler for Wfq {
         self.vtime[tenant] += (take * bucket) as u64 / self.weight(tenant);
         Selection::TenantBatch { tenant, class, take }
     }
+
+    fn peek_class(&self, queue: &QueueView) -> Option<usize> {
+        // pure replica of select's argmin: unsized vtime entries read
+        // as 0 (what the resize would write) and the idle-return floor
+        // is applied to the comparison key instead of the stored clock,
+        // so the (vtime, tenant) ordering matches select exactly
+        let vt = |t: usize| self.vtime.get(t).copied().unwrap_or(0);
+        let backlogged: Vec<usize> =
+            (0..queue.n_tenants()).filter(|&t| queue.tenant_len(t) > 0).collect();
+        let min_v = backlogged.iter().map(|&t| vt(t)).min()?;
+        let vnow = self.vnow.max(min_v);
+        let tenant =
+            backlogged.iter().copied().min_by_key(|&t| (vt(t).max(vnow), t))?;
+        queue.tenant_head(tenant).map(|h| h.class)
+    }
 }
 
 /// DRF-style dominant-share scheduling (see the module docs): serve the
-/// backlogged tenant whose dominant resource share is smallest.
+/// backlogged tenant whose **weight-normalized** dominant resource
+/// share is smallest. Weights generalize the rule the same way WFQ's
+/// do: a tenant with weight `w` is entitled to a `w / Σw` dominant
+/// share, so dispatch goes to the tenant minimizing `dominant(t) /
+/// weight(t)` — compared by integer cross-multiplication, no floats.
+/// All-ones weights (the default) reduce exactly to classic DRF.
 pub struct Drf {
     /// Upper bound on one batch, as in [`DynamicBatch`].
     pub max_batch: usize,
+    /// Per-tenant entitlement weights; missing tenants default to 1.
+    pub weights: Vec<u64>,
     /// Request slots dispatched per tenant.
     reqs: Vec<u64>,
     /// Bucket-weighted compute dispatched per tenant.
@@ -306,7 +374,58 @@ pub struct Drf {
 
 impl Drf {
     pub fn new(max_batch: usize) -> Drf {
-        Drf { max_batch: max_batch.max(1), reqs: Vec::new(), work: Vec::new() }
+        Drf {
+            max_batch: max_batch.max(1),
+            weights: Vec::new(),
+            reqs: Vec::new(),
+            work: Vec::new(),
+        }
+    }
+
+    /// Set per-tenant entitlement weights (index = tenant id).
+    pub fn with_weights(mut self, weights: Vec<u64>) -> Drf {
+        self.weights = weights;
+        self
+    }
+
+    fn weight(&self, tenant: usize) -> u64 {
+        self.weights.get(tenant).copied().unwrap_or(1).max(1)
+    }
+
+    /// The backlogged tenant with the smallest weight-normalized
+    /// dominant share — the pure core shared by `select` and
+    /// `peek_class`. `dominant(t)/weight(t) < dominant(b)/weight(b)`
+    /// is compared as `dominant(t)·weight(b) < dominant(b)·weight(t)`
+    /// (saturating: both sides capping at u128::MAX ties, keeping the
+    /// earlier index, exactly like an exact tie). Strict `<` keeps the
+    /// lower index on ties — the unweighted case therefore reproduces
+    /// `min_by_key(|t| (dominant(t), t))` decision for decision.
+    fn pick_tenant(&self, queue: &QueueView) -> Option<usize> {
+        let reqs = |t: usize| self.reqs.get(t).copied().unwrap_or(0);
+        let work = |t: usize| self.work.get(t).copied().unwrap_or(0);
+        let total_r: u64 = self.reqs.iter().sum();
+        let total_w: u64 = self.work.iter().sum();
+        // dominant share of tenant t = max(reqs[t]/ΣR, work[t]/ΣW);
+        // with the common denominator ΣR·ΣW it is an integer
+        let dominant = |t: usize| -> u128 {
+            let r = reqs(t) as u128 * total_w as u128;
+            let w = work(t) as u128 * total_r as u128;
+            r.max(w)
+        };
+        (0..queue.n_tenants())
+            .filter(|&t| queue.tenant_len(t) > 0)
+            .fold(None, |best, t| match best {
+                None => Some(t),
+                Some(b) => {
+                    let challenger = dominant(t).saturating_mul(self.weight(b) as u128);
+                    let incumbent = dominant(b).saturating_mul(self.weight(t) as u128);
+                    if challenger < incumbent {
+                        Some(t)
+                    } else {
+                        Some(b)
+                    }
+                }
+            })
     }
 }
 
@@ -333,20 +452,7 @@ impl Scheduler for Drf {
             self.reqs.resize(queue.n_tenants(), 0);
             self.work.resize(queue.n_tenants(), 0);
         }
-        // dominant share of tenant t = max(reqs[t]/ΣR, work[t]/ΣW).
-        // With the common denominator ΣR·ΣW the comparison reduces to
-        // integer cross-products — no floats, no ties from rounding.
-        let total_r: u64 = self.reqs.iter().sum();
-        let total_w: u64 = self.work.iter().sum();
-        let dominant = |t: usize| -> u128 {
-            let r = self.reqs[t] as u128 * total_w as u128;
-            let w = self.work[t] as u128 * total_r as u128;
-            r.max(w)
-        };
-        let Some(tenant) = (0..queue.n_tenants())
-            .filter(|&t| queue.tenant_len(t) > 0)
-            .min_by_key(|&t| (dominant(t), t))
-        else {
+        let Some(tenant) = self.pick_tenant(queue) else {
             return Selection::Idle;
         };
         let Some((class, bucket, take)) =
@@ -357,6 +463,161 @@ impl Scheduler for Drf {
         self.reqs[tenant] += take as u64;
         self.work[tenant] += (take * bucket) as u64;
         Selection::TenantBatch { tenant, class, take }
+    }
+
+    fn peek_class(&self, queue: &QueueView) -> Option<usize> {
+        let tenant = self.pick_tenant(queue)?;
+        queue.tenant_head(tenant).map(|h| h.class)
+    }
+}
+
+/// Locality-aware placement wrapper: let the wrapped policy pick *what*
+/// to run ([`Scheduler::peek_class`]), then steer the batch at the free
+/// shard already holding that class's weights — falling back by
+/// hierarchy distance (same board as a holder, same pod, anywhere) when
+/// no free holder exists. Offers to every other free shard are deferred
+/// (`Selection::Idle`): the engine walks free shards in ascending id
+/// order and re-sweeps after every dispatch, so the deferred work lands
+/// on the best-placed shard within the same dispatch pass.
+///
+/// The probe is O(log n) at any fleet size: free holders per class are
+/// a `BTreeSet` `first()`, and the distance fallbacks anchor on the
+/// **lowest-id holder** and range-probe the free set over that holder's
+/// contiguous board/pod spans. Anchoring on one holder (rather than
+/// scanning all of them) is what keeps the probe logarithmic; it is a
+/// deterministic, documented policy choice, not an approximation the
+/// engine depends on.
+///
+/// Liveness: between dispatches the best shard for a class is constant,
+/// it is always free (the fallback returns *some* free shard whenever
+/// one exists), and it accepts its own offer — so every sweep over a
+/// non-empty queue with a free shard dispatches at least once, and the
+/// wrapper never strands work. Policies whose choice is not
+/// class-shaped (`peek_class() == None`, e.g. [`RoundRobin`]) pass
+/// through untouched.
+pub struct LocalityAware<'a> {
+    inner: &'a mut dyn Scheduler,
+    topo: Topology,
+    /// Per shard: class whose weights it holds (mirrors the router's
+    /// residency map, driven by the same `note_staged` events).
+    resident: Vec<Option<usize>>,
+    /// Free shard ids, ordered (for the span range-probes).
+    free: BTreeSet<usize>,
+    /// Per class: free shards holding that class.
+    free_holders: Vec<BTreeSet<usize>>,
+    /// Per class: all shards holding that class, busy included.
+    holders: Vec<BTreeSet<usize>>,
+}
+
+impl<'a> LocalityAware<'a> {
+    pub fn new(
+        inner: &'a mut dyn Scheduler,
+        topo: Topology,
+        n_classes: usize,
+    ) -> LocalityAware<'a> {
+        LocalityAware {
+            inner,
+            topo,
+            resident: Vec::new(),
+            free: BTreeSet::new(),
+            free_holders: vec![BTreeSet::new(); n_classes],
+            holders: vec![BTreeSet::new(); n_classes],
+        }
+    }
+
+    /// Best free shard for `class`: a free holder, else a free shard on
+    /// the lowest-id holder's board, else one in its pod, else the
+    /// lowest-id free shard. `None` only when nothing is free.
+    fn best_shard(&self, class: usize) -> Option<usize> {
+        if let Some(&s) = self.free_holders[class].iter().next() {
+            return Some(s);
+        }
+        if let Some(&h) = self.holders[class].iter().next() {
+            let board = self.topo.board_span(self.topo.board_of(h));
+            if let Some(&s) = self.free.range(board).next() {
+                return Some(s);
+            }
+            let pod = self.topo.pod_span(self.topo.pod_of(h));
+            if let Some(&s) = self.free.range(pod).next() {
+                return Some(s);
+            }
+        }
+        self.free.iter().next().copied()
+    }
+}
+
+impl Scheduler for LocalityAware<'_> {
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+
+    fn on_attach(&mut self, n_shards: usize) {
+        self.resident = vec![None; n_shards];
+        self.free = (0..n_shards).collect();
+        for h in &mut self.free_holders {
+            h.clear();
+        }
+        for h in &mut self.holders {
+            h.clear();
+        }
+        self.inner.on_attach(n_shards);
+    }
+
+    fn note_free(&mut self, shard: usize, free: bool) {
+        if free {
+            self.free.insert(shard);
+        } else {
+            self.free.remove(&shard);
+        }
+        if let Some(c) = self.resident[shard] {
+            if free {
+                self.free_holders[c].insert(shard);
+            } else {
+                self.free_holders[c].remove(&shard);
+            }
+        }
+        self.inner.note_free(shard, free);
+    }
+
+    fn note_staged(&mut self, shard: usize, class: Option<usize>) {
+        if let Some(old) = self.resident[shard] {
+            self.holders[old].remove(&shard);
+            self.free_holders[old].remove(&shard);
+        }
+        self.resident[shard] = class;
+        if let Some(new) = class {
+            self.holders[new].insert(shard);
+            if self.free.contains(&shard) {
+                self.free_holders[new].insert(shard);
+            }
+        }
+        self.inner.note_staged(shard, class);
+    }
+
+    fn peek_class(&self, queue: &QueueView) -> Option<usize> {
+        self.inner.peek_class(queue)
+    }
+
+    fn select(
+        &mut self,
+        now: u64,
+        queue: &QueueView,
+        cluster: usize,
+        free: usize,
+        n_clusters: usize,
+    ) -> Selection {
+        let Some(class) = self.inner.peek_class(queue) else {
+            return self.inner.select(now, queue, cluster, free, n_clusters);
+        };
+        match self.best_shard(class) {
+            // defer: a better-placed free shard gets this batch when
+            // its offer comes around in the same dispatch pass
+            Some(best) if best != cluster => Selection::Idle,
+            // this is the best-placed shard (or nothing is free, which
+            // cannot happen on an offer): commit through the inner
+            // policy so its accounting is charged exactly once
+            _ => self.inner.select(now, queue, cluster, free, n_clusters),
+        }
     }
 }
 
@@ -497,6 +758,119 @@ mod tests {
         ));
         let empty = QueueView::new(1, 1, 2);
         assert_eq!(s.select(0, &empty, 0, 1, 1), Selection::Idle);
+    }
+
+    #[test]
+    fn drf_weights_bias_the_dominant_share() {
+        // hand-computed: weights [3, 1], one class of bucket 128,
+        // single-request dispatches from a saturated two-tenant queue.
+        // After k_t dispatches to tenant t: reqs[t]=k_t, work[t]=128·k_t,
+        // so dominant(t) = k_t·ΣR·ΣW/Σ... reduces to k_t (both resource
+        // shares are equal), and the rule serves the tenant minimizing
+        // k_t / weight_t:
+        //   d1: 0/3 vs 0/1 -> tie -> tenant 0        (k = [1, 0])
+        //   d2: 1/3 vs 0/1 -> tenant 1               (k = [1, 1])
+        //   d3: 1/3 vs 1/1 -> tenant 0               (k = [2, 1])
+        //   d4: 2/3 vs 1/1 -> tenant 0               (k = [3, 1])
+        // so the dispatch sequence is exactly [0, 1, 0, 0]
+        let mut s = Drf::new(1).with_weights(vec![3, 1]);
+        let reqs: Vec<(usize, usize, usize)> =
+            (0..8).map(|id| (id, 0, id % 2)).collect();
+        let v = tenant_view(&reqs, 2);
+        let mut order = Vec::new();
+        for _ in 0..4 {
+            match s.select(0, &v, 0, 1, 1) {
+                Selection::TenantBatch { tenant, take: 1, .. } => order.push(tenant),
+                other => panic!("expected a tenant batch, got {other:?}"),
+            }
+        }
+        assert_eq!(order, vec![0, 1, 0, 0], "weight-3 tenant wins 3 of 4");
+    }
+
+    #[test]
+    fn peek_class_is_a_pure_replica_of_select() {
+        // peek then select across evolving accounting: same class every
+        // round, and peeking twice changes nothing
+        let reqs: Vec<(usize, usize, usize)> =
+            (0..16).map(|id| (id, id % 2, id % 2)).collect();
+        let v = tenant_view(&reqs, 2);
+        let mut wfq = Wfq::new(1).with_weights(vec![3, 1]);
+        for _ in 0..6 {
+            let peeked = wfq.peek_class(&v).expect("backlogged queue peeks Some");
+            assert_eq!(wfq.peek_class(&v), Some(peeked), "peek must not mutate");
+            match wfq.select(0, &v, 0, 1, 1) {
+                Selection::TenantBatch { class, .. } => assert_eq!(class, peeked),
+                other => panic!("expected a tenant batch, got {other:?}"),
+            }
+        }
+        let mut drf = Drf::new(1).with_weights(vec![2, 1]);
+        for _ in 0..6 {
+            let peeked = drf.peek_class(&v).expect("backlogged queue peeks Some");
+            match drf.select(0, &v, 0, 1, 1) {
+                Selection::TenantBatch { class, .. } => assert_eq!(class, peeked),
+                other => panic!("expected a tenant batch, got {other:?}"),
+            }
+        }
+        // the head-of-line policies peek their head's class
+        assert_eq!(Fifo.peek_class(&v), Some(v.head().unwrap().class));
+        assert_eq!(DynamicBatch::default().peek_class(&v), Some(0));
+        // pinned policies are not class-shaped
+        assert_eq!(RoundRobin.peek_class(&v), None);
+        let empty = QueueView::new(1, 1, 2);
+        assert_eq!(Fifo.peek_class(&empty), None);
+        assert_eq!(Wfq::default().peek_class(&empty), None);
+        assert_eq!(Drf::default().peek_class(&empty), None);
+    }
+
+    #[test]
+    fn locality_wrapper_steers_to_the_free_holder() {
+        let topo = Topology::parse("pod:1x2x2").unwrap(); // 4 shards
+        let mut inner = Fifo;
+        let mut s = LocalityAware::new(&mut inner, topo, 2);
+        s.on_attach(4);
+        s.note_staged(2, Some(0)); // shard 2 holds class 0, everyone free
+        let v = view(&[(0, 0)], 4);
+        assert_eq!(s.select(0, &v, 0, 4, 4), Selection::Idle, "0 defers to 2");
+        assert_eq!(s.select(0, &v, 1, 4, 4), Selection::Idle);
+        assert_eq!(s.select(0, &v, 2, 4, 4), Selection::Batch { class: 0, take: 1 });
+    }
+
+    #[test]
+    fn locality_wrapper_falls_back_by_hierarchy_distance() {
+        let topo = Topology::parse("pod:2x2x2").unwrap(); // 8 shards
+        let mut inner = Fifo;
+        let mut s = LocalityAware::new(&mut inner, topo, 1);
+        s.on_attach(8);
+        // the only holder (shard 1) is busy: its board-mate 0 is best
+        s.note_staged(1, Some(0));
+        s.note_free(1, false);
+        let v = view(&[(0, 0)], 8);
+        assert_eq!(s.select(0, &v, 3, 7, 8), Selection::Idle);
+        assert_eq!(s.select(0, &v, 0, 7, 8), Selection::Batch { class: 0, take: 1 });
+        // board 0 fully busy -> same pod (shard 2)
+        s.note_free(0, false);
+        assert_eq!(s.select(0, &v, 4, 6, 8), Selection::Idle);
+        assert_eq!(s.select(0, &v, 2, 6, 8), Selection::Batch { class: 0, take: 1 });
+        // pod 0 fully busy -> lowest-id free shard anywhere (4)
+        s.note_free(2, false);
+        s.note_free(3, false);
+        assert_eq!(s.select(0, &v, 5, 4, 8), Selection::Idle);
+        assert_eq!(s.select(0, &v, 4, 4, 8), Selection::Batch { class: 0, take: 1 });
+        // eviction drops residency: with no holder at all, the
+        // lowest-id free shard takes it directly
+        s.note_staged(1, None);
+        assert_eq!(s.select(0, &v, 4, 4, 8), Selection::Batch { class: 0, take: 1 });
+    }
+
+    #[test]
+    fn locality_wrapper_passes_pinned_policies_through() {
+        let mut inner = RoundRobin;
+        let mut s = LocalityAware::new(&mut inner, Topology::Flat, 1);
+        s.on_attach(2);
+        let v = view(&[(0, 0), (1, 0)], 2);
+        assert_eq!(s.name(), "locality");
+        assert_eq!(s.select(0, &v, 0, 2, 2), Selection::Pinned);
+        assert_eq!(s.select(0, &v, 1, 2, 2), Selection::Pinned);
     }
 
     #[test]

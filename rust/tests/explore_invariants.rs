@@ -35,6 +35,7 @@ fn eval(index: usize, gopj: f64, gops: f64, p99: f64, mm2: f64) -> Evaluation {
             fleet: 1,
             scheduler: "fifo",
             control: false,
+            topology: "flat",
         },
         fidelity: Fidelity::Screen,
         gops,

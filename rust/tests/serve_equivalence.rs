@@ -9,11 +9,16 @@
 //! the Jain index included in the bit-for-bit check). The same matrix
 //! also propchecks that attaching the `StaticNominal` controller is a
 //! provable no-op: every core report field stays bit-identical, only
-//! the `control` summary block appears.
+//! the `control` summary block appears — and that attaching the
+//! degenerate `Flat` topology (`Fleet::with_topology`) is likewise a
+//! no-op: the router prices nothing, every core field (per-tenant
+//! summaries and Jain included) stays bit-identical, and only an empty
+//! `net` block (no levels, zero re-staging fetch cycles) appears.
 
 use attn_tinyml::deeploy::Target;
 use attn_tinyml::energy::operating_point::NOMINAL_INDEX;
 use attn_tinyml::models::{DINOV2S, MOBILEBERT};
+use attn_tinyml::net::Topology;
 use attn_tinyml::serve::naive::{serve_naive, NaivePolicy};
 use attn_tinyml::serve::{
     scheduler_by_name, Fleet, RequestClass, ServeReport, StaticNominal, Workload,
@@ -167,6 +172,47 @@ fn static_nominal_is_noop(
     Ok(())
 }
 
+/// A `Flat` topology must be a provable no-op: the fleet carries a
+/// router, but every path is free, so every core report field stays
+/// bit-identical and only the empty `net` block appears.
+fn flat_topology_is_identity(
+    clusters: usize,
+    w: &Workload,
+    name: &str,
+    opt: &ServeReport,
+) -> Result<(), String> {
+    let fleet = Fleet::new(ClusterConfig::default(), Target::MultiCoreIta, clusters)
+        .with_topology(Topology::Flat);
+    let mut sched = scheduler_by_name(name).unwrap();
+    let flat = fleet
+        .serve(w, sched.as_mut())
+        .map_err(|e| format!("flat-topology serve failed: {e}"))?;
+    reports_identical(&flat, opt).map_err(|e| format!("flat topology deviated: {e}"))?;
+    if opt.net.is_some() {
+        return Err("topology-free run carries a net block".into());
+    }
+    let net = flat.net.as_ref().ok_or("flat run lost its net block")?;
+    if net.topology != "flat" {
+        return Err(format!("wrong topology label: {}", net.topology));
+    }
+    if !net.levels.is_empty() {
+        return Err(format!("flat topology grew {} link levels", net.levels.len()));
+    }
+    if net.restage_fetch_cycles != 0 {
+        return Err(format!(
+            "flat topology charged {} fetch cycles",
+            net.restage_fetch_cycles
+        ));
+    }
+    if net.dispatches != opt.batches {
+        return Err(format!(
+            "router priced {} dispatches, engine ran {} batches",
+            net.dispatches, opt.batches
+        ));
+    }
+    Ok(())
+}
+
 #[test]
 fn optimized_and_naive_loops_are_bit_identical() {
     let gen = |rng: &mut XorShift64| {
@@ -217,6 +263,8 @@ fn optimized_and_naive_loops_are_bit_identical() {
             reports_identical(&opt, &naive)
                 .map_err(|e| format!("{name}/{kind} x{requests} on {clusters}: {e}"))?;
             static_nominal_is_noop(&fleet, &w, name, &opt)
+                .map_err(|e| format!("{name}/{kind} x{requests} on {clusters}: {e}"))?;
+            flat_topology_is_identity(clusters, &w, name, &opt)
                 .map_err(|e| format!("{name}/{kind} x{requests} on {clusters}: {e}"))
         },
     );
@@ -235,6 +283,8 @@ fn equivalence_holds_under_sustained_backlog() {
         let opt = fleet.serve(&w, sched.as_mut()).unwrap();
         reports_identical(&opt, &naive).unwrap_or_else(|e| panic!("{name}: {e}"));
         static_nominal_is_noop(&fleet, &w, name, &opt)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        flat_topology_is_identity(2, &w, name, &opt)
             .unwrap_or_else(|e| panic!("{name}: {e}"));
         assert!(opt.max_queue_depth >= 8, "{name}: workload failed to backlog");
     }
