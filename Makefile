@@ -33,6 +33,18 @@
 #                    same-seed rerun)
 #   make fleet-bench    the full fleet-scaling bench (1 -> 10k shards,
 #                    blind vs locality legs); regenerates BENCH_fleet.json
+#   make fault-smoke    fault-injection smoke run (CI guard): serve the
+#                    committed plans/fault_smoke.json (shard crash +
+#                    recover, link degrade + outage, transient failures)
+#                    under threshold admission with a deadline and retry
+#                    budget through the CLI, then the fault-tolerance
+#                    bench in assert mode (availability >= 0.99 through a
+#                    1-of-8 crash, threshold bounds the overload p99,
+#                    offered == served + shed + expired, bit-identical
+#                    same-seed rerun)
+#   make fault-bench    the full fault-tolerance bench (800-request crash
+#                    leg + 400-at-once overload); regenerates
+#                    BENCH_fault.json
 #   make explore-smoke  design-space exploration smoke run: tiny grid,
 #                    2 operating points — the CLI errors out on an
 #                    empty frontier, so a green run asserts one exists
@@ -49,7 +61,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench serve-smoke perf-smoke perf-bench control-smoke control-bench trace-smoke trace-bench fleet-smoke fleet-bench explore-smoke explore-bench artifacts check lint fmt clean
+.PHONY: build test bench serve-smoke perf-smoke perf-bench control-smoke control-bench trace-smoke trace-bench fleet-smoke fleet-bench fault-smoke fault-bench explore-smoke explore-bench artifacts check lint fmt clean
 
 build:
 	$(CARGO) build --release
@@ -90,6 +102,13 @@ fleet-smoke: build
 
 fleet-bench:
 	$(CARGO) bench --bench fleet_scaling
+
+fault-smoke: build
+	$(CARGO) run --release -- serve --requests 48 --clusters 8 --topology pod:2x2x2 --faults plans/fault_smoke.json --admission threshold:16 --deadline-ms 50 --max-retries 2
+	FAULT_TOLERANCE_SMOKE=1 $(CARGO) bench --bench fault_tolerance
+
+fault-bench:
+	$(CARGO) bench --bench fault_tolerance
 
 explore-smoke: build
 	$(CARGO) run --release -- explore --space tiny --strategy grid --budget 8 --seed 7

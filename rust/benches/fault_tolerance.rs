@@ -1,0 +1,232 @@
+//! Fault tolerance under the deterministic fault plan: availability
+//! through a 1-of-8 shard crash, and graceful degradation under
+//! overload with admission control.
+//!
+//! Two measured legs plus a determinism proof:
+//!
+//! - **crash**: an 8-shard pod fleet serves a Poisson stream while one
+//!   shard crashes a fifth of the way in and recovers past the middle.
+//!   In-flight work on the dead shard is killed, failed over through
+//!   the retry path, and re-staged from the store — the bench asserts
+//!   availability >= 0.99 (the plan's crash window must not lose
+//!   requests, only delay them), exactly one crash/recovery pair, and
+//!   a fully drained queue.
+//! - **overload**: a 2-shard fleet is offered its whole trace at cycle
+//!   0, once under `AdmitAll` (unbounded queue, unbounded tail) and
+//!   once under `Threshold`. The bench asserts the threshold leg sheds
+//!   exactly the overflow, keeps `max_queue_depth` at the bound, lands
+//!   a **strictly lower p99** than admit-all, and balances the ledger
+//!   (`offered == served + shed + expired`).
+//! - **rerun**: both legs replay bit-identically from the same seed and
+//!   plan, the `FaultSummary` included.
+//!
+//! Host wall-clock is never recorded: `BENCH_fault.json` holds
+//! simulated quantities only, so the file is byte-reproducible.
+//!
+//!     cargo bench --bench fault_tolerance                      # full + record
+//!     FAULT_TOLERANCE_SMOKE=1 cargo bench --bench fault_tolerance  # CI smoke
+//!
+//! See DESIGN.md §12 for the fault model contract.
+
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::fault::FaultPlan;
+use attn_tinyml::models::MOBILEBERT;
+use attn_tinyml::net::Topology;
+use attn_tinyml::serve::{
+    AdmissionPolicy, FaultConfig, Fifo, Fleet, RequestClass, ServeReport, Workload,
+};
+use attn_tinyml::sim::ClusterConfig;
+use attn_tinyml::util::bench::section;
+use attn_tinyml::util::json::Json;
+
+const SEED: u64 = 0xFA017;
+/// Offered load per shard on the crash leg, req/s — comfortably inside
+/// one cluster's MobileBERT capacity so the 7 survivors can absorb the
+/// dead shard's share during the crash window.
+const RATE_PER_SHARD_RPS: f64 = 200.0;
+/// Queue bound for the overload leg's threshold admission.
+const OVERLOAD_DEPTH: usize = 32;
+
+fn classes() -> Vec<RequestClass> {
+    vec![RequestClass::new(&MOBILEBERT, 1)]
+}
+
+fn fleet(shards: usize, topo: &str) -> Fleet {
+    Fleet::new(ClusterConfig::default(), Target::MultiCoreIta, shards)
+        .with_topology(Topology::parse(topo).expect("well-formed pod label"))
+}
+
+/// The 1-of-8 crash plan, placed relative to the stream's expected
+/// span so smoke and full runs both land it mid-flight: shard 3 dies
+/// at 20% of the span and comes back at 60%.
+fn crash_plan(requests: usize) -> FaultPlan {
+    let span_cycles =
+        requests as f64 / (RATE_PER_SHARD_RPS * 8.0) * ClusterConfig::default().freq_hz;
+    FaultPlan::empty()
+        .crash((span_cycles * 0.2) as u64, 3)
+        .recover((span_cycles * 0.6) as u64, 3)
+}
+
+fn crash_leg(requests: usize) -> ServeReport {
+    let w = Workload::poisson(classes(), RATE_PER_SHARD_RPS * 8.0, requests, SEED);
+    let cfg = FaultConfig::with_plan(crash_plan(requests));
+    fleet(8, "pod:1x2x4").serve_faulted(&w, &mut Fifo, cfg).expect("crash leg serves")
+}
+
+fn overload_leg(requests: usize, admission: AdmissionPolicy) -> ServeReport {
+    let w = Workload::trace(classes(), vec![(0, 0); requests]);
+    let cfg = FaultConfig { admission, ..FaultConfig::default() };
+    fleet(2, "pod:1x1x2").serve_faulted(&w, &mut Fifo, cfg).expect("overload leg serves")
+}
+
+/// Bit identity of everything the record is built from, the degraded
+/// ledger included (`FaultSummary` derives `PartialEq`; its floats come
+/// from identical integer counts).
+fn assert_bit_identical(label: &str, a: &ServeReport, b: &ServeReport) {
+    assert_eq!(a.served, b.served, "{label}: served");
+    assert_eq!(a.makespan_cycles, b.makespan_cycles, "{label}: makespan");
+    assert_eq!(a.p99_cycles, b.p99_cycles, "{label}: p99");
+    assert_eq!(a.class_switches, b.class_switches, "{label}: class switches");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{label}: energy");
+    assert_eq!(a.net, b.net, "{label}: net summary");
+    assert_eq!(a.fault, b.fault, "{label}: fault summary");
+}
+
+fn leg_json(r: &ServeReport) -> Json {
+    let f = r.fault.as_ref().expect("faulted leg carries a summary");
+    Json::obj(vec![
+        ("admission", Json::str(&f.admission)),
+        ("offered", Json::num(r.offered as f64)),
+        ("served", Json::num(r.served as f64)),
+        ("shed", Json::num(f.shed as f64)),
+        ("expired", Json::num(f.expired as f64)),
+        ("availability", Json::num(f.availability)),
+        ("goodput_gops", Json::num(f.goodput_gops)),
+        ("p99_ms", Json::num(r.p99_ms())),
+        ("crashes", Json::num(f.crashes as f64)),
+        ("killed_in_flight", Json::num(f.killed_in_flight as f64)),
+        ("retried", Json::num(f.retried as f64)),
+        ("failed_over", Json::num(f.failed_over as f64)),
+        ("max_queue_depth", Json::num(r.max_queue_depth as f64)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::var("FAULT_TOLERANCE_SMOKE").is_ok();
+    let (crash_requests, overload_requests) = if smoke { (160, 100) } else { (800, 400) };
+
+    section(&format!(
+        "fault tolerance: 1-of-8 crash at {} req/s per shard, {}-at-once overload vs \
+         threshold:{}{}",
+        RATE_PER_SHARD_RPS,
+        overload_requests,
+        OVERLOAD_DEPTH,
+        if smoke { " (smoke)" } else { "" }
+    ));
+
+    // -- crash leg: availability through a shard loss ------------------
+    let c = crash_leg(crash_requests);
+    let cf = c.fault.as_ref().unwrap();
+    println!(
+        "crash    : served {}/{}  availability {:.4}  crashes {}  killed {}  \
+         failed over {}  p99 {:.2} ms",
+        c.served,
+        c.offered,
+        cf.availability,
+        cf.crashes,
+        cf.killed_in_flight,
+        cf.failed_over,
+        c.p99_ms()
+    );
+    assert_eq!((cf.crashes, cf.recoveries), (1, 1), "the plan fired exactly once");
+    assert!(
+        cf.availability >= 0.99,
+        "1-of-8 crash lost requests: availability {}",
+        cf.availability
+    );
+    assert_eq!(c.final_queue_depth, 0, "crash leg did not drain");
+    assert_eq!(
+        c.offered as u64,
+        c.served as u64 + cf.shed + cf.expired,
+        "crash leg ledger out of balance"
+    );
+
+    // -- overload leg: bounded tail under admission control ------------
+    let all = overload_leg(overload_requests, AdmissionPolicy::AdmitAll);
+    let thr = overload_leg(
+        overload_requests,
+        AdmissionPolicy::Threshold { max_depth: OVERLOAD_DEPTH },
+    );
+    let (af, tf) = (all.fault.as_ref().unwrap(), thr.fault.as_ref().unwrap());
+    println!(
+        "overload : admit-all p99 {:.2} ms (shed {})  threshold:{} p99 {:.2} ms (shed {})",
+        all.p99_ms(),
+        af.shed,
+        OVERLOAD_DEPTH,
+        thr.p99_ms(),
+        tf.shed
+    );
+    assert_eq!(af.shed, 0, "admit-all never sheds");
+    assert_eq!(all.served, all.offered, "admit-all serves the whole backlog");
+    assert_eq!(
+        tf.shed as usize,
+        overload_requests - OVERLOAD_DEPTH,
+        "threshold sheds exactly the overflow"
+    );
+    assert_eq!(thr.max_queue_depth, OVERLOAD_DEPTH, "queue bound held");
+    assert!(
+        thr.p99_cycles < all.p99_cycles,
+        "threshold did not bound the tail ({} >= {} cycles)",
+        thr.p99_cycles,
+        all.p99_cycles
+    );
+    for (tag, r, f) in [("admit-all", &all, af), ("threshold", &thr, tf)] {
+        assert_eq!(
+            r.offered as u64,
+            r.served as u64 + f.shed + f.expired,
+            "overload/{tag} ledger out of balance"
+        );
+        assert_eq!(r.final_queue_depth, 0, "overload/{tag} did not drain");
+    }
+
+    // -- determinism: same seed + same plan, bit for bit ---------------
+    assert_bit_identical("crash rerun", &c, &crash_leg(crash_requests));
+    assert_bit_identical(
+        "overload rerun",
+        &thr,
+        &overload_leg(
+            overload_requests,
+            AdmissionPolicy::Threshold { max_depth: OVERLOAD_DEPTH },
+        ),
+    );
+    println!("rerun    : bit-identical, fault summaries included");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fault_tolerance")),
+        ("smoke", Json::Bool(smoke)),
+        ("seed", Json::num(SEED as f64)),
+        ("rate_per_shard_rps", Json::num(RATE_PER_SHARD_RPS)),
+        ("crash", leg_json(&c)),
+        (
+            "overload",
+            Json::obj(vec![
+                ("requests", Json::num(overload_requests as f64)),
+                ("admit_all", leg_json(&all)),
+                ("threshold", leg_json(&thr)),
+            ]),
+        ),
+    ]);
+    // smoke runs only assert — they must not clobber the committed
+    // full-run record with reduced-size numbers
+    if smoke {
+        println!(
+            "\nsmoke mode: BENCH_fault.json left untouched (run `make fault-bench` to record)"
+        );
+        return;
+    }
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fault.json");
+    match std::fs::write(out, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\ncould not write {out}: {e}"),
+    }
+}

@@ -173,10 +173,12 @@ pub fn render_serve(r: &ServeReport) -> String {
         ));
         for l in &n.levels {
             s.push_str(&format!(
-                "  {:<11}: {} links  {} transfers  util {:.1}%\n",
+                "  {:<11}: {} links  {} transfers  {} B  {:.3} uJ  util {:.1}%\n",
                 l.level,
                 l.links,
                 l.transfers,
+                l.bytes,
+                l.energy_j * 1e6,
                 l.utilization * 100.0
             ));
         }
@@ -186,6 +188,54 @@ pub fn render_serve(r: &ServeReport) -> String {
                 n.restage_fetch_cycles
             ));
         }
+        if !n.levels.is_empty() {
+            s.push_str(&format!(
+                "  net energy : {:.3} uJ folded into the energy total\n",
+                n.energy_j * 1e6
+            ));
+        }
+    }
+    // degraded block — only fault-attached runs carry one, so the
+    // un-faulted rendering is byte-identical to the historical output
+    if let Some(f) = &r.fault {
+        s.push_str(&format!(
+            "degraded     : {} admission  availability {:.4}  goodput {:.1} GOp/s\n",
+            f.admission, f.availability, f.goodput_gops
+        ));
+        s.push_str(&format!(
+            "  dropped    : {} shed  {} expired ({} deadline, {} retry-exhausted)\n",
+            f.shed, f.expired, f.expired_deadline, f.retry_exhausted
+        ));
+        if f.crashes + f.link_events > 0 || f.retried > 0 {
+            s.push_str(&format!(
+                "  faults     : {} crashes  {} recoveries  {} link events  \
+                 {} killed in flight  {} transient\n",
+                f.crashes,
+                f.recoveries,
+                f.link_events,
+                f.killed_in_flight,
+                f.transient_failures
+            ));
+            s.push_str(&format!(
+                "  retries    : {} scheduled ({} failovers, budget {})\n",
+                f.retried, f.failed_over, f.max_retries
+            ));
+        }
+        if let Some(d) = f.deadline_cycles {
+            s.push_str(&format!(
+                "  deadline   : {:.2} ms per attempt ({} cycles)\n",
+                d as f64 / r.freq_hz * 1e3,
+                d
+            ));
+        }
+    }
+    if r.final_queue_depth > 0 {
+        s.push_str(&format!(
+            "WARNING      : {} request{} still queued at the horizon — the run \
+             ended with an undrained backlog\n",
+            r.final_queue_depth,
+            if r.final_queue_depth == 1 { "" } else { "s" }
+        ));
     }
     // per-tenant fairness block — only multi-tenant (trace) runs carry
     // more than one tenant, so single-tenant output is unchanged
@@ -416,6 +466,41 @@ mod tests {
         {
             assert!(text.contains(needle), "missing {needle} in:\n{text}");
         }
+    }
+
+    #[test]
+    fn render_serve_appends_the_degraded_block_only_with_faults() {
+        use crate::serve::{FaultConfig, RequestClass};
+        let w = Workload::poisson(vec![RequestClass::new(&MOBILEBERT, 1)], 300.0, 8, 5);
+        let plain =
+            Pipeline::new(ClusterConfig::default()).fleet(2).serve(&w).unwrap();
+        assert!(!render_serve(&plain).contains("degraded"));
+        let faulted = Pipeline::new(ClusterConfig::default())
+            .fleet(2)
+            .faults(FaultConfig::default())
+            .serve(&w)
+            .unwrap();
+        let text = render_serve(&faulted);
+        for needle in
+            ["degraded     :", "admit-all admission", "availability 1.0000", "dropped"]
+        {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+        // a clean run ends drained: no backlog warning
+        assert!(!text.contains("WARNING"), "{text}");
+    }
+
+    #[test]
+    fn render_serve_warns_on_an_undrained_backlog() {
+        let mut r = Pipeline::new(ClusterConfig::default())
+            .fleet(1)
+            .serve(&Workload::single(&MOBILEBERT, 1))
+            .unwrap();
+        assert!(!render_serve(&r).contains("WARNING"));
+        r.final_queue_depth = 3;
+        let text = render_serve(&r);
+        assert!(text.contains("WARNING"), "{text}");
+        assert!(text.contains("3 requests still queued at the horizon"), "{text}");
     }
 
     #[test]

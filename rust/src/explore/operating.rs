@@ -42,8 +42,8 @@ use crate::energy::{self, area, operating_point};
 use crate::net::Topology;
 use crate::pipeline::Pipeline;
 use crate::serve::{
-    scheduler_by_name, Fleet, RequestClass, SloDvfs, Workload, DEFAULT_BURST_PERIOD_S,
-    DEFAULT_CONTROL_CADENCE_CYCLES,
+    admission_by_name, scheduler_by_name, FaultConfig, Fleet, RequestClass, SloDvfs,
+    Workload, DEFAULT_BURST_PERIOD_S, DEFAULT_CONTROL_CADENCE_CYCLES,
 };
 
 use super::space::{Candidate, ServeSpec};
@@ -179,6 +179,19 @@ pub fn serve_eval(
             DeployError::Builder(format!("unknown topology {label}"))
         })?),
     };
+    // "admit-all" attaches nothing — the fault layer is never even
+    // consulted, so a singleton ["admit-all"] axis reproduces the
+    // pre-fault numbers bit-for-bit. Any other label evaluates the
+    // candidate under load shedding (empty fault plan, no deadline).
+    let fault: Option<FaultConfig> = match c.admission {
+        "admit-all" => None,
+        label => {
+            let admission = admission_by_name(label).ok_or_else(|| {
+                DeployError::Builder(format!("unknown admission policy {label}"))
+            })?;
+            Some(FaultConfig { admission, ..FaultConfig::default() })
+        }
+    };
     let (r, energy_j) = if c.control {
         // control-plane candidate: run under SloDvfs with the
         // candidate's corner as the base operating point. The engine
@@ -192,13 +205,23 @@ pub fn serve_eval(
             f = f.with_topology(t);
         }
         let mut ctl = SloDvfs::from_ms(spec.slo_p99_ms, c.cluster().freq_hz);
-        let r = f.serve_controlled(
-            &w,
-            sched.as_mut(),
-            &mut ctl,
-            DEFAULT_CONTROL_CADENCE_CYCLES,
-            c.op,
-        )?;
+        let r = match fault {
+            Some(cfg) => f.serve_faulted_controlled(
+                &w,
+                sched.as_mut(),
+                &mut ctl,
+                DEFAULT_CONTROL_CADENCE_CYCLES,
+                c.op,
+                cfg,
+            )?,
+            None => f.serve_controlled(
+                &w,
+                sched.as_mut(),
+                &mut ctl,
+                DEFAULT_CONTROL_CADENCE_CYCLES,
+                c.op,
+            )?,
+        };
         let energy_j = r.energy_j;
         (r, energy_j)
     } else {
@@ -208,6 +231,9 @@ pub fn serve_eval(
             .fleet(c.fleet);
         if let Some(t) = topology {
             pipe = pipe.topology(t);
+        }
+        if let Some(cfg) = fault {
+            pipe = pipe.faults(cfg);
         }
         let r = pipe.serve_with(&w, sched.as_mut())?;
         // re-base the report's energy to the candidate's operating
@@ -347,6 +373,32 @@ mod tests {
         let pod2 = serve_eval(&c, &spec, 16, 0xA5).unwrap();
         assert_eq!(pod.p99_ms.to_bits(), pod2.p99_ms.to_bits());
         assert_eq!(pod.gopj.to_bits(), pod2.gopj.to_bits());
+    }
+
+    #[test]
+    fn admission_candidate_sheds_under_overload_and_stays_deterministic() {
+        // the default spec's 2000 req/s stream overloads one cluster: a
+        // bounded queue keeps served-request p99 at a few service times
+        // where admit-all lets it grow with the backlog
+        let spec = default_spec();
+        let mut c = paper_candidate();
+        c.admission = "threshold:2";
+        let shed = serve_eval(&c, &spec, 32, 0xA5).unwrap();
+        assert!(shed.is_finite());
+        let mut open = c.clone();
+        open.admission = "admit-all";
+        let all = serve_eval(&open, &spec, 32, 0xA5).unwrap();
+        assert!(
+            shed.p99_ms <= all.p99_ms,
+            "a bounded queue cannot raise served p99: {} > {}",
+            shed.p99_ms,
+            all.p99_ms
+        );
+        // determinism: the shedding evaluation reproduces bit-for-bit
+        let shed2 = serve_eval(&c, &spec, 32, 0xA5).unwrap();
+        assert_eq!(shed.gopj.to_bits(), shed2.gopj.to_bits());
+        assert_eq!(shed.p99_ms.to_bits(), shed2.p99_ms.to_bits());
+        assert!(admission_by_name("nonsense").is_none());
     }
 
     #[test]

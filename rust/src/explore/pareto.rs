@@ -140,6 +140,7 @@ mod tests {
                 scheduler: "fifo",
                 control: false,
                 topology: "flat",
+                admission: "admit-all",
             },
             fidelity: Fidelity::Screen,
             gops,

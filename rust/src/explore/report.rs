@@ -35,6 +35,7 @@ fn point_json(e: &Evaluation) -> Json {
         ("scheduler", Json::str(c.scheduler)),
         ("control", Json::Bool(c.control)),
         ("topology", Json::str(c.topology)),
+        ("admission", Json::str(c.admission)),
         ("fidelity", Json::str(e.fidelity.name())),
         ("gops", Json::num(e.gops)),
         ("gopj", Json::num(e.gopj)),
@@ -114,6 +115,7 @@ mod tests {
             "paper_point",
             "control",
             "topology",
+            "admission",
         ] {
             assert!(first.get(key).is_some(), "frontier point missing {key}");
         }

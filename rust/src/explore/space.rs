@@ -21,7 +21,7 @@ use crate::energy::operating_point::{self, OperatingPoint, OPERATING_POINTS};
 use crate::ita::ItaConfig;
 use crate::models::{ModelConfig, DINOV2S, MOBILEBERT, WHISPER_TINY_ENC};
 use crate::net::Topology;
-use crate::serve::scheduler_by_name;
+use crate::serve::{admission_by_name, scheduler_by_name};
 use crate::sim::ClusterConfig;
 
 /// The workload every candidate's full-fidelity evaluation serves:
@@ -80,6 +80,11 @@ pub struct Candidate {
     /// attaches nothing — the historical free interconnect — while a
     /// `"pod:PxBxC"` label prices serving over `crate::net` links.
     pub topology: &'static str,
+    /// Admission policy label (`serve::admission_by_name` shape):
+    /// `"admit-all"` attaches nothing — the historical fault-free
+    /// serving path — while `"threshold:D"` / `"tenant-fair:D"`
+    /// evaluate the candidate under load shedding.
+    pub admission: &'static str,
 }
 
 impl Candidate {
@@ -155,6 +160,10 @@ pub struct DesignSpace {
     /// Interconnect topology labels (`["flat"]` keeps the axis inert —
     /// radix 1, no serving-path change, index semantics preserved).
     pub topologies: Vec<&'static str>,
+    /// Admission policy labels (`["admit-all"]` keeps the axis inert —
+    /// radix 1, the fault layer is never attached, index semantics
+    /// preserved).
+    pub admissions: Vec<&'static str>,
     pub serve: ServeSpec,
 }
 
@@ -173,6 +182,7 @@ impl DesignSpace {
             * self.schedulers.len()
             * self.control.len()
             * self.topologies.len()
+            * self.admissions.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -180,10 +190,10 @@ impl DesignSpace {
     }
 
     /// Deterministic mixed-radix decode of candidate `i` (0-based,
-    /// `i < len()`): the topology axis varies fastest, cores slowest.
-    /// (Singleton `control: [false]` / `topologies: ["flat"]` axes are
-    /// radix 1 and keep index semantics identical to the enumerations
-    /// that predate them.)
+    /// `i < len()`): the admission axis varies fastest, cores slowest.
+    /// (Singleton `control: [false]` / `topologies: ["flat"]` /
+    /// `admissions: ["admit-all"]` axes are radix 1 and keep index
+    /// semantics identical to the enumerations that predate them.)
     pub fn nth(&self, index: usize) -> Candidate {
         let mut i = index;
         let mut pick = |len: usize| {
@@ -191,6 +201,7 @@ impl DesignSpace {
             i /= len;
             k
         };
+        let admission = self.admissions[pick(self.admissions.len())];
         let topology = self.topologies[pick(self.topologies.len())];
         let control = self.control[pick(self.control.len())];
         let scheduler = self.schedulers[pick(self.schedulers.len())];
@@ -217,6 +228,7 @@ impl DesignSpace {
             scheduler,
             control,
             topology,
+            admission,
         }
     }
 
@@ -295,6 +307,14 @@ impl DesignSpace {
                 }
             }
         }
+        for a in &self.admissions {
+            if admission_by_name(a).is_none() {
+                return err(format!(
+                    "design space {}: unknown admission policy {a}",
+                    self.name
+                ));
+            }
+        }
         if self.serve.models.is_empty() {
             return err(format!("design space {}: serve spec has no models", self.name));
         }
@@ -354,6 +374,7 @@ impl DesignSpace {
             schedulers: vec!["fifo", "batch"],
             control: vec![false],
             topologies: vec!["flat"],
+            admissions: vec!["admit-all"],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT],
                 requests: 64,
@@ -381,6 +402,7 @@ impl DesignSpace {
             schedulers: vec!["fifo"],
             control: vec![false],
             topologies: vec!["flat"],
+            admissions: vec!["admit-all"],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT],
                 requests: 16,
@@ -409,6 +431,7 @@ impl DesignSpace {
             schedulers: vec!["fifo", "rr", "batch"],
             control: vec![false, true],
             topologies: vec!["flat"],
+            admissions: vec!["admit-all"],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT, &DINOV2S, &WHISPER_TINY_ENC],
                 requests: 96,
@@ -437,6 +460,7 @@ impl DesignSpace {
             schedulers: vec!["fifo", "rr", "batch"],
             control: vec![false, true],
             topologies: vec!["flat"],
+            admissions: vec!["admit-all"],
             serve: ServeSpec {
                 models: vec![&MOBILEBERT],
                 requests: 64,
@@ -463,7 +487,7 @@ mod tests {
             // the full tuple is unique across the enumeration
             let key = (
                 c.cores, c.banks, c.l1_kib, c.ita_n, c.ita_m, c.op, c.layers, c.fuse,
-                c.fleet, c.scheduler, c.control, c.topology,
+                c.fleet, c.scheduler, c.control, c.topology, c.admission,
             );
             assert!(seen.insert(key), "candidate {i} repeats {key:?}");
         }
@@ -552,6 +576,15 @@ mod tests {
         s.topologies = vec!["mesh"];
         assert!(s.validate().is_err());
 
+        let mut s = DesignSpace::tiny();
+        s.admissions = vec!["drop-everything"];
+        assert!(s.validate().is_err());
+
+        // admit-all takes no depth suffix (admission_by_name contract)
+        let mut s = DesignSpace::tiny();
+        s.admissions = vec!["admit-all:5"];
+        assert!(s.validate().is_err());
+
         // a topology too small for the fleet axis is structural, caught
         // at validation rather than per-candidate evaluation
         let mut s = DesignSpace::tiny();
@@ -571,5 +604,26 @@ mod tests {
         }
         // and the default space's size is unchanged by the new axis
         assert_eq!(DesignSpace::default_space().len(), 108);
+    }
+
+    #[test]
+    fn singleton_admit_all_axis_is_inert() {
+        // radix-1 admission axis: every preset candidate decodes
+        // "admit-all", sizes and indices unchanged from the pre-fault
+        // enumerations
+        for name in ["default", "tiny", "mix", "full"] {
+            let s = DesignSpace::preset(name).unwrap();
+            assert_eq!(s.admissions, vec!["admit-all"]);
+            assert!((0..s.len()).all(|i| s.nth(i).admission == "admit-all"));
+        }
+        assert_eq!(DesignSpace::tiny().len(), 4);
+        // a widened axis multiplies the space and is the fastest digit
+        let mut s = DesignSpace::tiny();
+        s.admissions = vec!["admit-all", "threshold:8"];
+        s.validate().unwrap();
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.nth(0).admission, "admit-all");
+        assert_eq!(s.nth(1).admission, "threshold:8");
+        assert_eq!(s.nth(0).ita_n, s.nth(1).ita_n);
     }
 }

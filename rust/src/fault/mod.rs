@@ -1,0 +1,455 @@
+//! Deterministic fault schedules for the serve subsystem.
+//!
+//! A [`FaultPlan`] is a pure-data description of every fault a serve
+//! run will experience: shard crash/recover events, per-level link
+//! degradation or outage windows, and a transient request-failure
+//! rate. Plans live in simulated time only — every event fires at an
+//! absolute cycle count, the transient draws come from a seeded
+//! `util::prng::XorShift64`, and no wall clock is ever consulted — so
+//! the same plan against the same workload reproduces bit-identically.
+//! The serve-side machinery that executes a plan (admission control,
+//! deadlines, retry/failover) lives in [`crate::serve::fault`]; this
+//! module owns only the schedule format, its JSON codec, and its
+//! validation rules.
+//!
+//! JSON schema (all fields optional; missing ⇒ empty/zero):
+//!
+//! ```json
+//! {
+//!   "seed": 7,
+//!   "transient_ppm": 500,
+//!   "shard_events": [
+//!     {"at_cycles": 100000, "shard": 3, "kind": "crash"},
+//!     {"at_cycles": 900000, "shard": 3, "kind": "recover"}
+//!   ],
+//!   "link_events": [
+//!     {"at_cycles": 200000, "level": "pod", "kind": "degrade", "slowdown": 4},
+//!     {"at_cycles": 400000, "level": "root", "kind": "outage", "until_cycles": 450000}
+//!   ]
+//! }
+//! ```
+//!
+//! Validation (`FaultPlan::validate`) enforces the invariants the
+//! engine's event cursors depend on: both event lists sorted by
+//! `at_cycles`, shard indices in range, per-shard strict crash/recover
+//! alternation starting with a crash, at least one shard up after the
+//! final event (a fully-dead fleet can never drain), link levels
+//! naming one of the three hierarchy levels, `slowdown >= 1`, and
+//! outage windows with `until_cycles > at_cycles`.
+
+use crate::deeploy::DeployError;
+use crate::net::link::LEVEL_NAMES;
+use crate::util::json::Json;
+
+/// What happens to a shard at a scheduled instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardFault {
+    /// The shard dies: in-flight work is killed (completed requests in
+    /// the batch keep their results), staged weights are lost, and the
+    /// shard leaves the dispatchable pool.
+    Crash,
+    /// The shard returns to the pool cold: its next dispatch pays a
+    /// full weight re-stage.
+    Recover,
+}
+
+/// One scheduled shard event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardEvent {
+    /// Absolute simulated cycle the event fires at.
+    pub at_cycles: u64,
+    /// Shard index (`0..fleet.n`).
+    pub shard: usize,
+    pub kind: ShardFault,
+}
+
+/// What happens to a link level at a scheduled instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkFault {
+    /// Every transfer at this level serializes `slowdown`× slower
+    /// until the next degrade event (`slowdown: 1` restores nominal).
+    Degrade { slowdown: u64 },
+    /// The level carries nothing before `until_cycles`: transfers
+    /// queue behind the outage and drain when it lifts.
+    Outage { until_cycles: u64 },
+}
+
+/// One scheduled link-level event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkEvent {
+    /// Absolute simulated cycle the event fires at.
+    pub at_cycles: u64,
+    /// Link level index (`0` board, `1` pod, `2` root).
+    pub level: usize,
+    pub kind: LinkFault,
+}
+
+/// A complete, validated-on-attach fault schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Shard crash/recover events, sorted by `at_cycles`.
+    pub shard_events: Vec<ShardEvent>,
+    /// Link degrade/outage events, sorted by `at_cycles`.
+    pub link_events: Vec<LinkEvent>,
+    /// Transient failure probability per dispatched request, in parts
+    /// per million (0 ⇒ no transient faults, no RNG draws at all).
+    pub transient_ppm: u32,
+    /// Seed for the transient-failure RNG (independent of the
+    /// workload seed, so the arrival stream never shifts).
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::empty()
+    }
+}
+
+impl FaultPlan {
+    /// The no-fault plan: serving under it is bit-identical to serving
+    /// with no fault layer at all (the propchecked identity leg).
+    pub fn empty() -> FaultPlan {
+        FaultPlan { shard_events: Vec::new(), link_events: Vec::new(), transient_ppm: 0, seed: 0 }
+    }
+
+    /// True when the plan schedules nothing and injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.shard_events.is_empty() && self.link_events.is_empty() && self.transient_ppm == 0
+    }
+
+    /// Append a shard crash at `at_cycles`.
+    pub fn crash(mut self, at_cycles: u64, shard: usize) -> FaultPlan {
+        self.shard_events.push(ShardEvent { at_cycles, shard, kind: ShardFault::Crash });
+        self
+    }
+
+    /// Append a shard recovery at `at_cycles`.
+    pub fn recover(mut self, at_cycles: u64, shard: usize) -> FaultPlan {
+        self.shard_events.push(ShardEvent { at_cycles, shard, kind: ShardFault::Recover });
+        self
+    }
+
+    /// Append a link-level degradation (`slowdown: 1` restores).
+    pub fn degrade_link(mut self, at_cycles: u64, level: usize, slowdown: u64) -> FaultPlan {
+        self.link_events.push(LinkEvent { at_cycles, level, kind: LinkFault::Degrade { slowdown } });
+        self
+    }
+
+    /// Append a link-level outage lasting until `until_cycles`.
+    pub fn link_outage(mut self, at_cycles: u64, level: usize, until_cycles: u64) -> FaultPlan {
+        self.link_events
+            .push(LinkEvent { at_cycles, level, kind: LinkFault::Outage { until_cycles } });
+        self
+    }
+
+    /// Set the transient request-failure rate (parts per million).
+    pub fn transient(mut self, ppm: u32) -> FaultPlan {
+        self.transient_ppm = ppm;
+        self
+    }
+
+    /// Set the transient-RNG seed.
+    pub fn seeded(mut self, seed: u64) -> FaultPlan {
+        self.seed = seed;
+        self
+    }
+
+    /// Check every schedule invariant against a fleet of `n_shards`.
+    pub fn validate(&self, n_shards: usize) -> Result<(), DeployError> {
+        let bad = |msg: String| Err(DeployError::Builder(msg));
+        for w in self.shard_events.windows(2) {
+            if w[1].at_cycles < w[0].at_cycles {
+                return bad(format!(
+                    "fault plan: shard events not sorted by at_cycles ({} after {})",
+                    w[1].at_cycles, w[0].at_cycles
+                ));
+            }
+        }
+        for w in self.link_events.windows(2) {
+            if w[1].at_cycles < w[0].at_cycles {
+                return bad(format!(
+                    "fault plan: link events not sorted by at_cycles ({} after {})",
+                    w[1].at_cycles, w[0].at_cycles
+                ));
+            }
+        }
+        // replay the shard schedule: indices in range, strict
+        // crash/recover alternation per shard, and the fleet never left
+        // permanently empty
+        let mut down = vec![false; n_shards];
+        let mut n_down = 0usize;
+        for ev in &self.shard_events {
+            if ev.shard >= n_shards {
+                return bad(format!(
+                    "fault plan: shard {} out of range for a fleet of {n_shards}",
+                    ev.shard
+                ));
+            }
+            match ev.kind {
+                ShardFault::Crash => {
+                    if down[ev.shard] {
+                        return bad(format!(
+                            "fault plan: shard {} crashes at cycle {} while already down",
+                            ev.shard, ev.at_cycles
+                        ));
+                    }
+                    down[ev.shard] = true;
+                    n_down += 1;
+                }
+                ShardFault::Recover => {
+                    if !down[ev.shard] {
+                        return bad(format!(
+                            "fault plan: shard {} recovers at cycle {} while already up",
+                            ev.shard, ev.at_cycles
+                        ));
+                    }
+                    down[ev.shard] = false;
+                    n_down -= 1;
+                }
+            }
+        }
+        if n_shards > 0 && n_down == n_shards {
+            return bad("fault plan: final state leaves every shard down — \
+                        the fleet could never drain"
+                .into());
+        }
+        for ev in &self.link_events {
+            if ev.level >= LEVEL_NAMES.len() {
+                return bad(format!(
+                    "fault plan: link level {} out of range (0..{})",
+                    ev.level,
+                    LEVEL_NAMES.len()
+                ));
+            }
+            match ev.kind {
+                LinkFault::Degrade { slowdown } => {
+                    if slowdown == 0 {
+                        return bad(format!(
+                            "fault plan: degrade at cycle {} needs slowdown >= 1",
+                            ev.at_cycles
+                        ));
+                    }
+                }
+                LinkFault::Outage { until_cycles } => {
+                    if until_cycles <= ev.at_cycles {
+                        return bad(format!(
+                            "fault plan: outage at cycle {} must end after it starts \
+                             (until_cycles {until_cycles})",
+                            ev.at_cycles
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a plan from its JSON text form (schema in the module doc).
+    pub fn from_json(text: &str) -> Result<FaultPlan, DeployError> {
+        let bad = |msg: String| DeployError::Builder(msg);
+        let j = Json::parse(text)
+            .map_err(|e| bad(format!("fault plan: {e}")))?;
+        let obj = j.as_obj().ok_or_else(|| bad("fault plan: top level must be an object".into()))?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "seed" | "transient_ppm" | "shard_events" | "link_events") {
+                return Err(bad(format!("fault plan: unknown field {key:?}")));
+            }
+        }
+        let u64_field = |j: &Json, field: &str, what: &str| -> Result<u64, DeployError> {
+            j.get(field)
+                .and_then(Json::as_f64)
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| bad(format!("fault plan: {what} needs integer {field:?}")))
+        };
+
+        let mut plan = FaultPlan::empty();
+        if let Some(s) = j.get("seed") {
+            plan.seed = s
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| bad("fault plan: \"seed\" must be a non-negative integer".into()))?;
+        }
+        if let Some(p) = j.get("transient_ppm") {
+            plan.transient_ppm = p
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= 1_000_000.0)
+                .map(|n| n as u32)
+                .ok_or_else(|| {
+                    bad("fault plan: \"transient_ppm\" must be an integer in 0..=1000000".into())
+                })?;
+        }
+        if let Some(events) = j.get("shard_events") {
+            let arr = events
+                .as_arr()
+                .ok_or_else(|| bad("fault plan: \"shard_events\" must be an array".into()))?;
+            for ev in arr {
+                let at_cycles = u64_field(ev, "at_cycles", "shard event")?;
+                let shard = ev
+                    .get("shard")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| bad("fault plan: shard event needs \"shard\"".into()))?;
+                let kind = match ev.get("kind").and_then(Json::as_str) {
+                    Some("crash") => ShardFault::Crash,
+                    Some("recover") => ShardFault::Recover,
+                    other => {
+                        return Err(bad(format!(
+                            "fault plan: shard event kind must be \"crash\" or \"recover\", \
+                             got {other:?}"
+                        )))
+                    }
+                };
+                plan.shard_events.push(ShardEvent { at_cycles, shard, kind });
+            }
+        }
+        if let Some(events) = j.get("link_events") {
+            let arr = events
+                .as_arr()
+                .ok_or_else(|| bad("fault plan: \"link_events\" must be an array".into()))?;
+            for ev in arr {
+                let at_cycles = u64_field(ev, "at_cycles", "link event")?;
+                let name = ev
+                    .get("level")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("fault plan: link event needs \"level\"".into()))?;
+                let level = LEVEL_NAMES
+                    .iter()
+                    .position(|n| *n == name)
+                    .ok_or_else(|| {
+                        bad(format!(
+                            "fault plan: link level must be one of {LEVEL_NAMES:?}, got {name:?}"
+                        ))
+                    })?;
+                let kind = match ev.get("kind").and_then(Json::as_str) {
+                    Some("degrade") => {
+                        LinkFault::Degrade { slowdown: u64_field(ev, "slowdown", "degrade event")? }
+                    }
+                    Some("outage") => LinkFault::Outage {
+                        until_cycles: u64_field(ev, "until_cycles", "outage event")?,
+                    },
+                    other => {
+                        return Err(bad(format!(
+                            "fault plan: link event kind must be \"degrade\" or \"outage\", \
+                             got {other:?}"
+                        )))
+                    }
+                };
+                plan.link_events.push(LinkEvent { at_cycles, level, kind });
+            }
+        }
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_composes_a_valid_plan() {
+        let p = FaultPlan::empty()
+            .crash(100, 1)
+            .degrade_link(150, 1, 4)
+            .recover(900, 1)
+            .link_outage(1000, 2, 2000)
+            .transient(250)
+            .seeded(7);
+        assert!(!p.is_empty());
+        assert_eq!(p.shard_events.len(), 2);
+        assert_eq!(p.link_events.len(), 2);
+        assert_eq!(p.transient_ppm, 250);
+        assert_eq!(p.seed, 7);
+        p.validate(4).expect("well-formed plan validates");
+    }
+
+    #[test]
+    fn empty_plan_is_empty_and_always_valid() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        p.validate(1).unwrap();
+        p.validate(10_000).unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_broken_schedules() {
+        // unsorted shard events
+        let p = FaultPlan::empty().crash(200, 0).recover(100, 0);
+        assert!(p.validate(2).is_err());
+        // unsorted link events
+        let p = FaultPlan::empty().degrade_link(200, 0, 2).degrade_link(100, 0, 1);
+        assert!(p.validate(2).is_err());
+        // shard out of range
+        assert!(FaultPlan::empty().crash(0, 2).validate(2).is_err());
+        // double crash without a recover in between
+        assert!(FaultPlan::empty().crash(0, 0).crash(10, 0).validate(2).is_err());
+        // recover of a shard that never crashed
+        assert!(FaultPlan::empty().recover(0, 0).validate(2).is_err());
+        // every shard left down forever
+        assert!(FaultPlan::empty().crash(0, 0).crash(0, 1).validate(2).is_err());
+        // …but the same schedule is fine if someone comes back
+        FaultPlan::empty().crash(0, 0).crash(0, 1).recover(50, 0).validate(2).unwrap();
+        // link level out of range
+        assert!(FaultPlan::empty().degrade_link(0, 3, 2).validate(2).is_err());
+        // zero slowdown
+        assert!(FaultPlan::empty().degrade_link(0, 0, 0).validate(2).is_err());
+        // outage that ends before it starts
+        assert!(FaultPlan::empty().link_outage(100, 0, 100).validate(2).is_err());
+    }
+
+    #[test]
+    fn json_round_trips_the_documented_schema() {
+        let text = r#"{
+            "seed": 7,
+            "transient_ppm": 500,
+            "shard_events": [
+                {"at_cycles": 100000, "shard": 3, "kind": "crash"},
+                {"at_cycles": 900000, "shard": 3, "kind": "recover"}
+            ],
+            "link_events": [
+                {"at_cycles": 200000, "level": "pod", "kind": "degrade", "slowdown": 4},
+                {"at_cycles": 400000, "level": "root", "kind": "outage", "until_cycles": 450000}
+            ]
+        }"#;
+        let p = FaultPlan::from_json(text).unwrap();
+        let want = FaultPlan::empty()
+            .seeded(7)
+            .transient(500)
+            .crash(100_000, 3)
+            .recover(900_000, 3)
+            .degrade_link(200_000, 1, 4)
+            .link_outage(400_000, 2, 450_000);
+        assert_eq!(p, want);
+        p.validate(8).unwrap();
+    }
+
+    #[test]
+    fn json_defaults_every_missing_field() {
+        let p = FaultPlan::from_json("{}").unwrap();
+        assert_eq!(p, FaultPlan::empty());
+        let p = FaultPlan::from_json(r#"{"transient_ppm": 10}"#).unwrap();
+        assert_eq!(p, FaultPlan::empty().transient(10));
+    }
+
+    #[test]
+    fn json_rejects_malformed_plans() {
+        assert!(FaultPlan::from_json("[]").is_err());
+        assert!(FaultPlan::from_json("{").is_err());
+        assert!(FaultPlan::from_json(r#"{"bogus": 1}"#).is_err());
+        assert!(FaultPlan::from_json(r#"{"seed": -1}"#).is_err());
+        assert!(FaultPlan::from_json(r#"{"transient_ppm": 2000000}"#).is_err());
+        assert!(FaultPlan::from_json(r#"{"shard_events": [{"at_cycles": 1}]}"#).is_err());
+        assert!(FaultPlan::from_json(
+            r#"{"shard_events": [{"at_cycles": 1, "shard": 0, "kind": "melt"}]}"#
+        )
+        .is_err());
+        assert!(FaultPlan::from_json(
+            r#"{"link_events": [{"at_cycles": 1, "level": "rack", "kind": "degrade", "slowdown": 2}]}"#
+        )
+        .is_err());
+        assert!(FaultPlan::from_json(
+            r#"{"link_events": [{"at_cycles": 1, "level": "pod", "kind": "degrade"}]}"#
+        )
+        .is_err());
+    }
+}

@@ -22,8 +22,11 @@
 //!   model and locality-aware routing, scaling fleets to 10k
 //!   clusters — the [`trace`] subsystem — datacenter-trace replay (streaming
 //!   CSV/JSONL reader, seeded generator) feeding multi-tenant fair
-//!   serving with per-tenant SLO accounting — and the [`explore`]
-//!   subsystem — deterministic design-space
+//!   serving with per-tenant SLO accounting — the [`fault`] module —
+//!   deterministic fault schedules (shard crash/recover, link
+//!   degradation, transient failures) executed by the serve layer with
+//!   deadlines, bounded retry/failover and admission control — and the
+//!   [`explore`] subsystem — deterministic design-space
 //!   exploration over the template (geometry × FD-SOI operating point ×
 //!   deployment × serving axes) with Pareto frontiers for GOp/J, GOp/s,
 //!   p99 latency and mm² — driven by the `coordinator` and CLI.
@@ -38,6 +41,7 @@ pub mod coordinator;
 pub mod deeploy;
 pub mod energy;
 pub mod explore;
+pub mod fault;
 pub mod ita;
 pub mod models;
 pub mod net;

@@ -28,6 +28,7 @@
 
 use attn_tinyml::coordinator;
 use attn_tinyml::deeploy::Target;
+use attn_tinyml::fault::FaultPlan;
 use attn_tinyml::explore::{
     explore, explore_json, DesignSpace, ExploreConfig, Objective, Strategy,
 };
@@ -36,8 +37,9 @@ use attn_tinyml::net::Topology;
 use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::runtime::{Runtime, RuntimeError, TensorIn};
 use attn_tinyml::serve::{
-    control_by_name, scheduler_by_name, Controller, RequestClass, StaticNominal,
-    WindowSnapshot, Workload, DEFAULT_BURST_PERIOD_S, DEFAULT_DIURNAL_PERIOD_S,
+    admission_by_name, control_by_name, scheduler_by_name, Controller, FaultConfig,
+    RequestClass, StaticNominal, WindowSnapshot, Workload, DEFAULT_BURST_PERIOD_S,
+    DEFAULT_DIURNAL_PERIOD_S,
 };
 use attn_tinyml::sim::{ClusterConfig, Cmd, Engine, Step};
 use attn_tinyml::trace::{
@@ -201,8 +203,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// 20 ms period), --control static|slo-dvfs with --slo-p99-ms,
 /// --metrics-out PATH (JSONL of per-window snapshots), --topology
 /// flat|pod:PxBxC (price dispatch + weight re-staging over the
-/// interconnect), and --locality (steer batches at weight-holding
-/// shards), plus the usual geometry flags. `--requests` takes million-scale counts: arrivals
+/// interconnect), --locality (steer batches at weight-holding
+/// shards), --faults PLAN.json with --deadline-ms / --admission /
+/// --max-retries (deterministic fault injection + graceful
+/// degradation), plus the usual geometry flags. `--requests` takes million-scale counts: arrivals
 /// stream lazily from the seeded PRNG (nothing is materialized upfront)
 /// and the report adds host-side simulation throughput. `--help` prints
 /// this.
@@ -258,6 +262,22 @@ multi-request serving on a fleet of identical clusters
                       each batch prefers a free shard already holding
                       its class's weights, falling back by hierarchy
                       distance (board, then pod, then anywhere)
+  --faults PATH       JSON fault plan (schema in src/fault/): scheduled
+                      shard crash/recover with weight-residency loss,
+                      per-level link degrade/outage (needs --topology),
+                      and a seeded transient-failure rate. the same
+                      seed + plan replays bit-identically
+  --deadline-ms MS    per-attempt queueing deadline: a request still
+                      queued MS after admission is dropped and counted
+                      as expired (default: none)
+  --admission P       admit-all | threshold[:D] | tenant-fair[:D] —
+                      shed fresh arrivals once the queue holds D
+                      entries (default depth 256); tenant-fair sheds
+                      only tenants at/above their fair share of the
+                      backlog. retries bypass admission
+  --max-retries N     dispatch attempts allowed after the first for
+                      crash-killed or transiently-failed requests, with
+                      exponential backoff between attempts (default 3)
 
 the report includes latency percentiles (exact up to 8192 served
 requests, log2-linear histogram with sub-1% relative error beyond),
@@ -266,8 +286,10 @@ a controller is attached — the per-window control timeline with the
 energy saved against the static-nominal baseline. multi-tenant runs
 add a per-tenant table (served, req/s, p50/p99, dominant share) and
 Jain's fairness index over delivered throughput; topology runs add the
-interconnect block (per-level utilization, re-staging traffic and the
-locality hit rate)
+interconnect block (per-level utilization, bytes/energy, re-staging
+traffic and the locality hit rate); fault runs add the degraded block
+(availability, shed/expired/failed-over counts — offered == served +
+shed + expired by exact count)
 ";
 
 /// One metrics window as a compact JSON object (one `--metrics-out`
@@ -288,6 +310,7 @@ fn window_json(w: &WindowSnapshot) -> Json {
         ("active_j", Json::num(w.active_j)),
         ("op_index", Json::num(w.op_index as f64)),
         ("parked", Json::num(w.parked as f64)),
+        ("shards_down", Json::num(w.shards_down as f64)),
         (
             "tenant_completed",
             Json::Arr(w.tenant_completed.iter().map(|&c| Json::num(c as f64)).collect()),
@@ -368,6 +391,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None if metrics_out.is_some() => Some(Box::new(StaticNominal)),
         None => None,
     };
+    // any fault/degradation flag attaches the fault layer; absent all
+    // four, the layer is never consulted (bit-identical to pre-fault
+    // serving)
+    let fault_cfg: Option<FaultConfig> = if args.has("faults")
+        || args.has("deadline-ms")
+        || args.has("admission")
+        || args.has("max-retries")
+    {
+        let mut cfg = FaultConfig::default();
+        if let Some(path) = args.flag("faults") {
+            let text = std::fs::read_to_string(path)?;
+            cfg.plan = FaultPlan::from_json(&text)?;
+        }
+        if let Some(name) = args.flag("admission") {
+            cfg.admission = admission_by_name(name).ok_or_else(|| {
+                RuntimeError::Usage(format!(
+                    "unknown admission policy {name}; available: admit-all, \
+                     threshold[:depth], tenant-fair[:depth]"
+                ))
+            })?;
+        }
+        if args.has("deadline-ms") {
+            let ms = args.flag_f64("deadline-ms", 0.0);
+            if !ms.is_finite() || ms < 0.0 {
+                return Err(RuntimeError::Usage(format!(
+                    "--deadline-ms must be a non-negative duration, got {ms}"
+                )));
+            }
+            cfg.deadline_cycles = Some((ms / 1e3 * cluster.freq_hz).round() as u64);
+        }
+        if args.has("max-retries") {
+            cfg.max_retries =
+                args.flag_usize("max-retries", cfg.max_retries as usize) as u32;
+        }
+        Some(cfg)
+    } else {
+        None
+    };
     let t0 = std::time::Instant::now();
     let mut pipe = Pipeline::new(cluster).target(target).fleet(clusters);
     if let Some(c) = controller {
@@ -383,6 +444,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if args.has("locality") {
         pipe = pipe.locality(true);
+    }
+    if let Some(cfg) = fault_cfg {
+        pipe = pipe.faults(cfg);
     }
     let report = pipe.serve_with(&workload, sched.as_mut())?;
     let host_s = t0.elapsed().as_secs_f64();

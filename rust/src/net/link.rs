@@ -53,6 +53,9 @@ pub struct LinkSpec {
 const LATENCY_CYCLES: [u64; 3] = [8, 64, 512];
 /// Per-level bandwidth divisors applied to `wide_axi_bytes`.
 const BW_DIVISOR: [u64; 3] = [1, 4, 16];
+/// Per-level transfer energy (pJ moved per byte). On-board wires are
+/// cheap; each level up crosses longer traces / SerDes and costs more.
+pub const ENERGY_PJ_PER_BYTE: [f64; 3] = [2.0, 10.0, 40.0];
 
 /// Derive the three level specs from the cluster's wide AXI width.
 pub fn level_specs(wide_axi_bytes: usize) -> [LinkSpec; 3] {
@@ -82,6 +85,13 @@ pub struct Links {
     busy_cycles: [u64; 3],
     /// Transfers per level, cumulative.
     transfers: [u64; 3],
+    /// Bytes moved per level, cumulative (prices interconnect energy).
+    bytes: [u64; 3],
+    /// Serialization multiplier per level (fault injection; 1 = healthy).
+    slowdown: [u64; 3],
+    /// No transfer at a level may start before this cycle (fault
+    /// injection outage window; 0 = no outage).
+    blocked_until: [u64; 3],
 }
 
 impl Links {
@@ -98,6 +108,9 @@ impl Links {
             root: vec![0; n_pods],
             busy_cycles: [0; 3],
             transfers: [0; 3],
+            bytes: [0; 3],
+            slowdown: [1; 3],
+            blocked_until: [0; 3],
         }
     }
 
@@ -121,6 +134,34 @@ impl Links {
         self.transfers
     }
 
+    /// Cumulative bytes moved per level.
+    pub fn bytes(&self) -> [u64; 3] {
+        self.bytes
+    }
+
+    /// Transfer energy per level in joules:
+    /// `bytes · ENERGY_PJ_PER_BYTE · 1e-12`.
+    pub fn energy_j(&self) -> [f64; 3] {
+        let mut e = [0.0; 3];
+        for i in 0..3 {
+            e[i] = self.bytes[i] as f64 * ENERGY_PJ_PER_BYTE[i] * 1e-12;
+        }
+        e
+    }
+
+    /// Fault injection: multiply this level's serialization time by
+    /// `slowdown` for all future transfers (`1` restores full speed).
+    pub fn set_slowdown(&mut self, level: usize, slowdown: u64) {
+        self.slowdown[level] = slowdown.max(1);
+    }
+
+    /// Fault injection: block all transfers at this level until
+    /// `until_cycles`. Outage windows only ever extend (max-merge), so
+    /// overlapping plan events compose deterministically.
+    pub fn set_outage(&mut self, level: usize, until_cycles: u64) {
+        self.blocked_until[level] = self.blocked_until[level].max(until_cycles);
+    }
+
     /// Spec of one level.
     pub fn spec(&self, level: Level) -> LinkSpec {
         self.specs[level as usize]
@@ -129,17 +170,20 @@ impl Links {
     /// Move `bytes` over link `idx` of `level`, earliest start `at`.
     /// Returns the arrival cycle and advances the link's busy-until.
     pub fn transfer(&mut self, level: Level, idx: usize, bytes: u64, at: u64) -> u64 {
-        let spec = self.specs[level as usize];
-        let ser = bytes.div_ceil(spec.bw_bytes_per_cycle).max(1);
+        let lvl = level as usize;
+        let spec = self.specs[lvl];
+        let ser = bytes.div_ceil(spec.bw_bytes_per_cycle).max(1) * self.slowdown[lvl];
+        let blocked = self.blocked_until[lvl];
         let busy = match level {
             Level::Board => &mut self.board[idx],
             Level::Pod => &mut self.pod[idx],
             Level::Root => &mut self.root[idx],
         };
-        let start = at.max(*busy);
+        let start = at.max(*busy).max(blocked);
         *busy = start + ser;
-        self.busy_cycles[level as usize] += ser;
-        self.transfers[level as usize] += 1;
+        self.busy_cycles[lvl] += ser;
+        self.transfers[lvl] += 1;
+        self.bytes[lvl] += bytes;
         start + ser + spec.latency_cycles
     }
 }
@@ -186,6 +230,43 @@ mod tests {
         // a different board's bus is free
         assert_eq!(l.transfer(Level::Board, 1, 128, 100), 110);
         assert_eq!(l.busy_cycles()[0], 6);
+    }
+
+    #[test]
+    fn bytes_and_energy_accumulate_per_level() {
+        let mut l = pod_links();
+        l.transfer(Level::Board, 0, 1000, 0);
+        l.transfer(Level::Root, 0, 500, 0);
+        assert_eq!(l.bytes(), [1000, 0, 500]);
+        let e = l.energy_j();
+        assert_eq!(e[0].to_bits(), (1000.0 * 2.0e-12f64).to_bits());
+        assert_eq!(e[1].to_bits(), 0.0f64.to_bits());
+        assert_eq!(e[2].to_bits(), (500.0 * 40.0e-12f64).to_bits());
+    }
+
+    #[test]
+    fn slowdown_multiplies_serialization_and_restores() {
+        let mut l = pod_links();
+        l.set_slowdown(Level::Board as usize, 4);
+        // 128 B at 64 B/cy is 2 cy healthy, 8 cy degraded: 100+8+8
+        assert_eq!(l.transfer(Level::Board, 0, 128, 100), 116);
+        assert_eq!(l.busy_cycles()[0], 8);
+        l.set_slowdown(Level::Board as usize, 1);
+        assert_eq!(l.transfer(Level::Board, 1, 128, 100), 110);
+        // slowdown 0 clamps to 1 (a "0×" link is a plan bug, not a hang)
+        l.set_slowdown(Level::Pod as usize, 0);
+        assert_eq!(l.transfer(Level::Pod, 0, 16, 0), 1 + 64);
+    }
+
+    #[test]
+    fn outage_defers_start_and_max_merges() {
+        let mut l = pod_links();
+        l.set_outage(Level::Board as usize, 500);
+        // an earlier (stale) outage never shortens the window
+        l.set_outage(Level::Board as usize, 200);
+        assert_eq!(l.transfer(Level::Board, 0, 128, 100), 500 + 2 + 8);
+        // after the window, transfers start on time again
+        assert_eq!(l.transfer(Level::Board, 1, 128, 600), 610);
     }
 
     #[test]

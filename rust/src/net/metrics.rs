@@ -11,6 +11,11 @@ pub struct LevelSummary {
     pub transfers: u64,
     /// Total serialization cycles across the level's links.
     pub busy_cycles: u64,
+    /// Bytes moved across this level.
+    pub bytes: u64,
+    /// Transfer energy at this level in joules
+    /// (`bytes · ENERGY_PJ_PER_BYTE[level] · 1e-12`).
+    pub energy_j: f64,
     /// `busy_cycles / (links · makespan)` — mean level occupancy.
     pub utilization: f64,
 }
@@ -37,4 +42,8 @@ pub struct NetSummary {
     pub locality_hits: u64,
     /// `locality_hits / dispatches` (0.0 when nothing dispatched).
     pub locality_rate: f64,
+    /// Total interconnect transfer energy (sum of per-level
+    /// `energy_j`). Folded into `ServeReport::energy_j` whenever the
+    /// topology has links; exactly 0.0 for `Flat`.
+    pub energy_j: f64,
 }

@@ -154,6 +154,18 @@ impl Router {
         }
     }
 
+    /// Fault injection pass-through: degrade one link level's
+    /// serialization by an integer factor (`1` restores full speed).
+    pub fn set_link_slowdown(&mut self, level: usize, slowdown: u64) {
+        self.links.set_slowdown(level, slowdown);
+    }
+
+    /// Fault injection pass-through: black out one link level until
+    /// `until_cycles` (outage windows max-merge, never shorten).
+    pub fn set_link_outage(&mut self, level: usize, until_cycles: u64) {
+        self.links.set_outage(level, until_cycles);
+    }
+
     /// Residency change: shard `shard` now holds `class`'s weights
     /// (`None` evicts, e.g. a parked shard powering down its copy).
     pub fn note_staged(&mut self, shard: usize, class: Option<usize>) {
@@ -171,13 +183,17 @@ impl Router {
         let counts = self.links.counts();
         let busy = self.links.busy_cycles();
         let transfers = self.links.transfers();
-        let levels = (0..3)
+        let bytes = self.links.bytes();
+        let energy = self.links.energy_j();
+        let levels: Vec<LevelSummary> = (0..3)
             .filter(|&i| counts[i] > 0)
             .map(|i| LevelSummary {
                 level: super::link::LEVEL_NAMES[i],
                 links: counts[i],
                 transfers: transfers[i],
                 busy_cycles: busy[i],
+                bytes: bytes[i],
+                energy_j: energy[i],
                 utilization: if makespan_cycles > 0 {
                     busy[i] as f64 / (counts[i] * makespan_cycles) as f64
                 } else {
@@ -185,6 +201,7 @@ impl Router {
                 },
             })
             .collect();
+        let energy_j = levels.iter().map(|l| l.energy_j).sum();
         NetSummary {
             topology: self.topo.label(),
             levels,
@@ -197,6 +214,7 @@ impl Router {
             } else {
                 0.0
             },
+            energy_j,
         }
     }
 }
@@ -290,5 +308,24 @@ mod tests {
         assert_eq!(s.levels[0].links, 4);
         assert_eq!(s.levels[2].links, 2);
         assert!(s.levels.iter().all(|l| l.utilization > 0.0 && l.utilization < 1.0));
+        // one 512 B dispatch crossed every level once
+        assert!(s.levels.iter().all(|l| l.bytes == 512));
+        let expect: f64 = (512.0 * 2.0 + 512.0 * 10.0 + 512.0 * 40.0) * 1e-12;
+        assert_eq!(s.energy_j.to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn link_faults_route_through_the_router() {
+        let mut r = router();
+        r.set_link_slowdown(super::super::link::Level::Root as usize, 8);
+        let degraded = r.dispatch_arrival(0, 512, 0);
+        // healthy: (128+512)+(32+64)+(8+8); root ser ×8 adds 128·7
+        assert_eq!(degraded, (128 * 8 + 512) + (32 + 64) + (8 + 8));
+        r.set_link_slowdown(super::super::link::Level::Root as usize, 1);
+        r.set_link_outage(super::super::link::Level::Pod as usize, 10_000);
+        let blocked = r.dispatch_arrival(0, 512, 0);
+        // root leg lands at 640 + 128 (contention), pod leg waits for
+        // cycle 10_000, board follows immediately after
+        assert!(blocked >= 10_000 + 32 + 64, "outage must gate the pod hop");
     }
 }

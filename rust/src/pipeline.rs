@@ -57,8 +57,8 @@ use crate::runtime::{Runtime, RuntimeError, TensorIn};
 use crate::energy::operating_point::NOMINAL_INDEX;
 use crate::net::Topology;
 use crate::serve::{
-    Controller, Fifo, Fleet, LocalityAware, RequestClass, Scheduler, ServeReport,
-    Workload, DEFAULT_CONTROL_CADENCE_CYCLES,
+    Controller, FaultConfig, Fifo, Fleet, LocalityAware, RequestClass, Scheduler,
+    ServeReport, Workload, DEFAULT_CONTROL_CADENCE_CYCLES,
 };
 use crate::sim::dma::DmaModel;
 use crate::sim::{ClusterConfig, Cmd, Engine, RunStats};
@@ -332,6 +332,7 @@ pub struct Pipeline {
     control_cadence: u64,
     topology: Option<Topology>,
     locality: bool,
+    fault: Option<FaultConfig>,
 }
 
 impl Default for Pipeline {
@@ -356,6 +357,7 @@ impl Pipeline {
             control_cadence: DEFAULT_CONTROL_CADENCE_CYCLES,
             topology: None,
             locality: false,
+            fault: None,
         }
     }
 
@@ -441,6 +443,18 @@ impl Pipeline {
         self
     }
 
+    /// Attach a fault/degradation config to the serve run (see
+    /// [`crate::fault`] and `serve/fault.rs`): a seeded plan of shard
+    /// crashes and link faults, admission control, per-attempt
+    /// deadlines and bounded retry/failover. `FaultConfig::default()`
+    /// is provably inert — the report is bit-identical to an
+    /// un-faulted run. Default: none (the fault layer is not even
+    /// consulted).
+    pub fn faults(mut self, cfg: FaultConfig) -> Pipeline {
+        self.fault = Some(cfg);
+        self
+    }
+
     /// Serve a multi-request workload on the configured fleet under the
     /// FIFO scheduler. `Compiled::simulate()` is the degenerate case:
     /// a single-request workload on one cluster reproduces
@@ -470,6 +484,7 @@ impl Pipeline {
             control_cadence,
             topology,
             locality,
+            fault,
         } = self;
         let filled: Option<Workload> = if w.classes.is_empty() {
             match source {
@@ -504,9 +519,20 @@ impl Pipeline {
         } else {
             sched
         };
-        match controller.as_deref_mut() {
-            Some(c) => f.serve_controlled(w, sched, c, control_cadence, NOMINAL_INDEX),
-            None => f.serve(w, sched),
+        match (controller.as_deref_mut(), fault) {
+            (Some(c), Some(cfg)) => f.serve_faulted_controlled(
+                w,
+                sched,
+                c,
+                control_cadence,
+                NOMINAL_INDEX,
+                cfg,
+            ),
+            (Some(c), None) => {
+                f.serve_controlled(w, sched, c, control_cadence, NOMINAL_INDEX)
+            }
+            (None, Some(cfg)) => f.serve_faulted(w, sched, cfg),
+            (None, None) => f.serve(w, sched),
         }
     }
 
@@ -524,6 +550,7 @@ impl Pipeline {
             control_cadence: _,
             topology: _,
             locality: _,
+            fault: _,
         } = self;
         // MHA fusion only exists on the ITA path; canonicalize the flag
         // so MultiCore compilations share one cache entry regardless of
@@ -1105,6 +1132,25 @@ mod tests {
         assert_eq!(summary.controller, "static-nominal");
         assert_eq!(plain.makespan_cycles, controlled.makespan_cycles);
         assert_eq!(plain.energy_j.to_bits(), controlled.energy_j.to_bits());
+    }
+
+    #[test]
+    fn builder_fault_hook_with_inert_config_changes_nothing_else() {
+        let w = Workload::poisson(vec![], 400.0, 12, 11);
+        let build = || {
+            Pipeline::new(ClusterConfig::default()).model(&MOBILEBERT).layers(1).fleet(2)
+        };
+        let plain = build().serve(&w).unwrap();
+        let faulted = build().faults(FaultConfig::default()).serve(&w).unwrap();
+        assert!(plain.fault.is_none());
+        let fs = faulted.fault.as_ref().unwrap();
+        assert_eq!(fs.admission, "admit-all");
+        assert_eq!((fs.crashes, fs.shed, fs.expired, fs.retried), (0, 0, 0, 0));
+        assert_eq!(fs.availability.to_bits(), 1.0f64.to_bits());
+        assert_eq!(plain.makespan_cycles, faulted.makespan_cycles);
+        assert_eq!(plain.energy_j.to_bits(), faulted.energy_j.to_bits());
+        assert_eq!(plain.p99_cycles, faulted.p99_cycles);
+        assert_eq!(faulted.final_queue_depth, 0);
     }
 
     #[test]

@@ -173,7 +173,12 @@ impl Controller for SloDvfs {
         let slo = self.slo_p99_cycles as f64;
         let p99 = window.p99_cycles as f64;
         let alive = state.shards - state.parked;
-        let hot = p99 > HOT_FRACTION * slo || state.queue_depth > 2 * alive;
+        // a crash window is hot by definition: capacity just vanished,
+        // so wake a parked shard to absorb the failover backlog before
+        // the p99 even has time to breach
+        let hot = p99 > HOT_FRACTION * slo
+            || state.queue_depth > 2 * alive
+            || window.shards_down > 0;
         let calm = p99 <= COLD_FRACTION * slo && state.queue_depth == 0;
         let mut action = ControlAction::hold(state);
         if hot {
@@ -240,6 +245,7 @@ mod tests {
             active_j: 0.0,
             op_index: NOMINAL_INDEX,
             parked: 0,
+            shards_down: 0,
             tenant_completed: Vec::new(),
             net_util: Vec::new(),
         }
@@ -322,6 +328,27 @@ mod tests {
         let _ = c.decide(&busy_calm, &s);
         let d = c.decide(&busy_calm, &s);
         assert_eq!(d.parked, 0, "utilization gate must hold the shard");
+    }
+
+    #[test]
+    fn slo_dvfs_wakes_a_parked_shard_on_a_crash_window() {
+        let mut c = SloDvfs::new(1_000_000);
+        // latencies and queue are pristine, but a shard just crashed:
+        // the crash window alone is hot and a parked shard wakes
+        let mut w = window(10, 0.2, 0);
+        w.shards_down = 1;
+        let a = c.decide(&w, &state(NOMINAL_INDEX, 2, 4, 0));
+        assert_eq!(a.parked, 1, "crash window wakes a parked shard");
+        assert_eq!(a.op_index, NOMINAL_INDEX, "no SLO breach, no boost");
+        // same window with nothing parked: nothing to wake, hold
+        let b = c.decide(&w, &state(NOMINAL_INDEX, 0, 4, 0));
+        assert_eq!(b, ControlAction::hold(&state(NOMINAL_INDEX, 0, 4, 0)));
+        // and it also resets any calm streak
+        let cold = window(100_000, 0.05, 0);
+        let s = state(NOMINAL_INDEX, 0, 4, 0);
+        let _ = c.decide(&cold, &s);
+        let _ = c.decide(&w, &s);
+        assert_eq!(c.decide(&cold, &s), ControlAction::hold(&s), "streak restarted");
     }
 
     #[test]

@@ -1,0 +1,541 @@
+//! Serve-side fault execution: admission control, deadlines, bounded
+//! retry/failover, and the engine-facing fault state.
+//!
+//! The schedule itself (what fails when) is pure data in
+//! [`crate::fault::FaultPlan`]; this module owns everything the
+//! [`ServeEngine`] needs to *execute* a plan:
+//!
+//! - [`AdmissionPolicy`] — load shedding at admission time:
+//!   [`AdmitAll`] (the identity), queue-depth [`Threshold`], and
+//!   [`TenantFair`] shedding that only drops tenants exceeding their
+//!   fair queue share, protecting minority-tenant SLOs under a noisy
+//!   neighbor's overload.
+//! - [`FaultConfig`] — the plan plus the degradation knobs (admission
+//!   policy, per-attempt deadline, retry budget, backoff base).
+//! - [`FaultSummary`] — the `degraded` block of a [`ServeReport`]:
+//!   crash/shed/expired/retry accounting, availability and goodput.
+//! - [`FaultCtx`] (crate-private) — the engine's live fault state:
+//!   down-shard bitmap, deferred in-flight batches, the retry heap and
+//!   the deadline-expiry queue, plus the transient-failure RNG.
+//!
+//! **Determinism:** the transient RNG is seeded from the plan (never
+//! the workload), drawn exactly once per dispatched request *only when*
+//! `transient_ppm > 0`, and every other mechanism is integer cycle
+//! arithmetic over sorted schedules — so a faulted run is a pure
+//! function of (workload, geometry, scheduler, fault config) and
+//! reproduces bit-identically. With the empty plan and [`AdmitAll`],
+//! no draw ever happens, dispatch commits immediately, and the run is
+//! bit-identical to an engine with no fault layer at all
+//! (`tests/serve_equivalence.rs` propchecks exactly that).
+//!
+//! [`ServeEngine`]: super::ServeEngine
+//! [`ServeReport`]: super::ServeReport
+//! [`AdmitAll`]: AdmissionPolicy::AdmitAll
+//! [`Threshold`]: AdmissionPolicy::Threshold
+//! [`TenantFair`]: AdmissionPolicy::TenantFair
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::fault::{FaultPlan, LinkEvent, ShardEvent};
+use crate::util::prng::XorShift64;
+
+use super::queue::QueueView;
+
+/// Retry budget when the config does not set one.
+pub const DEFAULT_MAX_RETRIES: u32 = 3;
+/// Backoff base when the config does not set one: attempt `k` waits
+/// `backoff << k` cycles before re-admission (exponential, in cycles).
+pub const DEFAULT_RETRY_BACKOFF_CYCLES: u64 = 10_000;
+/// Queue-depth bound when `threshold` / `tenant-fair` is named without
+/// an explicit `:depth`.
+pub const DEFAULT_ADMISSION_DEPTH: usize = 256;
+
+/// Load-shedding policy applied when a fresh request reaches the
+/// queue. Retries are never re-admitted through this gate — a request
+/// the fleet already accepted keeps its admission (shedding it later
+/// would double-count it against the conservation invariant).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit everything (the identity policy; overload queues
+    /// unboundedly exactly as before).
+    AdmitAll,
+    /// Shed any arrival that would grow the queue past `max_depth`
+    /// waiters — bounded queueing delay, tenant-blind.
+    Threshold { max_depth: usize },
+    /// Shed only when the queue is past `max_depth` **and** the
+    /// arriving tenant already holds at least its fair share
+    /// (`1/n_tenants`) of the backlog — a flooding tenant is shed
+    /// first, a minority tenant keeps landing until the overload is
+    /// everyone's fault.
+    TenantFair { max_depth: usize },
+}
+
+impl AdmissionPolicy {
+    /// CLI/report label (`admit-all`, `threshold:256`, …).
+    pub fn label(&self) -> String {
+        match self {
+            AdmissionPolicy::AdmitAll => "admit-all".to_string(),
+            AdmissionPolicy::Threshold { max_depth } => format!("threshold:{max_depth}"),
+            AdmissionPolicy::TenantFair { max_depth } => format!("tenant-fair:{max_depth}"),
+        }
+    }
+
+    /// Whether a fresh arrival of `tenant` is admitted given the
+    /// current queue state.
+    pub(crate) fn admits(&self, queue: &QueueView, tenant: usize) -> bool {
+        match *self {
+            AdmissionPolicy::AdmitAll => true,
+            AdmissionPolicy::Threshold { max_depth } => queue.len() < max_depth,
+            AdmissionPolicy::TenantFair { max_depth } => {
+                queue.len() < max_depth
+                    || queue.tenant_len(tenant) * queue.n_tenants() < max_depth
+            }
+        }
+    }
+}
+
+/// CLI lookup: `admit-all`, `threshold[:depth]`, `tenant-fair[:depth]`
+/// (depth defaults to [`DEFAULT_ADMISSION_DEPTH`]).
+pub fn admission_by_name(name: &str) -> Option<AdmissionPolicy> {
+    let (head, depth) = match name.split_once(':') {
+        Some((h, d)) => (h, d.parse::<usize>().ok().filter(|&d| d > 0)?),
+        None => (name, DEFAULT_ADMISSION_DEPTH),
+    };
+    match head {
+        "admit-all" if name == "admit-all" => Some(AdmissionPolicy::AdmitAll),
+        "threshold" => Some(AdmissionPolicy::Threshold { max_depth: depth }),
+        "tenant-fair" => Some(AdmissionPolicy::TenantFair { max_depth: depth }),
+        _ => None,
+    }
+}
+
+/// Everything the fault layer needs for one run: the schedule plus the
+/// graceful-degradation knobs. `FaultConfig::default()` is the
+/// provably-inert configuration (empty plan, admit-all, no deadline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// The fault schedule (validated against the fleet on attach).
+    pub plan: FaultPlan,
+    /// Load shedding applied to fresh arrivals.
+    pub admission: AdmissionPolicy,
+    /// Per-attempt queueing deadline, cycles: an entry still queued
+    /// `deadline_cycles` after its admission expires unserved. `None`
+    /// disables deadlines entirely.
+    pub deadline_cycles: Option<u64>,
+    /// Dispatch attempts allowed **after** the first (0 = fail fast).
+    pub max_retries: u32,
+    /// Backoff base: failed attempt `k` (0-based) re-admits after
+    /// `retry_backoff_cycles << k`.
+    pub retry_backoff_cycles: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            plan: FaultPlan::empty(),
+            admission: AdmissionPolicy::AdmitAll,
+            deadline_cycles: None,
+            max_retries: DEFAULT_MAX_RETRIES,
+            retry_backoff_cycles: DEFAULT_RETRY_BACKOFF_CYCLES,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Config carrying just a plan, every degradation knob at default.
+    pub fn with_plan(plan: FaultPlan) -> FaultConfig {
+        FaultConfig { plan, ..FaultConfig::default() }
+    }
+}
+
+/// The `degraded` block of a [`ServeReport`](super::ServeReport):
+/// honest accounting of everything that did *not* go perfectly.
+/// On a faulted drained run the conservation invariant
+/// `offered == served + shed + expired` holds by exact count
+/// (`expired` = deadline expiries + exhausted retry budgets).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSummary {
+    /// Admission policy label ([`AdmissionPolicy::label`]).
+    pub admission: String,
+    /// Shard crash events that fired.
+    pub crashes: u64,
+    /// Shard recover events that fired.
+    pub recoveries: u64,
+    /// Link degrade/outage events that fired.
+    pub link_events: u64,
+    /// Requests whose in-flight attempt died with a crashing shard.
+    pub killed_in_flight: u64,
+    /// Requests that drew a transient failure at completion.
+    pub transient_failures: u64,
+    /// Fresh arrivals dropped by admission control.
+    pub shed: u64,
+    /// Requests admitted but never served: `expired_deadline +
+    /// retry_exhausted`.
+    pub expired: u64,
+    /// Queue entries cancelled by their per-attempt deadline.
+    pub expired_deadline: u64,
+    /// Failed requests dropped with an exhausted retry budget.
+    pub retry_exhausted: u64,
+    /// Retry attempts scheduled (transient + crash failovers).
+    pub retried: u64,
+    /// Retries caused by a shard crash (re-dispatched elsewhere,
+    /// re-staging weights from the nearest surviving holder).
+    pub failed_over: u64,
+    /// `served / offered` (1.0 when nothing was offered).
+    pub availability: f64,
+    /// Committed-work throughput, GOp/s — work killed mid-flight burns
+    /// energy but never counts here.
+    pub goodput_gops: f64,
+    /// Shed counts split by tenant id (index = tenant).
+    pub shed_by_tenant: Vec<u64>,
+    /// Deadline in force, echoed from the config.
+    pub deadline_cycles: Option<u64>,
+    /// Retry budget in force, echoed from the config.
+    pub max_retries: u32,
+}
+
+/// One request riding a deferred (not-yet-committed) batch.
+#[derive(Debug, Clone)]
+pub(crate) struct InFlightReq {
+    pub(crate) id: usize,
+    /// Completion cycle this attempt would finish at.
+    pub(crate) done: u64,
+    /// Original arrival (end-to-end latency base).
+    pub(crate) arrival: u64,
+    pub(crate) tenant: usize,
+    /// Failed attempts before this one.
+    pub(crate) attempts: u32,
+}
+
+/// A dispatched batch whose results are withheld until its wake
+/// commits — the window in which a crash can kill it.
+#[derive(Debug, Clone)]
+pub(crate) struct InFlight {
+    pub(crate) class: usize,
+    /// Dispatch start cycle.
+    pub(crate) start: u64,
+    /// Batch completion cycle (== the shard's wake).
+    pub(crate) completion: u64,
+    /// Simulated ops per request of this class.
+    pub(crate) ops_per_req: u64,
+    pub(crate) reqs: Vec<InFlightReq>,
+}
+
+/// A retry waiting out its backoff: ordered by (ready cycle, id) so
+/// the heap pops merge deterministically with the arrival stream.
+/// Fields: (ready, id, class, first_arrival, tenant, attempts).
+pub(crate) type RetryEntry = (u64, usize, usize, u64, usize, u32);
+
+/// Live fault state of one engine run (see the module docs).
+#[derive(Debug)]
+pub(crate) struct FaultCtx {
+    pub(crate) cfg: FaultConfig,
+    /// Transient-failure RNG; drawn only when `transient_ppm > 0`.
+    rng: XorShift64,
+    /// Next unprocessed index into `cfg.plan.shard_events`.
+    pub(crate) shard_cursor: usize,
+    /// Next unprocessed index into `cfg.plan.link_events`.
+    pub(crate) link_cursor: usize,
+    /// Per-shard crashed flag.
+    pub(crate) down: Vec<bool>,
+    pub(crate) n_down: usize,
+    /// Deferred batch per shard (`Some` while dispatched-not-committed;
+    /// only used when [`FaultCtx::defers`] is true).
+    pub(crate) in_flight: Vec<Option<InFlight>>,
+    /// Failed requests waiting out their backoff.
+    pub(crate) retry: BinaryHeap<Reverse<RetryEntry>>,
+    /// Deadline queue: (expiry cycle, queue slot, generation), pushed
+    /// in admission order — monotone in expiry because the deadline is
+    /// a constant offset from the (monotone) admission cycle.
+    pub(crate) expiry: VecDeque<(u64, u32, u32)>,
+    // ---- counters (mirrored into FaultSummary) ----
+    pub(crate) crashes: u64,
+    pub(crate) recoveries: u64,
+    pub(crate) link_events: u64,
+    pub(crate) killed_in_flight: u64,
+    pub(crate) transient_failures: u64,
+    pub(crate) shed: u64,
+    pub(crate) expired_deadline: u64,
+    pub(crate) retry_exhausted: u64,
+    pub(crate) retried: u64,
+    pub(crate) failed_over: u64,
+    pub(crate) shed_by_tenant: Vec<u64>,
+}
+
+impl FaultCtx {
+    pub(crate) fn new(cfg: FaultConfig, n_shards: usize, n_tenants: usize) -> FaultCtx {
+        let rng = XorShift64::new(cfg.plan.seed);
+        FaultCtx {
+            rng,
+            shard_cursor: 0,
+            link_cursor: 0,
+            down: vec![false; n_shards],
+            n_down: 0,
+            in_flight: vec![None; n_shards],
+            retry: BinaryHeap::new(),
+            expiry: VecDeque::new(),
+            crashes: 0,
+            recoveries: 0,
+            link_events: 0,
+            killed_in_flight: 0,
+            transient_failures: 0,
+            shed: 0,
+            expired_deadline: 0,
+            retry_exhausted: 0,
+            retried: 0,
+            failed_over: 0,
+            shed_by_tenant: vec![0; n_tenants.max(1)],
+            cfg,
+        }
+    }
+
+    /// Whether dispatches must defer their results to commit-at-wake.
+    /// Only shard crashes and transient failures can invalidate a
+    /// dispatched batch; link faults merely delay its start, so a
+    /// link-only plan keeps the immediate-commit path (and the empty
+    /// plan keeps it trivially — the bit-identity leg).
+    pub(crate) fn defers(&self) -> bool {
+        !self.cfg.plan.shard_events.is_empty() || self.cfg.plan.transient_ppm > 0
+    }
+
+    /// Draw one transient-failure decision. Never called (and never
+    /// advances the RNG) when `transient_ppm == 0`.
+    pub(crate) fn transient_fails(&mut self) -> bool {
+        debug_assert!(self.cfg.plan.transient_ppm > 0);
+        self.rng.next_u64() % 1_000_000 < self.cfg.plan.transient_ppm as u64
+    }
+
+    /// Backoff before retry attempt `attempts` (1-based at call time):
+    /// exponential in cycles, never zero.
+    pub(crate) fn backoff(&self, attempts: u32) -> u64 {
+        (self.cfg.retry_backoff_cycles << attempts.min(32)).max(1)
+    }
+
+    /// Cycle of the next unprocessed plan event, if any.
+    pub(crate) fn next_plan_event(&self) -> Option<u64> {
+        let s = self.cfg.plan.shard_events.get(self.shard_cursor).map(|e| e.at_cycles);
+        let l = self.cfg.plan.link_events.get(self.link_cursor).map(|e| e.at_cycles);
+        match (s, l) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (x, None) => x,
+            (None, y) => y,
+        }
+    }
+
+    /// Next shard event due at or before `now`, advancing the cursor.
+    pub(crate) fn pop_shard_event(&mut self, now: u64) -> Option<ShardEvent> {
+        let ev = *self.cfg.plan.shard_events.get(self.shard_cursor)?;
+        if ev.at_cycles > now {
+            return None;
+        }
+        self.shard_cursor += 1;
+        Some(ev)
+    }
+
+    /// Next link event due at or before `now`, advancing the cursor.
+    pub(crate) fn pop_link_event(&mut self, now: u64) -> Option<LinkEvent> {
+        let ev = *self.cfg.plan.link_events.get(self.link_cursor)?;
+        if ev.at_cycles > now {
+            return None;
+        }
+        self.link_cursor += 1;
+        Some(ev)
+    }
+
+    /// Ready cycle of the most urgent pending retry.
+    pub(crate) fn next_retry_ready(&self) -> Option<u64> {
+        self.retry.peek().map(|Reverse(e)| e.0)
+    }
+
+    /// Record one shed arrival.
+    pub(crate) fn note_shed(&mut self, tenant: usize) {
+        self.shed += 1;
+        if tenant >= self.shed_by_tenant.len() {
+            self.shed_by_tenant.resize(tenant + 1, 0);
+        }
+        self.shed_by_tenant[tenant] += 1;
+    }
+
+    /// Build the report block. `served`/`offered` are request counts,
+    /// `ops_served` counts committed work only, `sec` is the makespan.
+    pub(crate) fn summary(
+        &self,
+        offered: usize,
+        served: usize,
+        ops_served: u64,
+        sec: f64,
+    ) -> FaultSummary {
+        FaultSummary {
+            admission: self.cfg.admission.label(),
+            crashes: self.crashes,
+            recoveries: self.recoveries,
+            link_events: self.link_events,
+            killed_in_flight: self.killed_in_flight,
+            transient_failures: self.transient_failures,
+            shed: self.shed,
+            expired: self.expired_deadline + self.retry_exhausted,
+            expired_deadline: self.expired_deadline,
+            retry_exhausted: self.retry_exhausted,
+            retried: self.retried,
+            failed_over: self.failed_over,
+            availability: if offered == 0 {
+                1.0
+            } else {
+                served as f64 / offered as f64
+            },
+            goodput_gops: ops_served as f64 / 1e9 / sec,
+            shed_by_tenant: self.shed_by_tenant.clone(),
+            deadline_cycles: self.cfg.deadline_cycles,
+            max_retries: self.cfg.max_retries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::Queued;
+
+    fn queue_with(n: usize, tenant: usize, n_tenants: usize) -> QueueView {
+        let mut v = QueueView::new(1, 1, n_tenants);
+        for id in 0..n {
+            v.push(Queued {
+                id,
+                class: 0,
+                bucket: 128,
+                arrival: id as u64,
+                tenant,
+                first_arrival: id as u64,
+                attempts: 0,
+            });
+        }
+        v
+    }
+
+    #[test]
+    fn admission_names_parse_and_label_round_trips() {
+        assert_eq!(admission_by_name("admit-all"), Some(AdmissionPolicy::AdmitAll));
+        assert_eq!(
+            admission_by_name("threshold"),
+            Some(AdmissionPolicy::Threshold { max_depth: DEFAULT_ADMISSION_DEPTH })
+        );
+        assert_eq!(
+            admission_by_name("threshold:64"),
+            Some(AdmissionPolicy::Threshold { max_depth: 64 })
+        );
+        assert_eq!(
+            admission_by_name("tenant-fair:32"),
+            Some(AdmissionPolicy::TenantFair { max_depth: 32 })
+        );
+        for bad in ["drop-all", "threshold:0", "threshold:x", "admit-all:5", ""] {
+            assert!(admission_by_name(bad).is_none(), "{bad:?} must not parse");
+        }
+        for name in ["admit-all", "threshold:64", "tenant-fair:32"] {
+            assert_eq!(admission_by_name(name).unwrap().label(), name);
+        }
+    }
+
+    #[test]
+    fn threshold_sheds_past_the_depth() {
+        let p = AdmissionPolicy::Threshold { max_depth: 2 };
+        assert!(p.admits(&queue_with(0, 0, 1), 0));
+        assert!(p.admits(&queue_with(1, 0, 1), 0));
+        assert!(!p.admits(&queue_with(2, 0, 1), 0));
+        assert!(AdmissionPolicy::AdmitAll.admits(&queue_with(1000, 0, 1), 0));
+    }
+
+    #[test]
+    fn tenant_fair_protects_the_minority_tenant() {
+        // queue of 4, all tenant 0, two tenants, bound 4: tenant 0 is
+        // over its fair share (4*2 >= 4) and sheds, tenant 1 holds
+        // nothing (0*2 < 4) and is still admitted
+        let p = AdmissionPolicy::TenantFair { max_depth: 4 };
+        let q = queue_with(4, 0, 2);
+        assert!(!p.admits(&q, 0), "flooding tenant sheds");
+        assert!(p.admits(&q, 1), "minority tenant keeps landing");
+        // under the depth bound nobody sheds
+        assert!(p.admits(&queue_with(3, 0, 2), 0));
+    }
+
+    #[test]
+    fn default_config_is_the_inert_one() {
+        let c = FaultConfig::default();
+        assert!(c.plan.is_empty());
+        assert_eq!(c.admission, AdmissionPolicy::AdmitAll);
+        assert_eq!(c.deadline_cycles, None);
+        let ctx = FaultCtx::new(c, 4, 1);
+        assert!(!ctx.defers(), "empty plan keeps the immediate-commit path");
+        assert_eq!(ctx.next_plan_event(), None);
+        assert_eq!(ctx.next_retry_ready(), None);
+    }
+
+    #[test]
+    fn defers_only_for_crash_or_transient_plans() {
+        let link_only = FaultConfig::with_plan(FaultPlan::empty().degrade_link(0, 1, 4));
+        assert!(!FaultCtx::new(link_only, 2, 1).defers(), "link faults only delay");
+        let crashy = FaultConfig::with_plan(FaultPlan::empty().crash(0, 0).recover(9, 0));
+        assert!(FaultCtx::new(crashy, 2, 1).defers());
+        let flaky = FaultConfig::with_plan(FaultPlan::empty().transient(10));
+        assert!(FaultCtx::new(flaky, 2, 1).defers());
+    }
+
+    #[test]
+    fn transient_draws_are_seed_deterministic() {
+        let cfg = FaultConfig::with_plan(FaultPlan::empty().transient(500_000).seeded(42));
+        let mut a = FaultCtx::new(cfg.clone(), 1, 1);
+        let mut b = FaultCtx::new(cfg, 1, 1);
+        let da: Vec<bool> = (0..64).map(|_| a.transient_fails()).collect();
+        let db: Vec<bool> = (0..64).map(|_| b.transient_fails()).collect();
+        assert_eq!(da, db, "same seed, same draw sequence");
+        // at 50% ppm both outcomes appear
+        assert!(da.iter().any(|&x| x) && da.iter().any(|&x| !x));
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_never_zero() {
+        let ctx = FaultCtx::new(FaultConfig::default(), 1, 1);
+        assert_eq!(ctx.backoff(0), DEFAULT_RETRY_BACKOFF_CYCLES);
+        assert_eq!(ctx.backoff(1), DEFAULT_RETRY_BACKOFF_CYCLES * 2);
+        assert_eq!(ctx.backoff(3), DEFAULT_RETRY_BACKOFF_CYCLES * 8);
+        // a zero base still waits at least one cycle
+        let mut zero = FaultCtx::new(FaultConfig::default(), 1, 1);
+        zero.cfg.retry_backoff_cycles = 0;
+        assert_eq!(zero.backoff(2), 1);
+        // and absurd attempt counts saturate instead of overflowing
+        assert!(ctx.backoff(200) > 0);
+    }
+
+    #[test]
+    fn plan_event_cursors_pop_in_order() {
+        let plan = FaultPlan::empty().crash(100, 0).recover(300, 0).degrade_link(200, 0, 2);
+        let mut ctx = FaultCtx::new(FaultConfig::with_plan(plan), 2, 1);
+        assert_eq!(ctx.next_plan_event(), Some(100));
+        assert!(ctx.pop_shard_event(50).is_none(), "not due yet");
+        let ev = ctx.pop_shard_event(100).unwrap();
+        assert_eq!((ev.at_cycles, ev.shard), (100, 0));
+        assert_eq!(ctx.next_plan_event(), Some(200));
+        assert!(ctx.pop_link_event(250).is_some());
+        assert_eq!(ctx.next_plan_event(), Some(300));
+        assert!(ctx.pop_shard_event(300).is_some());
+        assert_eq!(ctx.next_plan_event(), None);
+    }
+
+    #[test]
+    fn summary_mirrors_the_counters() {
+        let mut ctx = FaultCtx::new(FaultConfig::default(), 2, 2);
+        ctx.note_shed(1);
+        ctx.note_shed(1);
+        ctx.expired_deadline = 3;
+        ctx.retry_exhausted = 2;
+        let s = ctx.summary(100, 93, 930_000_000_000, 2.0);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.shed_by_tenant, vec![0, 2]);
+        assert_eq!(s.expired, 5);
+        assert_eq!(s.availability, 0.93);
+        assert_eq!(s.goodput_gops, 465.0);
+        assert_eq!(s.admission, "admit-all");
+        // nothing offered is trivially available
+        assert_eq!(ctx.summary(0, 0, 0, 1.0).availability, 1.0);
+    }
+}

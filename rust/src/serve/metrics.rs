@@ -247,6 +247,11 @@ pub struct WindowSnapshot {
     pub op_index: usize,
     /// Parked shards at window close.
     pub parked: usize,
+    /// Crashed (fault-injected, not yet recovered) shards at window
+    /// close — what lets a controller distinguish a crash-induced
+    /// backlog from plain overload and wake parked shards to absorb it.
+    /// Always 0 without a fault plan.
+    pub shards_down: usize,
     /// Completions inside the window split by tenant id (index =
     /// tenant), grown on demand as tenants complete. Sums to
     /// `completed` when every completion went through
@@ -357,6 +362,7 @@ impl MetricsWindow {
         queue_depth: usize,
         op_index: usize,
         parked: usize,
+        shards_down: usize,
     ) -> WindowSnapshot {
         let span = end.saturating_sub(self.start);
         let denom = alive_shards as u128 * span as u128;
@@ -395,6 +401,7 @@ impl MetricsWindow {
             active_j: self.active_j,
             op_index,
             parked,
+            shards_down,
             tenant_completed: std::mem::take(&mut self.tenant_completed),
             net_util,
         };
@@ -496,6 +503,19 @@ pub struct ServeReport {
     /// `Flat` topology yields a summary with no levels and zero fetch
     /// cycles (the bit-identity contract, `tests/serve_equivalence.rs`).
     pub net: Option<crate::net::NetSummary>,
+    /// Requests still waiting when the run ended. 0 on every drained
+    /// run; nonzero means the horizon cut mid-backlog (a `run_until` +
+    /// `finish` measurement) or work stranded behind permanent faults —
+    /// either way throughput/latency figures describe a truncated
+    /// stream and `render_serve` warns.
+    pub final_queue_depth: usize,
+    /// Fault/degradation block: admission, shed/expired/retry
+    /// accounting and availability. `None` when the run had no fault
+    /// layer attached; the empty-plan + `AdmitAll` configuration yields
+    /// the all-zero summary with availability 1.0 while every other
+    /// field stays bit-identical (the fault identity contract,
+    /// `tests/serve_equivalence.rs`).
+    pub fault: Option<super::fault::FaultSummary>,
 }
 
 impl ServeReport {
@@ -647,12 +667,12 @@ mod tests {
         w.record_tenant(100, 0);
         w.record_tenant(200, 2); // grows past the unseen tenant 1
         w.record_tenant(300, 0);
-        let snap = w.close(1000, 1, 0, 2, 0);
+        let snap = w.close(1000, 1, 0, 2, 0, 0);
         assert_eq!(snap.completed, 3);
         assert_eq!(snap.tenant_completed, vec![2, 0, 1]);
         // the close reset the per-tenant counters with everything else
         w.record_tenant(50, 1);
-        let next = w.close(2000, 1, 0, 2, 0);
+        let next = w.close(2000, 1, 0, 2, 0, 0);
         assert_eq!(next.tenant_completed, vec![0, 1]);
     }
 
@@ -661,7 +681,7 @@ mod tests {
         let mut w = MetricsWindow::new(0);
         w.configure_net(&[4, 4, 2]); // boards, board uplinks, pod uplinks
         w.note_net_busy(&[400, 100, 0]);
-        let a = w.close(1000, 1, 0, 2, 0);
+        let a = w.close(1000, 1, 0, 2, 0, 0);
         assert_eq!(a.net_util.len(), 3);
         assert_eq!(a.net_util[0], 400.0 / 4000.0);
         assert_eq!(a.net_util[1], 100.0 / 4000.0);
@@ -669,12 +689,12 @@ mod tests {
         // the counters are cumulative: the next window diffs against
         // the reading taken at its open
         w.note_net_busy(&[400, 100, 50]);
-        let b = w.close(2000, 1, 0, 2, 0);
+        let b = w.close(2000, 1, 0, 2, 0, 0);
         assert_eq!(b.net_util[0], 0.0);
         assert_eq!(b.net_util[2], 50.0 / 2000.0);
         // no topology configured -> no entries at all
         let mut plain = MetricsWindow::new(0);
-        let c = plain.close(1000, 1, 0, 2, 0);
+        let c = plain.close(1000, 1, 0, 2, 0, 0);
         assert!(c.net_util.is_empty());
     }
 
@@ -685,15 +705,17 @@ mod tests {
         w.record(300);
         w.advance(50, 2, 4);
         w.add_active_j(1.5);
-        let a = w.close(1000, 2, 3, 2, 0);
+        let a = w.close(1000, 2, 3, 2, 0, 1);
         assert_eq!(a.index, 0);
         assert_eq!((a.start_cycles, a.end_cycles), (0, 1000));
         assert_eq!(a.completed, 2);
         assert_eq!(a.active_j, 1.5);
         assert_eq!(a.queue_depth, 3);
+        assert_eq!(a.shards_down, 1, "close passes the down count through");
         // the next window starts where the last ended, fully cleared
-        let b = w.close(2000, 2, 0, 2, 0);
+        let b = w.close(2000, 2, 0, 2, 0, 0);
         assert_eq!(b.index, 1);
+        assert_eq!(b.shards_down, 0);
         assert_eq!((b.start_cycles, b.end_cycles), (1000, 2000));
         assert_eq!(b.completed, 0);
         assert_eq!(b.p50_cycles, 0);
@@ -714,7 +736,7 @@ mod tests {
         // 400 of 1000 cycles busy on 1 of 2 shards, depth 3 throughout
         w.advance(400, 1, 3);
         w.advance(600, 0, 3);
-        let first = w.close(1000, 2, 0, 2, 0);
+        let first = w.close(1000, 2, 0, 2, 0, 0);
         assert_eq!(first.p50_cycles, 50);
         assert_eq!(first.p99_cycles, 99);
         assert_eq!(first.utilization, 400.0 / 2000.0);
@@ -722,7 +744,7 @@ mod tests {
         w.record(1000);
         w.record(2000);
         w.advance(500, 2, 0);
-        let second = w.close(1500, 2, 0, 2, 0);
+        let second = w.close(1500, 2, 0, 2, 0, 0);
         assert_eq!(second.p50_cycles, 1000);
         assert_eq!(second.p99_cycles, 2000);
         assert_eq!(second.utilization, 1.0);
@@ -741,7 +763,7 @@ mod tests {
                 w.record(1 + (i * 2_654_435_761) % 1_000_000);
                 w.advance(7, (i % 3) as usize, (i % 11) as usize);
                 if i % 500 == 499 {
-                    let s = w.close((i + 1) * 7, 3, (i % 11) as usize, 2, 0);
+                    let s = w.close((i + 1) * 7, 3, (i % 11) as usize, 2, 0, 0);
                     out.push((
                         s.p50_cycles,
                         s.p99_cycles,

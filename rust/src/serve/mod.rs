@@ -83,8 +83,25 @@
 //! a `Flat` topology is propcheck-held bit-identical to no topology at
 //! all, and `benches/fleet_scaling` sweeps 1 → 10k shards into
 //! `BENCH_fleet.json`.
+//!
+//! **Fault injection + graceful degradation:** a
+//! [`crate::fault::FaultPlan`] (seeded, simulated-time-only schedule of
+//! shard crash/recover events, link degradation/outage windows, and
+//! transient request failures) attaches through a [`FaultConfig`]
+//! ([`Fleet::serve_faulted`]) together with admission control
+//! ([`AdmissionPolicy`]: admit-all / queue-depth threshold /
+//! tenant-fair shedding), per-attempt request deadlines, and bounded
+//! retry with exponential backoff — crash failovers re-enqueue through
+//! the queue and pay weight re-staging through the router from the
+//! nearest surviving holder. Reports gain a [`FaultSummary`] degraded
+//! block (shed/expired/retried/failed-over counts, availability,
+//! goodput) obeying `offered == served + shed + expired` on drained
+//! runs; the empty plan under admit-all is propcheck-held bit-identical
+//! to the un-faulted engine, and `benches/fault_tolerance` records the
+//! availability/bounded-p99 outcome in `BENCH_fault.json`.
 
 pub mod control;
+pub mod fault;
 pub mod fleet;
 pub mod metrics;
 pub mod naive;
@@ -96,6 +113,7 @@ pub use control::{
     control_by_name, ControlAction, Controller, ControlState, SloDvfs, StaticNominal,
     DEFAULT_CONTROL_CADENCE_CYCLES, DVFS_TRANSITION_CYCLES,
 };
+pub use fault::{admission_by_name, AdmissionPolicy, FaultConfig, FaultSummary};
 pub use fleet::{Fleet, ServeEngine};
 pub use metrics::{
     jain, ControlSummary, LatencyStore, MetricsWindow, ServeReport, TenantSummary,

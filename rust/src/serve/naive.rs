@@ -153,7 +153,9 @@ pub fn serve_naive(
                 class,
                 bucket: w.classes[class].bucket(),
                 arrival: t,
+                first_arrival: t,
                 tenant,
+                attempts: 0,
             });
         }
         depth_max = depth_max.max(queue.len());
@@ -281,6 +283,8 @@ pub fn serve_naive(
         freq_hz: freq,
         control: None,
         net: None,
+        final_queue_depth: 0,
+        fault: None,
     })
 }
 

@@ -184,7 +184,10 @@ impl QueueView {
 
     /// Admit one request. Amortized O(1). Must be called in (arrival,
     /// id) order — the deques materialize that order, they don't sort.
-    pub(crate) fn push(&mut self, q: Queued) {
+    /// Returns the entry's `(slot, generation)` handle, which
+    /// [`cancel`](QueueView::cancel) accepts later (the fault layer's
+    /// deadline expiry uses it; everyone else may ignore it).
+    pub(crate) fn push(&mut self, q: Queued) -> (u32, u32) {
         let class = q.class;
         let shard = q.id % self.by_shard.len();
         let tenant = q.tenant;
@@ -209,6 +212,7 @@ impl QueueView {
         self.tenant_class_live[tc] += 1;
         self.tenant_live[tenant] += 1;
         self.live += 1;
+        (e.slot, e.gen)
     }
 
     /// Free a slot: bump its generation (staling every deque entry that
@@ -224,6 +228,19 @@ impl QueueView {
         self.tenant_live[q.tenant] -= 1;
         self.live -= 1;
         q
+    }
+
+    /// Remove one still-waiting entry by its push handle. `Some` with
+    /// the removed request if the handle is still live (the deadline
+    /// expired before dispatch); `None` if the entry already left the
+    /// queue — its slot was freed, or freed and recycled, since (the
+    /// generation mismatch detects both). O(1); the deque twins go
+    /// stale and are reclaimed lazily like any other removal.
+    pub(crate) fn cancel(&mut self, slot: u32, gen: u32) -> Option<Queued> {
+        match self.slots.get(slot as usize) {
+            Some(s) if s.gen == gen => Some(self.kill(slot)),
+            _ => None,
+        }
     }
 
     /// Take the `n` oldest waiters of `class` (head-of-line within the
@@ -347,7 +364,15 @@ mod tests {
     }
 
     fn qt(id: usize, class: usize, arrival: u64, tenant: usize) -> Queued {
-        Queued { id, class, bucket: 128 * (class + 1), arrival, tenant }
+        Queued {
+            id,
+            class,
+            bucket: 128 * (class + 1),
+            arrival,
+            tenant,
+            first_arrival: arrival,
+            attempts: 0,
+        }
     }
 
     #[test]
@@ -459,6 +484,34 @@ mod tests {
         v.take_tenant_class(7, 0, 1, &mut out);
         v.take_tenant_class(0, 9, 1, &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn cancel_by_handle_is_exact_and_generation_safe() {
+        let mut v = QueueView::new(1, 1, 1);
+        let (s0, g0) = v.push(q(0, 0, 0));
+        let (s1, g1) = v.push(q(1, 0, 1));
+        // a live handle cancels exactly its request
+        assert_eq!(v.cancel(s0, g0).unwrap().id, 0);
+        assert_eq!(v.len(), 1);
+        // cancelling again is a no-op (slot freed, generation bumped)
+        assert!(v.cancel(s0, g0).is_none());
+        // a handle whose request was dispatched meanwhile is dead too
+        let mut out = Vec::new();
+        v.take_class(0, 1, &mut out);
+        assert_eq!(out[0].id, 1);
+        assert!(v.cancel(s1, g1).is_none());
+        // recycling the slot must not revive the stale handle
+        let (s2, g2) = v.push(q(2, 0, 2));
+        assert_eq!(s2, s1, "freed slot is recycled");
+        assert_ne!(g2, g1, "generation advanced");
+        assert!(v.cancel(s1, g1).is_none());
+        assert_eq!(v.len(), 1);
+        // out-of-range slots are dead handles, not panics
+        assert!(v.cancel(999, 0).is_none());
+        // the cancelled entry's deque twins are stale, not live
+        v.tidy();
+        assert_eq!(v.head().unwrap().id, 2);
     }
 
     #[test]

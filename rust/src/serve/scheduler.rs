@@ -59,10 +59,18 @@ pub struct Queued {
     pub class: usize,
     /// Seq-len bucket of the class (its padded sequence length).
     pub bucket: usize,
-    /// Arrival cycle.
+    /// Admission cycle of this attempt — the cycle the entry joined
+    /// the queue (a retry re-enters with its ready cycle here, keeping
+    /// the queue's (arrival, id) push order intact).
     pub arrival: u64,
     /// Tenant the request belongs to (0 for synthetic workloads).
     pub tenant: usize,
+    /// Original arrival cycle — end-to-end latency is measured from
+    /// here. Equal to `arrival` for fresh requests.
+    pub first_arrival: u64,
+    /// Dispatch attempts that already failed (0 for fresh requests);
+    /// the fault layer's retry budget counts against this.
+    pub attempts: u32,
 }
 
 /// What a scheduler asks the fleet to dispatch on one free cluster.
@@ -639,7 +647,15 @@ mod tests {
     use super::*;
 
     fn q(id: usize, class: usize) -> Queued {
-        Queued { id, class, bucket: 128 * (class + 1), arrival: id as u64, tenant: 0 }
+        Queued {
+            id,
+            class,
+            bucket: 128 * (class + 1),
+            arrival: id as u64,
+            tenant: 0,
+            first_arrival: id as u64,
+            attempts: 0,
+        }
     }
 
     fn view(requests: &[(usize, usize)], n_shards: usize) -> QueueView {
@@ -662,6 +678,8 @@ mod tests {
                 bucket: 128 * (class + 1),
                 arrival: id as u64,
                 tenant,
+                first_arrival: id as u64,
+                attempts: 0,
             });
         }
         v

@@ -1,0 +1,173 @@
+//! Invariants of the fault-injection + graceful-degradation layer
+//! (`serve/fault.rs` + `fault/`), proven end-to-end through the public
+//! serve surface:
+//!
+//! 1. **Conservation by exact count** — on a drained run every offered
+//!    request terminates exactly once: `offered == served + shed +
+//!    expired` (with `expired = expired_deadline + retry_exhausted`),
+//!    even under a compound of crash + admission + deadline +
+//!    transient failures.
+//! 2. **The inert config is a provable identity** — an empty
+//!    `FaultPlan` under `AdmitAll` changes no report field (floats by
+//!    bit pattern). The full randomized matrix lives in
+//!    `tests/serve_equivalence.rs`; this file keeps one directed leg.
+//! 3. **Root-store cold-fetch liveness** — crashing the only potential
+//!    weight holder at cycle 0 cannot deadlock the fleet: weights
+//!    re-stage from the root store and the survivors drain everything.
+//! 4. **Deadline 0 sheds everything** — every admitted request expires
+//!    before dispatch; nothing is served, the ledger still balances.
+//! 5. **Determinism under active faults** — same seed + same plan is
+//!    bit-identical, including the fault summary.
+
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::fault::FaultPlan;
+use attn_tinyml::models::MOBILEBERT;
+use attn_tinyml::net::Topology;
+use attn_tinyml::serve::{
+    AdmissionPolicy, FaultConfig, Fifo, Fleet, RequestClass, ServeReport, Workload,
+};
+use attn_tinyml::sim::ClusterConfig;
+
+fn fleet(n: usize) -> Fleet {
+    Fleet::new(ClusterConfig::default(), Target::MultiCoreIta, n)
+}
+
+fn classes() -> Vec<RequestClass> {
+    vec![RequestClass::new(&MOBILEBERT, 1)]
+}
+
+/// The compound stress config: simultaneous overload against a
+/// bounded queue, a mid-batch crash with late recovery, a per-attempt
+/// deadline, and a 20% transient failure rate with one retry.
+fn stress_config() -> FaultConfig {
+    FaultConfig {
+        plan: FaultPlan::empty()
+            .crash(1, 1)
+            .recover(20_000_000, 1)
+            .transient(200_000)
+            .seeded(9),
+        admission: AdmissionPolicy::Threshold { max_depth: 16 },
+        deadline_cycles: Some(2_000_000),
+        max_retries: 1,
+        retry_backoff_cycles: 10_000,
+    }
+}
+
+fn run_stress() -> ServeReport {
+    let w = Workload::trace(classes(), vec![(0, 0); 60]);
+    fleet(2).serve_faulted(&w, &mut Fifo, stress_config()).unwrap()
+}
+
+#[test]
+fn conservation_holds_by_exact_count_under_compound_faults() {
+    let r = run_stress();
+    let f = r.fault.as_ref().expect("faulted run carries a summary");
+    // every offered request terminates exactly once
+    assert_eq!(
+        r.offered as u64,
+        r.served as u64 + f.shed + f.expired,
+        "ledger must balance: offered {} != served {} + shed {} + expired {}",
+        r.offered,
+        r.served,
+        f.shed,
+        f.expired
+    );
+    assert_eq!(f.expired, f.expired_deadline + f.retry_exhausted);
+    assert_eq!(f.shed_by_tenant.iter().sum::<u64>(), f.shed);
+    // the FIFO fleet drains whatever it admitted
+    assert_eq!(r.final_queue_depth, 0);
+    // the stress shape actually exercised every degradation path
+    assert_eq!(f.shed, 44, "60 at-once arrivals vs a 16-deep bound");
+    assert_eq!(f.crashes, 1);
+    assert!(f.killed_in_flight >= 1, "the crash caught a batch mid-flight");
+    assert!(
+        f.transient_failures > 0,
+        "a 20% transient rate over dozens of commits must fire"
+    );
+    assert!(f.availability > 0.0 && f.availability < 1.0);
+}
+
+#[test]
+fn inert_config_is_a_report_identity() {
+    let w = Workload::poisson(classes(), 800.0, 24, 0xFA17);
+    let plain = fleet(2).serve(&w, &mut Fifo).unwrap();
+    let faulted =
+        fleet(2).serve_faulted(&w, &mut Fifo, FaultConfig::default()).unwrap();
+    assert_eq!(plain.makespan_cycles, faulted.makespan_cycles);
+    assert_eq!(plain.served, faulted.served);
+    assert_eq!(plain.batches, faulted.batches);
+    assert_eq!(plain.p50_cycles, faulted.p50_cycles);
+    assert_eq!(plain.p99_cycles, faulted.p99_cycles);
+    assert_eq!(plain.energy_j.to_bits(), faulted.energy_j.to_bits());
+    assert_eq!(
+        plain.mean_queue_depth.to_bits(),
+        faulted.mean_queue_depth.to_bits()
+    );
+    assert!(plain.fault.is_none());
+    let f = faulted.fault.as_ref().unwrap();
+    assert_eq!(f.crashes + f.shed + f.expired + f.retried, 0);
+    assert_eq!(f.availability.to_bits(), 1.0f64.to_bits());
+}
+
+#[test]
+fn crashing_the_only_holder_at_cycle_zero_still_drains() {
+    // shard 0 is down before it ever stages weights: the survivor must
+    // cold-fetch from the root store instead of waiting on a holder
+    // that will never answer — liveness, not just correctness
+    let w = Workload::trace(classes(), vec![(0, 0); 10]);
+    let cfg = FaultConfig::with_plan(FaultPlan::empty().crash(0, 0));
+    let r = fleet(2)
+        .with_topology(Topology::parse("pod:1x1x2").unwrap())
+        .serve_faulted(&w, &mut Fifo, cfg)
+        .unwrap();
+    assert_eq!(r.served, 10, "the surviving shard drains everything");
+    assert_eq!(r.final_queue_depth, 0);
+    let f = r.fault.as_ref().unwrap();
+    assert_eq!((f.crashes, f.recoveries), (1, 0));
+    assert_eq!(f.killed_in_flight, 0, "nothing was in flight at cycle 0");
+    assert_eq!(f.availability.to_bits(), 1.0f64.to_bits());
+    // the weights really came over the interconnect from the root
+    let net = r.net.as_ref().expect("topology run carries a net block");
+    assert!(net.restages >= 1, "cold fetch must be priced as a restage");
+    // the dead shard did no work
+    assert_eq!(r.cluster_utilization[0].to_bits(), 0.0f64.to_bits());
+    assert!(r.cluster_utilization[1] > 0.0);
+}
+
+#[test]
+fn deadline_zero_expires_every_request_and_still_balances() {
+    let w = Workload::trace(classes(), (0..20).map(|i| (i * 1000, 0)).collect());
+    let cfg = FaultConfig {
+        deadline_cycles: Some(0),
+        ..FaultConfig::default()
+    };
+    let r = fleet(2).serve_faulted(&w, &mut Fifo, cfg).unwrap();
+    let f = r.fault.as_ref().unwrap();
+    assert_eq!(r.served, 0, "a zero deadline expires ahead of dispatch");
+    assert_eq!(f.expired, 20);
+    assert_eq!(f.expired_deadline, 20);
+    assert_eq!(f.shed, 0, "admission admitted everything");
+    assert_eq!(r.offered as u64, r.served as u64 + f.shed + f.expired);
+    assert_eq!(f.availability.to_bits(), 0.0f64.to_bits());
+    assert_eq!(r.batches, 0);
+    assert_eq!(r.final_queue_depth, 0);
+}
+
+#[test]
+fn same_seed_and_plan_replay_bit_identically_with_faults_active() {
+    let a = run_stress();
+    let b = run_stress();
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.makespan_cycles, b.makespan_cycles);
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.class_switches, b.class_switches);
+    assert_eq!(a.p50_cycles, b.p50_cycles);
+    assert_eq!(a.p90_cycles, b.p90_cycles);
+    assert_eq!(a.p99_cycles, b.p99_cycles);
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+    assert_eq!(a.gopj.to_bits(), b.gopj.to_bits());
+    assert_eq!(a.mean_queue_depth.to_bits(), b.mean_queue_depth.to_bits());
+    assert_eq!(a.final_queue_depth, b.final_queue_depth);
+    // the whole degraded ledger, field for field
+    assert_eq!(a.fault, b.fault);
+}

@@ -14,6 +14,10 @@
 //! no-op: the router prices nothing, every core field (per-tenant
 //! summaries and Jain included) stays bit-identical, and only an empty
 //! `net` block (no levels, zero re-staging fetch cycles) appears.
+//! Likewise for the fault layer: an empty `FaultPlan` under `AdmitAll`
+//! (`FaultConfig::default()` through `Fleet::serve_faulted`) must be
+//! provably inert — every core field bit-identical, only an all-zero
+//! `FaultSummary` with availability 1.0 attached.
 
 use attn_tinyml::deeploy::Target;
 use attn_tinyml::energy::operating_point::NOMINAL_INDEX;
@@ -21,8 +25,8 @@ use attn_tinyml::models::{DINOV2S, MOBILEBERT};
 use attn_tinyml::net::Topology;
 use attn_tinyml::serve::naive::{serve_naive, NaivePolicy};
 use attn_tinyml::serve::{
-    scheduler_by_name, Fleet, RequestClass, ServeReport, StaticNominal, Workload,
-    DEFAULT_CONTROL_CADENCE_CYCLES,
+    scheduler_by_name, FaultConfig, Fleet, RequestClass, ServeReport, StaticNominal,
+    Workload, DEFAULT_CONTROL_CADENCE_CYCLES,
 };
 use attn_tinyml::sim::ClusterConfig;
 use attn_tinyml::util::prng::XorShift64;
@@ -90,6 +94,7 @@ fn reports_identical(a: &ServeReport, b: &ServeReport) -> Result<(), String> {
             }),
     );
     chk("freq_hz", a.freq_hz.to_bits() == b.freq_hz.to_bits());
+    chk("final_queue_depth", a.final_queue_depth == b.final_queue_depth);
     if errs.is_empty() {
         Ok(())
     } else {
@@ -213,6 +218,62 @@ fn flat_topology_is_identity(
     Ok(())
 }
 
+/// `FaultConfig::default()` (empty plan, admit-all, no deadline) must
+/// be a provable no-op: the fault layer is attached but defers
+/// nothing, so every core report field stays bit-identical and only
+/// the all-zero `FaultSummary` appears.
+fn empty_fault_plan_is_identity(
+    fleet: &Fleet,
+    w: &Workload,
+    name: &str,
+    opt: &ServeReport,
+) -> Result<(), String> {
+    let mut sched = scheduler_by_name(name).unwrap();
+    let faulted = fleet
+        .serve_faulted(w, sched.as_mut(), FaultConfig::default())
+        .map_err(|e| format!("faulted serve failed: {e}"))?;
+    reports_identical(&faulted, opt)
+        .map_err(|e| format!("empty fault plan deviated: {e}"))?;
+    if opt.fault.is_some() {
+        return Err("fault-free run carries a fault summary".into());
+    }
+    let f = faulted.fault.as_ref().ok_or("faulted run lost its fault summary")?;
+    if f.admission != "admit-all" {
+        return Err(format!("wrong admission label: {}", f.admission));
+    }
+    let zeros = [
+        ("crashes", f.crashes),
+        ("recoveries", f.recoveries),
+        ("link_events", f.link_events),
+        ("killed_in_flight", f.killed_in_flight),
+        ("transient_failures", f.transient_failures),
+        ("shed", f.shed),
+        ("expired", f.expired),
+        ("expired_deadline", f.expired_deadline),
+        ("retry_exhausted", f.retry_exhausted),
+        ("retried", f.retried),
+        ("failed_over", f.failed_over),
+    ];
+    for (field, v) in zeros {
+        if v != 0 {
+            return Err(format!("inert config counted {field} = {v}"));
+        }
+    }
+    if f.availability.to_bits() != 1.0f64.to_bits() {
+        return Err(format!("availability {} != 1.0", f.availability));
+    }
+    if f.deadline_cycles.is_some() {
+        return Err("inert config reports a deadline".into());
+    }
+    if faulted.final_queue_depth != 0 {
+        return Err(format!(
+            "drained run left {} queued",
+            faulted.final_queue_depth
+        ));
+    }
+    Ok(())
+}
+
 #[test]
 fn optimized_and_naive_loops_are_bit_identical() {
     let gen = |rng: &mut XorShift64| {
@@ -265,6 +326,8 @@ fn optimized_and_naive_loops_are_bit_identical() {
             static_nominal_is_noop(&fleet, &w, name, &opt)
                 .map_err(|e| format!("{name}/{kind} x{requests} on {clusters}: {e}"))?;
             flat_topology_is_identity(clusters, &w, name, &opt)
+                .map_err(|e| format!("{name}/{kind} x{requests} on {clusters}: {e}"))?;
+            empty_fault_plan_is_identity(&fleet, &w, name, &opt)
                 .map_err(|e| format!("{name}/{kind} x{requests} on {clusters}: {e}"))
         },
     );
@@ -285,6 +348,8 @@ fn equivalence_holds_under_sustained_backlog() {
         static_nominal_is_noop(&fleet, &w, name, &opt)
             .unwrap_or_else(|e| panic!("{name}: {e}"));
         flat_topology_is_identity(2, &w, name, &opt)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        empty_fault_plan_is_identity(&fleet, &w, name, &opt)
             .unwrap_or_else(|e| panic!("{name}: {e}"));
         assert!(opt.max_queue_depth >= 8, "{name}: workload failed to backlog");
     }
