@@ -45,6 +45,12 @@
 #   make fault-bench    the full fault-tolerance bench (800-request crash
 #                    leg + 400-at-once overload); regenerates
 #                    BENCH_fault.json
+#   make obs-smoke      observability smoke run (CI guard): a faulted
+#                    serve with --events-out + --profile through the
+#                    CLI, exporting both the Chrome trace_event JSON
+#                    and the JSONL event stream, then parse-validating
+#                    both documents (round-trip through json.tool /
+#                    json.loads — malformed exporter output fails CI)
 #   make explore-smoke  design-space exploration smoke run: tiny grid,
 #                    2 operating points — the CLI errors out on an
 #                    empty frontier, so a green run asserts one exists
@@ -61,7 +67,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: build test bench serve-smoke perf-smoke perf-bench control-smoke control-bench trace-smoke trace-bench fleet-smoke fleet-bench fault-smoke fault-bench explore-smoke explore-bench artifacts check lint fmt clean
+.PHONY: build test bench serve-smoke perf-smoke perf-bench control-smoke control-bench trace-smoke trace-bench fleet-smoke fleet-bench fault-smoke fault-bench obs-smoke explore-smoke explore-bench artifacts check lint fmt clean
 
 build:
 	$(CARGO) build --release
@@ -109,6 +115,12 @@ fault-smoke: build
 
 fault-bench:
 	$(CARGO) bench --bench fault_tolerance
+
+obs-smoke: build
+	$(CARGO) run --release -- serve --requests 48 --clusters 8 --topology pod:2x2x2 --faults plans/fault_smoke.json --admission threshold:16 --deadline-ms 50 --max-retries 2 --profile --sample 2 --events-out target/obs-smoke.json
+	$(CARGO) run --release -- serve --requests 48 --clusters 8 --topology pod:2x2x2 --faults plans/fault_smoke.json --admission threshold:16 --deadline-ms 50 --max-retries 2 --events-out target/obs-smoke.jsonl
+	$(PYTHON) -m json.tool target/obs-smoke.json > /dev/null
+	$(PYTHON) -c "import json; [json.loads(l) for l in open('target/obs-smoke.jsonl') if l.strip()]"
 
 explore-smoke: build
 	$(CARGO) run --release -- explore --space tiny --strategy grid --budget 8 --seed 7

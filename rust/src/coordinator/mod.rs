@@ -14,7 +14,8 @@ use crate::pipeline::Pipeline;
 use crate::sim::ClusterConfig;
 
 pub use report::{
-    render_explore, render_serve, render_serve_with_host, ModelReport, Table1,
+    render_explore, render_serve, render_serve_warning, render_serve_with_host, ModelReport,
+    Table1,
 };
 
 // The 0.1.0 free functions `run_model{,_layers}` were deprecated shims

@@ -229,14 +229,6 @@ pub fn render_serve(r: &ServeReport) -> String {
             ));
         }
     }
-    if r.final_queue_depth > 0 {
-        s.push_str(&format!(
-            "WARNING      : {} request{} still queued at the horizon — the run \
-             ended with an undrained backlog\n",
-            r.final_queue_depth,
-            if r.final_queue_depth == 1 { "" } else { "s" }
-        ));
-    }
     // per-tenant fairness block — only multi-tenant (trace) runs carry
     // more than one tenant, so single-tenant output is unchanged
     if r.tenants.len() > 1 {
@@ -304,7 +296,60 @@ pub fn render_serve(r: &ServeReport) -> String {
             ));
         }
     }
+    // observability block — only observed runs carry one, so the
+    // unobserved rendering is byte-identical to the historical output
+    if let Some(p) = &r.profile {
+        s.push_str(&format!(
+            "observability: sampled 1/{}  {} events ({} ring-dropped)  {} dispatches\n",
+            p.sample_every.max(1),
+            p.total_events,
+            p.dropped_events,
+            p.dispatched
+        ));
+        s.push_str(&format!(
+            "  spans      : queue {}  net {}  restage {}  compute {}  backoff {} cycles\n",
+            p.spans.queue_wait,
+            p.spans.net_dispatch,
+            p.spans.restage,
+            p.spans.compute,
+            p.spans.backoff
+        ));
+        let fleet_cycles = (p.horizon_cycles.max(1) * p.shards.len().max(1) as u64) as f64;
+        let pct = |c: u64| c as f64 / fleet_cycles * 100.0;
+        let (mut busy, mut idle, mut parked, mut transition) = (0u64, 0u64, 0u64, 0u64);
+        for sh in &p.shards {
+            busy += sh.busy;
+            idle += sh.idle;
+            parked += sh.parked;
+            transition += sh.transition;
+        }
+        s.push_str(&format!(
+            "  phases     : busy {:.1}%  idle {:.1}%  parked {:.1}%  transition {:.1}%  \
+             (horizon {} cycles)\n",
+            pct(busy),
+            pct(idle),
+            pct(parked),
+            pct(transition),
+            p.horizon_cycles
+        ));
+    }
     s
+}
+
+/// The undrained-backlog warning for a serve run, if any. Kept out of
+/// [`render_serve`]'s return so callers can route it to stderr — a
+/// diagnostic must not corrupt stdout for pipelines consuming the
+/// report (`serve ... | tee`).
+pub fn render_serve_warning(r: &ServeReport) -> Option<String> {
+    if r.final_queue_depth == 0 {
+        return None;
+    }
+    Some(format!(
+        "WARNING      : {} request{} still queued at the horizon — the run \
+         ended with an undrained backlog",
+        r.final_queue_depth,
+        if r.final_queue_depth == 1 { "" } else { "s" }
+    ))
 }
 
 /// Render a serving run plus host-side simulation throughput: how long
@@ -491,16 +536,37 @@ mod tests {
     }
 
     #[test]
-    fn render_serve_warns_on_an_undrained_backlog() {
+    fn undrained_backlog_warning_is_separate_from_the_report_body() {
         let mut r = Pipeline::new(ClusterConfig::default())
             .fleet(1)
             .serve(&Workload::single(&MOBILEBERT, 1))
             .unwrap();
-        assert!(!render_serve(&r).contains("WARNING"));
+        assert!(render_serve_warning(&r).is_none());
         r.final_queue_depth = 3;
-        let text = render_serve(&r);
-        assert!(text.contains("WARNING"), "{text}");
-        assert!(text.contains("3 requests still queued at the horizon"), "{text}");
+        // the warning is a stderr diagnostic, never part of the report
+        assert!(!render_serve(&r).contains("WARNING"));
+        let warn = render_serve_warning(&r).unwrap();
+        assert!(warn.contains("WARNING"), "{warn}");
+        assert!(warn.contains("3 requests still queued at the horizon"), "{warn}");
+    }
+
+    #[test]
+    fn render_serve_appends_the_observability_block_only_when_observed() {
+        use crate::obs::ObsConfig;
+        use crate::serve::RequestClass;
+        let w = Workload::poisson(vec![RequestClass::new(&MOBILEBERT, 1)], 300.0, 8, 5);
+        let plain =
+            Pipeline::new(ClusterConfig::default()).fleet(2).serve(&w).unwrap();
+        assert!(!render_serve(&plain).contains("observability"));
+        let observed = Pipeline::new(ClusterConfig::default())
+            .fleet(2)
+            .observe(ObsConfig::default())
+            .serve(&w)
+            .unwrap();
+        let text = render_serve(&observed);
+        for needle in ["observability: sampled 1/1", "spans      :", "phases     : busy"] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
     }
 
     #[test]

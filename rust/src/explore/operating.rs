@@ -40,6 +40,7 @@
 use crate::deeploy::{DeployError, Target};
 use crate::energy::{self, area, operating_point};
 use crate::net::Topology;
+use crate::obs::ObsConfig;
 use crate::pipeline::Pipeline;
 use crate::serve::{
     admission_by_name, scheduler_by_name, FaultConfig, Fleet, RequestClass, SloDvfs,
@@ -47,6 +48,12 @@ use crate::serve::{
 };
 
 use super::space::{Candidate, ServeSpec};
+
+/// The serve rung's observability attachment: full sampling into a
+/// small ring (the event *count* is the metric; the stream itself is
+/// discarded), fixed seed so evaluations stay pure functions of the
+/// candidate + spec + workload seed.
+const EXPLORE_OBS: ObsConfig = ObsConfig { sample_every: 1, capacity: 1024, seed: 0xE5EED };
 
 /// Which rung of the evaluation ladder produced an [`Evaluation`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,6 +95,12 @@ pub struct Evaluation {
     pub req_per_s: f64,
     /// Energy per request (serve) / per inference (screen), mJ.
     pub mj_per_req: f64,
+    /// Lifecycle events the serve rung emitted under its always-on
+    /// observability attachment ([`crate::obs`]) — a deterministic
+    /// activity measure per candidate (0 at screen fidelity, which
+    /// runs no serve loop). Host wall-clock stays out: evaluations
+    /// must serialize bit-identically across same-seed runs.
+    pub events: u64,
 }
 
 impl Evaluation {
@@ -140,6 +153,7 @@ pub fn screen(c: &Candidate, spec: &ServeSpec) -> Result<Evaluation, DeployError
         mm2: area::cluster_mm2(&c.cluster()),
         req_per_s: n / sec_sum,
         mj_per_req: j_sum * 1e3 / n,
+        events: 0,
     })
 }
 
@@ -199,8 +213,9 @@ pub fn serve_eval(
         // at the live corner per interval — exactly what the static
         // re-basing below computes for an uncontrolled run — so the
         // report's energy is already on the comparable scale
-        let mut f =
-            Fleet::new(c.cluster(), Target::MultiCoreIta, c.fleet).fuse_mha(c.fuse);
+        let mut f = Fleet::new(c.cluster(), Target::MultiCoreIta, c.fleet)
+            .fuse_mha(c.fuse)
+            .with_obs(EXPLORE_OBS);
         if let Some(t) = topology {
             f = f.with_topology(t);
         }
@@ -228,7 +243,8 @@ pub fn serve_eval(
         let mut pipe = Pipeline::new(c.cluster())
             .target(Target::MultiCoreIta)
             .fuse_mha(c.fuse)
-            .fleet(c.fleet);
+            .fleet(c.fleet)
+            .observe(EXPLORE_OBS);
         if let Some(t) = topology {
             pipe = pipe.topology(t);
         }
@@ -256,6 +272,7 @@ pub fn serve_eval(
         mm2: area::cluster_mm2(&c.cluster()) * fleet,
         req_per_s: r.req_per_s,
         mj_per_req: energy_j * 1e3 / (r.served.max(1)) as f64,
+        events: r.profile.as_ref().map_or(0, |p| p.total_events),
     })
 }
 

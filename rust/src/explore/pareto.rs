@@ -149,6 +149,7 @@ mod tests {
             mm2,
             req_per_s: 0.0,
             mj_per_req: 0.0,
+            events: 0,
         }
     }
 

@@ -43,6 +43,7 @@ fn point_json(e: &Evaluation) -> Json {
         ("mm2", Json::num(e.mm2)),
         ("req_per_s", Json::num(e.req_per_s)),
         ("mj_per_req", Json::num(e.mj_per_req)),
+        ("events", Json::num(e.events as f64)),
         ("paper_point", Json::Bool(c.is_paper_geometry())),
     ])
 }
@@ -116,6 +117,7 @@ mod tests {
             "control",
             "topology",
             "admission",
+            "events",
         ] {
             assert!(first.get(key).is_some(), "frontier point missing {key}");
         }

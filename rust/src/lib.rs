@@ -25,7 +25,11 @@
 //!   serving with per-tenant SLO accounting — the [`fault`] module —
 //!   deterministic fault schedules (shard crash/recover, link
 //!   degradation, transient failures) executed by the serve layer with
-//!   deadlines, bounded retry/failover and admission control — and the
+//!   deadlines, bounded retry/failover and admission control — the
+//!   [`obs`] subsystem — zero-cost-when-disabled structured event
+//!   tracing with deterministic request sampling, cycle-attribution
+//!   profiling (per-request spans, per-shard phase conservation) and
+//!   Perfetto/Chrome-trace export — and the
 //!   [`explore`] subsystem — deterministic design-space
 //!   exploration over the template (geometry × FD-SOI operating point ×
 //!   deployment × serving axes) with Pareto frontiers for GOp/J, GOp/s,
@@ -45,6 +49,7 @@ pub mod fault;
 pub mod ita;
 pub mod models;
 pub mod net;
+pub mod obs;
 pub mod pipeline;
 pub mod runtime;
 pub mod serve;

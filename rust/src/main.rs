@@ -34,6 +34,7 @@ use attn_tinyml::explore::{
 };
 use attn_tinyml::models;
 use attn_tinyml::net::Topology;
+use attn_tinyml::obs::{self, ObsConfig};
 use attn_tinyml::pipeline::Pipeline;
 use attn_tinyml::runtime::{Runtime, RuntimeError, TensorIn};
 use attn_tinyml::serve::{
@@ -206,7 +207,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 /// interconnect), --locality (steer batches at weight-holding
 /// shards), --faults PLAN.json with --deadline-ms / --admission /
 /// --max-retries (deterministic fault injection + graceful
-/// degradation), plus the usual geometry flags. `--requests` takes million-scale counts: arrivals
+/// degradation), --events-out/--profile/--sample (structured event
+/// tracing, cycle-attribution profiling and Chrome-trace/JSONL
+/// export), plus the usual geometry flags. `--requests` takes million-scale counts: arrivals
 /// stream lazily from the seeded PRNG (nothing is materialized upfront)
 /// and the report adds host-side simulation throughput. `--help` prints
 /// this.
@@ -278,6 +281,22 @@ multi-request serving on a fleet of identical clusters
   --max-retries N     dispatch attempts allowed after the first for
                       crash-killed or transiently-failed requests, with
                       exponential backoff between attempts (default 3)
+  --events-out PATH   record the structured lifecycle event stream and
+                      write it after the run: .jsonl streams one
+                      versioned JSON object per event, anything else
+                      gets the Chrome trace_event document (open in
+                      chrome://tracing or ui.perfetto.dev). attaching
+                      the recorder never changes the report: it is
+                      write-only and propcheck-held bit-identical
+  --profile           print the cycle-attribution block (per-request
+                      span totals, per-shard busy/idle/parked/
+                      transition conservation) and attach the recorder
+                      if --events-out did not already
+  --sample N          deterministic request sampling: keep per-request
+                      events for ids with splitmix64(seed ^ id) % N ==
+                      0 (default 1 = every request). fleet-level
+                      events (crash/recover/park/wake/DVFS) are always
+                      kept; span totals stay exact at any rate
 
 the report includes latency percentiles (exact up to 8192 served
 requests, log2-linear histogram with sub-1% relative error beyond),
@@ -289,15 +308,19 @@ Jain's fairness index over delivered throughput; topology runs add the
 interconnect block (per-level utilization, bytes/energy, re-staging
 traffic and the locality hit rate); fault runs add the degraded block
 (availability, shed/expired/failed-over counts — offered == served +
-shed + expired by exact count)
+shed + expired by exact count); observed runs (--events-out /
+--profile) add the observability block and can export the event
+stream for timeline UIs
 ";
 
 /// One metrics window as a compact JSON object (one `--metrics-out`
 /// line). Cycle quantities stay integral; f64 metrics serialize with
 /// Rust's shortest-roundtrip formatting, so the line is reproducible
-/// bit-for-bit from the seed.
+/// bit-for-bit from the seed. Stamped with
+/// [`obs::WINDOWS_SCHEMA_VERSION`] (line formats: DESIGN.md §13).
 fn window_json(w: &WindowSnapshot) -> Json {
     Json::obj(vec![
+        ("schema_version", Json::num(obs::WINDOWS_SCHEMA_VERSION as f64)),
         ("window", Json::num(w.index as f64)),
         ("start_cycles", Json::num(w.start_cycles as f64)),
         ("end_cycles", Json::num(w.end_cycles as f64)),
@@ -429,8 +452,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         None
     };
+    let events_out = args.flag("events-out").map(str::to_string);
+    let want_profile = args.has("profile");
+    let sample_every = args.flag_usize("sample", 1) as u64;
+    if sample_every == 0 {
+        return Err(RuntimeError::Usage(
+            "--sample expects a keep rate of 1 or more (1 = every request)".to_string(),
+        ));
+    }
     let t0 = std::time::Instant::now();
     let mut pipe = Pipeline::new(cluster).target(target).fleet(clusters);
+    if events_out.is_some() || want_profile || args.has("sample") {
+        pipe = pipe.observe(ObsConfig { sample_every, ..ObsConfig::default() });
+    }
     if let Some(c) = controller {
         pipe = pipe.controller(c);
     }
@@ -451,6 +485,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let report = pipe.serve_with(&workload, sched.as_mut())?;
     let host_s = t0.elapsed().as_secs_f64();
     print!("{}", coordinator::render_serve_with_host(&report, host_s));
+    // diagnostics go to stderr: stdout stays a clean report for pipes
+    if let Some(warn) = coordinator::render_serve_warning(&report) {
+        eprintln!("{warn}");
+    }
+    if let Some(path) = events_out {
+        if path.ends_with(".jsonl") {
+            let lines = obs::events_jsonl(&report).expect("events-out attaches the recorder");
+            std::fs::write(&path, lines)?;
+        } else {
+            let doc = obs::chrome_trace(&report).expect("events-out attaches the recorder");
+            std::fs::write(&path, doc.to_string_pretty())?;
+        }
+        let p = report.profile.as_ref().expect("events-out attaches the recorder");
+        println!(
+            "wrote {} events ({} ring-dropped, sampled 1/{}) to {path}",
+            p.recorded_events(),
+            p.dropped_events,
+            p.sample_every.max(1)
+        );
+    }
     if let Some(path) = metrics_out {
         let summary = report.control.as_ref().expect("metrics-out attaches a controller");
         let mut lines = String::new();
@@ -610,8 +664,10 @@ fn cmd_explore(args: &Args) -> Result<()> {
         objectives,
         threads: args.flag_usize("threads", 0),
     };
+    let t0 = std::time::Instant::now();
     let result = explore(&space, &cfg)
         .map_err(|e| RuntimeError::Usage(format!("explore failed: {e}")))?;
+    let host_s = t0.elapsed().as_secs_f64();
     if result.frontier.is_empty() {
         return Err(RuntimeError::Usage(
             "explore produced an empty frontier: every candidate was infeasible \
@@ -620,8 +676,29 @@ fn cmd_explore(args: &Args) -> Result<()> {
         ));
     }
     print!("{}", coordinator::render_explore(&result));
+    let evaluated = (result.screened + result.evaluated).max(1);
+    println!(
+        "host wall    : {host_s:.3} s for {evaluated} evaluations \
+         ({:.1} cand/s)",
+        evaluated as f64 / host_s.max(1e-9)
+    );
     let out = args.flag_or("out", "BENCH_explore.json");
-    let doc = explore_json(&space, &result);
+    let mut doc = explore_json(&space, &result);
+    // host timing joins the written record CLI-side only — the
+    // explore_json document itself stays a pure function of the seed
+    // (benches/explore_pareto asserts bit-identical serialization)
+    if let Json::Obj(map) = &mut doc {
+        map.insert(
+            "host".to_string(),
+            Json::obj(vec![
+                ("wall_seconds", Json::num(host_s)),
+                (
+                    "candidates_per_s",
+                    Json::num(evaluated as f64 / host_s.max(1e-9)),
+                ),
+            ]),
+        );
+    }
     std::fs::write(&out, doc.to_string_pretty())?;
     println!("\nwrote {out}");
     Ok(())

@@ -145,6 +145,29 @@ impl Router {
         arrival
     }
 
+    /// Hop count of the re-stage fetch path [`restage_arrival`] would
+    /// price for `class` into `dst` right now: link transfers walked
+    /// from the nearest holder (1 same-board, 4 via the pod switch, 6
+    /// across the root), or 3 from the root weight store when nobody
+    /// holds the class. Read-only — the observability layer stamps it
+    /// on `Restaged` events; call it *before* `note_staged` marks the
+    /// destination a holder. 0 on linkless (`Flat`) topologies.
+    ///
+    /// [`restage_arrival`]: Router::restage_arrival
+    pub fn restage_hops(&self, class: usize, dst: usize) -> u64 {
+        if !self.links.any() {
+            return 0;
+        }
+        match self.nearest_holder(class, dst) {
+            Some(src) => match self.topo.level_between(src, dst) {
+                0 => 1,
+                1 => 4,
+                _ => 6,
+            },
+            None => 3,
+        }
+    }
+
     /// Count one dispatched batch; `hit` = the shard already held the
     /// batch's class (no re-staging needed).
     pub fn record_dispatch(&mut self, hit: bool) {

@@ -1,0 +1,270 @@
+//! Event-stream export: Chrome `trace_event` / Perfetto JSON and a
+//! JSONL line stream.
+//!
+//! [`chrome_trace`] lowers an observed [`ServeReport`] into the Chrome
+//! tracing JSON object format (`chrome://tracing`, or drag the file
+//! into <https://ui.perfetto.dev>): one track per shard carrying batch
+//! residency (`ph:"X"` complete events for dispatches and weight
+//! re-stages, instants for park/wake/crash/recover), a `net` process
+//! with one span per link level summarizing `NetSummary`, a `requests`
+//! process with the per-request lifecycle instants, and counter tracks
+//! (`ph:"C"`) for queue depth, parked shards and shards down.
+//! Timestamps are microseconds at the fleet clock; events are sorted
+//! by `(cycle, seq)` so the stream is monotone even though the engine
+//! records commit events at their (future) completion time.
+//!
+//! [`events_jsonl`] writes the rawer form: one JSON object per line in
+//! record order, each carrying `schema_version`, `seq`, `at` (fleet
+//! cycles), `ev` (the [`EventKind::label`]) and the kind's payload
+//! fields. The line format is documented in DESIGN.md §13 and
+//! versioned by [`EVENTS_SCHEMA_VERSION`].
+//!
+//! [`ServeReport`]: crate::serve::ServeReport
+
+use crate::serve::ServeReport;
+use crate::util::json::Json;
+
+use super::recorder::{EventKind, EventRecord};
+
+/// Version stamped on every events-JSONL line. Bump on any
+/// field-layout change so external tooling can parse stably.
+pub const EVENTS_SCHEMA_VERSION: u64 = 1;
+
+/// Version stamped on every `--metrics-out` window-JSONL line. The
+/// window format predates versioning; 2 is the first stamped revision.
+pub const WINDOWS_SCHEMA_VERSION: u64 = 2;
+
+/// The kind's payload as flat `(field, value)` pairs, shared by both
+/// exporters (JSONL lines flatten them; Chrome events nest them under
+/// `args`).
+fn kind_fields(kind: &EventKind) -> Vec<(&'static str, Json)> {
+    let n = |v: u64| Json::num(v as f64);
+    let u = |v: usize| Json::num(v as f64);
+    match kind {
+        EventKind::Arrived { id, class, tenant } => {
+            vec![("id", u(*id)), ("class", u(*class)), ("tenant", u(*tenant))]
+        }
+        EventKind::Admitted { id } => vec![("id", u(*id))],
+        EventKind::Shed { id, tenant } => vec![("id", u(*id)), ("tenant", u(*tenant))],
+        EventKind::Enqueued { id, depth } => vec![("id", u(*id)), ("depth", u(*depth))],
+        EventKind::Dispatched { id, shard, net_delay, queue_wait, span } => vec![
+            ("id", u(*id)),
+            ("shard", u(*shard)),
+            ("net_delay", n(*net_delay)),
+            ("queue_wait", n(*queue_wait)),
+            ("span", n(*span)),
+        ],
+        EventKind::Restaged { shard, class, hops, cycles } => vec![
+            ("shard", u(*shard)),
+            ("class", u(*class)),
+            ("hops", n(*hops)),
+            ("cycles", n(*cycles)),
+        ],
+        EventKind::Committed { id, latency } => {
+            vec![("id", u(*id)), ("latency", n(*latency))]
+        }
+        EventKind::Killed { id, shard } => vec![("id", u(*id)), ("shard", u(*shard))],
+        EventKind::Expired { id } => vec![("id", u(*id))],
+        EventKind::Retried { id, attempt, backoff } => {
+            vec![("id", u(*id)), ("attempt", u(*attempt)), ("backoff", n(*backoff))]
+        }
+        EventKind::DvfsTransition { from, to } => {
+            vec![("from", u(*from)), ("to", u(*to))]
+        }
+        EventKind::Park { shard }
+        | EventKind::Wake { shard }
+        | EventKind::ShardCrash { shard }
+        | EventKind::Recover { shard } => vec![("shard", u(*shard))],
+    }
+}
+
+/// One events-JSONL line as a JSON object (see DESIGN.md §13).
+pub fn event_json(e: &EventRecord) -> Json {
+    let mut fields = vec![
+        ("schema_version", Json::num(EVENTS_SCHEMA_VERSION as f64)),
+        ("seq", Json::num(e.seq as f64)),
+        ("at", Json::num(e.at as f64)),
+        ("ev", Json::str(e.kind.label())),
+    ];
+    fields.extend(kind_fields(&e.kind));
+    Json::obj(fields)
+}
+
+/// The JSONL event stream: one line per retained event in record
+/// order, trailing newline included. `None` for an unobserved run.
+pub fn events_jsonl(r: &ServeReport) -> Option<String> {
+    let profile = r.profile.as_ref()?;
+    let mut out = String::new();
+    for e in &profile.events {
+        out.push_str(&event_json(e).to_string());
+        out.push('\n');
+    }
+    Some(out)
+}
+
+/// Process ids of the three track groups in the Chrome trace.
+const PID_SHARDS: f64 = 0.0;
+const PID_NET: f64 = 1.0;
+const PID_REQUESTS: f64 = 2.0;
+
+fn meta(pid: f64, tid: f64, what: &str, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid)),
+        ("tid", Json::num(tid)),
+        ("name", Json::str(what)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+/// The Chrome `trace_event` document for an observed run. `None` for
+/// an unobserved run.
+pub fn chrome_trace(r: &ServeReport) -> Option<Json> {
+    let profile = r.profile.as_ref()?;
+    let freq = r.freq_hz.max(1.0);
+    let us = |cycles: u64| cycles as f64 / freq * 1e6;
+    let mut entries: Vec<Json> = Vec::with_capacity(profile.events.len() + 16);
+
+    // track names first (no timestamps on metadata entries)
+    entries.push(meta(PID_SHARDS, 0.0, "process_name", "fleet"));
+    for s in &profile.shards {
+        let name = format!("shard {}", s.shard);
+        entries.push(meta(PID_SHARDS, s.shard as f64, "thread_name", &name));
+    }
+    entries.push(meta(PID_REQUESTS, 0.0, "process_name", "requests"));
+    if let Some(net) = &r.net {
+        entries.push(meta(PID_NET, 0.0, "process_name", &format!("net {}", net.topology)));
+        for (li, level) in net.levels.iter().enumerate() {
+            entries.push(meta(PID_NET, li as f64, "thread_name", level.level));
+            entries.push(Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("pid", Json::num(PID_NET)),
+                ("tid", Json::num(li as f64)),
+                ("ts", Json::num(0.0)),
+                ("dur", Json::num(us(r.makespan_cycles))),
+                ("name", Json::str(format!("{} links", level.level))),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("links", Json::num(level.links as f64)),
+                        ("transfers", Json::num(level.transfers as f64)),
+                        ("bytes", Json::num(level.bytes as f64)),
+                        ("busy_cycles", Json::num(level.busy_cycles as f64)),
+                        ("utilization", Json::num(level.utilization)),
+                        ("energy_j", Json::num(level.energy_j)),
+                    ]),
+                ),
+            ]));
+        }
+    }
+
+    // the event stream, sorted into simulated-time order: the engine
+    // records commits at their completion cycle, which can postdate
+    // later-recorded events
+    let mut ordered: Vec<&EventRecord> = profile.events.iter().collect();
+    ordered.sort_by_key(|e| (e.at, e.seq));
+    let mut parked: i64 = 0;
+    let mut down: i64 = 0;
+    for e in ordered {
+        let ts = us(e.at);
+        let args = Json::obj(kind_fields(&e.kind));
+        let mut counter: Option<(&'static str, &'static str, i64)> = None;
+        let entry = match &e.kind {
+            EventKind::Dispatched { id, shard, span, .. } => Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("pid", Json::num(PID_SHARDS)),
+                ("tid", Json::num(*shard as f64)),
+                ("ts", Json::num(ts)),
+                ("dur", Json::num(us(*span))),
+                ("name", Json::str(format!("req {id}"))),
+                ("args", args),
+            ]),
+            EventKind::Restaged { shard, class, cycles, .. } => Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("pid", Json::num(PID_SHARDS)),
+                ("tid", Json::num(*shard as f64)),
+                ("ts", Json::num(ts)),
+                ("dur", Json::num(us(*cycles))),
+                ("name", Json::str(format!("restage c{class}"))),
+                ("args", args),
+            ]),
+            EventKind::Park { shard }
+            | EventKind::Wake { shard }
+            | EventKind::ShardCrash { shard }
+            | EventKind::Recover { shard } => {
+                match &e.kind {
+                    EventKind::Park { .. } => counter = Some(("parked", "shards", 1)),
+                    EventKind::Wake { .. } => counter = Some(("parked", "shards", -1)),
+                    EventKind::ShardCrash { .. } => counter = Some(("shards_down", "shards", 1)),
+                    _ => counter = Some(("shards_down", "shards", -1)),
+                }
+                Json::obj(vec![
+                    ("ph", Json::str("i")),
+                    ("s", Json::str("t")),
+                    ("pid", Json::num(PID_SHARDS)),
+                    ("tid", Json::num(*shard as f64)),
+                    ("ts", Json::num(ts)),
+                    ("name", Json::str(e.kind.label())),
+                    ("args", args),
+                ])
+            }
+            EventKind::DvfsTransition { .. } => Json::obj(vec![
+                ("ph", Json::str("i")),
+                ("s", Json::str("p")),
+                ("pid", Json::num(PID_SHARDS)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts)),
+                ("name", Json::str(e.kind.label())),
+                ("args", args),
+            ]),
+            _ => Json::obj(vec![
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("pid", Json::num(PID_REQUESTS)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts)),
+                ("name", Json::str(e.kind.label())),
+                ("args", args),
+            ]),
+        };
+        entries.push(entry);
+        if let EventKind::Enqueued { depth, .. } = &e.kind {
+            entries.push(counter_entry(ts, "queue_depth", "requests", *depth as f64));
+        }
+        if let Some((name, key, delta)) = counter {
+            let total = if name == "parked" { &mut parked } else { &mut down };
+            *total += delta;
+            entries.push(counter_entry(ts, name, key, *total as f64));
+        }
+    }
+
+    Some(Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(entries)),
+        (
+            "metadata",
+            Json::obj(vec![
+                ("schema_version", Json::num(EVENTS_SCHEMA_VERSION as f64)),
+                ("scheduler", Json::str(r.scheduler.as_str())),
+                ("clusters", Json::num(r.clusters as f64)),
+                ("freq_hz", Json::num(r.freq_hz)),
+                ("sample_every", Json::num(profile.sample_every as f64)),
+                ("total_events", Json::num(profile.total_events as f64)),
+                ("dropped_events", Json::num(profile.dropped_events as f64)),
+                ("horizon_cycles", Json::num(profile.horizon_cycles as f64)),
+            ]),
+        ),
+    ]))
+}
+
+/// One `ph:"C"` counter sample on the shards process.
+fn counter_entry(ts: f64, name: &str, key: &str, value: f64) -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("C")),
+        ("pid", Json::num(PID_SHARDS)),
+        ("tid", Json::num(0.0)),
+        ("ts", Json::num(ts)),
+        ("name", Json::str(name)),
+        ("args", Json::obj(vec![(key, Json::num(value))])),
+    ])
+}

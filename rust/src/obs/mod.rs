@@ -1,0 +1,39 @@
+//! Observability for the serve stack: structured event tracing,
+//! cycle-attribution profiling, and Perfetto/Chrome-trace export.
+//!
+//! The paper's deployment flow is built on knowing *where cycles go* —
+//! its breakdowns attribute runtime to the ITA accelerator, the
+//! cluster cores and DMA re-staging. This module gives the serving
+//! layer the same visibility, end to end and zero-cost when disabled:
+//!
+//! - [`recorder`] — a bounded ring-buffered [`EventRecorder`] of typed
+//!   lifecycle events ([`EventKind`]: arrival through commit, plus
+//!   control-plane and fault transitions), attached behind an `Option`
+//!   in the serve engine and propchecked bit-identical whether absent,
+//!   attached, or sampling (`tests/obs_invariants.rs`). Deterministic
+//!   seeded request sampling bounds memory at million-request scale.
+//! - [`profile`] — cycle attribution: exact per-request span totals
+//!   (queue-wait / net-dispatch / re-stage / compute / backoff) and a
+//!   per-shard phase profile obeying the conservation identity
+//!   `busy + idle + parked + transition == horizon`, debug-asserted.
+//!   The [`ProfileSummary`] rides on `ServeReport::profile`.
+//! - [`export`] — Chrome `trace_event`/Perfetto JSON ([`chrome_trace`])
+//!   and a versioned JSONL event stream ([`events_jsonl`]), wired to
+//!   `serve --events-out trace.json --profile --sample N` and
+//!   `Pipeline::observe`.
+//!
+//! Attach with [`ObsConfig`] via `Fleet::with_obs` or
+//! `Pipeline::observe`; formats are documented in DESIGN.md §13.
+
+pub mod export;
+pub mod profile;
+pub mod recorder;
+
+pub use export::{
+    chrome_trace, event_json, events_jsonl, EVENTS_SCHEMA_VERSION, WINDOWS_SCHEMA_VERSION,
+};
+pub use profile::{ObsCtx, ProfileSummary, ShardPhases, SpanTotals};
+pub use recorder::{
+    sample_keeps, EventKind, EventRecord, EventRecorder, ObsConfig, DEFAULT_EVENT_CAPACITY,
+    DEFAULT_SAMPLE_SEED,
+};

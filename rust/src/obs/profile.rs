@@ -1,0 +1,286 @@
+//! Cycle-attribution profiling: fold the event stream into a
+//! per-request span breakdown and a fleet-wide phase profile.
+//!
+//! Two views of the same run:
+//!
+//! - **Request spans** ([`SpanTotals`]): every dispatched request's
+//!   cycles split into queue-wait, net-dispatch transit, weight
+//!   re-staging, compute, and retry backoff. Attribution happens at
+//!   dispatch time from exact engine quantities — it is *not* subject
+//!   to event sampling or the ring bound, so the totals are exact at
+//!   any `--sample` rate. Crash-killed batches keep the attribution
+//!   they were priced with (their retries are attributed afresh).
+//! - **Shard phases** ([`ShardPhases`]): every shard's timeline split
+//!   into busy / idle / parked / DVFS-transition cycles. These satisfy
+//!   the exact conservation identity
+//!   `busy + idle + parked + transition == horizon` per shard,
+//!   debug-asserted at report build and re-checked by exact count in
+//!   `tests/obs_invariants.rs`. Down time after a crash counts as
+//!   idle; the `ShardCrash`/`Recover` events delimit it.
+//!
+//! The accounting mirrors the engine's, never steers it: [`ObsCtx`] is
+//! the engine-side container (recorder plus accumulators) and is only
+//! ever written between decisions, so an observed run stays
+//! bit-identical to an unobserved one.
+
+use super::recorder::{EventKind, EventRecord, EventRecorder, ObsConfig};
+
+/// Exact fleet-wide request-span totals, in fleet cycles.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SpanTotals {
+    /// Cycles requests spent queued before their dispatch (per
+    /// attempt: dispatch start minus queue entry).
+    pub queue_wait: u64,
+    /// Router-priced dispatch transit cycles (0 without a topology).
+    pub net_dispatch: u64,
+    /// Weight re-staging cycles on the dispatch critical path.
+    pub restage: u64,
+    /// Pure compute cycles (pipeline fill + steady-state issue).
+    pub compute: u64,
+    /// Retry backoff cycles requests sat out between attempts.
+    pub backoff: u64,
+}
+
+impl SpanTotals {
+    /// Sum of all attributed span cycles.
+    pub fn total(&self) -> u64 {
+        self.queue_wait + self.net_dispatch + self.restage + self.compute + self.backoff
+    }
+}
+
+/// One shard's phase split over the run horizon.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPhases {
+    pub shard: usize,
+    /// Cycles occupied serving batches: net transit, weight staging
+    /// and compute (the engine's busy accounting minus transitions).
+    pub busy: u64,
+    /// Cycles neither occupied, parked nor in transition (down time
+    /// after a crash lands here).
+    pub idle: u64,
+    /// Cycles parked by the controller.
+    pub parked: u64,
+    /// DVFS pipeline-refill cycles actually elapsed on the shard.
+    pub transition: u64,
+}
+
+impl ShardPhases {
+    /// The conservation identity's left-hand side.
+    pub fn accounted(&self) -> u64 {
+        self.busy + self.idle + self.parked + self.transition
+    }
+}
+
+/// The observability block of a `ServeReport`: the retained event
+/// stream plus both profile views. Present iff the run was observed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileSummary {
+    /// Sampling rate the run recorded at (`<= 1` = every request).
+    pub sample_every: u64,
+    /// Events emitted after sampling (retained or ring-dropped).
+    pub total_events: u64,
+    /// Events pushed out of the ring by the capacity bound.
+    pub dropped_events: u64,
+    /// Dispatch attempts attributed into `spans` (batch members,
+    /// counted per attempt — the span denominators).
+    pub dispatched: u64,
+    /// Exact fleet-wide span totals (unsampled).
+    pub spans: SpanTotals,
+    /// Per-shard phase split; each row satisfies
+    /// `busy + idle + parked + transition == horizon_cycles`.
+    pub shards: Vec<ShardPhases>,
+    /// The horizon the phases cover: the engine's final simulated
+    /// time, `>=` the report makespan when trailing fault events
+    /// outlive the last commit.
+    pub horizon_cycles: u64,
+    /// The retained events, oldest first (sampled, ring-bounded).
+    pub events: Vec<EventRecord>,
+}
+
+impl ProfileSummary {
+    /// Events retained in the stream.
+    pub fn recorded_events(&self) -> u64 {
+        self.events.len() as u64
+    }
+}
+
+/// Engine-side observability context: the recorder plus the phase and
+/// span accumulators. All methods are O(1) and write-only with respect
+/// to engine state.
+#[derive(Debug, Clone)]
+pub struct ObsCtx {
+    rec: EventRecorder,
+    /// DVFS transition cycles elapsed per shard (carved out of the
+    /// engine's busy accounting, which bills them as occupancy).
+    transition: Vec<u64>,
+    /// Closed parked cycles per shard.
+    parked: Vec<u64>,
+    /// Open parked-interval start per shard, if currently parked.
+    park_open: Vec<Option<u64>>,
+    spans: SpanTotals,
+    dispatched: u64,
+}
+
+impl ObsCtx {
+    pub fn new(cfg: ObsConfig, shards: usize) -> ObsCtx {
+        ObsCtx {
+            rec: EventRecorder::new(cfg),
+            transition: vec![0; shards],
+            parked: vec![0; shards],
+            park_open: vec![None; shards],
+            spans: SpanTotals::default(),
+            dispatched: 0,
+        }
+    }
+
+    /// Record one event at simulated time `at` (sampling applied).
+    pub fn record(&mut self, at: u64, kind: EventKind) {
+        self.rec.record(at, kind);
+    }
+
+    /// A batch member was priced at dispatch: attribute its spans.
+    pub fn note_request_dispatch(
+        &mut self,
+        queue_wait: u64,
+        net_delay: u64,
+        restage: u64,
+        compute: u64,
+    ) {
+        self.dispatched += 1;
+        self.spans.queue_wait += queue_wait;
+        self.spans.net_dispatch += net_delay;
+        self.spans.restage += restage;
+        self.spans.compute += compute;
+    }
+
+    /// A retry was scheduled `backoff` cycles out.
+    pub fn note_backoff(&mut self, backoff: u64) {
+        self.spans.backoff += backoff;
+    }
+
+    /// A dispatch charged `penalty` DVFS-transition cycles to `shard`.
+    pub fn note_transition(&mut self, shard: usize, penalty: u64) {
+        self.transition[shard] += penalty;
+    }
+
+    /// A crash truncated `shard`'s in-flight batch at `now`: of the
+    /// `penalty` transition cycles scheduled from `penalty_start`,
+    /// only the elapsed part stays attributed (the rest was billed to
+    /// an occupancy the engine just rolled back).
+    pub fn note_transition_truncated(
+        &mut self,
+        shard: usize,
+        penalty_start: u64,
+        penalty: u64,
+        now: u64,
+    ) {
+        let spent = now.saturating_sub(penalty_start).min(penalty);
+        self.transition[shard] -= penalty - spent;
+    }
+
+    /// `shard` parked at `now` (interval stays open until wake).
+    pub fn note_parked(&mut self, shard: usize, now: u64) {
+        debug_assert!(self.park_open[shard].is_none(), "double park on shard {shard}");
+        self.park_open[shard] = Some(now);
+    }
+
+    /// `shard` woke (controller wake or crash-unpark) at `now`.
+    pub fn note_woken(&mut self, shard: usize, now: u64) {
+        if let Some(start) = self.park_open[shard].take() {
+            self.parked[shard] += now - start;
+        }
+    }
+
+    /// Close the run out into a [`ProfileSummary`]. `shard_busy` is
+    /// the engine's per-shard occupancy (transitions included, crash
+    /// truncations applied) and `horizon` its final simulated time.
+    /// `drained` says whether the run completed; the conservation
+    /// debug-assert only holds then (a bounded step can stop with a
+    /// dispatch still billed past the horizon).
+    pub fn finish(mut self, shard_busy: &[u64], horizon: u64, drained: bool) -> ProfileSummary {
+        let mut shards = Vec::with_capacity(shard_busy.len());
+        for (si, &busy_total) in shard_busy.iter().enumerate() {
+            if let Some(start) = self.park_open[si].take() {
+                self.parked[si] += horizon - start;
+            }
+            let transition = self.transition[si];
+            let busy = busy_total - transition;
+            let idle = horizon.saturating_sub(busy_total + self.parked[si]);
+            let phases =
+                ShardPhases { shard: si, busy, idle, parked: self.parked[si], transition };
+            debug_assert!(
+                !drained || phases.accounted() == horizon,
+                "shard {si} phase cycles must conserve the horizon {horizon} \
+                 (busy {busy} + idle {idle} + parked {} + transition {transition})",
+                self.parked[si],
+            );
+            shards.push(phases);
+        }
+        let cfg = self.rec.config().clone();
+        ProfileSummary {
+            sample_every: cfg.sample_every,
+            total_events: self.rec.emitted(),
+            dropped_events: self.rec.dropped(),
+            dispatched: self.dispatched,
+            spans: self.spans,
+            shards,
+            horizon_cycles: horizon,
+            events: self.rec.into_events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_conserve_the_horizon() {
+        let mut ctx = ObsCtx::new(ObsConfig::default(), 2);
+        // shard 0: one 400-cycle batch including a 50-cycle transition
+        ctx.note_transition(0, 50);
+        ctx.note_request_dispatch(10, 5, 20, 325);
+        // shard 1: parked from 100 to 600, then parked again at 900
+        ctx.note_parked(1, 100);
+        ctx.note_woken(1, 600);
+        ctx.note_parked(1, 900);
+        let p = ctx.finish(&[400, 0], 1000, true);
+        assert_eq!(
+            p.shards[0],
+            ShardPhases { shard: 0, busy: 350, idle: 600, parked: 0, transition: 50 }
+        );
+        // the open interval closes at the horizon
+        assert_eq!(
+            p.shards[1],
+            ShardPhases { shard: 1, busy: 0, idle: 400, parked: 600, transition: 0 }
+        );
+        for s in &p.shards {
+            assert_eq!(s.accounted(), p.horizon_cycles);
+        }
+        assert_eq!(p.dispatched, 1);
+        assert_eq!(p.spans.total(), 360);
+    }
+
+    #[test]
+    fn crash_truncation_keeps_only_elapsed_transition_cycles() {
+        let mut ctx = ObsCtx::new(ObsConfig::default(), 1);
+        // a 100-cycle penalty scheduled at t=200; the shard crashes at
+        // t=230 with 30 penalty cycles elapsed — the engine rolls its
+        // busy back to 30, and the carve-out must follow
+        ctx.note_transition(0, 100);
+        ctx.note_transition_truncated(0, 200, 100, 230);
+        let p = ctx.finish(&[30], 1000, true);
+        assert_eq!(p.shards[0].transition, 30);
+        assert_eq!(p.shards[0].busy, 0);
+        assert_eq!(p.shards[0].accounted(), 1000);
+    }
+
+    #[test]
+    fn crash_before_the_penalty_started_drops_it_entirely() {
+        let mut ctx = ObsCtx::new(ObsConfig::default(), 1);
+        ctx.note_transition(0, 100);
+        ctx.note_transition_truncated(0, 500, 100, 450);
+        let p = ctx.finish(&[0], 1000, true);
+        assert_eq!(p.shards[0].transition, 0);
+    }
+}

@@ -1,0 +1,279 @@
+//! The structured event recorder: a bounded, deterministic ring buffer
+//! of typed serve-stack lifecycle events.
+//!
+//! Everything here is **write-only** from the engine's point of view:
+//! the recorder never feeds a decision back into scheduling, control,
+//! routing or fault handling, so attaching it cannot perturb a run —
+//! the bit-identity contract `tests/obs_invariants.rs` propchecks is
+//! true by construction, not by care.
+//!
+//! Two mechanisms bound memory at million-request scale:
+//!
+//! - **Seeded request sampling.** Per-request events (arrival through
+//!   commit) are kept iff
+//!   `sample_every <= 1 || splitmix64(seed ^ id) % sample_every == 0`
+//!   — a pure function of the request id, so a sampled run's event
+//!   stream is exactly a subsequence of the full run's stream (the
+//!   subset property the invariant tests assert). Fleet-level events
+//!   (DVFS transitions, park/wake, shard crash/recover) are never
+//!   sampled away: there are O(windows + plan entries) of them and
+//!   they anchor the phase profile.
+//! - **A bounded ring.** Once `capacity` events are held, the oldest
+//!   is dropped (and counted) per new event; `seq` keeps numbering the
+//!   full stream so exports stay monotone and drops are visible.
+
+use crate::util::prng::splitmix64;
+
+/// Default ring capacity: enough for every event of a ~100k-request
+/// run, ~40 MiB worst case at million-request scale before sampling.
+pub const DEFAULT_EVENT_CAPACITY: usize = 1 << 20;
+
+/// Default sampling seed (any fixed value works; the rule only needs
+/// the seed to be identical between runs being compared).
+pub const DEFAULT_SAMPLE_SEED: u64 = 0x0B5E_2BAD_5EED;
+
+/// Observability configuration attached to a fleet via
+/// `Fleet::with_obs` / `Pipeline::observe`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Keep per-request events for roughly 1 in `sample_every`
+    /// requests (deterministic in the request id; `0` and `1` both
+    /// mean "keep every request").
+    pub sample_every: u64,
+    /// Ring-buffer bound on retained events; the oldest events are
+    /// dropped (and counted) beyond it.
+    pub capacity: usize,
+    /// Seed for the sampling hash.
+    pub seed: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig {
+            sample_every: 1,
+            capacity: DEFAULT_EVENT_CAPACITY,
+            seed: DEFAULT_SAMPLE_SEED,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// The deterministic sampling rule, exposed so tests and tools can
+    /// predict exactly which requests a run retained.
+    pub fn keeps(&self, id: usize) -> bool {
+        sample_keeps(self.sample_every, self.seed, id)
+    }
+}
+
+/// `true` iff request `id` is retained at rate `1/every` under `seed`.
+pub fn sample_keeps(every: u64, seed: u64, id: usize) -> bool {
+    every <= 1 || splitmix64(seed ^ id as u64) % every == 0
+}
+
+/// One typed lifecycle event. Times live on the containing
+/// [`EventRecord`]; payloads carry only what the event itself knows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// A request reached the admission gate.
+    Arrived { id: usize, class: usize, tenant: usize },
+    /// The admission policy let the request through.
+    Admitted { id: usize },
+    /// The admission policy refused the request (load shedding).
+    Shed { id: usize, tenant: usize },
+    /// The request entered the scheduler queue (`depth` includes it);
+    /// also emitted when a retry re-enters after backoff.
+    Enqueued { id: usize, depth: usize },
+    /// The request left in a batch for `shard`; `net_delay` is the
+    /// router-priced dispatch transit, `queue_wait` the cycles spent
+    /// queued this attempt, and `span` the request's total residency
+    /// on the shard (dispatch start to completion).
+    Dispatched { id: usize, shard: usize, net_delay: u64, queue_wait: u64, span: u64 },
+    /// Weight re-staging charged ahead of a dispatch: `hops` link
+    /// transfers on the nearest-holder path (0 without a topology),
+    /// `cycles` of staging on the shard's critical path.
+    Restaged { shard: usize, class: usize, hops: u64, cycles: u64 },
+    /// The request completed with end-to-end `latency` cycles.
+    Committed { id: usize, latency: u64 },
+    /// The request died in-flight when `shard` crashed.
+    Killed { id: usize, shard: usize },
+    /// The request left unserved: its deadline passed while queued, or
+    /// its retry budget ran out (the fault ledger distinguishes).
+    Expired { id: usize },
+    /// The request was re-admitted after a failure; it re-enters the
+    /// queue `backoff` cycles later as attempt `attempt`.
+    Retried { id: usize, attempt: usize, backoff: u64 },
+    /// The controller moved the fleet's operating point.
+    DvfsTransition { from: usize, to: usize },
+    /// The controller parked the shard.
+    Park { shard: usize },
+    /// The controller woke the shard.
+    Wake { shard: usize },
+    /// The fault plan crashed the shard.
+    ShardCrash { shard: usize },
+    /// The fault plan recovered the shard.
+    Recover { shard: usize },
+}
+
+impl EventKind {
+    /// The request the event belongs to, for per-request sampling;
+    /// `None` marks fleet-level events that are never sampled away.
+    pub fn request_id(&self) -> Option<usize> {
+        match self {
+            EventKind::Arrived { id, .. }
+            | EventKind::Admitted { id }
+            | EventKind::Shed { id, .. }
+            | EventKind::Enqueued { id, .. }
+            | EventKind::Dispatched { id, .. }
+            | EventKind::Committed { id, .. }
+            | EventKind::Killed { id, .. }
+            | EventKind::Expired { id }
+            | EventKind::Retried { id, .. } => Some(*id),
+            EventKind::Restaged { .. }
+            | EventKind::DvfsTransition { .. }
+            | EventKind::Park { .. }
+            | EventKind::Wake { .. }
+            | EventKind::ShardCrash { .. }
+            | EventKind::Recover { .. } => None,
+        }
+    }
+
+    /// Stable lowercase label used by both exporters.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Arrived { .. } => "arrived",
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::Shed { .. } => "shed",
+            EventKind::Enqueued { .. } => "enqueued",
+            EventKind::Dispatched { .. } => "dispatched",
+            EventKind::Restaged { .. } => "restaged",
+            EventKind::Committed { .. } => "committed",
+            EventKind::Killed { .. } => "killed",
+            EventKind::Expired { .. } => "expired",
+            EventKind::Retried { .. } => "retried",
+            EventKind::DvfsTransition { .. } => "dvfs_transition",
+            EventKind::Park { .. } => "park",
+            EventKind::Wake { .. } => "wake",
+            EventKind::ShardCrash { .. } => "shard_crash",
+            EventKind::Recover { .. } => "recover",
+        }
+    }
+}
+
+/// One recorded event: sequence number in the *full* stream (drops and
+/// sampling leave gaps), simulated time in fleet cycles, and the typed
+/// payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EventRecord {
+    pub seq: u64,
+    pub at: u64,
+    pub kind: EventKind,
+}
+
+/// The bounded ring-buffered recorder itself.
+#[derive(Debug, Clone)]
+pub struct EventRecorder {
+    cfg: ObsConfig,
+    ring: Vec<EventRecord>,
+    /// Index of the oldest retained event once the ring wrapped.
+    head: usize,
+    /// Events emitted (post-sampling), including dropped ones.
+    seq: u64,
+    /// Events sampled in but pushed out by the capacity bound.
+    dropped: u64,
+}
+
+impl EventRecorder {
+    pub fn new(cfg: ObsConfig) -> EventRecorder {
+        EventRecorder { cfg, ring: Vec::new(), head: 0, seq: 0, dropped: 0 }
+    }
+
+    /// Record one event at simulated time `at`, applying the sampling
+    /// rule to per-request kinds and the capacity bound to everything.
+    pub fn record(&mut self, at: u64, kind: EventKind) {
+        if let Some(id) = kind.request_id() {
+            if !self.cfg.keeps(id) {
+                return;
+            }
+        }
+        let rec = EventRecord { seq: self.seq, at, kind };
+        self.seq += 1;
+        if self.ring.len() < self.cfg.capacity.max(1) {
+            self.ring.push(rec);
+        } else {
+            self.ring[self.head] = rec;
+            self.head = (self.head + 1) % self.ring.len();
+            self.dropped += 1;
+        }
+    }
+
+    /// Events emitted after sampling (retained or dropped).
+    pub fn emitted(&self) -> u64 {
+        self.seq
+    }
+
+    /// Events pushed out by the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn config(&self) -> &ObsConfig {
+        &self.cfg
+    }
+
+    /// Drain the ring into sequence order (oldest retained first).
+    pub fn into_events(mut self) -> Vec<EventRecord> {
+        self.ring.rotate_left(self.head);
+        self.ring
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_a_pure_function_of_the_id() {
+        let cfg = ObsConfig { sample_every: 4, ..ObsConfig::default() };
+        let kept: Vec<usize> = (0..1000).filter(|&id| cfg.keeps(id)).collect();
+        assert!(!kept.is_empty(), "1/4 sampling kept nothing out of 1000 ids");
+        assert!(kept.len() < 1000, "1/4 sampling kept everything");
+        for &id in &kept {
+            assert!(cfg.keeps(id), "keep decision must be stable");
+        }
+        let every = ObsConfig::default();
+        assert!((0..1000).all(|id| every.keeps(id)), "rate 1 keeps all");
+        assert!(sample_keeps(0, 7, 42), "rate 0 means unsampled");
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_keeps_sequence_numbers() {
+        let cfg = ObsConfig { capacity: 4, ..ObsConfig::default() };
+        let mut rec = EventRecorder::new(cfg);
+        for i in 0..10u64 {
+            rec.record(i, EventKind::Park { shard: i as usize });
+        }
+        assert_eq!(rec.emitted(), 10);
+        assert_eq!(rec.dropped(), 6);
+        let events = rec.into_events();
+        assert_eq!(events.len(), 4);
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest events must be the ones dropped");
+    }
+
+    #[test]
+    fn per_request_kinds_sample_and_fleet_kinds_do_not() {
+        // a seed/rate pair under which id 1 is dropped
+        let mut cfg = ObsConfig { sample_every: 1000, seed: 0, ..ObsConfig::default() };
+        let dropped_id = (0..10_000)
+            .find(|&id| !sample_keeps(cfg.sample_every, cfg.seed, id))
+            .expect("1/1000 sampling must drop some id");
+        cfg.capacity = 64;
+        let mut rec = EventRecorder::new(cfg);
+        rec.record(5, EventKind::Arrived { id: dropped_id, class: 0, tenant: 0 });
+        rec.record(6, EventKind::ShardCrash { shard: 0 });
+        assert_eq!(rec.emitted(), 1, "sampled-out request event must not count");
+        let events = rec.into_events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, EventKind::ShardCrash { shard: 0 });
+    }
+}

@@ -56,6 +56,7 @@ use crate::models::{self, ModelConfig};
 use crate::runtime::{Runtime, RuntimeError, TensorIn};
 use crate::energy::operating_point::NOMINAL_INDEX;
 use crate::net::Topology;
+use crate::obs::ObsConfig;
 use crate::serve::{
     Controller, FaultConfig, Fifo, Fleet, LocalityAware, RequestClass, Scheduler,
     ServeReport, Workload, DEFAULT_CONTROL_CADENCE_CYCLES,
@@ -333,6 +334,7 @@ pub struct Pipeline {
     topology: Option<Topology>,
     locality: bool,
     fault: Option<FaultConfig>,
+    observe: Option<ObsConfig>,
 }
 
 impl Default for Pipeline {
@@ -358,6 +360,7 @@ impl Pipeline {
             topology: None,
             locality: false,
             fault: None,
+            observe: None,
         }
     }
 
@@ -455,6 +458,19 @@ impl Pipeline {
         self
     }
 
+    /// Attach the observability layer to the serve run (see
+    /// [`crate::obs`]): a structured lifecycle-event recorder with
+    /// deterministic seeded request sampling plus cycle-attribution
+    /// profiling, surfaced as `ServeReport::profile` and exportable to
+    /// Chrome/Perfetto (`obs::chrome_trace`) or JSONL
+    /// (`obs::events_jsonl`). Strictly write-only: every other report
+    /// field stays bit-identical at any sampling rate. Default: none
+    /// (zero cost — the engine holds no recorder at all).
+    pub fn observe(mut self, cfg: ObsConfig) -> Pipeline {
+        self.observe = Some(cfg);
+        self
+    }
+
     /// Serve a multi-request workload on the configured fleet under the
     /// FIFO scheduler. `Compiled::simulate()` is the degenerate case:
     /// a single-request workload on one cluster reproduces
@@ -485,6 +501,7 @@ impl Pipeline {
             topology,
             locality,
             fault,
+            observe,
         } = self;
         let filled: Option<Workload> = if w.classes.is_empty() {
             match source {
@@ -510,6 +527,9 @@ impl Pipeline {
         }
         if let Some(t) = &topology {
             f = f.with_topology(t.clone());
+        }
+        if let Some(cfg) = observe {
+            f = f.with_obs(cfg);
         }
         let mut wrapped;
         let sched: &mut dyn Scheduler = if locality {
@@ -551,6 +571,7 @@ impl Pipeline {
             topology: _,
             locality: _,
             fault: _,
+            observe: _,
         } = self;
         // MHA fusion only exists on the ITA path; canonicalize the flag
         // so MultiCore compilations share one cache entry regardless of

@@ -33,6 +33,13 @@
 //! uncontrolled loop). [`SloDvfs`] holds a p99 SLO at minimum
 //! J/request via hysteresis down the V/f table and over the parked
 //! count.
+//!
+//! Every applied action is visible to the observability layer when one
+//! is attached ([`crate::obs`]): operating-point switches surface as
+//! `DvfsTransition` events and pool changes as `Park`/`Wake`, with
+//! parked intervals folded into the per-shard phase profile. The
+//! recorder is write-only — controllers never see it, so the
+//! determinism contract above is untouched.
 
 use crate::energy::operating_point::{OperatingPoint, NOMINAL_INDEX, OPERATING_POINTS};
 

@@ -18,6 +18,13 @@
 //!   down-shard bitmap, deferred in-flight batches, the retry heap and
 //!   the deadline-expiry queue, plus the transient-failure RNG.
 //!
+//! Every fault transition is visible to the observability layer when
+//! one is attached (`crate::obs`): crashes/recoveries surface as
+//! `ShardCrash`/`Recover` events, killed in-flight work as `Killed`,
+//! deadline expiries and exhausted retry budgets as `Expired`, and
+//! each backoff hop as `Retried` — the recorder is write-only, so the
+//! fault path's determinism contract is untouched.
+//!
 //! **Determinism:** the transient RNG is seeded from the plan (never
 //! the workload), drawn exactly once per dispatched request *only when*
 //! `transient_ppm > 0`, and every other mechanism is integer cycle
@@ -219,6 +226,12 @@ pub(crate) struct InFlight {
     pub(crate) completion: u64,
     /// Simulated ops per request of this class.
     pub(crate) ops_per_req: u64,
+    /// Router-priced dispatch transit the batch waited out (observed
+    /// by the profiler's crash accounting; 0 without a topology).
+    pub(crate) net_delay: u64,
+    /// DVFS transition cycles this dispatch paid (observed by the
+    /// profiler's crash accounting; 0 on uncontrolled runs).
+    pub(crate) penalty: u64,
     pub(crate) reqs: Vec<InFlightReq>,
 }
 

@@ -96,6 +96,7 @@ use crate::energy;
 use crate::energy::operating_point::{NOMINAL_INDEX, OPERATING_POINTS};
 use crate::fault::{LinkFault, ShardFault};
 use crate::net::{Router, Topology};
+use crate::obs::{EventKind, ObsConfig, ObsCtx};
 use crate::pipeline::{Pipeline, ServeConstants};
 use crate::sim::ClusterConfig;
 
@@ -191,13 +192,32 @@ pub struct Fleet {
     pub(crate) fuse: bool,
     pub(crate) use_cache: bool,
     pub(crate) topology: Option<Topology>,
+    pub(crate) obs: Option<ObsConfig>,
 }
 
 impl Fleet {
     /// A fleet of `n` identical clusters (geometry is first-class, as
     /// everywhere in the pipeline).
     pub fn new(cluster: ClusterConfig, target: Target, n: usize) -> Fleet {
-        Fleet { cluster, target, n, fuse: true, use_cache: true, topology: None }
+        Fleet {
+            cluster,
+            target,
+            n,
+            fuse: true,
+            use_cache: true,
+            topology: None,
+            obs: None,
+        }
+    }
+
+    /// Attach the observability layer (see `crate::obs`): a structured
+    /// event recorder plus cycle-attribution profiling. The recorder
+    /// is write-only, so every serve driver stays bit-identical with
+    /// it attached at any sampling rate — the report just gains a
+    /// `profile` block (`tests/obs_invariants.rs` propchecks both).
+    pub fn with_obs(mut self, cfg: ObsConfig) -> Fleet {
+        self.obs = Some(cfg);
+        self
     }
 
     /// Place the shards in an interconnect hierarchy (see `net`):
@@ -364,6 +384,11 @@ pub struct ServeEngine<'a> {
     /// Fault-injection state; `None` on un-faulted runs (no branch of
     /// the hot path does any fault arithmetic then).
     fault: Option<FaultCtx>,
+    /// Observability state; `None` keeps the engine event-blind (the
+    /// zero-cost default). Strictly write-only when present: no
+    /// decision ever reads it, which is what makes observed runs
+    /// bit-identical by construction.
+    obs: Option<ObsCtx>,
 }
 
 impl<'a> ServeEngine<'a> {
@@ -395,6 +420,7 @@ impl<'a> ServeEngine<'a> {
             Router::new(t, fleet.n, w.classes.len(), fleet.cluster.wide_axi_bytes)
         });
         sched.on_attach(fleet.n);
+        let obs = fleet.obs.clone().map(|cfg| ObsCtx::new(cfg, fleet.n));
         // the arrival side: pre-known arrivals stream lazily in
         // (cycle, id) order; closed-loop follow-ons (issued from
         // completions) merge in through a heap, keyed the same way
@@ -435,6 +461,7 @@ impl<'a> ServeEngine<'a> {
             control: None,
             net,
             fault: None,
+            obs,
         })
     }
 
@@ -480,6 +507,13 @@ impl<'a> ServeEngine<'a> {
         }
         self.fault = Some(FaultCtx::new(cfg, self.fleet.n, self.w.n_tenants()));
         Ok(())
+    }
+
+    /// Attach the observability layer directly (the drivers pick it up
+    /// from [`Fleet::with_obs`] automatically). Call before the first
+    /// `step()`.
+    pub fn enable_obs(&mut self, cfg: ObsConfig) {
+        self.obs = Some(ObsCtx::new(cfg, self.fleet.n));
     }
 
     /// Current simulated time, cycles.
@@ -665,6 +699,10 @@ impl<'a> ServeEngine<'a> {
                         attempts,
                     };
                     self.push_with_deadline(q, ready);
+                    if let Some(o) = &mut self.obs {
+                        let depth = self.queue.len();
+                        o.record(ready, EventKind::Enqueued { id, depth });
+                    }
                 }
             }
         }
@@ -674,9 +712,15 @@ impl<'a> ServeEngine<'a> {
     /// the closed-loop replacement so the run still offers exactly
     /// `requests` ids), then into the queue with its deadline armed.
     fn enqueue_fresh(&mut self, id: usize, class: usize, t: u64, tenant: usize) {
+        if let Some(o) = &mut self.obs {
+            o.record(t, EventKind::Arrived { id, class, tenant });
+        }
         if let Some(f) = &mut self.fault {
             if !f.cfg.admission.admits(&self.queue, tenant) {
                 f.note_shed(tenant);
+                if let Some(o) = &mut self.obs {
+                    o.record(t, EventKind::Shed { id, tenant });
+                }
                 if self.closed && self.issued < self.w.requests {
                     let nid = self.issued;
                     self.issued += 1;
@@ -695,7 +739,14 @@ impl<'a> ServeEngine<'a> {
             tenant,
             attempts: 0,
         };
+        if let Some(o) = &mut self.obs {
+            o.record(t, EventKind::Admitted { id });
+        }
         self.push_with_deadline(q, t);
+        if let Some(o) = &mut self.obs {
+            let depth = self.queue.len();
+            o.record(t, EventKind::Enqueued { id, depth });
+        }
     }
 
     /// Push one entry, arming its per-attempt deadline. Admissions pop
@@ -724,7 +775,10 @@ impl<'a> ServeEngine<'a> {
                 break;
             }
             self.fault.as_mut().unwrap().expiry.pop_front();
-            if self.queue.cancel(slot, gen).is_some() {
+            if let Some(q) = self.queue.cancel(slot, gen) {
+                if let Some(o) = &mut self.obs {
+                    o.record(at, EventKind::Expired { id: q.id });
+                }
                 self.fault.as_mut().unwrap().expired_deadline += 1;
                 if self.closed && self.issued < self.w.requests {
                     let nid = self.issued;
@@ -766,6 +820,9 @@ impl<'a> ServeEngine<'a> {
     /// A shard dies: its weight residency evaporates, finished work on
     /// the in-flight batch commits, the unfinished tail fails over.
     fn crash_shard(&mut self, si: usize) {
+        if let Some(o) = &mut self.obs {
+            o.record(self.now, EventKind::ShardCrash { shard: si });
+        }
         // a parked shard crashes too — unpark its bookkeeping first so
         // parked and down never overlap (recovery puts it in the free
         // pool; the controller may re-park it at a later decision)
@@ -773,6 +830,9 @@ impl<'a> ServeEngine<'a> {
             if ctl.parked[si] {
                 ctl.parked[si] = false;
                 ctl.n_parked -= 1;
+                if let Some(o) = &mut self.obs {
+                    o.note_woken(si, self.now);
+                }
             }
         }
         let f = self.fault.as_mut().unwrap();
@@ -800,12 +860,21 @@ impl<'a> ServeEngine<'a> {
             let now = self.now;
             debug_assert!(fl.start <= now && now < fl.completion);
             let (class, ops) = (fl.class, fl.ops_per_req);
+            if let Some(o) = &mut self.obs {
+                // only the elapsed slice of the batch's transition
+                // penalty stays attributed — the engine rolls the rest
+                // of the interval back just below
+                o.note_transition_truncated(si, fl.start + fl.net_delay, fl.penalty, now);
+            }
             let mut killed = 0u64;
             for r in fl.reqs {
                 if r.done <= now {
                     self.commit_request(class, ops, r);
                 } else {
                     killed += 1;
+                    if let Some(o) = &mut self.obs {
+                        o.record(now, EventKind::Killed { id: r.id, shard: si });
+                    }
                     self.route_retry(r.id, class, r.arrival, r.tenant, r.attempts + 1, now, true);
                 }
             }
@@ -822,6 +891,9 @@ impl<'a> ServeEngine<'a> {
     /// surviving holder, or the root weight store when the crash took
     /// the only copy.
     fn recover_shard(&mut self, si: usize) {
+        if let Some(o) = &mut self.obs {
+            o.record(self.now, EventKind::Recover { shard: si });
+        }
         let f = self.fault.as_mut().unwrap();
         f.down[si] = false;
         f.n_down -= 1;
@@ -857,6 +929,9 @@ impl<'a> ServeEngine<'a> {
             return;
         }
         self.lat.record(r.done - r.arrival);
+        if let Some(o) = &mut self.obs {
+            o.record(r.done, EventKind::Committed { id: r.id, latency: r.done - r.arrival });
+        }
         if r.tenant >= self.lat_by_tenant.len() {
             self.lat_by_tenant.resize(r.tenant + 1, LatencyStore::new());
             self.ops_by_tenant.resize(r.tenant + 1, 0);
@@ -896,6 +971,9 @@ impl<'a> ServeEngine<'a> {
         }
         if attempts > f.cfg.max_retries {
             f.retry_exhausted += 1;
+            if let Some(o) = &mut self.obs {
+                o.record(at, EventKind::Expired { id });
+            }
             if self.closed && self.issued < self.w.requests {
                 let nid = self.issued;
                 self.issued += 1;
@@ -907,6 +985,11 @@ impl<'a> ServeEngine<'a> {
         let ready = at + f.backoff(attempts - 1);
         f.retried += 1;
         f.retry.push(Reverse((ready, id, class, first_arrival, tenant, attempts)));
+        if let Some(o) = &mut self.obs {
+            o.note_backoff(ready - at);
+            let attempt = attempts as usize;
+            o.record(at, EventKind::Retried { id, attempt, backoff: ready - at });
+        }
     }
 
     /// Dispatch until no free shard selects anything. Free shards are
@@ -994,6 +1077,15 @@ impl<'a> ServeEngine<'a> {
                 // landed. Links update dispatch-then-restage, a fixed
                 // order, so contention is deterministic. `Flat` prices
                 // both paths to `start` and touches no link.
+                // the re-stage fetch path for the observability
+                // event — read before `note_staged` below makes this
+                // shard its own nearest holder
+                let restage_hops = match (&self.net, &self.obs) {
+                    (Some(router), Some(_)) if cost_switch > 0 => {
+                        router.restage_hops(class, si)
+                    }
+                    _ => 0,
+                };
                 let mut net_delay = 0u64;
                 if let Some(router) = &mut self.net {
                     let tokens =
@@ -1010,6 +1102,18 @@ impl<'a> ServeEngine<'a> {
                     router.note_staged(si, Some(class));
                 }
                 let base = start + net_delay + penalty + cost_switch + first;
+                if let Some(o) = &mut self.obs {
+                    o.note_transition(si, penalty);
+                    if cost_switch > 0 {
+                        let kind = EventKind::Restaged {
+                            shard: si,
+                            class,
+                            hops: restage_hops,
+                            cycles: cost_switch,
+                        };
+                        o.record(start, kind);
+                    }
+                }
                 let mut completion = base;
                 let defer = self.fault.as_ref().map_or(false, |f| f.defers());
                 if defer {
@@ -1023,6 +1127,19 @@ impl<'a> ServeEngine<'a> {
                     for (j, q) in self.batch_buf.iter().enumerate() {
                         let done = base + j as u64 * steady;
                         completion = done;
+                        if let Some(o) = &mut self.obs {
+                            let queue_wait = start - q.arrival;
+                            let compute = first + j as u64 * steady;
+                            o.note_request_dispatch(queue_wait, net_delay, cost_switch, compute);
+                            let kind = EventKind::Dispatched {
+                                id: q.id,
+                                shard: si,
+                                net_delay,
+                                queue_wait,
+                                span: done - start,
+                            };
+                            o.record(start, kind);
+                        }
                         reqs.push(InFlightReq {
                             id: q.id,
                             done,
@@ -1036,12 +1153,29 @@ impl<'a> ServeEngine<'a> {
                         start,
                         completion,
                         ops_per_req: rt.ops,
+                        net_delay,
+                        penalty,
                         reqs,
                     });
                 } else {
                     for (j, q) in self.batch_buf.iter().enumerate() {
                         let done = base + j as u64 * steady;
                         completion = done;
+                        if let Some(o) = &mut self.obs {
+                            let queue_wait = start - q.arrival;
+                            let compute = first + j as u64 * steady;
+                            o.note_request_dispatch(queue_wait, net_delay, cost_switch, compute);
+                            let kind = EventKind::Dispatched {
+                                id: q.id,
+                                shard: si,
+                                net_delay,
+                                queue_wait,
+                                span: done - start,
+                            };
+                            o.record(start, kind);
+                            let latency = done - q.arrival;
+                            o.record(done, EventKind::Committed { id: q.id, latency });
+                        }
                         self.lat.record(done - q.arrival);
                         if q.tenant >= self.lat_by_tenant.len() {
                             self.lat_by_tenant.resize(q.tenant + 1, LatencyStore::new());
@@ -1155,12 +1289,17 @@ impl<'a> ServeEngine<'a> {
     /// first, owing a weight re-stage; one shard always stays awake).
     fn apply(&mut self, action: ControlAction) {
         let n = self.fleet.n;
+        let now = self.now;
         let Some(ctl) = &mut self.control else { return };
         let op = action.op_index.min(OPERATING_POINTS.len() - 1);
         if op != ctl.op_index {
+            let from = ctl.op_index;
             ctl.op_index = op;
             ctl.dvfs_transitions += 1;
             ctl.deviated = true;
+            if let Some(o) = &mut self.obs {
+                o.record(now, EventKind::DvfsTransition { from, to: op });
+            }
             for si in 0..n {
                 if !ctl.parked[si] {
                     self.shards[si].dvfs_penalty = true;
@@ -1187,6 +1326,10 @@ impl<'a> ServeEngine<'a> {
                 r.note_staged(si, None);
             }
             self.sched.note_staged(si, None);
+            if let Some(o) = &mut self.obs {
+                o.note_parked(si, now);
+                o.record(now, EventKind::Park { shard: si });
+            }
             ctl.parks += 1;
             ctl.deviated = true;
         }
@@ -1199,6 +1342,10 @@ impl<'a> ServeEngine<'a> {
             self.n_free += 1;
             self.sched.note_free(si, true);
             self.shards[si].restage = true;
+            if let Some(o) = &mut self.obs {
+                o.note_woken(si, now);
+                o.record(now, EventKind::Wake { shard: si });
+            }
             ctl.wakes += 1;
             ctl.deviated = true;
         }
@@ -1296,6 +1443,10 @@ impl<'a> ServeEngine<'a> {
             }
             s
         });
+        let profile = self.obs.take().map(|o| {
+            let busy: Vec<u64> = self.shards.iter().map(|sh| sh.busy).collect();
+            o.finish(&busy, self.now, self.done)
+        });
         ServeReport {
             scheduler: self.sched.name().to_string(),
             clusters: self.fleet.n,
@@ -1328,6 +1479,7 @@ impl<'a> ServeEngine<'a> {
             net: net_summary,
             final_queue_depth,
             fault,
+            profile,
         }
     }
 }

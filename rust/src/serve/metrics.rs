@@ -507,7 +507,7 @@ pub struct ServeReport {
     /// run; nonzero means the horizon cut mid-backlog (a `run_until` +
     /// `finish` measurement) or work stranded behind permanent faults —
     /// either way throughput/latency figures describe a truncated
-    /// stream and `render_serve` warns.
+    /// stream and `render_serve_warning` yields a stderr diagnostic.
     pub final_queue_depth: usize,
     /// Fault/degradation block: admission, shed/expired/retry
     /// accounting and availability. `None` when the run had no fault
@@ -516,6 +516,12 @@ pub struct ServeReport {
     /// field stays bit-identical (the fault identity contract,
     /// `tests/serve_equivalence.rs`).
     pub fault: Option<super::fault::FaultSummary>,
+    /// Observability block: the retained event stream, exact span
+    /// totals and the per-shard phase conservation rows. `None` when
+    /// the run was not observed; attaching it at any sampling rate
+    /// changes no other field (the obs identity contract,
+    /// `tests/obs_invariants.rs`).
+    pub profile: Option<crate::obs::ProfileSummary>,
 }
 
 impl ServeReport {

@@ -99,6 +99,20 @@
 //! runs; the empty plan under admit-all is propcheck-held bit-identical
 //! to the un-faulted engine, and `benches/fault_tolerance` records the
 //! availability/bounded-p99 outcome in `BENCH_fault.json`.
+//!
+//! **Observability:** attaching an [`crate::obs::ObsConfig`]
+//! ([`Fleet::with_obs`], `Pipeline::observe`, `serve --events-out`)
+//! threads a write-only structured event recorder through the whole
+//! stack — request lifecycle (arrive/admit/shed/enqueue/dispatch/
+//! commit), fault transitions (crash/recover/kill/expire/retry) and
+//! control actions (DVFS/park/wake) land in a bounded ring with
+//! deterministic seeded request sampling — plus cycle attribution:
+//! exact per-request span totals and a per-shard phase profile
+//! conserving `busy + idle + parked + transition == horizon`. The
+//! report gains a [`crate::obs::ProfileSummary`]; every other field is
+//! propcheck-held bit-identical at any sampling rate
+//! (`tests/obs_invariants.rs`). Export via [`crate::obs::chrome_trace`]
+//! / [`crate::obs::events_jsonl`].
 
 pub mod control;
 pub mod fault;

@@ -285,6 +285,7 @@ pub fn serve_naive(
         net: None,
         final_queue_depth: 0,
         fault: None,
+        profile: None,
     })
 }
 

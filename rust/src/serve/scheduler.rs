@@ -10,6 +10,12 @@
 //! vocabulary makes structurally impossible to violate: there is no way
 //! to express a mixed-class batch.
 //!
+//! Scheduling outcomes are observable end to end when the run carries
+//! an event recorder ([`crate::obs`]): every selection materializes as
+//! `Enqueued` → `Dispatched{shard, net_delay, queue_wait, span}`
+//! events, so queue-wait attribution per policy falls out of the
+//! exported trace rather than ad-hoc instrumentation.
+//!
 //! Five built-in policies:
 //!
 //! - [`Fifo`] — strict arrival order, one request per dispatch. The

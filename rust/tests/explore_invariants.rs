@@ -36,6 +36,7 @@ fn eval(index: usize, gopj: f64, gops: f64, p99: f64, mm2: f64) -> Evaluation {
             scheduler: "fifo",
             control: false,
             topology: "flat",
+            admission: "admit-all",
         },
         fidelity: Fidelity::Screen,
         gops,
@@ -44,6 +45,7 @@ fn eval(index: usize, gopj: f64, gops: f64, p99: f64, mm2: f64) -> Evaluation {
         mm2,
         req_per_s: 0.0,
         mj_per_req: 0.0,
+        events: 0,
     }
 }
 

@@ -1,0 +1,420 @@
+//! The observability layer changed no observable result — and its own
+//! outputs obey exact contracts:
+//!
+//! - **Bit-identity.** Attaching the event recorder (`Fleet::with_obs`)
+//!   at *any* sampling rate leaves every core `ServeReport` field
+//!   bit-identical to the unobserved run, propchecked across the same
+//!   scheduler × arrival × fleet matrix as `serve_equivalence.rs`, with
+//!   topology, fault and control legs layered on. The recorder is
+//!   write-only, so this holds by construction — the propcheck keeps it
+//!   true under refactoring.
+//! - **Conservation.** Each shard's phase profile satisfies
+//!   `busy + idle + parked + transition == horizon_cycles` by exact
+//!   count, including under crashes (truncated transitions), parking
+//!   and DVFS.
+//! - **Sampling subset.** A sampled run's event stream is exactly a
+//!   subsequence of the full run's stream (pure-function-of-id
+//!   sampling), fleet-level events are never sampled away, and the
+//!   reports still match bit-for-bit.
+//! - **Exports.** Both exporters emit parseable JSON: the Chrome trace
+//!   round-trips through `Json::parse` with monotone timestamps, the
+//!   JSONL stream parses line by line with the stamped schema version.
+
+use attn_tinyml::deeploy::Target;
+use attn_tinyml::energy::operating_point::NOMINAL_INDEX;
+use attn_tinyml::fault::FaultPlan;
+use attn_tinyml::models::{DINOV2S, MOBILEBERT};
+use attn_tinyml::net::Topology;
+use attn_tinyml::obs::{chrome_trace, events_jsonl, ObsConfig, EVENTS_SCHEMA_VERSION};
+use attn_tinyml::serve::{
+    scheduler_by_name, FaultConfig, Fleet, RequestClass, ServeReport, SloDvfs, Workload,
+    DEFAULT_CONTROL_CADENCE_CYCLES,
+};
+use attn_tinyml::sim::ClusterConfig;
+use attn_tinyml::util::json::Json;
+use attn_tinyml::util::prng::XorShift64;
+use attn_tinyml::util::propcheck::{check, Config};
+
+fn classes() -> Vec<RequestClass> {
+    vec![RequestClass::new(&MOBILEBERT, 1), RequestClass::new(&DINOV2S, 1)]
+}
+
+/// Field-for-field equality of the core report, floats compared by bit
+/// pattern (the same check `serve_equivalence.rs` holds the engine to).
+fn reports_identical(a: &ServeReport, b: &ServeReport) -> Result<(), String> {
+    let mut errs = Vec::new();
+    let mut chk = |field: &str, same: bool| {
+        if !same {
+            errs.push(field.to_string());
+        }
+    };
+    chk("scheduler", a.scheduler == b.scheduler);
+    chk("clusters", a.clusters == b.clusters);
+    chk("offered", a.offered == b.offered);
+    chk("served", a.served == b.served);
+    chk("makespan_cycles", a.makespan_cycles == b.makespan_cycles);
+    chk("seconds", a.seconds.to_bits() == b.seconds.to_bits());
+    chk("req_per_s", a.req_per_s.to_bits() == b.req_per_s.to_bits());
+    chk("gops", a.gops.to_bits() == b.gops.to_bits());
+    chk("energy_j", a.energy_j.to_bits() == b.energy_j.to_bits());
+    chk("mj_per_req", a.mj_per_req.to_bits() == b.mj_per_req.to_bits());
+    chk("gopj", a.gopj.to_bits() == b.gopj.to_bits());
+    chk("p50_cycles", a.p50_cycles == b.p50_cycles);
+    chk("p90_cycles", a.p90_cycles == b.p90_cycles);
+    chk("p99_cycles", a.p99_cycles == b.p99_cycles);
+    chk(
+        "mean_latency_cycles",
+        a.mean_latency_cycles.to_bits() == b.mean_latency_cycles.to_bits(),
+    );
+    chk(
+        "mean_queue_depth",
+        a.mean_queue_depth.to_bits() == b.mean_queue_depth.to_bits(),
+    );
+    chk("max_queue_depth", a.max_queue_depth == b.max_queue_depth);
+    chk(
+        "cluster_utilization",
+        a.cluster_utilization.len() == b.cluster_utilization.len()
+            && a
+                .cluster_utilization
+                .iter()
+                .zip(&b.cluster_utilization)
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+    );
+    chk("class_switches", a.class_switches == b.class_switches);
+    chk("batches", a.batches == b.batches);
+    chk("fairness_jain", a.fairness_jain.to_bits() == b.fairness_jain.to_bits());
+    chk(
+        "tenants",
+        a.tenants.len() == b.tenants.len()
+            && a.tenants.iter().zip(&b.tenants).all(|(x, y)| {
+                x.tenant == y.tenant
+                    && x.served == y.served
+                    && x.req_per_s.to_bits() == y.req_per_s.to_bits()
+                    && x.p50_cycles == y.p50_cycles
+                    && x.p99_cycles == y.p99_cycles
+                    && x.mean_latency_cycles.to_bits()
+                        == y.mean_latency_cycles.to_bits()
+                    && x.dominant_share.to_bits() == y.dominant_share.to_bits()
+            }),
+    );
+    chk("freq_hz", a.freq_hz.to_bits() == b.freq_hz.to_bits());
+    chk("final_queue_depth", a.final_queue_depth == b.final_queue_depth);
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("fields differ: {}", errs.join(", ")))
+    }
+}
+
+fn workload_for(kind: usize, rate: f64, requests: usize, seed: u64) -> Workload {
+    match kind {
+        0 => Workload::poisson(classes(), rate, requests, seed),
+        1 => Workload::bursty(classes(), rate, 6.0, 0.02, requests, seed),
+        2 => {
+            let mut rng = XorShift64::new(seed);
+            let entries: Vec<(u64, usize)> = (0..requests)
+                .map(|_| {
+                    (rng.next_below(2_000_000) / 4 * 4, rng.next_below(2) as usize)
+                })
+                .collect();
+            Workload::trace(classes(), entries)
+        }
+        3 => Workload::closed_loop(
+            classes(),
+            1 + (seed % 5) as usize,
+            (seed % 100_000).max(1),
+            requests,
+            seed,
+        ),
+        4 => Workload::diurnal(classes(), rate, 0.8, 0.1, requests, seed),
+        _ => {
+            let cls = classes();
+            let class_seq: Vec<usize> = cls.iter().map(|c| c.bucket()).collect();
+            let spec = attn_tinyml::trace::skewed_two_tenant(
+                requests,
+                rate * 10.0,
+                &class_seq,
+                seed,
+            );
+            let entries = attn_tinyml::trace::generate(spec).expect("valid spec");
+            Workload::trace_entries(cls, entries)
+        }
+    }
+}
+
+/// A crash/recover + transient plan with deadlines and retries — the
+/// fault leg of the matrix actually exercises the kill/expire/retry
+/// event paths and the crash-truncation accounting.
+fn faulty_config(seed: u64) -> FaultConfig {
+    FaultConfig {
+        plan: FaultPlan::empty()
+            .crash(50_000, 0)
+            .recover(2_000_000, 0)
+            .transient(500)
+            .seeded(seed),
+        deadline_cycles: Some(5_000_000),
+        max_retries: 2,
+        ..FaultConfig::default()
+    }
+}
+
+/// Run one leg of the matrix: optional topology, fault layer and
+/// SLO-DVFS controller, with or without the event recorder attached.
+fn run_leg(
+    clusters: usize,
+    w: &Workload,
+    name: &str,
+    topo: bool,
+    faults: bool,
+    control: bool,
+    obs: Option<ObsConfig>,
+) -> Result<ServeReport, String> {
+    let mut fleet = Fleet::new(ClusterConfig::default(), Target::MultiCoreIta, clusters);
+    if topo {
+        fleet = fleet.with_topology(Topology::parse("pod:2x2x2").unwrap());
+    }
+    if let Some(cfg) = obs {
+        fleet = fleet.with_obs(cfg);
+    }
+    let mut sched = scheduler_by_name(name).unwrap();
+    let freq = ClusterConfig::default().freq_hz;
+    let seed = w.seed;
+    let r = match (control, faults) {
+        (true, true) => fleet.serve_faulted_controlled(
+            w,
+            sched.as_mut(),
+            &mut SloDvfs::from_ms(5.0, freq),
+            DEFAULT_CONTROL_CADENCE_CYCLES,
+            NOMINAL_INDEX,
+            faulty_config(seed),
+        ),
+        (true, false) => fleet.serve_controlled(
+            w,
+            sched.as_mut(),
+            &mut SloDvfs::from_ms(5.0, freq),
+            DEFAULT_CONTROL_CADENCE_CYCLES,
+            NOMINAL_INDEX,
+        ),
+        (false, true) => fleet.serve_faulted(w, sched.as_mut(), faulty_config(seed)),
+        (false, false) => fleet.serve(w, sched.as_mut()),
+    };
+    r.map_err(|e| format!("serve failed: {e}"))
+}
+
+#[test]
+fn recorder_is_invisible_at_any_sampling_rate() {
+    let gen = |rng: &mut XorShift64| {
+        (
+            1 + rng.next_below(20) as usize,          // requests
+            1 + rng.next_below(4) as usize,           // clusters 1..=4
+            rng.next_below(3) as usize,               // scheduler
+            rng.next_below(6) as usize,               // arrival kind
+            50.0 * (1 + rng.next_below(20)) as f64,   // rate req/s
+            rng.next_u64(),                           // workload seed
+            rng.next_below(4) as usize,               // sampling rate index
+            rng.next_below(8) as usize,               // topo/fault/control bits
+        )
+    };
+    let shrink = |&(req, cl, s, k, rate, seed, sr, legs): &(
+        usize,
+        usize,
+        usize,
+        usize,
+        f64,
+        u64,
+        usize,
+        usize,
+    )| {
+        let mut c = Vec::new();
+        if req > 1 {
+            c.push((req / 2, cl, s, k, rate, seed, sr, legs));
+        }
+        if k > 0 {
+            c.push((req, cl, s, 0, rate, seed, sr, legs));
+        }
+        if legs > 0 {
+            c.push((req, cl, s, k, rate, seed, sr, 0));
+        }
+        c
+    };
+    check(
+        Config { cases: 40, seed: 0x0B5_1DE7 },
+        gen,
+        shrink,
+        |&(requests, clusters, sched_idx, kind, rate, seed, sr, legs)| {
+            let name = ["fifo", "rr", "batch"][sched_idx];
+            let every = [1u64, 2, 7, 1000][sr];
+            let (topo, faults, control) =
+                (legs & 1 != 0, legs & 2 != 0, legs & 4 != 0);
+            let w = workload_for(kind, rate, requests, seed);
+            let label = format!(
+                "{name}/{kind} x{requests} on {clusters} (1/{every}, topo={topo}, \
+                 faults={faults}, control={control})"
+            );
+            let plain = run_leg(clusters, &w, name, topo, faults, control, None)
+                .map_err(|e| format!("{label}: {e}"))?;
+            if plain.profile.is_some() {
+                return Err(format!("{label}: unobserved run carries a profile"));
+            }
+            let cfg = ObsConfig { sample_every: every, ..ObsConfig::default() };
+            let seen = run_leg(clusters, &w, name, topo, faults, control, Some(cfg))
+                .map_err(|e| format!("{label}: {e}"))?;
+            reports_identical(&seen, &plain)
+                .map_err(|e| format!("{label}: recorder perturbed the run: {e}"))?;
+            let p = seen
+                .profile
+                .as_ref()
+                .ok_or_else(|| format!("{label}: observed run lost its profile"))?;
+            if p.sample_every != every {
+                return Err(format!("{label}: profile echoes rate {}", p.sample_every));
+            }
+            // conservation holds on every leg of the matrix
+            for sh in &p.shards {
+                if sh.accounted() != p.horizon_cycles {
+                    return Err(format!(
+                        "{label}: shard {} accounts {} of horizon {}",
+                        sh.shard,
+                        sh.accounted(),
+                        p.horizon_cycles
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn per_shard_cycles_conserve_under_faults_and_control_by_exact_count() {
+    // a directed heavy case: overloaded bursty traffic on a pod
+    // topology, a mid-run crash + recovery, transients, deadlines and
+    // the SLO-DVFS controller parking shards and switching corners —
+    // every accounting path the profiler carves cycles out of
+    let w = Workload::bursty(classes(), 4_000.0, 8.0, 0.02, 96, 0xC0_45E2);
+    let r = run_leg(4, &w, "batch", true, true, true, Some(ObsConfig::default()))
+        .expect("observed faulted controlled serve");
+    let p = r.profile.as_ref().expect("profile attached");
+    assert!(p.dispatched > 0, "nothing dispatched");
+    assert!(p.total_events > 0, "nothing recorded");
+    assert!(p.spans.total() > 0, "no cycles attributed");
+    assert_eq!(p.shards.len(), 4);
+    for sh in &p.shards {
+        assert_eq!(
+            sh.accounted(),
+            p.horizon_cycles,
+            "shard {} phases (busy {} + idle {} + parked {} + transition {}) \
+             must equal the horizon exactly",
+            sh.shard,
+            sh.busy,
+            sh.idle,
+            sh.parked,
+            sh.transition
+        );
+    }
+    // the crash actually happened and is visible in the stream
+    let labels: Vec<&str> = p.events.iter().map(|e| e.kind.label()).collect();
+    assert!(labels.contains(&"shard_crash"), "no crash event recorded");
+    assert!(labels.contains(&"recover"), "no recover event recorded");
+}
+
+#[test]
+fn sampled_events_are_a_subsequence_with_an_identical_report() {
+    let w = workload_for(5, 400.0, 64, 0x5A_3B1E);
+    let full_cfg = ObsConfig::default();
+    let sampled_cfg = ObsConfig { sample_every: 5, ..ObsConfig::default() };
+    let full = run_leg(2, &w, "batch", false, true, false, Some(full_cfg)).unwrap();
+    let sampled =
+        run_leg(2, &w, "batch", false, true, false, Some(sampled_cfg)).unwrap();
+    reports_identical(&full, &sampled).expect("sampling changed the report");
+    let fp = full.profile.as_ref().unwrap();
+    let sp = sampled.profile.as_ref().unwrap();
+    assert_eq!(fp.dropped_events, 0, "ring dropped events; subset check needs all");
+    assert_eq!(sp.dropped_events, 0);
+    assert!(
+        sp.total_events < fp.total_events,
+        "1/5 sampling kept everything ({} of {})",
+        sp.total_events,
+        fp.total_events
+    );
+    // exact subsequence on (at, kind)
+    let mut it = sp.events.iter();
+    let mut cur = it.next();
+    for e in &fp.events {
+        if let Some(s) = cur {
+            if s.at == e.at && s.kind == e.kind {
+                cur = it.next();
+            }
+        }
+    }
+    assert!(
+        cur.is_none(),
+        "sampled stream is not a subsequence of the full stream (stuck at {cur:?})"
+    );
+    // fleet-level events are never sampled away
+    let fleet_only = |p: &attn_tinyml::obs::ProfileSummary| -> Vec<(u64, String)> {
+        p.events
+            .iter()
+            .filter(|e| e.kind.request_id().is_none())
+            .map(|e| (e.at, e.kind.label().to_string()))
+            .collect()
+    };
+    assert_eq!(fleet_only(fp), fleet_only(sp), "fleet-level events must all survive");
+    // span attribution is exact, not sampled
+    assert_eq!(fp.spans, sp.spans, "span totals must not depend on sampling");
+    assert_eq!(fp.dispatched, sp.dispatched);
+}
+
+#[test]
+fn exports_round_trip_as_valid_json_with_monotone_timestamps() {
+    let w = workload_for(1, 2_000.0, 48, 0xE4_9027);
+    let r = run_leg(4, &w, "batch", true, true, true, Some(ObsConfig::default()))
+        .expect("observed run");
+
+    // JSONL: every line parses and carries the stamped schema version
+    let jsonl = events_jsonl(&r).expect("events stream");
+    let mut lines = 0u64;
+    for line in jsonl.lines() {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line {line}: {e}"));
+        assert_eq!(
+            v.get("schema_version").and_then(|s| s.as_f64()),
+            Some(EVENTS_SCHEMA_VERSION as f64)
+        );
+        for key in ["seq", "at", "ev"] {
+            assert!(v.get(key).is_some(), "line missing {key}: {line}");
+        }
+        lines += 1;
+    }
+    assert_eq!(lines, r.profile.as_ref().unwrap().recorded_events());
+
+    // Chrome trace: round-trips through the parser, events sorted
+    let doc = chrome_trace(&r).expect("chrome trace");
+    let text = doc.to_string_pretty();
+    let back = Json::parse(&text).expect("chrome trace must re-parse");
+    assert_eq!(back.get("displayTimeUnit").and_then(|s| s.as_str()), Some("ms"));
+    let meta = back.get("metadata").expect("metadata block");
+    assert_eq!(
+        meta.get("schema_version").and_then(|s| s.as_f64()),
+        Some(EVENTS_SCHEMA_VERSION as f64)
+    );
+    let entries = back
+        .get("traceEvents")
+        .and_then(|t| t.as_arr())
+        .expect("traceEvents array");
+    assert!(!entries.is_empty());
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut timed = 0usize;
+    for e in entries {
+        let ph = e.get("ph").and_then(|p| p.as_str()).expect("ph on every entry");
+        if ph == "M" {
+            continue; // metadata entries carry no timestamp
+        }
+        let ts = e.get("ts").and_then(|t| t.as_f64()).expect("ts on every event");
+        assert!(
+            ts >= last_ts,
+            "timestamps must be monotone: {ts} after {last_ts}"
+        );
+        last_ts = ts;
+        timed += 1;
+    }
+    assert!(timed > 0, "no timestamped events in the trace");
+}
